@@ -1,0 +1,71 @@
+//! Heterogeneous-edge scenario: the workload the paper's introduction
+//! motivates — strongly heterogeneous compute (lognormal, ~10× spread),
+//! mobile workers, dropping links, non-IID data — comparing all four
+//! mechanisms head-to-head.
+//!
+//! ```bash
+//! cargo run --release --example heterogeneous_edge
+//! ```
+
+use dystop::config::{ExperimentConfig, SchedulerKind};
+use dystop::sim::SimEngine;
+
+fn main() {
+    let base = ExperimentConfig {
+        workers: 50,
+        rounds: 260,
+        phi: 0.4,        // strongly non-IID (paper's hardest level)
+        class_sep: 3.0,
+        compute_jitter: 1.0, // extreme heterogeneity (≳10× spread)
+        target_accuracy: 2.0,
+        network: dystop::config::NetworkConfig {
+            mobility_m: 2.0,      // faster-moving workers
+            link_drop_prob: 0.05, // flakier links
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    println!(
+        "heterogeneous edge: {} workers, φ={}, lognormal(σ={}) compute, \
+         {}m/round mobility, {:.0}% link drops\n",
+        base.workers,
+        base.phi,
+        base.compute_jitter,
+        base.network.mobility_m,
+        base.network.link_drop_prob * 100.0
+    );
+
+    println!(
+        "{:>10} | {:>9} | {:>9} | {:>10} | {:>9} | {:>7}",
+        "mechanism", "best acc", "t@75%", "comm@75%", "mean τ", "max τ"
+    );
+    for kind in [
+        SchedulerKind::DySTop,
+        SchedulerKind::AsyDfl,
+        SchedulerKind::SaAdfl,
+        SchedulerKind::Matcha,
+    ] {
+        let mut cfg = base.clone();
+        cfg.scheduler = kind;
+        let res = SimEngine::new(cfg).run_full();
+        let max_tau = res.rounds.iter().map(|r| r.max_staleness).max().unwrap();
+        println!(
+            "{:>10} | {:>9.3} | {:>9} | {:>10} | {:>9.2} | {:>7}",
+            res.label,
+            res.best_accuracy(),
+            res.time_to_accuracy(0.75)
+                .map(|t| format!("{t:.0}s"))
+                .unwrap_or("—".into()),
+            res.comm_to_accuracy(0.75)
+                .map(|c| format!("{c:.3}GB"))
+                .unwrap_or("—".into()),
+            res.mean_staleness(),
+            max_tau
+        );
+    }
+    println!(
+        "\nExpected shape (paper Figs. 4–13): DySTop reaches the target \
+         fastest;\nMATCHA suffers stragglers; SA-ADFL burns bandwidth on \
+         push-to-all;\nAsyDFL's staleness goes uncontrolled."
+    );
+}

@@ -1,0 +1,48 @@
+//! Quickstart: DySTop on a simulated 20-worker edge network.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use dystop::config::ExperimentConfig;
+use dystop::sim::SimEngine;
+
+fn main() {
+    // Defaults are the paper's §VI-A setup scaled down; every field can
+    // also come from a config file via the `dystop train` CLI.
+    let cfg = ExperimentConfig {
+        workers: 20,
+        rounds: 150,
+        phi: 0.7, // mildly non-IID
+        class_sep: 3.0,
+        target_accuracy: 0.80,
+        ..Default::default()
+    };
+    println!(
+        "DySTop quickstart: {} workers, {} rounds, φ={}",
+        cfg.workers, cfg.rounds, cfg.phi
+    );
+
+    let res = SimEngine::new(cfg).run();
+
+    println!("\n  round  time(s)  accuracy   loss    comm(GB)");
+    for e in &res.evals {
+        println!(
+            "  {:>5}  {:>7.1}  {:>8.3}  {:>6.3}  {:>8.4}",
+            e.round,
+            e.time_s,
+            e.avg_accuracy,
+            e.avg_loss,
+            e.cum_transfers as f64 * res.model_bits / 8.0 / 1e9
+        );
+    }
+    println!(
+        "\nbest accuracy {:.3} | total comm {:.4} GB | mean staleness {:.2}",
+        res.best_accuracy(),
+        res.total_comm_gb(),
+        res.mean_staleness()
+    );
+    if let Some(t) = res.time_to_accuracy(0.80) {
+        println!("completion time to 80%: {t:.1}s (virtual)");
+    }
+}

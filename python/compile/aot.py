@@ -1,0 +1,80 @@
+"""AOT compile path: lower L2/L1 to HLO text artifacts + manifest.
+
+Interchange format is HLO *text*, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--models mlp,cnn]
+
+Emits ``<model>_{train,eval,agg}.hlo.txt`` plus ``manifest.json`` with the
+shape/layout contract the Rust runtime reads.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(spec, out_dir):
+    """Lower all entry points of one model variant; return manifest entry."""
+    files = {}
+    for kind, (fn, args) in M.entry_points(spec).items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{spec.name}_{kind}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[kind] = fname
+    return {
+        "param_count": spec.param_count,
+        "input_dim": spec.input_dim,
+        "num_classes": spec.num_classes,
+        "train_batch": spec.train_batch,
+        "eval_batch": spec.eval_batch,
+        "k_max": spec.k_max,
+        "layout": [
+            {"name": n, "offset": off, "shape": list(shape)}
+            for n, off, shape in spec.offsets()
+        ],
+        "artifacts": files,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="mlp,cnn",
+                    help="comma-separated subset of: " + ",".join(M.SPECS))
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "version": 1, "models": {}}
+    for name in args.models.split(","):
+        spec = M.SPECS[name.strip()]
+        manifest["models"][spec.name] = lower_model(spec, args.out_dir)
+        print(f"lowered {spec.name}: P={spec.param_count}")
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

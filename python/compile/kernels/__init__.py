@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for the DySTop compute path.
+
+Every kernel here is authored for TPU-style tiling (VMEM blocks via
+BlockSpec) but executed with ``interpret=True`` so the lowered HLO runs on
+any PJRT backend, including the Rust CPU client (see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from .fused_linear import fused_linear, matmul_pallas
+from .aggregate import aggregate_pallas
+
+__all__ = ["fused_linear", "matmul_pallas", "aggregate_pallas"]

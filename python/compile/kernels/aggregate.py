@@ -1,0 +1,64 @@
+"""Pallas weighted model aggregation kernel — Eq. (4) of the paper.
+
+An activated worker v_i pulls the (possibly stale) models of its selected
+in-neighbors and computes
+
+    ŵ_t^i = Σ_j σ_t^{i,j} · w_t^j ,   σ from relative data sizes.
+
+Here the neighbor models arrive as a stacked ``[K_max, P]`` float32 matrix
+of flattened parameter vectors plus a ``[K_max]`` weight vector. The
+topology is dynamic, so the *actual* neighbor count varies per round; the
+HLO artifact has a fixed shape, and callers zero-pad the unused rows
+(weight 0 ⇒ exact no-op — tested on both the Python and Rust sides).
+
+TPU-style tiling: the parameter axis is split into VMEM-sized ``bp``
+columns; each grid step loads the full ``[K_max, bp]`` slab (K_max is
+small — ≤ the paper's neighbor cap s) and reduces it against the weight
+vector in one pass, i.e. the reduction is K-stationary and the model slab
+streams HBM→VMEM exactly once.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BP = 1024
+
+
+def _aggregate_kernel(stacked_ref, w_ref, o_ref):
+    # stacked_ref: [K, bp] slab, w_ref: [1, K] weights, o_ref: [1, bp].
+    # One fused reduction: weights contract against the model slab.
+    o_ref[...] = jnp.dot(
+        w_ref[...], stacked_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def aggregate_pallas(stacked, weights, *, bp=DEFAULT_BP):
+    """Weighted sum of stacked flattened models.
+
+    Args:
+      stacked: ``[K, P]`` float32 — one flattened model per row.
+      weights: ``[K]`` float32 — aggregation weights (zero rows are padding).
+
+    Returns:
+      ``[P]`` float32 aggregated model.
+    """
+    k, p = stacked.shape
+    assert weights.shape == (k,), f"weights {weights.shape} != ({k},)"
+    rem = (-p) % bp
+    sp = jnp.pad(stacked.astype(jnp.float32), ((0, 0), (0, rem)))
+    pp = p + rem
+    out = pl.pallas_call(
+        _aggregate_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, pp), jnp.float32),
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((k, bp), lambda i: (0, i)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bp), lambda i: (0, i)),
+        interpret=True,
+    )(sp, weights.astype(jnp.float32)[None, :])
+    return out[0, :p]

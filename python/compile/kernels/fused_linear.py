@@ -1,0 +1,195 @@
+"""Pallas fused dense layer: tiled ``act(x @ w + b)``.
+
+This is the compute hot-spot of the per-worker local training step
+(Eq. (5) of the paper): every layer of the worker model funnels through
+this kernel in both the forward and the backward pass.
+
+TPU-style design (see DESIGN.md §Hardware-Adaptation):
+
+* The grid is ``(M/bm, N/bn, K/bk)`` with the contraction dimension
+  innermost, so each ``(i, j)`` output tile stays resident in VMEM while
+  the kernel accumulates partial products over ``k`` — the classic
+  MXU-feeding schedule (output-stationary, double-buffered HBM→VMEM loads
+  handled by the Pallas pipeline).
+* Bias add and activation are fused into the final ``k`` step so the
+  activation never round-trips to HBM.
+* Inputs are zero-padded to tile multiples in the wrapper; zero padding is
+  exact for matmul+bias+ReLU and the wrapper slices the result back.
+
+``interpret=True`` everywhere: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+
+The kernel is differentiable via an explicit ``jax.custom_vjp`` whose
+backward pass reuses the same tiled matmul kernel (``dx = g' @ wᵀ``,
+``dw = xᵀ @ g'``), so the *whole* train step lowers to Pallas-generated
+HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM tile sizes. On a real TPU these would be multiples of the
+# (8, 128) float32 native tile; we keep the same aspect logic but smaller
+# absolute sizes so interpret-mode tests stay fast. They are parameters
+# everywhere, so the TPU retune is a config change.
+DEFAULT_BM = 32
+DEFAULT_BN = 64
+DEFAULT_BK = 64
+
+
+def _pad_to(x, axis, multiple):
+    """Zero-pad ``x`` along ``axis`` up to the next multiple of ``multiple``."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, n_k):
+    """Grid (i, j, k): accumulate x_tile @ w_tile into the (i, j) out tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _fused_kernel(x_ref, w_ref, b_ref, o_ref, *, n_k, activation):
+    """Matmul accumulation with bias + activation fused into the last step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...]
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        elif activation == "tanh":
+            acc = jnp.tanh(acc)
+        # "none": identity
+        o_ref[...] = acc
+
+
+def _tiled_call(kernel, out_shape, grid, x, w, extra_inputs=(), *, bm, bn, bk):
+    """Shared pallas_call plumbing for the matmul-shaped kernels."""
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+    ]
+    for _ in extra_inputs:
+        # bias: one (1, bn) row per j tile, broadcast over rows.
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        interpret=True,
+    )(x, w, *extra_inputs)
+
+
+def matmul_pallas(x, w, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Tiled ``x @ w`` via the Pallas kernel (float32).
+
+    Shapes: ``x: [M, K]``, ``w: [K, N]`` → ``[M, N]``. Arbitrary sizes;
+    padding to tile multiples happens internally.
+    """
+    m, k0 = x.shape
+    k1, n = w.shape
+    assert k0 == k1, f"contraction mismatch {x.shape} @ {w.shape}"
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), 0, bk), 1, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = _tiled_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid,
+        xp,
+        wp,
+        bm=bm,
+        bn=bn,
+        bk=bk,
+    )
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, activation="relu"):
+    """Fused ``act(x @ w + b)`` as a single Pallas kernel.
+
+    Args:
+      x: ``[M, K]`` float32 input activations.
+      w: ``[K, N]`` float32 weights.
+      b: ``[N]`` float32 bias.
+      activation: ``"relu"``, ``"tanh"`` or ``"none"`` (static).
+
+    Differentiable: backward reuses :func:`matmul_pallas` so gradients are
+    also Pallas-tiled.
+    """
+    return _fused_forward(x, w, b, activation)
+
+
+def _fused_forward(x, w, b, activation, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    m, k0 = x.shape
+    k1, n = w.shape
+    assert k0 == k1, f"contraction mismatch {x.shape} @ {w.shape}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), 0, bk), 1, bn)
+    bp = _pad_to(b.astype(jnp.float32)[None, :], 1, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = _tiled_call(
+        functools.partial(_fused_kernel, n_k=grid[2], activation=activation),
+        jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid,
+        xp,
+        wp,
+        extra_inputs=(bp,),
+        bm=bm,
+        bn=bn,
+        bk=bk,
+    )
+    return out[:m, :n]
+
+
+def _fused_fwd(x, w, b, activation):
+    out = _fused_forward(x, w, b, activation)
+    return out, (x, w, out)
+
+
+def _fused_bwd(activation, res, g):
+    x, w, out = res
+    if activation == "relu":
+        g = g * (out > 0.0).astype(g.dtype)
+    elif activation == "tanh":
+        g = g * (1.0 - out * out)
+    # "none": g unchanged
+    dx = matmul_pallas(g, w.T)
+    dw = matmul_pallas(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_fwd, _fused_bwd)

@@ -1,0 +1,35 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package must match its oracle to float32 tolerance;
+``python/tests/`` enforces this with hypothesis shape/value sweeps. The
+oracles are also what the kernels' *gradients* are validated against.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Oracle for :func:`..fused_linear.matmul_pallas`."""
+    return jnp.matmul(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def fused_linear_ref(x, w, b, activation="relu"):
+    """Oracle for :func:`..fused_linear.fused_linear`."""
+    out = matmul_ref(x, w) + b.astype(jnp.float32)[None, :]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "tanh":
+        out = jnp.tanh(out)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out
+
+
+def aggregate_ref(stacked, weights):
+    """Oracle for :func:`..aggregate.aggregate_pallas` (Eq. 4)."""
+    return jnp.einsum(
+        "k,kp->p", weights.astype(jnp.float32), stacked.astype(jnp.float32)
+    )

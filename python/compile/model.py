@@ -1,0 +1,264 @@
+"""Layer-2 JAX model: per-worker compute for DySTop, built on the L1 kernels.
+
+Three jitted entry points per model variant, each AOT-lowered to an HLO
+artifact (see ``aot.py``) that the Rust coordinator executes via PJRT:
+
+* ``train_step(params, x, y, lr)``  → ``(params', loss)``      — Eq. (5)
+* ``eval_step(params, x, y)``       → ``(loss_sum, correct)``
+* ``aggregate(stacked, weights)``   → ``params``               — Eq. (4)
+
+Models operate on a single flattened float32 parameter vector so the Rust
+side can treat models as opaque ``[P]`` buffers (aggregation, transfer,
+staleness bookkeeping never need the structure). ``PARAM_SPECS`` defines
+the packing layout; the manifest emitted by ``aot.py`` carries the counts.
+
+Variants:
+
+* ``mlp`` — 2-hidden-layer MLP; every layer is the Pallas
+  :func:`fused_linear` kernel (forward *and* backward — the custom VJP
+  re-tiles the transposed matmuls through Pallas).
+* ``cnn`` — small convnet on 8×8×1 inputs (conv at L2 via lax.conv, dense
+  head through the Pallas kernel), standing in for the paper's
+  CNN/ResNet-18 (DESIGN.md §2 substitutions).
+"""
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import aggregate_pallas, fused_linear
+
+
+# --------------------------------------------------------------------------
+# Model variant declarations
+# --------------------------------------------------------------------------
+
+class ModelSpec:
+    """Static description of one model variant (shapes, batch sizes)."""
+
+    def __init__(self, name, input_dim, num_classes, params, train_batch,
+                 eval_batch, k_max):
+        self.name = name
+        self.input_dim = input_dim
+        self.num_classes = num_classes
+        # list of (param_name, shape) in packing order
+        self.params = params
+        self.train_batch = train_batch
+        self.eval_batch = eval_batch
+        self.k_max = k_max
+
+    @property
+    def param_count(self):
+        return sum(math.prod(s) for _, s in self.params)
+
+    def offsets(self):
+        """(name, start, shape) triples of the flat layout."""
+        out, off = [], 0
+        for name, shape in self.params:
+            out.append((name, off, shape))
+            off += math.prod(shape)
+        return out
+
+
+def mlp_spec(input_dim=32, hidden=64, num_classes=10, train_batch=32,
+             eval_batch=256, k_max=16):
+    return ModelSpec(
+        "mlp", input_dim, num_classes,
+        [
+            ("w1", (input_dim, hidden)),
+            ("b1", (hidden,)),
+            ("w2", (hidden, hidden)),
+            ("b2", (hidden,)),
+            ("w3", (hidden, num_classes)),
+            ("b3", (num_classes,)),
+        ],
+        train_batch, eval_batch, k_max,
+    )
+
+
+def cnn_spec(side=8, c1=8, c2=16, num_classes=10, train_batch=32,
+             eval_batch=256, k_max=16):
+    # input_dim = side*side, reshaped to [B, side, side, 1] inside forward.
+    return ModelSpec(
+        "cnn", side * side, num_classes,
+        [
+            ("k1", (3, 3, 1, c1)),
+            ("cb1", (c1,)),
+            ("k2", (3, 3, c1, c2)),
+            ("cb2", (c2,)),
+            ("w1", (c2 * (side // 2) * (side // 2), 32)),
+            ("b1", (32,)),
+            ("w2", (32, num_classes)),
+            ("b2", (num_classes,)),
+        ],
+        train_batch, eval_batch, k_max,
+    )
+
+
+SPECS = {"mlp": mlp_spec(), "cnn": cnn_spec()}
+
+
+# --------------------------------------------------------------------------
+# Packing
+# --------------------------------------------------------------------------
+
+def unpack(spec, flat):
+    """Flat ``[P]`` vector → dict of named parameter arrays."""
+    out = {}
+    for name, off, shape in spec.offsets():
+        n = math.prod(shape)
+        out[name] = flat[off:off + n].reshape(shape)
+    return out
+
+
+def pack(spec, tree):
+    """Dict of named parameter arrays → flat ``[P]`` vector."""
+    return jnp.concatenate(
+        [tree[name].reshape(-1) for name, _ in spec.params]
+    ).astype(jnp.float32)
+
+
+def init_params(spec, seed=0):
+    """He-initialised flat parameter vector (used by tests and aot smoke)."""
+    key = jax.random.PRNGKey(seed)
+    tree = {}
+    for name, shape in spec.params:
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            tree[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = math.prod(shape[:-1])
+            std = math.sqrt(2.0 / fan_in)
+            tree[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return pack(spec, tree)
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+def _forward_mlp(spec, tree, x):
+    h = fused_linear(x, tree["w1"], tree["b1"], "relu")
+    h = fused_linear(h, tree["w2"], tree["b2"], "relu")
+    return fused_linear(h, tree["w3"], tree["b3"], "none")
+
+
+def _forward_cnn(spec, tree, x):
+    side = int(math.isqrt(spec.input_dim))
+    img = x.reshape(-1, side, side, 1)
+    h = jax.lax.conv_general_dilated(
+        img, tree["k1"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = jnp.maximum(h + tree["cb1"], 0.0)
+    h = jax.lax.conv_general_dilated(
+        h, tree["k2"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = jnp.maximum(h + tree["cb2"], 0.0)
+    # 2x2 mean pool
+    h = jax.lax.reduce_window(
+        h, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+    h = h.reshape(h.shape[0], -1)
+    h = fused_linear(h, tree["w1"], tree["b1"], "relu")
+    return fused_linear(h, tree["w2"], tree["b2"], "none")
+
+
+def forward(spec, flat, x):
+    """Logits ``[B, C]`` for flat params and batch ``x [B, D]``."""
+    tree = unpack(spec, flat)
+    if spec.name == "mlp":
+        return _forward_mlp(spec, tree, x)
+    if spec.name == "cnn":
+        return _forward_cnn(spec, tree, x)
+    raise ValueError(f"unknown model {spec.name!r}")
+
+
+def _xent(logits, y):
+    """Mean softmax cross-entropy; y int32 labels."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+# --------------------------------------------------------------------------
+# AOT entry points
+# --------------------------------------------------------------------------
+
+def make_train_step(spec):
+    """(params [P], x [B,D], y [B] i32, lr [] f32) → (params' [P], loss [])."""
+
+    def loss_fn(flat, x, y):
+        return _xent(forward(spec, flat, x), y)
+
+    def train_step(flat, x, y, lr):
+        loss, grad = jax.value_and_grad(loss_fn)(flat, x, y)
+        return (flat - lr * grad, loss)
+
+    return train_step
+
+
+def make_eval_step(spec):
+    """(params [P], x [Be,D], y [Be] i32) → (loss_sum [], correct [] f32).
+
+    Returns *sums* so the Rust side can stream an arbitrary-size test set
+    through fixed-shape executions and divide once.
+    """
+
+    def eval_step(flat, x, y):
+        logits = forward(spec, flat, x)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+        loss_sum = jnp.sum(logz - gold)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return (loss_sum, correct)
+
+    return eval_step
+
+
+def make_aggregate(spec):
+    """(stacked [K_max, P], weights [K_max]) → (params [P],) — Eq. (4).
+
+    Unused rows carry weight 0; the Pallas kernel makes padding exact.
+    """
+
+    def aggregate(stacked, weights):
+        return (aggregate_pallas(stacked, weights),)
+
+    return aggregate
+
+
+def entry_points(spec):
+    """All jittable entry points with their example-argument shapes."""
+    P = spec.param_count
+    B, Be = spec.train_batch, spec.eval_batch
+    D, K = spec.input_dim, spec.k_max
+    f32, i32 = jnp.float32, jnp.int32
+    return {
+        "train": (
+            make_train_step(spec),
+            (
+                jax.ShapeDtypeStruct((P,), f32),
+                jax.ShapeDtypeStruct((B, D), f32),
+                jax.ShapeDtypeStruct((B,), i32),
+                jax.ShapeDtypeStruct((), f32),
+            ),
+        ),
+        "eval": (
+            make_eval_step(spec),
+            (
+                jax.ShapeDtypeStruct((P,), f32),
+                jax.ShapeDtypeStruct((Be, D), f32),
+                jax.ShapeDtypeStruct((Be,), i32),
+            ),
+        ),
+        "agg": (
+            make_aggregate(spec),
+            (
+                jax.ShapeDtypeStruct((K, P), f32),
+                jax.ShapeDtypeStruct((K,), f32),
+            ),
+        ),
+    }

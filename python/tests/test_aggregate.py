@@ -1,0 +1,69 @@
+"""L1 correctness: Pallas aggregation kernel (Eq. 4) vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aggregate_pallas
+from compile.kernels.ref import aggregate_ref
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 16),
+    p=st.integers(1, 5000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_aggregate_matches_ref(k, p, seed):
+    stacked = _rand(seed, (k, p))
+    w = jax.random.dirichlet(jax.random.PRNGKey(seed + 1), jnp.ones(k))
+    np.testing.assert_allclose(
+        aggregate_pallas(stacked, w), aggregate_ref(stacked, w),
+        rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(1, 8), pad=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_zero_weight_padding_is_exact(k, pad, seed):
+    """Padded rows with weight 0 must not change the result at all.
+
+    This is the contract the Rust side relies on: the agg artifact is
+    compiled for K_max and callers zero-pad (DESIGN.md §6).
+    """
+    p = 257
+    real = _rand(seed, (k, p))
+    w = jax.random.dirichlet(jax.random.PRNGKey(seed + 1), jnp.ones(k))
+    # padding rows contain garbage — only the zero weight protects us
+    garbage = 1e6 * _rand(seed + 2, (pad, p))
+    stacked = jnp.concatenate([real, garbage])
+    wp = jnp.concatenate([w, jnp.zeros(pad)])
+    np.testing.assert_allclose(
+        aggregate_pallas(stacked, wp), aggregate_ref(real, w),
+        rtol=1e-5, atol=1e-4)
+
+
+def test_identity_on_single_model():
+    m = _rand(7, (1, 1234))
+    np.testing.assert_allclose(
+        aggregate_pallas(m, jnp.ones(1)), m[0], rtol=1e-6, atol=1e-6)
+
+
+def test_uniform_weights_are_mean():
+    stacked = _rand(8, (4, 333))
+    got = aggregate_pallas(stacked, jnp.full(4, 0.25))
+    np.testing.assert_allclose(got, jnp.mean(stacked, axis=0),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_block_size_invariance():
+    stacked = _rand(9, (5, 2049))
+    w = jax.random.dirichlet(jax.random.PRNGKey(10), jnp.ones(5))
+    a = aggregate_pallas(stacked, w, bp=128)
+    b = aggregate_pallas(stacked, w, bp=1024)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)

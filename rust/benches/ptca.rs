@@ -1,0 +1,79 @@
+//! Bench: Phase-aware Topology Construction (Alg. 3) — per-round cost of
+//! building G_t for both phases at paper scale and 10×.
+
+use dystop::bench::bench;
+use dystop::config::NetworkConfig;
+use dystop::coordinator::{Ptca, SchedView, SchedulerParams};
+use dystop::network::EdgeNetwork;
+use dystop::util::rng::Pcg;
+
+struct Fix {
+    net: EdgeNetwork,
+    tau: Vec<u64>,
+    queues: Vec<f64>,
+    h_cmp: Vec<f64>,
+    h_est: Vec<f64>,
+    data_sizes: Vec<usize>,
+    label_dist: Vec<Vec<f64>>,
+    candidates: Vec<Vec<usize>>,
+    budgets: Vec<f64>,
+    pulls: Vec<Vec<u64>>,
+}
+
+fn fixture(n: usize, seed: u64) -> Fix {
+    let mut rng = Pcg::seeded(seed);
+    let mut cfg = NetworkConfig::default();
+    cfg.comm_range_m = 45.0;
+    let net = EdgeNetwork::new(n, cfg, &mut rng);
+    let candidates: Vec<Vec<usize>> = (0..n).map(|i| net.in_range(i)).collect();
+    Fix {
+        tau: (0..n).map(|_| rng.below(8)).collect(),
+        queues: (0..n).map(|_| rng.f64() * 4.0).collect(),
+        h_cmp: (0..n).map(|_| rng.f64() * 2.0).collect(),
+        h_est: (0..n).map(|_| 0.3 + rng.f64() * 3.0).collect(),
+        data_sizes: (0..n).map(|_| 64 + rng.below_usize(128)).collect(),
+        label_dist: (0..n).map(|_| rng.dirichlet(0.5, 10)).collect(),
+        candidates,
+        budgets: vec![16.0; n],
+        pulls: vec![vec![3; n]; n],
+        net,
+    }
+}
+
+fn view(f: &Fix, round: usize) -> SchedView<'_> {
+    SchedView {
+        round,
+        tau: &f.tau,
+        queues: &f.queues,
+        h_cmp: &f.h_cmp,
+        h_est: &f.h_est,
+        data_sizes: &f.data_sizes,
+        label_dist: &f.label_dist,
+        candidates: &f.candidates,
+        budgets: &f.budgets,
+        pulls: &f.pulls,
+        net: &f.net,
+        params: SchedulerParams { tau_bound: 5, v: 10.0, neighbor_cap: 7, t_thre: 60 },
+    }
+}
+
+fn main() {
+    println!("== PTCA (Alg. 3) per-round cost ==");
+    for n in [100usize, 400, 1000] {
+        let f = fixture(n, 43);
+        let mut rng = Pcg::seeded(44);
+        let n_active = (n / 10).max(1);
+        let active = rng.sample_indices(n, n_active);
+        let ptca = Ptca::default();
+        // phase 1 (EMD + distance priorities)
+        let v1 = view(&f, 10);
+        bench(&format!("ptca_phase1 N={n} |A|={n_active}"), || {
+            std::hint::black_box(ptca.construct(&v1, &active));
+        });
+        // phase 2 (pull-history + staleness priorities)
+        let v2 = view(&f, 100);
+        bench(&format!("ptca_phase2 N={n} |A|={n_active}"), || {
+            std::hint::black_box(ptca.construct(&v2, &active));
+        });
+    }
+}

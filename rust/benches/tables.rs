@@ -1,0 +1,94 @@
+//! Bench: end-to-end system performance.
+//!
+//! * whole-round throughput per mechanism (the cost behind every figure
+//!   regeneration — Figs. 4–18 series all run through this loop);
+//! * PJRT hot-path latencies (train step / aggregate / eval chunk) when
+//!   artifacts are present — the L1/L2 request-path numbers for
+//!   EXPERIMENTS.md §Perf.
+
+use dystop::bench::{bench, bench_with};
+use dystop::config::{ExperimentConfig, ModelKind, SchedulerKind};
+use dystop::sim::SimEngine;
+use std::path::PathBuf;
+
+fn sim_round_bench(kind: SchedulerKind) {
+    let cfg = ExperimentConfig {
+        workers: 60,
+        rounds: 10_000, // never reached; we step manually
+        train_per_worker: 64,
+        eval_every: usize::MAX,
+        target_accuracy: 2.0,
+        scheduler: kind,
+        ..Default::default()
+    };
+    let mut sim = SimEngine::new(cfg);
+    // warmup handled by bench(); each call = one full coordinator round
+    bench(&format!("sim_round N=60 {}", kind.name()), || {
+        std::hint::black_box(sim.step());
+    });
+}
+
+fn pjrt_benches() {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts missing — skipping PJRT hot-path benches; run `make artifacts`)");
+        return;
+    }
+    use dystop::data::{make_corpus, SyntheticSpec};
+    use dystop::runtime::PjrtTrainer;
+    use dystop::util::rng::Pcg;
+    use dystop::worker::Trainer;
+
+    let mut t = PjrtTrainer::new(&dir, ModelKind::Mlp).expect("load artifacts");
+    let dim = t.manifest().input_dim;
+    let b = t.manifest().train_batch;
+    let (train, test) = make_corpus(&SyntheticSpec {
+        dim,
+        train_samples: 512,
+        test_samples: 256,
+        ..Default::default()
+    });
+    let mut rng = Pcg::seeded(1);
+    let params = t.init(0);
+
+    // L2/L1 train step through PJRT (the per-worker hot path)
+    let x: Vec<f32> = (0..b * dim).map(|i| (i % 7) as f32 * 0.1).collect();
+    let y: Vec<i32> = (0..b).map(|i| (i % 10) as i32).collect();
+    bench_with("pjrt train_batch (mlp)", 5, 1.0, &mut || {
+        std::hint::black_box(t.train_batch(&params, &x, &y, 0.1).unwrap());
+    });
+
+    // aggregation via the Pallas kernel artifact (K_max padded)
+    let models: Vec<Vec<f32>> = (0..4).map(|s| t.init(s as u64)).collect();
+    let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+    let w = vec![0.25f32; 4];
+    bench_with("pjrt aggregate K=4 (pallas)", 5, 1.0, &mut || {
+        std::hint::black_box(t.aggregate(&refs, &w));
+    });
+
+    // eval chunk
+    bench_with("pjrt eval 256 samples (mlp)", 3, 1.0, &mut || {
+        std::hint::black_box(t.evaluate(&params, &test));
+    });
+
+    // native-vs-pjrt train comparison point
+    let mut nt = dystop::worker::NativeTrainer::new(dim, 10);
+    let np = nt.init(0);
+    bench_with("native train step (softmax reg)", 5, 0.5, &mut || {
+        std::hint::black_box(nt.train(&np, &train, 1, 32, 0.1, &mut rng));
+    });
+}
+
+fn main() {
+    println!("== end-to-end round throughput (Figs. 4–18 inner loop) ==");
+    for kind in [
+        SchedulerKind::DySTop,
+        SchedulerKind::AsyDfl,
+        SchedulerKind::SaAdfl,
+        SchedulerKind::Matcha,
+    ] {
+        sim_round_bench(kind);
+    }
+    println!("\n== PJRT hot path (L1/L2 via HLO artifacts) ==");
+    pjrt_benches();
+}

@@ -1,0 +1,105 @@
+//! Micro-benchmark kit (no `criterion` offline): warmup + timed
+//! iterations with mean/stddev/percentile reporting.
+
+use crate::util::stats::{mean, percentile, stddev};
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}  ±{:>10}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            fmt_ns(self.stddev_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to the target duration.
+pub fn bench(name: &str, mut f: impl FnMut()) -> BenchResult {
+    bench_with(name, 3, 0.5, &mut f)
+}
+
+/// Benchmark with explicit warmup iterations and measure budget (s).
+pub fn bench_with(
+    name: &str,
+    warmup: usize,
+    budget_s: f64,
+    f: &mut dyn FnMut(),
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    // calibrate: how long is one call?
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / one) as usize).clamp(5, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean(&samples),
+        stddev_ns: stddev(&samples),
+        p50_ns: percentile(&samples, 0.5),
+        p99_ns: percentile(&samples, 0.99),
+    };
+    r.print();
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let r = bench_with("noop-ish", 1, 0.02, &mut || {
+            x = x.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn formats_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

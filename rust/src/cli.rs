@@ -1,0 +1,245 @@
+//! Command-line interface (hand-rolled: no `clap` offline).
+//!
+//! ```text
+//! dystop train   [--config FILE] [--set key=value ...] [--out DIR]
+//! dystop figures --fig ID [--out DIR] [--workers N] [--rounds R] [--seed S]
+//! dystop testbed [--config FILE] [--set key=value ...] [--out DIR]
+//! dystop sweep   --key K --values a,b,c [--config FILE] [--out DIR]
+//! dystop inspect [--artifacts DIR]
+//! ```
+
+use crate::config::{Config, ExperimentConfig};
+use crate::figures::{self, FigScale};
+use crate::metrics::RunResult;
+use crate::sim::SimEngine;
+use crate::testbed::{run_testbed, TestbedOptions};
+use std::path::PathBuf;
+
+/// Parsed flag map: `--key value` pairs + repeated `--set k=v`.
+#[derive(Debug, Default)]
+pub struct Flags {
+    pub values: Vec<(String, String)>,
+    pub sets: Vec<(String, String)>,
+}
+
+impl Flags {
+    pub fn parse(args: &[String]) -> Result<Flags, String> {
+        let mut f = Flags::default();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got {a:?}"))?;
+            let val = args
+                .get(i + 1)
+                .ok_or_else(|| format!("--{key} needs a value"))?
+                .clone();
+            if key == "set" {
+                let (k, v) = val
+                    .split_once('=')
+                    .ok_or_else(|| format!("--set expects key=value, got {val:?}"))?;
+                f.sets.push((k.to_string(), v.to_string()));
+            } else {
+                f.values.push((key.to_string(), val));
+            }
+            i += 2;
+        }
+        Ok(f)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|_| format!("--{key}: bad integer {v:?}")))
+            .transpose()
+    }
+}
+
+/// Build the experiment config from `--config` + `--set` overrides.
+fn load_config(flags: &Flags) -> Result<ExperimentConfig, String> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => Config::from_file(&PathBuf::from(path))?,
+        None => Config::new(),
+    };
+    for (k, v) in &flags.sets {
+        cfg.set(k, v);
+    }
+    ExperimentConfig::from_config(&cfg)
+}
+
+fn report(res: &RunResult, out: &PathBuf) -> Result<(), String> {
+    std::fs::create_dir_all(out).map_err(|e| e.to_string())?;
+    res.write_eval_csv(&out.join(format!("{}_eval.csv", res.label)))
+        .map_err(|e| e.to_string())?;
+    res.write_rounds_csv(&out.join(format!("{}_rounds.csv", res.label)))
+        .map_err(|e| e.to_string())?;
+    println!(
+        "{}: {} rounds, final t={:.1}s, best acc={:.3}, comm={:.4} GB, mean τ={:.2}",
+        res.label,
+        res.rounds.len(),
+        res.final_time_s(),
+        res.best_accuracy(),
+        res.total_comm_gb(),
+        res.mean_staleness()
+    );
+    println!("wrote CSVs under {}", out.display());
+    Ok(())
+}
+
+pub fn main_with_args(args: &[String]) -> Result<(), String> {
+    let Some(cmd) = args.first() else {
+        return Err(usage());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    let out = PathBuf::from(flags.get("out").unwrap_or("results"));
+    match cmd.as_str() {
+        "train" => {
+            let cfg = load_config(&flags)?;
+            println!(
+                "train: scheduler={} workers={} rounds={} φ={}",
+                cfg.scheduler.name(),
+                cfg.workers,
+                cfg.rounds,
+                cfg.phi
+            );
+            let res = SimEngine::new(cfg).run();
+            report(&res, &out)
+        }
+        "figures" => {
+            let fig = flags.get("fig").unwrap_or("all").to_string();
+            let mut scale = FigScale::default();
+            if let Some(w) = flags.get_usize("workers")? {
+                scale.workers = w;
+            }
+            if let Some(r) = flags.get_usize("rounds")? {
+                scale.rounds = r;
+            }
+            if let Some(s) = flags.get_usize("seed")? {
+                scale.seed = s as u64;
+            }
+            figures::run_figure(&fig, &out, scale)
+        }
+        "testbed" => {
+            let cfg = load_config(&flags)?;
+            let res = run_testbed(cfg, TestbedOptions::default());
+            report(&res, &out)
+        }
+        "sweep" => {
+            let key = flags.get("key").ok_or("--key required")?.to_string();
+            let values: Vec<String> = flags
+                .get("values")
+                .ok_or("--values required (comma separated)")?
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .collect();
+            for v in values {
+                let mut cfg_raw = match flags.get("config") {
+                    Some(p) => Config::from_file(&PathBuf::from(p))?,
+                    None => Config::new(),
+                };
+                for (k, val) in &flags.sets {
+                    cfg_raw.set(k, val);
+                }
+                cfg_raw.set(&key, &v);
+                let cfg = ExperimentConfig::from_config(&cfg_raw)?;
+                let mut res = SimEngine::new(cfg).run();
+                res.label = format!("{}_{}{}", res.label, key.replace('.', "_"), v);
+                report(&res, &out)?;
+            }
+            Ok(())
+        }
+        "inspect" => {
+            let dir = PathBuf::from(flags.get("artifacts").unwrap_or("artifacts"));
+            let m = crate::runtime::Manifest::load(&dir)?;
+            for (name, mm) in &m.models {
+                println!(
+                    "{name}: P={} D={} C={} B={}/{} K_max={}",
+                    mm.param_count,
+                    mm.input_dim,
+                    mm.num_classes,
+                    mm.train_batch,
+                    mm.eval_batch,
+                    mm.k_max
+                );
+                for e in &mm.layout {
+                    println!("  {:>6} @{:<6} {:?}", e.name, e.offset, e.shape);
+                }
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n{}", usage())),
+    }
+}
+
+fn usage() -> String {
+    "usage: dystop <train|figures|testbed|sweep|inspect|help> [flags]\n\
+     \n\
+     train   --config FILE --set sim.workers=40 --out results/\n\
+     figures --fig <3|4..18|20..25|all> --out results/ [--workers N --rounds R]\n\
+     testbed --set sim.workers=15 --out results/\n\
+     sweep   --key dystop.tau_bound --values 2,5,8 --out results/\n\
+     inspect --artifacts artifacts/"
+        .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_sets() {
+        let f = Flags::parse(&s(&[
+            "--fig", "14", "--set", "sim.workers=10", "--set", "dystop.v=5",
+        ]))
+        .unwrap();
+        assert_eq!(f.get("fig"), Some("14"));
+        assert_eq!(f.sets.len(), 2);
+        assert_eq!(f.sets[1], ("dystop.v".into(), "5".into()));
+    }
+
+    #[test]
+    fn rejects_bad_flags() {
+        assert!(Flags::parse(&s(&["fig"])).is_err());
+        assert!(Flags::parse(&s(&["--fig"])).is_err());
+        assert!(Flags::parse(&s(&["--set", "noequals"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(main_with_args(&s(&["bogus"])).is_err());
+        assert!(main_with_args(&[]).is_err());
+    }
+
+    #[test]
+    fn train_tiny_end_to_end() {
+        let dir = std::env::temp_dir().join("dystop_cli_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        main_with_args(&s(&[
+            "train",
+            "--set", "sim.workers=6",
+            "--set", "sim.rounds=10",
+            "--set", "data.train_per_worker=48",
+            "--set", "eval.every=5",
+            "--out", dir.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert!(dir.join("dystop_eval.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,369 @@
+//! Typed experiment schema with paper-faithful defaults (§VI-A).
+
+use super::Config;
+
+/// Which mechanism schedules rounds (paper §VI-A3 benchmarks + ablations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// DySTop: WAA + PTCA (this paper).
+    DySTop,
+    /// PTCA ablation: phase-1 priority only (Fig. 3).
+    DySTopPhase1Only,
+    /// PTCA ablation: phase-2 priority only (Fig. 3).
+    DySTopPhase2Only,
+    /// SA-ADFL \[15\]: single staleness-aware worker, pushes to all in range.
+    SaAdfl,
+    /// AsyDFL \[14\]: event-driven async, no staleness control.
+    AsyDfl,
+    /// MATCHA \[9\]: synchronous matching decomposition.
+    Matcha,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "dystop" => Ok(Self::DySTop),
+            "dystop-phase1" | "phase1" => Ok(Self::DySTopPhase1Only),
+            "dystop-phase2" | "phase2" => Ok(Self::DySTopPhase2Only),
+            "sa-adfl" | "saadfl" => Ok(Self::SaAdfl),
+            "asydfl" => Ok(Self::AsyDfl),
+            "matcha" => Ok(Self::Matcha),
+            other => Err(format!(
+                "unknown scheduler {other:?} (dystop|dystop-phase1|dystop-phase2|sa-adfl|asydfl|matcha)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::DySTop => "dystop",
+            Self::DySTopPhase1Only => "dystop-phase1",
+            Self::DySTopPhase2Only => "dystop-phase2",
+            Self::SaAdfl => "sa-adfl",
+            Self::AsyDfl => "asydfl",
+            Self::Matcha => "matcha",
+        }
+    }
+}
+
+/// Which model artifact the workers train.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Mlp,
+    Cnn,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "mlp" => Ok(Self::Mlp),
+            "cnn" => Ok(Self::Cnn),
+            other => Err(format!("unknown model {other:?} (mlp|cnn)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Mlp => "mlp",
+            Self::Cnn => "cnn",
+        }
+    }
+}
+
+/// Which training backend executes local steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainerKind {
+    /// Pure-Rust softmax-regression trainer: fast substrate for
+    /// large-scale sims and tests (no artifacts needed).
+    Native,
+    /// Real model via AOT HLO artifacts on the PJRT CPU client.
+    Pjrt,
+}
+
+impl TrainerKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(Self::Native),
+            "pjrt" => Ok(Self::Pjrt),
+            other => Err(format!("unknown trainer {other:?} (native|pjrt)")),
+        }
+    }
+}
+
+/// Wireless edge-network model constants (paper §VI-A1).
+#[derive(Clone, Debug)]
+pub struct NetworkConfig {
+    /// Region side length in meters (workers uniform in the square).
+    pub region_m: f64,
+    /// Per-link bandwidth in Hz (paper: 1 MHz).
+    pub bandwidth_hz: f64,
+    /// Path-loss constant at 1 m (paper: −43 dB).
+    pub g0_db: f64,
+    /// Noise power in W (paper: 1e-13).
+    pub noise_w: f64,
+    /// Transmit power range in dBm (paper: 10–20 dBm).
+    pub tx_dbm_min: f64,
+    pub tx_dbm_max: f64,
+    /// Communication range in meters (neighbors must be within range).
+    pub comm_range_m: f64,
+    /// Std-dev of the per-round multiplicative bandwidth-budget jitter
+    /// (edge dynamics: time-varying budgets, Eq. 12d).
+    pub budget_jitter: f64,
+    /// Per-round per-worker bandwidth budget, in model-transfer units.
+    pub budget_models: f64,
+    /// Probability a link drops for a round (edge dynamics).
+    pub link_drop_prob: f64,
+    /// Worker mobility: per-round movement std-dev in meters.
+    pub mobility_m: f64,
+    /// Orthogonal sub-channels per worker radio: transfers beyond this
+    /// concurrency serialize (Eq. 8's max is per-channel; a worker
+    /// pulling/pushing more than `channels` models pays extra slots).
+    pub channels: usize,
+    /// Simulated model payload on the wire, in bits. The compute-side
+    /// model is deliberately small (fast CPU sims); the paper's models
+    /// (CNN/ResNet-18) are MBs, which is what makes topology efficiency
+    /// matter. 0 ⇒ use the actual trained model's size.
+    pub payload_bits: f64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        NetworkConfig {
+            region_m: 100.0,
+            bandwidth_hz: 1e6,
+            g0_db: -43.0,
+            noise_w: 1e-13,
+            tx_dbm_min: 10.0,
+            tx_dbm_max: 20.0,
+            comm_range_m: 45.0,
+            budget_jitter: 0.15,
+            budget_models: 16.0,
+            link_drop_prob: 0.02,
+            mobility_m: 1.0,
+            channels: 4,
+            // ≈ 250 KB — a small CNN like the paper's FMNIST model; at
+            // §VI-A1 rates this is a few-hundred-ms transfer, the regime
+            // where communication actually competes with compute.
+            payload_bits: 2.0e6,
+        }
+    }
+}
+
+/// Full experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+    pub workers: usize,
+    pub rounds: usize,
+    /// Dirichlet non-IID level φ (paper: 1.0 ≈ IID, 0.4 highly skewed).
+    pub phi: f64,
+    pub scheduler: SchedulerKind,
+    pub model: ModelKind,
+    pub trainer: TrainerKind,
+
+    // --- DySTop knobs ---
+    /// Staleness bound τ_bound (Eq. 12c); Fig. 14/15 sweep.
+    pub tau_bound: u64,
+    /// Lyapunov trade-off V (Eq. 34); Fig. 16 sweep.
+    pub v: f64,
+    /// In-neighbor sample cap s (Fig. 17/18 sweep).
+    pub neighbor_cap: usize,
+    /// PTCA phase switch round t_thre (Alg. 3 line 2).
+    pub t_thre: usize,
+
+    // --- data ---
+    pub num_classes: usize,
+    pub feature_dim: usize,
+    pub train_per_worker: usize,
+    pub test_samples: usize,
+    /// Class-separation of the synthetic mixture (higher = easier).
+    pub class_sep: f64,
+
+    // --- training ---
+    pub lr: f32,
+    pub batch: usize,
+    pub local_steps: usize,
+
+    // --- compute heterogeneity (paper: measured batch time × normal coeff) ---
+    /// Median local-training time h_i in seconds.
+    pub compute_mean_s: f64,
+    /// σ of the lognormal per-worker speed coefficient (0.8 ≈ the ~10×
+    /// spread of the paper's Table II device mix).
+    pub compute_jitter: f64,
+
+    // --- evaluation ---
+    pub eval_every: usize,
+    /// Fraction of workers whose local model is evaluated (1.0 = all).
+    pub eval_worker_frac: f64,
+    pub target_accuracy: f64,
+
+    pub network: NetworkConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            seed: 1,
+            workers: 100,
+            rounds: 300,
+            phi: 1.0,
+            scheduler: SchedulerKind::DySTop,
+            model: ModelKind::Mlp,
+            trainer: TrainerKind::Native,
+            tau_bound: 5,
+            v: 10.0,
+            neighbor_cap: 7,
+            t_thre: 60,
+            num_classes: 10,
+            feature_dim: 32,
+            train_per_worker: 128,
+            test_samples: 512,
+            class_sep: 2.0,
+            lr: 0.1,
+            batch: 32,
+            local_steps: 2,
+            compute_mean_s: 1.0,
+            compute_jitter: 0.8,
+            eval_every: 10,
+            eval_worker_frac: 1.0,
+            target_accuracy: 0.8,
+            network: NetworkConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Build from a parsed [`Config`], falling back to defaults.
+    pub fn from_config(cfg: &Config) -> Result<Self, String> {
+        let mut e = ExperimentConfig::default();
+        macro_rules! opt {
+            ($field:expr, $get:ident, $key:expr) => {
+                if let Some(v) = cfg.$get($key)? {
+                    $field = v;
+                }
+            };
+        }
+        opt!(e.seed, get_u64, "sim.seed");
+        opt!(e.workers, get_usize, "sim.workers");
+        opt!(e.rounds, get_usize, "sim.rounds");
+        opt!(e.phi, get_f64, "sim.phi");
+        if let Some(s) = cfg.get("sim.scheduler") {
+            e.scheduler = SchedulerKind::parse(s)?;
+        }
+        if let Some(s) = cfg.get("sim.model") {
+            e.model = ModelKind::parse(s)?;
+        }
+        if let Some(s) = cfg.get("sim.trainer") {
+            e.trainer = TrainerKind::parse(s)?;
+        }
+        opt!(e.tau_bound, get_u64, "dystop.tau_bound");
+        opt!(e.v, get_f64, "dystop.v");
+        opt!(e.neighbor_cap, get_usize, "dystop.neighbor_cap");
+        opt!(e.t_thre, get_usize, "dystop.t_thre");
+        opt!(e.num_classes, get_usize, "data.classes");
+        opt!(e.feature_dim, get_usize, "data.dim");
+        opt!(e.train_per_worker, get_usize, "data.train_per_worker");
+        opt!(e.test_samples, get_usize, "data.test_samples");
+        opt!(e.class_sep, get_f64, "data.class_sep");
+        if let Some(v) = cfg.get_f64("train.lr")? {
+            e.lr = v as f32;
+        }
+        opt!(e.batch, get_usize, "train.batch");
+        opt!(e.local_steps, get_usize, "train.local_steps");
+        opt!(e.compute_mean_s, get_f64, "compute.mean_s");
+        opt!(e.compute_jitter, get_f64, "compute.jitter");
+        opt!(e.eval_every, get_usize, "eval.every");
+        opt!(e.eval_worker_frac, get_f64, "eval.worker_frac");
+        opt!(e.target_accuracy, get_f64, "eval.target_accuracy");
+        opt!(e.network.region_m, get_f64, "net.region_m");
+        opt!(e.network.bandwidth_hz, get_f64, "net.bandwidth_hz");
+        opt!(e.network.g0_db, get_f64, "net.g0_db");
+        opt!(e.network.noise_w, get_f64, "net.noise_w");
+        opt!(e.network.tx_dbm_min, get_f64, "net.tx_dbm_min");
+        opt!(e.network.tx_dbm_max, get_f64, "net.tx_dbm_max");
+        opt!(e.network.comm_range_m, get_f64, "net.comm_range_m");
+        opt!(e.network.budget_jitter, get_f64, "net.budget_jitter");
+        opt!(e.network.budget_models, get_f64, "net.budget_models");
+        opt!(e.network.link_drop_prob, get_f64, "net.link_drop_prob");
+        opt!(e.network.mobility_m, get_f64, "net.mobility_m");
+        opt!(e.network.payload_bits, get_f64, "net.payload_bits");
+        opt!(e.network.channels, get_usize, "net.channels");
+        e.validate()?;
+        Ok(e)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers == 0 {
+            return Err("sim.workers must be > 0".into());
+        }
+        if self.phi <= 0.0 {
+            return Err("sim.phi must be > 0 (Dirichlet concentration)".into());
+        }
+        if !(0.0..=1.0).contains(&self.eval_worker_frac) {
+            return Err("eval.worker_frac must be in [0,1]".into());
+        }
+        if self.neighbor_cap == 0 {
+            return Err("dystop.neighbor_cap must be > 0".into());
+        }
+        if self.batch == 0 || self.batch > self.train_per_worker {
+            return Err(format!(
+                "train.batch ({}) must be in [1, train_per_worker={}]",
+                self.batch, self.train_per_worker
+            ));
+        }
+        if self.network.comm_range_m <= 0.0 {
+            return Err("net.comm_range_m must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_config_overrides() {
+        let cfg = Config::parse(
+            "[sim]\nworkers = 20\nphi = 0.4\nscheduler = matcha\n[dystop]\ntau_bound = 8\n[net]\ncomm_range_m = 60\n",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.workers, 20);
+        assert_eq!(e.phi, 0.4);
+        assert_eq!(e.scheduler, SchedulerKind::Matcha);
+        assert_eq!(e.tau_bound, 8);
+        assert_eq!(e.network.comm_range_m, 60.0);
+        // untouched default
+        assert_eq!(e.v, 10.0);
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let cfg = Config::parse("[sim]\nworkers = 0").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[sim]\nscheduler = bogus").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[train]\nbatch = 100000").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn scheduler_names_roundtrip() {
+        for k in [
+            SchedulerKind::DySTop,
+            SchedulerKind::DySTopPhase1Only,
+            SchedulerKind::DySTopPhase2Only,
+            SchedulerKind::SaAdfl,
+            SchedulerKind::AsyDfl,
+            SchedulerKind::Matcha,
+        ] {
+            assert_eq!(SchedulerKind::parse(k.name()).unwrap(), k);
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Configuration system: a typed key/value store parsed from a
+//! TOML-subset text format (sections, scalars, inline lists) plus CLI
+//! `--key value` overrides. No `serde`/`toml` offline — the parser is a
+//! substrate of this repo.
+//!
+//! ```text
+//! [sim]
+//! workers = 100
+//! rounds = 300
+//! phi = 0.4            # Dirichlet non-IID level (§VI-A2)
+//!
+//! [dystop]
+//! tau_bound = 5
+//! v = 10.0
+//! neighbor_cap = 7
+//! ```
+
+mod experiment;
+
+pub use experiment::{
+    ExperimentConfig, ModelKind, NetworkConfig, SchedulerKind, TrainerKind,
+};
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// Parsed config: flattened `section.key` → raw string value.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+#[derive(Debug)]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error (line {}): {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse from text. Supports `[section]`, `key = value`, `#`/`;`
+    /// comments, quoted strings, and `[a, b, c]` inline lists.
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(ConfigError {
+                    line: lineno + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or(ConfigError {
+                line: lineno + 1,
+                msg: format!("expected `key = value`, got {line:?}"),
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ConfigError {
+                    line: lineno + 1,
+                    msg: "empty key".into(),
+                });
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            cfg.values.insert(full, unquote(value.trim()).to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Config::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Set/override a value (CLI overrides use this).
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        self.typed(key, "float", |s| s.parse::<f64>().ok())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        self.typed(key, "integer", |s| s.parse::<usize>().ok())
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>, String> {
+        self.typed(key, "integer", |s| s.parse::<u64>().ok())
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>, String> {
+        self.typed(key, "bool", |s| match s {
+            "true" | "yes" | "1" => Some(true),
+            "false" | "no" | "0" => Some(false),
+            _ => None,
+        })
+    }
+
+    /// Inline list of floats: `[1.0, 0.7, 0.4]`.
+    pub fn get_f64_list(&self, key: &str) -> Result<Option<Vec<f64>>, String> {
+        self.typed(key, "float list", |s| {
+            let inner = s.strip_prefix('[')?.strip_suffix(']')?;
+            inner
+                .split(',')
+                .map(|t| t.trim().parse::<f64>().ok())
+                .collect::<Option<Vec<_>>>()
+        })
+    }
+
+    fn typed<T>(
+        &self,
+        key: &str,
+        ty: &str,
+        parse: impl Fn(&str) -> Option<T>,
+    ) -> Result<Option<T>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(raw) => parse(raw)
+                .map(Some)
+                .ok_or_else(|| format!("key {key}: expected {ty}, got {raw:?}")),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect quotes when stripping comments
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' | ';' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(s: &str) -> &str {
+    if s.len() >= 2 && s.starts_with('"') && s.ends_with('"') {
+        &s[1..s.len() - 1]
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(
+            "top = 1\n[sim]\nworkers = 100 # count\nphi = 0.4\nname = \"run a\"\nlist = [1.0, 0.7, 0.4]\nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get_usize("top").unwrap(), Some(1));
+        assert_eq!(cfg.get_usize("sim.workers").unwrap(), Some(100));
+        assert_eq!(cfg.get_f64("sim.phi").unwrap(), Some(0.4));
+        assert_eq!(cfg.get("sim.name"), Some("run a"));
+        assert_eq!(
+            cfg.get_f64_list("sim.list").unwrap(),
+            Some(vec![1.0, 0.7, 0.4])
+        );
+        assert_eq!(cfg.get_bool("sim.flag").unwrap(), Some(true));
+    }
+
+    #[test]
+    fn missing_key_is_none() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.get_f64("nope").unwrap(), None);
+    }
+
+    #[test]
+    fn type_error_reports_key() {
+        let cfg = Config::parse("x = notanumber").unwrap();
+        let err = cfg.get_f64("x").unwrap_err();
+        assert!(err.contains("x"), "{err}");
+    }
+
+    #[test]
+    fn bad_lines_error_with_lineno() {
+        let err = Config::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = Config::parse("[open\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn override_wins() {
+        let mut cfg = Config::parse("[a]\nx = 1").unwrap();
+        cfg.set("a.x", "2");
+        assert_eq!(cfg.get_usize("a.x").unwrap(), Some(2));
+    }
+
+    #[test]
+    fn comment_inside_quotes_kept() {
+        let cfg = Config::parse("s = \"a # b\"").unwrap();
+        assert_eq!(cfg.get("s"), Some("a # b"));
+    }
+}

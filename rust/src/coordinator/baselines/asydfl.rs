@@ -1,0 +1,154 @@
+//! AsyDFL baseline \[14\]: event-driven asynchronous DFL with
+//! data-utility neighbor selection and **no staleness control**.
+//!
+//! Workers activate as soon as their local training finishes (the workers
+//! with the smallest residual compute this round); each selects up to `s`
+//! neighbors by a data-utility score (label-distribution divergence —
+//! AsyDFL/AsyNG's non-IID handling) subject to its own bandwidth budget.
+//! Staleness is left unmanaged, which is exactly the weakness DySTop's
+//! WAA addresses (Table I: "Handling Staleness: Poor").
+
+use crate::coordinator::{RoundPlan, SchedView, Scheduler};
+use crate::data::emd;
+use crate::util::rng::Pcg;
+
+pub struct AsyDfl {
+    /// Event-loop slack: only workers within `slack_s` seconds of the
+    /// earliest finisher activate together. Kept tight — AsyDFL is
+    /// coordinator-free, each completion is its own event; batching whole
+    /// cohorts would turn it semi-synchronous.
+    pub slack_s: f64,
+}
+
+impl Default for AsyDfl {
+    fn default() -> Self {
+        AsyDfl { slack_s: 0.005 }
+    }
+}
+
+impl Scheduler for AsyDfl {
+    fn name(&self) -> &'static str {
+        "asydfl"
+    }
+
+    fn plan(&mut self, view: &SchedView<'_>, _rng: &mut Pcg) -> RoundPlan {
+        let n = view.n();
+        // earliest finisher(s); residuals clamp at 0 when a worker sat
+        // idle, so FIFO by staleness and cap the cohort — each completion
+        // is its own event in the real (coordinator-free) AsyDFL loop
+        let min_res = view
+            .h_cmp
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        let mut ready: Vec<usize> = (0..n)
+            .filter(|&i| view.h_cmp[i] <= min_res + self.slack_s)
+            .collect();
+        // FIFO among finishers: the longest-waiting completions are the
+        // earliest events. The cohort cap models the serial event loop —
+        // activations beyond it fall into later rounds, so staleness
+        // grows freely (no control — Table I's charge against AsyDFL).
+        ready.sort_by_key(|&i| std::cmp::Reverse(view.tau[i]));
+        let cap = (n / 10).max(1);
+        ready.truncate(cap);
+        let mut active = ready;
+        active.sort_unstable();
+
+        let s_cap = view.params.neighbor_cap;
+        let mut used_bw = vec![0.0f64; n];
+        let mut pulls_from = Vec::with_capacity(active.len());
+        for &i in &active {
+            // data-utility: prefer divergent label distributions
+            let mut cands: Vec<usize> = view.candidates[i]
+                .iter()
+                .copied()
+                .filter(|&j| j != i)
+                .collect();
+            cands.sort_by(|&a, &b| {
+                let ua = emd(&view.label_dist[i], &view.label_dist[a]);
+                let ub = emd(&view.label_dist[i], &view.label_dist[b]);
+                ub.partial_cmp(&ua).unwrap()
+            });
+            let mut picked = Vec::new();
+            for j in cands {
+                if picked.len() >= s_cap {
+                    break;
+                }
+                if used_bw[i] + 1.0 > view.budgets[i]
+                    || used_bw[j] + 1.0 > view.budgets[j]
+                {
+                    continue;
+                }
+                used_bw[i] += 1.0;
+                used_bw[j] += 1.0;
+                picked.push(j);
+            }
+            pulls_from.push(picked);
+        }
+        RoundPlan { active, pulls_from, pushes: Vec::new() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::Fixture;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn activates_earliest_finishers() {
+        let mut rng = Pcg::seeded(13);
+        let mut fix = Fixture::random(6, &mut rng);
+        fix.h_cmp = vec![3.0, 0.0, 2.0, 0.0, 5.0, 1.0];
+        fix.tau = vec![0, 2, 0, 5, 0, 0]; // 3 waited longer than 1
+        let plan = AsyDfl::default().plan(&fix.view(), &mut rng);
+        // cohort cap = max(6/10, 1) = 1: the longest-waiting finisher
+        assert_eq!(plan.active, vec![3]);
+        // worker 1 (also finished, shorter wait) goes next round
+        fix.tau = vec![0, 7, 0, 5, 0, 0];
+        let plan = AsyDfl::default().plan(&fix.view(), &mut rng);
+        assert_eq!(plan.active, vec![1]);
+    }
+
+    #[test]
+    fn respects_budgets_and_cap() {
+        forall(81, |rng| {
+            let n = 4 + rng.below_usize(25);
+            let mut fix = Fixture::random(n, rng);
+            fix.params.neighbor_cap = 1 + rng.below_usize(5);
+            fix.budgets = vec![1.0 + rng.f64() * 6.0; n];
+            let view = fix.view();
+            let plan = AsyDfl::default().plan(&view, rng);
+            plan.validate(n).unwrap();
+            let mut bw = vec![0.0; n];
+            for (k, lst) in plan.pulls_from.iter().enumerate() {
+                assert!(lst.len() <= fix.params.neighbor_cap);
+                for &j in lst {
+                    bw[plan.active[k]] += 1.0;
+                    bw[j] += 1.0;
+                }
+            }
+            for i in 0..n {
+                assert!(bw[i] <= view.budgets[i] + 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn picks_most_divergent_neighbors() {
+        let mut rng = Pcg::seeded(14);
+        let mut fix = Fixture::random(4, &mut rng);
+        fix.h_cmp = vec![0.0, 9.0, 9.0, 9.0];
+        fix.candidates = vec![vec![1, 2, 3], vec![0], vec![0], vec![0]];
+        let oh = |k: usize| {
+            let mut v = vec![0.0; 10];
+            v[k] = 1.0;
+            v
+        };
+        fix.label_dist = vec![oh(0), oh(0), oh(1), oh(0)];
+        fix.params.neighbor_cap = 1;
+        let plan = AsyDfl::default().plan(&fix.view(), &mut rng);
+        assert_eq!(plan.active, vec![0]);
+        assert_eq!(plan.pulls_from[0], vec![2]);
+    }
+}

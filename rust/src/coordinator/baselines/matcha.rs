@@ -1,0 +1,148 @@
+//! MATCHA baseline \[9\]: synchronous decentralized SGD over sampled
+//! matching decompositions.
+//!
+//! Each round, the base graph (all links within communication range) is
+//! decomposed into disjoint matchings; a random subset (budget `frac`) is
+//! activated. *Every* worker is active every round — the synchronization
+//! barrier means the round lasts until the slowest worker finishes
+//! (straggler-bound, the drawback §II-A calls out). Communication is low
+//! (matchings are sparse) — the paper treats MATCHA as the communication
+//! lower bound.
+
+use crate::coordinator::{RoundPlan, SchedView, Scheduler};
+use crate::topology::{greedy_matching_decomposition, sample_matchings};
+use crate::util::rng::Pcg;
+
+pub struct Matcha {
+    /// Fraction of matchings activated per round (MATCHA's C_b).
+    pub frac: f64,
+    /// Base-topology degree: each worker keeps edges to its `base_degree`
+    /// nearest in-range peers. MATCHA decomposes a *sparse* predefined
+    /// base graph, not the full radio graph — this is what makes it the
+    /// paper's communication lower bound.
+    pub base_degree: usize,
+}
+
+impl Default for Matcha {
+    fn default() -> Self {
+        Matcha { frac: 0.5, base_degree: 4 }
+    }
+}
+
+impl Scheduler for Matcha {
+    fn name(&self) -> &'static str {
+        "matcha"
+    }
+
+    fn plan(&mut self, view: &SchedView<'_>, rng: &mut Pcg) -> RoundPlan {
+        let n = view.n();
+        // sparse base graph: each worker's `base_degree` nearest in-range
+        // peers (symmetric closure), the predefined topology MATCHA
+        // decomposes
+        let mut keep = vec![std::collections::BTreeSet::new(); n];
+        for i in 0..n {
+            let mut near: Vec<usize> = view.candidates[i]
+                .iter()
+                .copied()
+                .filter(|&j| view.candidates[j].contains(&i))
+                .collect();
+            near.sort_by(|&a, &b| {
+                view.net
+                    .distance(i, a)
+                    .partial_cmp(&view.net.distance(i, b))
+                    .unwrap()
+            });
+            for &j in near.iter().take(self.base_degree) {
+                keep[i].insert(j);
+            }
+        }
+        // symmetric closure: edge if either endpoint kept the other
+        let mut pairs = std::collections::BTreeSet::new();
+        for i in 0..n {
+            for &j in &keep[i] {
+                pairs.insert((i.min(j), i.max(j)));
+            }
+        }
+        let edges: Vec<(usize, usize)> = pairs.into_iter().collect();
+        let matchings = greedy_matching_decomposition(n, &edges);
+        let sampled = sample_matchings(&matchings, self.frac, rng);
+
+        // synchronous: everyone is active; neighbors = matched partners
+        let mut pulls_from: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for m in &sampled {
+            for &(a, b) in &m.pairs {
+                // matched pair exchanges models both ways
+                pulls_from[a].push(b);
+                pulls_from[b].push(a);
+            }
+        }
+        RoundPlan {
+            active: (0..n).collect(),
+            pulls_from,
+            pushes: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::Fixture;
+
+    #[test]
+    fn everyone_active_and_degrees_bounded() {
+        let mut rng = Pcg::seeded(3);
+        let fix = Fixture::random(20, &mut rng);
+        let mut m = Matcha::default();
+        let plan = m.plan(&fix.view(), &mut rng);
+        plan.validate(20).unwrap();
+        assert_eq!(plan.active.len(), 20);
+        // matchings: in-degree ≤ number of sampled matchings; and each
+        // pull is symmetric
+        for (k, lst) in plan.pulls_from.iter().enumerate() {
+            let i = plan.active[k];
+            for &j in lst {
+                let kj = plan.active.iter().position(|&x| x == j).unwrap();
+                assert!(plan.pulls_from[kj].contains(&i), "asymmetric pair");
+            }
+        }
+    }
+
+    #[test]
+    fn frac_zero_means_no_communication() {
+        let mut rng = Pcg::seeded(4);
+        let fix = Fixture::random(10, &mut rng);
+        let mut m = Matcha { frac: 0.0, ..Default::default() };
+        let plan = m.plan(&fix.view(), &mut rng);
+        assert_eq!(plan.transfers(), 0);
+    }
+
+    #[test]
+    fn full_frac_uses_sparse_base_graph() {
+        let mut rng = Pcg::seeded(5);
+        let fix = Fixture::random(12, &mut rng);
+        let view = fix.view();
+        let mut m = Matcha { frac: 1.0, ..Default::default() };
+        let plan = m.plan(&view, &mut rng);
+        // sparse base topology: strictly fewer transfers than the full
+        // in-range graph would produce, but the graph is non-trivial
+        let mut full_count = 0;
+        for i in 0..12 {
+            for &j in &view.candidates[i] {
+                if i < j && view.candidates[j].contains(&i) {
+                    full_count += 2;
+                }
+            }
+        }
+        assert!(plan.transfers() > 0);
+        assert!(
+            plan.transfers() <= full_count,
+            "{} > {full_count}",
+            plan.transfers()
+        );
+        // degree bound: nobody exchanges with more than ~2×base_degree
+        for lst in &plan.pulls_from {
+            assert!(lst.len() <= 2 * m.base_degree + 1, "{}", lst.len());
+        }
+    }
+}

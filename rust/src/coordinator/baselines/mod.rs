@@ -1,0 +1,10 @@
+//! Baseline DFL mechanisms (paper §VI-A3), reimplemented over the same
+//! substrate so comparisons are apples-to-apples.
+
+mod asydfl;
+mod matcha;
+mod saadfl;
+
+pub use asydfl::AsyDfl;
+pub use matcha::Matcha;
+pub use saadfl::SaAdfl;

@@ -1,0 +1,107 @@
+//! SA-ADFL baseline \[15\] — the authors' previous work.
+//!
+//! Dynamic staleness control, but coarse: exactly *one* worker is
+//! activated per round (chosen by the same drift-plus-penalty criterion,
+//! restricted to singleton active sets), and it exchanges models with
+//! **all** neighbors within its communication range — it pulls everyone's
+//! model for aggregation and pushes its updated model back to everyone.
+//! That is the "significant communication + no fine-grained non-IID
+//! handling" behaviour DySTop improves on (§II-C, Table I).
+
+use crate::coordinator::{lyapunov, RoundPlan, SchedView, Scheduler};
+use crate::util::rng::Pcg;
+
+#[derive(Default)]
+pub struct SaAdfl;
+
+impl Scheduler for SaAdfl {
+    fn name(&self) -> &'static str {
+        "sa-adfl"
+    }
+
+    fn plan(&mut self, view: &SchedView<'_>, _rng: &mut Pcg) -> RoundPlan {
+        let n = view.n();
+        let p = view.params;
+
+        // drift of "skip everyone"
+        let base_drift: f64 = (0..n)
+            .map(|i| {
+                view.queues[i]
+                    * (lyapunov::staleness_after(view.tau[i], false) as f64
+                        - p.tau_bound as f64)
+            })
+            .sum();
+
+        // best singleton: drift change −q_i(τ_i+1), penalty V·H_t^i
+        let best = (0..n)
+            .min_by(|&a, &b| {
+                let sa = base_drift - view.queues[a] * (view.tau[a] as f64 + 1.0)
+                    + p.v * view.h_est[a];
+                let sb = base_drift - view.queues[b] * (view.tau[b] as f64 + 1.0)
+                    + p.v * view.h_est[b];
+                sa.partial_cmp(&sb).unwrap()
+            })
+            .expect("no workers");
+
+        // SA-ADFL is push-based: the activated worker aggregates whatever
+        // was pushed to it so far (its inbox) with its own model, then
+        // sends the update to ALL neighbors within communication range —
+        // no neighbor subset selection (Table I: "Communication: High").
+        let neighbors: Vec<usize> = view.candidates[best]
+            .iter()
+            .copied()
+            .filter(|&j| j != best)
+            .collect();
+        let pushes: Vec<(usize, usize)> =
+            neighbors.iter().map(|&j| (best, j)).collect();
+        RoundPlan {
+            active: vec![best],
+            pulls_from: vec![Vec::new()],
+            pushes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::Fixture;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn single_worker_full_range() {
+        forall(71, |rng| {
+            let n = 3 + rng.below_usize(30);
+            let fix = Fixture::random(n, rng);
+            let view = fix.view();
+            let mut s = SaAdfl;
+            let plan = s.plan(&view, rng);
+            plan.validate(n).unwrap();
+            assert_eq!(plan.active.len(), 1);
+            let w = plan.active[0];
+            // push-based: no pulls, one push to every in-range neighbor
+            let expected: Vec<usize> = view.candidates[w]
+                .iter()
+                .copied()
+                .filter(|&j| j != w)
+                .collect();
+            assert!(plan.pulls_from[0].is_empty());
+            assert_eq!(plan.pushes.len(), expected.len());
+            for (f, t) in &plan.pushes {
+                assert_eq!(*f, w);
+                assert!(expected.contains(t));
+            }
+        });
+    }
+
+    #[test]
+    fn stale_hot_queue_worker_wins() {
+        let mut rng = Pcg::seeded(8);
+        let mut fix = Fixture::random(6, &mut rng);
+        fix.queues = vec![0.0, 0.0, 50.0, 0.0, 0.0, 0.0];
+        fix.tau = vec![0, 0, 9, 0, 0, 0];
+        fix.h_est = vec![1.0; 6];
+        let plan = SaAdfl.plan(&fix.view(), &mut rng);
+        assert_eq!(plan.active, vec![2]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Lyapunov machinery (paper §V-B).
+//!
+//! Problem **P1** couples rounds through the staleness constraint (12c);
+//! Theorem 2 decouples it into per-round subproblems **P2** by the
+//! drift-plus-penalty method over the virtual queues
+//!
+//! ```text
+//! q_{t+1}^i = max{ q_t^i + τ_t^i − τ_bound, 0 }              (Eq. 33)
+//! P2: min_{a_t, c_t}  Σ_i q_t^i (τ_t^i − τ_bound) + V · H_t  (Eq. 34)
+//! ```
+//!
+//! WAA evaluates Eq. (34) over candidate active sets with the staleness
+//! *pre-updated* (Alg. 2 line 5), so the drift term sees the effect of
+//! the activation decision.
+
+/// Staleness of worker `i` after the round if `active` (Eq. 6).
+pub fn staleness_after(tau: u64, active: bool) -> u64 {
+    if active {
+        0
+    } else {
+        tau + 1
+    }
+}
+
+/// Drift-plus-penalty value of Eq. (34) for one candidate active set.
+///
+/// * `queues` — q_t^i for all workers
+/// * `tau_next` — pre-updated staleness τ given the candidate A_t
+/// * `tau_bound` — constraint (12c)
+/// * `v` — trade-off weight V
+/// * `h_round` — the candidate round duration H_t (Eq. 9)
+pub fn drift_plus_penalty(
+    queues: &[f64],
+    tau_next: &[u64],
+    tau_bound: u64,
+    v: f64,
+    h_round: f64,
+) -> f64 {
+    debug_assert_eq!(queues.len(), tau_next.len());
+    let drift: f64 = queues
+        .iter()
+        .zip(tau_next)
+        .map(|(&q, &t)| q * (t as f64 - tau_bound as f64))
+        .sum();
+    drift + v * h_round
+}
+
+/// Queue update (Eq. 33) over a whole staleness vector.
+pub fn update_queues(queues: &mut [f64], tau: &[u64], tau_bound: u64) {
+    for (q, &t) in queues.iter_mut().zip(tau) {
+        *q = (*q + t as f64 - tau_bound as f64).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staleness_update_matches_eq6() {
+        assert_eq!(staleness_after(4, true), 0);
+        assert_eq!(staleness_after(4, false), 5);
+        assert_eq!(staleness_after(0, false), 1);
+    }
+
+    #[test]
+    fn queues_never_negative() {
+        let mut q = vec![0.0, 1.0, 5.0];
+        update_queues(&mut q, &[0, 0, 10], 3);
+        assert_eq!(q, vec![0.0, 0.0, 12.0]);
+    }
+
+    #[test]
+    fn queue_stability_under_bounded_staleness() {
+        // if τ stays ≤ τ_bound forever, queues stay at 0 (Theorem 2's
+        // stability precondition)
+        let mut q = vec![0.0; 4];
+        for t in 0..100u64 {
+            let tau = [t % 3, t % 2, 0, (t % 4).min(3)];
+            update_queues(&mut q, &tau, 3);
+        }
+        assert!(q.iter().all(|&x| x == 0.0), "{q:?}");
+    }
+
+    #[test]
+    fn penalty_trades_off_with_v() {
+        let queues = [2.0, 0.0];
+        let tau_next = [6, 0];
+        // drift = 2·(6−5) = 2
+        let low_v = drift_plus_penalty(&queues, &tau_next, 5, 1.0, 3.0);
+        let high_v = drift_plus_penalty(&queues, &tau_next, 5, 100.0, 3.0);
+        assert!((low_v - (2.0 + 3.0)).abs() < 1e-12);
+        assert!((high_v - (2.0 + 300.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn activating_stale_worker_reduces_objective() {
+        // a worker far over bound with a hot queue should make activation
+        // (τ→0) strictly better than skipping (τ+1)
+        let queues = [10.0];
+        let skip = drift_plus_penalty(&queues, &[8], 5, 1.0, 1.0);
+        let act = drift_plus_penalty(&queues, &[0], 5, 1.0, 2.0);
+        assert!(act < skip);
+    }
+}

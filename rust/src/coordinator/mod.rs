@@ -1,0 +1,319 @@
+//! The coordinator — the paper's system contribution.
+//!
+//! Every mechanism (DySTop and the three baselines) is a [`Scheduler`]
+//! that, given the per-round [`SchedView`] snapshot, produces a
+//! [`RoundPlan`]: which workers activate (`A_t`, Alg. 2) and which
+//! in-neighbors each of them pulls from (`G_t`, Alg. 3).
+
+pub mod baselines;
+mod lyapunov;
+mod ptca;
+mod waa;
+
+pub use lyapunov::{drift_plus_penalty, staleness_after, update_queues};
+pub use ptca::{phase1_priority, phase2_priority, Ptca};
+pub use waa::waa_select;
+
+use crate::config::ExperimentConfig;
+use crate::network::EdgeNetwork;
+use crate::util::rng::Pcg;
+
+/// DySTop-specific knobs carried into the schedulers.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerParams {
+    /// τ_bound of constraint (12c).
+    pub tau_bound: u64,
+    /// Lyapunov trade-off V of Eq. (34).
+    pub v: f64,
+    /// In-neighbor cap s (Fig. 17/18).
+    pub neighbor_cap: usize,
+    /// PTCA phase switch round t_thre.
+    pub t_thre: usize,
+}
+
+impl From<&ExperimentConfig> for SchedulerParams {
+    fn from(e: &ExperimentConfig) -> Self {
+        SchedulerParams {
+            tau_bound: e.tau_bound,
+            v: e.v,
+            neighbor_cap: e.neighbor_cap,
+            t_thre: e.t_thre,
+        }
+    }
+}
+
+/// Read-only per-round snapshot handed to schedulers.
+pub struct SchedView<'a> {
+    /// Round index t (1-based like the paper).
+    pub round: usize,
+    /// Staleness τ_t^i per worker.
+    pub tau: &'a [u64],
+    /// Lyapunov queues q_t^i per worker.
+    pub queues: &'a [f64],
+    /// Residual compute h_t^{i,cmp} (Eq. 7) per worker, seconds.
+    pub h_cmp: &'a [f64],
+    /// Estimated per-worker round cost H_t^i (Eq. 8), seconds.
+    pub h_est: &'a [f64],
+    /// Data sizes D_i.
+    pub data_sizes: &'a [usize],
+    /// Per-worker label distributions (PTCA phase 1 / EMD).
+    pub label_dist: &'a [Vec<f64>],
+    /// Candidate in-range workers C_t^i (Alg. 3 input), per worker.
+    pub candidates: &'a [Vec<usize>],
+    /// Per-worker bandwidth budgets \hat B_t^i, in model transfers.
+    pub budgets: &'a [f64],
+    /// Pull history: pulls\[i\]\[j\] = times i pulled from j (Eq. 47).
+    pub pulls: &'a [Vec<u64>],
+    /// The physical network (distances for p1).
+    pub net: &'a EdgeNetwork,
+    pub params: SchedulerParams,
+}
+
+impl<'a> SchedView<'a> {
+    pub fn n(&self) -> usize {
+        self.tau.len()
+    }
+}
+
+/// Output of a scheduler for one round.
+#[derive(Clone, Debug, Default)]
+pub struct RoundPlan {
+    /// Activated workers A_t.
+    pub active: Vec<usize>,
+    /// Pull topology: `pulls_from[k]` lists the in-neighbors of
+    /// `active[k]` (excluding itself; self-aggregation is implicit).
+    pub pulls_from: Vec<Vec<usize>>,
+    /// Push edges `(from, to)`: `from` sends its *updated* model to `to`,
+    /// which merges it immediately (used by SA-ADFL's push-to-all).
+    pub pushes: Vec<(usize, usize)>,
+}
+
+impl RoundPlan {
+    /// Total model transfers this round (each pull + each push moves one
+    /// model — Eq. 10's accounting).
+    pub fn transfers(&self) -> usize {
+        self.pulls_from.iter().map(|v| v.len()).sum::<usize>() + self.pushes.len()
+    }
+
+    /// Sanity: every plan invariant the sim relies on.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        if self.active.len() != self.pulls_from.len() {
+            return Err("active/pulls_from length mismatch".into());
+        }
+        let mut seen = vec![false; n];
+        for &a in &self.active {
+            if a >= n {
+                return Err(format!("active worker {a} out of range"));
+            }
+            if seen[a] {
+                return Err(format!("worker {a} activated twice"));
+            }
+            seen[a] = true;
+        }
+        for (k, pulls) in self.pulls_from.iter().enumerate() {
+            let owner = self.active[k];
+            let mut dedup = std::collections::BTreeSet::new();
+            for &j in pulls {
+                if j >= n {
+                    return Err(format!("pull source {j} out of range"));
+                }
+                if j == owner {
+                    return Err(format!("worker {owner} pulls from itself"));
+                }
+                if !dedup.insert(j) {
+                    return Err(format!("duplicate pull {owner}←{j}"));
+                }
+            }
+        }
+        for &(f, t) in &self.pushes {
+            if f >= n || t >= n || f == t {
+                return Err(format!("bad push edge ({f},{t})"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A scheduling mechanism (DySTop or a baseline).
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Plan round `view.round`.
+    fn plan(&mut self, view: &SchedView<'_>, rng: &mut Pcg) -> RoundPlan;
+}
+
+/// DySTop: WAA for activation + PTCA for topology.
+pub struct DySTopScheduler {
+    ptca: Ptca,
+}
+
+impl DySTopScheduler {
+    pub fn new() -> Self {
+        DySTopScheduler { ptca: Ptca::default() }
+    }
+
+    /// Ablations for Fig. 3.
+    pub fn phase1_only() -> Self {
+        DySTopScheduler { ptca: Ptca::phase1_only() }
+    }
+
+    pub fn phase2_only() -> Self {
+        DySTopScheduler { ptca: Ptca::phase2_only() }
+    }
+}
+
+impl Default for DySTopScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for DySTopScheduler {
+    fn name(&self) -> &'static str {
+        "dystop"
+    }
+
+    fn plan(&mut self, view: &SchedView<'_>, _rng: &mut Pcg) -> RoundPlan {
+        let active = waa_select(view);
+        let pulls_from = self.ptca.construct(view, &active);
+        RoundPlan { active, pulls_from, pushes: Vec::new() }
+    }
+}
+
+/// Factory from config.
+pub fn make_scheduler(
+    kind: crate::config::SchedulerKind,
+) -> Box<dyn Scheduler> {
+    use crate::config::SchedulerKind as K;
+    match kind {
+        K::DySTop => Box::new(DySTopScheduler::new()),
+        K::DySTopPhase1Only => Box::new(DySTopScheduler::phase1_only()),
+        K::DySTopPhase2Only => Box::new(DySTopScheduler::phase2_only()),
+        K::SaAdfl => Box::new(baselines::SaAdfl::default()),
+        K::AsyDfl => Box::new(baselines::AsyDfl::default()),
+        K::Matcha => Box::new(baselines::Matcha::default()),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Shared fixture: build a consistent SchedView over a random network.
+
+    use super::*;
+    use crate::config::NetworkConfig;
+
+    pub struct Fixture {
+        pub net: EdgeNetwork,
+        pub tau: Vec<u64>,
+        pub queues: Vec<f64>,
+        pub h_cmp: Vec<f64>,
+        pub h_est: Vec<f64>,
+        pub data_sizes: Vec<usize>,
+        pub label_dist: Vec<Vec<f64>>,
+        pub candidates: Vec<Vec<usize>>,
+        pub budgets: Vec<f64>,
+        pub pulls: Vec<Vec<u64>>,
+        pub params: SchedulerParams,
+        pub round: usize,
+    }
+
+    impl Fixture {
+        pub fn random(n: usize, rng: &mut Pcg) -> Self {
+            let mut cfg = NetworkConfig::default();
+            cfg.comm_range_m = 70.0; // dense enough for small n
+            let net = EdgeNetwork::new(n, cfg, rng);
+            let candidates: Vec<Vec<usize>> =
+                (0..n).map(|i| net.in_range(i)).collect();
+            let label_dist: Vec<Vec<f64>> =
+                (0..n).map(|_| rng.dirichlet(0.5, 10)).collect();
+            Fixture {
+                tau: (0..n).map(|_| rng.below(6)).collect(),
+                queues: (0..n).map(|_| rng.f64() * 3.0).collect(),
+                h_cmp: (0..n).map(|_| rng.f64() * 2.0).collect(),
+                h_est: (0..n).map(|_| 0.5 + rng.f64() * 3.0).collect(),
+                data_sizes: (0..n).map(|_| 64 + rng.below_usize(128)).collect(),
+                label_dist,
+                candidates,
+                budgets: vec![8.0; n],
+                pulls: vec![vec![0; n]; n],
+                params: SchedulerParams {
+                    tau_bound: 5,
+                    v: 10.0,
+                    neighbor_cap: 4,
+                    t_thre: 50,
+                },
+                round: 1,
+                net,
+            }
+        }
+
+        pub fn view(&self) -> SchedView<'_> {
+            SchedView {
+                round: self.round,
+                tau: &self.tau,
+                queues: &self.queues,
+                h_cmp: &self.h_cmp,
+                h_est: &self.h_est,
+                data_sizes: &self.data_sizes,
+                label_dist: &self.label_dist,
+                candidates: &self.candidates,
+                budgets: &self.budgets,
+                pulls: &self.pulls,
+                net: &self.net,
+                params: self.params,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::Fixture;
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn roundplan_validation_catches_errors() {
+        let mut p = RoundPlan {
+            active: vec![0, 1],
+            pulls_from: vec![vec![1], vec![0, 2]],
+            pushes: vec![],
+        };
+        assert!(p.validate(3).is_ok());
+        p.pulls_from[0] = vec![0]; // self-pull
+        assert!(p.validate(3).is_err());
+        p.pulls_from[0] = vec![1, 1]; // duplicate
+        assert!(p.validate(3).is_err());
+        p.pulls_from[0] = vec![5]; // out of range
+        assert!(p.validate(3).is_err());
+        let q = RoundPlan { active: vec![0, 0], pulls_from: vec![vec![], vec![]], pushes: vec![] };
+        assert!(q.validate(3).is_err());
+    }
+
+    #[test]
+    fn all_schedulers_emit_valid_plans() {
+        forall(41, |rng| {
+            let n = 5 + rng.below_usize(25);
+            let fix = Fixture::random(n, rng);
+            for kind in [
+                crate::config::SchedulerKind::DySTop,
+                crate::config::SchedulerKind::DySTopPhase1Only,
+                crate::config::SchedulerKind::DySTopPhase2Only,
+                crate::config::SchedulerKind::SaAdfl,
+                crate::config::SchedulerKind::AsyDfl,
+                crate::config::SchedulerKind::Matcha,
+            ] {
+                let mut s = make_scheduler(kind);
+                let plan = s.plan(&fix.view(), rng);
+                plan.validate(n).unwrap_or_else(|e| {
+                    panic!("{}: invalid plan: {e}", s.name())
+                });
+                assert!(
+                    !plan.active.is_empty(),
+                    "{}: empty active set",
+                    s.name()
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,285 @@
+//! Phase-aware Topology Construction Algorithm — Alg. 3 of the paper.
+//!
+//! For each activated worker v_i, PTCA ranks the candidates within
+//! communication range (`C_t^i`) by a phase-dependent priority:
+//!
+//! * **Phase 1** (t ≤ t_thre, Eq. 46): favour neighbors whose label
+//!   distribution *differs* (high EMD) and who are physically close —
+//!   combined datasets approximate IID (Corollary 3, Fig. 2).
+//! * **Phase 2** (t > t_thre, Eq. 47): favour rarely-pulled neighbors
+//!   (diversity) with similar staleness (staleness control).
+//!
+//! Selection is a round-robin over the active workers, one pull per
+//! iteration, respecting every worker's bandwidth budget (both the
+//! puller's and the source's, Eq. 10) and the in-neighbor cap s, until a
+//! full sweep adds no bandwidth (Alg. 3 lines 18–21).
+
+use super::SchedView;
+use crate::data::emd;
+
+/// Phase-1 priority p1(v_i, v_j) (Eq. 46).
+pub fn phase1_priority(
+    view: &SchedView<'_>,
+    i: usize,
+    j: usize,
+    emd_max: f64,
+    dist_max: f64,
+) -> f64 {
+    let e = emd(&view.label_dist[i], &view.label_dist[j]);
+    let d = view.net.distance(i, j);
+    e / emd_max.max(1e-9) + (1.0 - d / dist_max.max(1e-9))
+}
+
+/// Phase-2 priority p2(v_i, v_j) (Eq. 47).
+pub fn phase2_priority(view: &SchedView<'_>, i: usize, j: usize) -> f64 {
+    let t = view.round.max(1) as f64;
+    let pull_frac = view.pulls[i][j] as f64 / t;
+    let tau_gap = (view.tau[i] as i64 - view.tau[j] as i64).unsigned_abs() as f64;
+    (1.0 - pull_frac) * (1.0 / (1.0 + tau_gap))
+}
+
+/// Which priority a PTCA instance uses (Fig. 3 ablations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PhaseMode {
+    /// Paper's Alg. 3: p1 before t_thre, p2 after.
+    Combined,
+    Phase1Only,
+    Phase2Only,
+}
+
+/// PTCA topology builder.
+#[derive(Clone, Debug)]
+pub struct Ptca {
+    mode: PhaseMode,
+}
+
+impl Default for Ptca {
+    fn default() -> Self {
+        Ptca { mode: PhaseMode::Combined }
+    }
+}
+
+impl Ptca {
+    pub fn phase1_only() -> Self {
+        Ptca { mode: PhaseMode::Phase1Only }
+    }
+
+    pub fn phase2_only() -> Self {
+        Ptca { mode: PhaseMode::Phase2Only }
+    }
+
+    fn use_phase1(&self, view: &SchedView<'_>) -> bool {
+        match self.mode {
+            PhaseMode::Combined => view.round <= view.params.t_thre,
+            PhaseMode::Phase1Only => true,
+            PhaseMode::Phase2Only => false,
+        }
+    }
+
+    /// Construct the pull lists for each active worker (aligned with
+    /// `active`). Guarantees per-worker bandwidth ≤ budget and in-degree
+    /// ≤ s; every active worker gets ≥ 0 pulls (possibly none if starved).
+    pub fn construct(
+        &self,
+        view: &SchedView<'_>,
+        active: &[usize],
+    ) -> Vec<Vec<usize>> {
+        let n = view.n();
+        let phase1 = self.use_phase1(view);
+        let s_cap = view.params.neighbor_cap;
+
+        // Normalisation constants for p1 over the realised candidates.
+        let (emd_max, dist_max) = if phase1 {
+            let mut em = 0.0f64;
+            let mut dm = 0.0f64;
+            for &i in active {
+                for &j in &view.candidates[i] {
+                    em = em.max(emd(&view.label_dist[i], &view.label_dist[j]));
+                    dm = dm.max(view.net.distance(i, j));
+                }
+            }
+            (em.max(1e-9), dm.max(1e-9))
+        } else {
+            (1.0, 1.0)
+        };
+
+        // Line 2–5: per-active-worker candidate queues sorted descending
+        // by priority (a Vec used as a cursor-consumed stack).
+        let mut queues: Vec<Vec<usize>> = active
+            .iter()
+            .map(|&i| {
+                // decorate-sort-undecorate: priorities are O(C) to compute
+                // (EMD over classes), so evaluate each exactly once rather
+                // than inside the sort comparator (§Perf)
+                let mut scored: Vec<(f64, usize)> = view.candidates[i]
+                    .iter()
+                    .copied()
+                    .filter(|&j| j != i)
+                    .map(|j| {
+                        let p = if phase1 {
+                            phase1_priority(view, i, j, emd_max, dist_max)
+                        } else {
+                            phase2_priority(view, i, j)
+                        };
+                        (p, j)
+                    })
+                    .collect();
+                // ascending: pop() takes from the back = highest priority
+                scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                scored.into_iter().map(|(_, j)| j).collect::<Vec<usize>>()
+            })
+            .collect();
+
+        // Iterative bandwidth-capped selection (lines 6–21).
+        let mut used_bw = vec![0.0f64; n]; // B_t^i in model transfers
+        let mut result: Vec<Vec<usize>> = vec![Vec::new(); active.len()];
+        loop {
+            let before: f64 = used_bw.iter().sum();
+            for (k, &i) in active.iter().enumerate() {
+                if result[k].len() >= s_cap {
+                    continue;
+                }
+                // Line 8: puller must afford one more pull.
+                if used_bw[i] + 1.0 > view.budgets[i] {
+                    continue;
+                }
+                // Lines 10–17: take the top-ranked affordable source.
+                while let Some(j) = queues[k].pop() {
+                    if used_bw[j] + 1.0 > view.budgets[j] {
+                        continue; // source saturated — skip (line 11–12)
+                    }
+                    result[k].push(j);
+                    used_bw[i] += 1.0;
+                    used_bw[j] += 1.0;
+                    break;
+                }
+            }
+            let after: f64 = used_bw.iter().sum();
+            if after <= before {
+                break; // line 18: no progress in a full sweep
+            }
+        }
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::Fixture;
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn respects_neighbor_cap_and_budget() {
+        forall(61, |rng| {
+            let n = 5 + rng.below_usize(30);
+            let mut fix = Fixture::random(n, rng);
+            fix.params.neighbor_cap = 1 + rng.below_usize(6);
+            let budget = 1.0 + rng.f64() * 8.0;
+            fix.budgets = vec![budget; n];
+            let n_active = 1 + rng.below_usize(n.min(8));
+            let active: Vec<usize> = rng.sample_indices(n, n_active);
+            let view = fix.view();
+            let ptca = Ptca::default();
+            let pulls = ptca.construct(&view, &active);
+            assert_eq!(pulls.len(), active.len());
+            // accounting
+            let mut bw = vec![0.0; n];
+            for (k, lst) in pulls.iter().enumerate() {
+                assert!(lst.len() <= fix.params.neighbor_cap);
+                let mut dedup = lst.clone();
+                dedup.sort_unstable();
+                dedup.dedup();
+                assert_eq!(dedup.len(), lst.len(), "duplicate pulls");
+                for &j in lst {
+                    assert_ne!(j, active[k]);
+                    assert!(
+                        view.candidates[active[k]].contains(&j),
+                        "pull outside communication range"
+                    );
+                    bw[active[k]] += 1.0;
+                    bw[j] += 1.0;
+                }
+            }
+            for i in 0..n {
+                assert!(
+                    bw[i] <= view.budgets[i] + 1e-9,
+                    "worker {i} bandwidth {} > budget {}",
+                    bw[i],
+                    view.budgets[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn phase1_prefers_divergent_close_neighbors() {
+        let mut rng = Pcg::seeded(9);
+        let mut fix = Fixture::random(4, &mut rng);
+        // all same position distances: candidates 1,2,3 for worker 0
+        fix.candidates = vec![vec![1, 2, 3], vec![0], vec![0], vec![0]];
+        // worker 0 one-hot class 0; worker 1 identical; worker 2 disjoint
+        fix.label_dist = vec![
+            one_hot(0),
+            one_hot(0),
+            one_hot(1),
+            one_hot(0),
+        ];
+        fix.net.positions = vec![
+            crate::network::Pos { x: 0.0, y: 0.0 },
+            crate::network::Pos { x: 10.0, y: 0.0 },
+            crate::network::Pos { x: 10.0, y: 0.0 },
+            crate::network::Pos { x: 10.0, y: 0.0 },
+        ];
+        fix.params.neighbor_cap = 1;
+        fix.round = 1; // phase 1
+        let ptca = Ptca::default();
+        let pulls = ptca.construct(&fix.view(), &[0]);
+        assert_eq!(pulls[0], vec![2], "should pick the divergent neighbor");
+    }
+
+    #[test]
+    fn phase2_prefers_rarely_pulled_similar_staleness() {
+        let mut rng = Pcg::seeded(10);
+        let mut fix = Fixture::random(4, &mut rng);
+        fix.candidates = vec![vec![1, 2, 3], vec![0], vec![0], vec![0]];
+        fix.round = 100;
+        fix.params.t_thre = 50; // phase 2
+        fix.tau = vec![2, 2, 2, 9]; // worker 3 has big staleness gap
+        fix.pulls = vec![vec![0, 90, 0, 0]; 4]; // worker 1 pulled a lot
+        fix.params.neighbor_cap = 1;
+        let ptca = Ptca::default();
+        let pulls = ptca.construct(&fix.view(), &[0]);
+        // worker 2: never pulled, same staleness → top priority
+        assert_eq!(pulls[0], vec![2]);
+    }
+
+    #[test]
+    fn ablation_modes_differ_when_phases_disagree() {
+        let mut rng = Pcg::seeded(11);
+        let fix = Fixture::random(20, &mut rng);
+        let view = fix.view();
+        let active: Vec<usize> = (0..5).collect();
+        let p1 = Ptca::phase1_only().construct(&view, &active);
+        let p2 = Ptca::phase2_only().construct(&view, &active);
+        // not a hard guarantee for every seed, but for this fixed seed
+        // the orderings disagree — guards against the phases collapsing
+        assert_ne!(p1, p2);
+    }
+
+    #[test]
+    fn zero_budget_yields_no_pulls() {
+        let mut rng = Pcg::seeded(12);
+        let mut fix = Fixture::random(6, &mut rng);
+        fix.budgets = vec![0.0; 6];
+        let pulls = Ptca::default().construct(&fix.view(), &[0, 1]);
+        assert!(pulls.iter().all(|l| l.is_empty()));
+    }
+
+    fn one_hot(k: usize) -> Vec<f64> {
+        let mut v = vec![0.0; 10];
+        v[k] = 1.0;
+        v
+    }
+}

@@ -1,0 +1,156 @@
+//! Worker Activation Algorithm — Alg. 2 of the paper.
+//!
+//! Workers are sorted ascending by their estimated round cost H_t^i
+//! (Eq. 8); prefixes of the sorted order are candidate active sets. For
+//! each prefix the staleness vector is pre-updated (Eq. 6) and the
+//! drift-plus-penalty objective (Eq. 34) evaluated; the minimising prefix
+//! wins. Because the prefix is sorted by H_t^i, the candidate round
+//! duration H_t is just the cost of the last added worker (Eq. 9), which
+//! keeps the scan O(N log N + N·cost(Eq.34)) — and an incremental drift
+//! update makes the whole scan O(N log N).
+
+use super::lyapunov;
+use super::SchedView;
+
+/// Select the active set A_t (returns sorted worker ids).
+pub fn waa_select(view: &SchedView<'_>) -> Vec<usize> {
+    let n = view.n();
+    debug_assert!(n > 0);
+    let p = view.params;
+
+    // Line 2: sort workers ascending by H_t^i.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| view.h_est[a].partial_cmp(&view.h_est[b]).unwrap());
+
+    // Base drift: nobody activated — every worker's staleness pre-updates
+    // to τ+1 (Eq. 6).
+    let mut drift: f64 = (0..n)
+        .map(|i| {
+            view.queues[i]
+                * (lyapunov::staleness_after(view.tau[i], false) as f64
+                    - p.tau_bound as f64)
+        })
+        .sum();
+
+    // Lines 3–8: grow the prefix, tracking the incremental drift.
+    // Moving worker i from "skipped" to "active" changes its pre-updated
+    // staleness from τ_i+1 to 0, i.e. drift −= q_i·(τ_i+1).
+    let mut best_k = 1;
+    let mut best_s = f64::INFINITY;
+    for (k, &i) in order.iter().enumerate() {
+        drift -= view.queues[i] * (view.tau[i] as f64 + 1.0);
+        let h_round = view.h_est[i]; // sorted ⇒ max over prefix (Eq. 9)
+        let s = drift + p.v * h_round;
+        if s < best_s {
+            best_s = s;
+            best_k = k + 1;
+        }
+    }
+
+    let mut active: Vec<usize> = order[..best_k].to_vec();
+    active.sort_unstable();
+    active
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::Fixture;
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg;
+
+    /// Reference O(N²) implementation straight off Alg. 2 (no incremental
+    /// drift) — the optimised scan must match it exactly.
+    fn waa_reference(view: &SchedView<'_>) -> Vec<usize> {
+        let n = view.n();
+        let p = view.params;
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| view.h_est[a].partial_cmp(&view.h_est[b]).unwrap());
+        let mut best: (f64, usize) = (f64::INFINITY, 1);
+        for k in 1..=n {
+            let active: std::collections::BTreeSet<usize> =
+                order[..k].iter().copied().collect();
+            let tau_next: Vec<u64> = (0..n)
+                .map(|i| lyapunov::staleness_after(view.tau[i], active.contains(&i)))
+                .collect();
+            let h_round = order[..k]
+                .iter()
+                .map(|&i| view.h_est[i])
+                .fold(0.0f64, f64::max);
+            let s = lyapunov::drift_plus_penalty(
+                view.queues,
+                &tau_next,
+                p.tau_bound,
+                p.v,
+                h_round,
+            );
+            if s < best.0 {
+                best = (s, k);
+            }
+        }
+        let mut active: Vec<usize> = order[..best.1].to_vec();
+        active.sort_unstable();
+        active
+    }
+
+    #[test]
+    fn matches_reference_implementation() {
+        forall(51, |rng| {
+            let n = 2 + rng.below_usize(40);
+            let fix = Fixture::random(n, rng);
+            let view = fix.view();
+            assert_eq!(waa_select(&view), waa_reference(&view));
+        });
+    }
+
+    #[test]
+    fn always_nonempty_and_in_range() {
+        forall(52, |rng| {
+            let n = 1 + rng.below_usize(50);
+            let fix = Fixture::random(n, rng);
+            let a = waa_select(&fix.view());
+            assert!(!a.is_empty());
+            assert!(a.iter().all(|&i| i < n));
+            let mut d = a.clone();
+            d.dedup();
+            assert_eq!(d.len(), a.len());
+        });
+    }
+
+    #[test]
+    fn hot_queues_force_large_active_sets() {
+        // when every queue is hot, activating everyone minimises drift
+        let mut rng = Pcg::seeded(5);
+        let mut fix = Fixture::random(12, &mut rng);
+        fix.queues = vec![1000.0; 12];
+        fix.tau = vec![10; 12];
+        fix.params.v = 0.001;
+        let a = waa_select(&fix.view());
+        assert_eq!(a.len(), 12, "{a:?}");
+    }
+
+    #[test]
+    fn huge_v_prefers_single_fast_worker() {
+        // V → ∞ makes round duration dominate: pick exactly the fastest
+        let mut rng = Pcg::seeded(6);
+        let mut fix = Fixture::random(12, &mut rng);
+        fix.queues = vec![0.01; 12];
+        fix.params.v = 1e9;
+        let a = waa_select(&fix.view());
+        assert_eq!(a.len(), 1);
+        let fastest = (0..12)
+            .min_by(|&x, &y| fix.h_est[x].partial_cmp(&fix.h_est[y]).unwrap())
+            .unwrap();
+        assert_eq!(a[0], fastest);
+    }
+
+    #[test]
+    fn cold_queues_still_activate_fastest() {
+        // all queues zero ⇒ drift is 0 everywhere; smallest H wins
+        let mut rng = Pcg::seeded(7);
+        let mut fix = Fixture::random(8, &mut rng);
+        fix.queues = vec![0.0; 8];
+        let a = waa_select(&fix.view());
+        assert_eq!(a.len(), 1);
+    }
+}

@@ -1,0 +1,122 @@
+//! Data substrate: synthetic classification corpus, Dirichlet non-IID
+//! partitioning, and label-distribution measures (EMD, Eq. 45).
+//!
+//! The paper trains on FMNIST/CIFAR-10 (simulation) and SVHN/CIFAR-100
+//! (testbed). Those are unavailable offline; we substitute a deterministic
+//! Gaussian-mixture corpus that exercises the identical code paths — see
+//! DESIGN.md §2. Class structure is what matters to DySTop: per-class
+//! histograms feed the Dirichlet partitioner, EMD, and PTCA phase 1.
+
+mod partition;
+mod synthetic;
+
+pub use partition::{dirichlet_partition, PartitionStats};
+pub use synthetic::{SyntheticSpec, make_corpus};
+
+/// A labelled dataset: row-major features `[n, dim]` + integer labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub dim: usize,
+    pub num_classes: usize,
+    pub features: Vec<f32>,
+    pub labels: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn feature_row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Per-class sample counts (`D_i^k` of Eq. 45).
+    pub fn label_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.num_classes];
+        for &y in &self.labels {
+            h[y as usize] += 1;
+        }
+        h
+    }
+
+    /// Normalised label distribution.
+    pub fn label_distribution(&self) -> Vec<f64> {
+        let h = self.label_histogram();
+        let n = self.len().max(1) as f64;
+        h.into_iter().map(|c| c as f64 / n).collect()
+    }
+
+    /// Select rows by index into a new dataset.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut features = Vec::with_capacity(idx.len() * self.dim);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            features.extend_from_slice(self.feature_row(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset { dim: self.dim, num_classes: self.num_classes, features, labels }
+    }
+}
+
+/// Earth Mover's Distance between label distributions (Eq. 45).
+///
+/// The paper uses the per-class L1 form
+/// `EMD(D_i, D_j) = Σ_k |D_i^k/D_i − D_j^k/D_j|`, bounded by \[0, 2\].
+pub fn emd(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len(), "EMD over mismatched class counts");
+    p.iter().zip(q).map(|(a, b)| (a - b).abs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset {
+            dim: 2,
+            num_classes: 3,
+            features: vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+            labels: vec![0, 1, 1, 2],
+        }
+    }
+
+    #[test]
+    fn histogram_counts() {
+        assert_eq!(toy().label_histogram(), vec![1, 2, 1]);
+    }
+
+    #[test]
+    fn distribution_sums_to_one() {
+        let d = toy().label_distribution();
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(d, vec![0.25, 0.5, 0.25]);
+    }
+
+    #[test]
+    fn subset_picks_rows() {
+        let s = toy().subset(&[2, 0]);
+        assert_eq!(s.labels, vec![1, 0]);
+        assert_eq!(s.feature_row(0), &[4.0, 5.0]);
+        assert_eq!(s.feature_row(1), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn emd_properties() {
+        let p = [0.5, 0.5, 0.0];
+        let q = [0.0, 0.5, 0.5];
+        // symmetric
+        assert_eq!(emd(&p, &q), emd(&q, &p));
+        // identity of indiscernibles
+        assert_eq!(emd(&p, &p), 0.0);
+        // disjoint one-hot distributions hit the max of 2
+        assert_eq!(emd(&[1.0, 0.0], &[0.0, 1.0]), 2.0);
+        // triangle inequality on this triple
+        let r = [0.25, 0.25, 0.5];
+        assert!(emd(&p, &q) <= emd(&p, &r) + emd(&r, &q) + 1e-12);
+    }
+}

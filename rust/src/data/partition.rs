@@ -1,0 +1,181 @@
+//! Dirichlet non-IID partitioner (paper §VI-A2, ref. \[39\]).
+//!
+//! For each class `k`, a Dirichlet(φ·1_N) draw splits the class's samples
+//! across the N workers. Smaller φ ⇒ more skew; the paper sweeps
+//! φ ∈ {1.0, 0.7, 0.4} in simulation and {1.0, 0.5} on the testbed.
+//! Every worker is guaranteed at least `min_per_worker` samples
+//! (re-balanced from the largest shards) so local training is well-posed.
+
+use super::Dataset;
+use crate::util::rng::Pcg;
+
+/// Summary of a partition, used by tests and by PTCA (phase-1 priorities
+/// need per-worker label distributions).
+#[derive(Clone, Debug)]
+pub struct PartitionStats {
+    pub sizes: Vec<usize>,
+    pub label_distributions: Vec<Vec<f64>>,
+}
+
+/// Split `train` into `n` worker shards with Dirichlet(φ) class skew.
+pub fn dirichlet_partition(
+    train: &Dataset,
+    n: usize,
+    phi: f64,
+    min_per_worker: usize,
+    rng: &mut Pcg,
+) -> (Vec<Dataset>, PartitionStats) {
+    assert!(n > 0 && phi > 0.0);
+    // class → sample indices
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); train.num_classes];
+    for (i, &y) in train.labels.iter().enumerate() {
+        by_class[y as usize].push(i);
+    }
+
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for idxs in by_class.iter_mut() {
+        rng.shuffle(idxs);
+        let props = rng.dirichlet(phi, n);
+        // proportional allocation with remainder to the largest share
+        let total = idxs.len();
+        let mut counts: Vec<usize> =
+            props.iter().map(|p| (p * total as f64).floor() as usize).collect();
+        let assigned: usize = counts.iter().sum();
+        let mut rem = total - assigned;
+        // distribute remainder by largest fractional part
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            let fa = props[a] * total as f64 - counts[a] as f64;
+            let fb = props[b] * total as f64 - counts[b] as f64;
+            fb.partial_cmp(&fa).unwrap()
+        });
+        for &w in order.iter().cycle().take(rem.min(n * 2)) {
+            if rem == 0 {
+                break;
+            }
+            counts[w] += 1;
+            rem -= 1;
+        }
+        let mut cursor = 0;
+        for (w, &c) in counts.iter().enumerate() {
+            shards[w].extend_from_slice(&idxs[cursor..cursor + c]);
+            cursor += c;
+        }
+    }
+
+    // rebalance: top up starved workers from the largest shards
+    loop {
+        let (min_w, min_len) = shards
+            .iter()
+            .enumerate()
+            .map(|(w, s)| (w, s.len()))
+            .min_by_key(|&(_, l)| l)
+            .unwrap();
+        if min_len >= min_per_worker {
+            break;
+        }
+        let (max_w, max_len) = shards
+            .iter()
+            .enumerate()
+            .map(|(w, s)| (w, s.len()))
+            .max_by_key(|&(_, l)| l)
+            .unwrap();
+        if max_len <= min_per_worker {
+            break; // nothing left to take
+        }
+        let take = ((min_per_worker - min_len).min(max_len - min_per_worker)).max(1);
+        let moved: Vec<usize> =
+            shards[max_w].drain(max_len - take..).collect();
+        shards[min_w].extend(moved);
+    }
+
+    let datasets: Vec<Dataset> = shards.iter().map(|s| train.subset(s)).collect();
+    let stats = PartitionStats {
+        sizes: datasets.iter().map(|d| d.len()).collect(),
+        label_distributions: datasets.iter().map(|d| d.label_distribution()).collect(),
+    };
+    (datasets, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{emd, make_corpus, SyntheticSpec};
+    use crate::util::prop::forall;
+
+    fn corpus(n: usize) -> Dataset {
+        make_corpus(&SyntheticSpec { train_samples: n, test_samples: 10, ..Default::default() }).0
+    }
+
+    #[test]
+    fn partition_conserves_samples() {
+        let train = corpus(2000);
+        let mut rng = Pcg::seeded(3);
+        let (shards, stats) = dirichlet_partition(&train, 20, 0.4, 16, &mut rng);
+        assert_eq!(shards.len(), 20);
+        assert_eq!(stats.sizes.iter().sum::<usize>(), 2000);
+        // class totals conserved
+        let mut total = vec![0usize; train.num_classes];
+        for s in &shards {
+            for (k, c) in s.label_histogram().into_iter().enumerate() {
+                total[k] += c;
+            }
+        }
+        assert_eq!(total, train.label_histogram());
+    }
+
+    #[test]
+    fn min_per_worker_enforced() {
+        let train = corpus(2000);
+        let mut rng = Pcg::seeded(5);
+        let (_, stats) = dirichlet_partition(&train, 50, 0.1, 16, &mut rng);
+        assert!(
+            stats.sizes.iter().all(|&s| s >= 16),
+            "sizes {:?}",
+            stats.sizes
+        );
+    }
+
+    #[test]
+    fn lower_phi_is_more_skewed() {
+        // average pairwise EMD should grow as φ shrinks
+        let train = corpus(4000);
+        let avg_emd = |phi: f64| {
+            let mut rng = Pcg::seeded(7);
+            let (_, stats) = dirichlet_partition(&train, 20, phi, 8, &mut rng);
+            let mut sum = 0.0;
+            let mut cnt = 0;
+            for i in 0..20 {
+                for j in (i + 1)..20 {
+                    sum += emd(
+                        &stats.label_distributions[i],
+                        &stats.label_distributions[j],
+                    );
+                    cnt += 1;
+                }
+            }
+            sum / cnt as f64
+        };
+        let skew_04 = avg_emd(0.4);
+        let skew_10 = avg_emd(1.0);
+        let skew_100 = avg_emd(100.0);
+        assert!(skew_04 > skew_10, "0.4:{skew_04} 1.0:{skew_10}");
+        assert!(skew_10 > skew_100, "1.0:{skew_10} 100:{skew_100}");
+    }
+
+    #[test]
+    fn property_partition_invariants() {
+        let train = corpus(1000);
+        forall(11, |rng| {
+            let n = 2 + rng.below_usize(30);
+            let phi = 0.1 + rng.f64() * 2.0;
+            let (shards, stats) = dirichlet_partition(&train, n, phi, 4, rng);
+            assert_eq!(shards.len(), n);
+            assert_eq!(stats.sizes.iter().sum::<usize>(), train.len());
+            for d in &stats.label_distributions {
+                let s: f64 = d.iter().sum();
+                assert!((s - 1.0).abs() < 1e-9 || s == 0.0);
+            }
+        });
+    }
+}

@@ -1,0 +1,166 @@
+//! Deterministic Gaussian-mixture classification corpus.
+//!
+//! Each class `c` gets a unit-ish mean vector μ_c drawn once from the
+//! corpus seed; samples are μ_c + ε with isotropic noise. `class_sep`
+//! controls difficulty (separation / noise ratio). The corpus is split
+//! into train and test partitions with matching class balance.
+
+use super::Dataset;
+use crate::util::rng::Pcg;
+
+/// Parameters of the synthetic corpus.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    pub dim: usize,
+    pub num_classes: usize,
+    pub train_samples: usize,
+    pub test_samples: usize,
+    /// Separation of class means relative to unit noise.
+    pub class_sep: f64,
+    pub seed: u64,
+}
+
+impl Default for SyntheticSpec {
+    fn default() -> Self {
+        SyntheticSpec {
+            dim: 32,
+            num_classes: 10,
+            train_samples: 12800,
+            test_samples: 512,
+            class_sep: 2.0,
+            seed: 7,
+        }
+    }
+}
+
+/// Generate (train, test) datasets.
+pub fn make_corpus(spec: &SyntheticSpec) -> (Dataset, Dataset) {
+    let mut rng = Pcg::new(spec.seed, 0xDA7A);
+    // class means
+    let means: Vec<Vec<f32>> = (0..spec.num_classes)
+        .map(|_| {
+            let v = rng.normal_vec(spec.dim, 0.0, 1.0);
+            let norm = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt().max(1e-9);
+            v.iter()
+                .map(|x| (*x as f64 / norm * spec.class_sep) as f32)
+                .collect()
+        })
+        .collect();
+
+    let gen = |n: usize, rng: &mut Pcg| -> Dataset {
+        let mut features = Vec::with_capacity(n * spec.dim);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            // stratified labels: cycle classes then shuffle via index perm
+            let y = (i % spec.num_classes) as u32;
+            labels.push(y);
+            let mu = &means[y as usize];
+            for d in 0..spec.dim {
+                features.push(mu[d] + rng.normal() as f32);
+            }
+        }
+        let mut ds = Dataset {
+            dim: spec.dim,
+            num_classes: spec.num_classes,
+            features,
+            labels,
+        };
+        // shuffle rows
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        ds = ds.subset(&idx);
+        ds
+    };
+
+    let train = gen(spec.train_samples, &mut rng);
+    let test = gen(spec.test_samples, &mut rng);
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let spec = SyntheticSpec { train_samples: 100, test_samples: 50, ..Default::default() };
+        let (a, _) = make_corpus(&spec);
+        let (b, _) = make_corpus(&spec);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn shapes_and_balance() {
+        let spec = SyntheticSpec {
+            train_samples: 1000,
+            test_samples: 200,
+            num_classes: 10,
+            ..Default::default()
+        };
+        let (train, test) = make_corpus(&spec);
+        assert_eq!(train.len(), 1000);
+        assert_eq!(test.len(), 200);
+        assert_eq!(train.features.len(), 1000 * spec.dim);
+        // stratified: exactly equal class counts
+        assert!(train.label_histogram().iter().all(|&c| c == 100));
+        assert!(test.label_histogram().iter().all(|&c| c == 20));
+    }
+
+    #[test]
+    fn classes_are_separated() {
+        // nearest-class-mean classifier should beat chance comfortably
+        let spec = SyntheticSpec {
+            train_samples: 500,
+            test_samples: 500,
+            class_sep: 3.0,
+            ..Default::default()
+        };
+        let (train, test) = make_corpus(&spec);
+        // estimate class means from train
+        let mut means = vec![vec![0.0f64; spec.dim]; spec.num_classes];
+        let hist = train.label_histogram();
+        for i in 0..train.len() {
+            let y = train.labels[i] as usize;
+            for d in 0..spec.dim {
+                means[y][d] += train.feature_row(i)[d] as f64;
+            }
+        }
+        for (c, m) in means.iter_mut().enumerate() {
+            for v in m.iter_mut() {
+                *v /= hist[c].max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..test.len() {
+            let row = test.feature_row(i);
+            let pred = (0..spec.num_classes)
+                .min_by(|&a, &b| {
+                    let da: f64 = row
+                        .iter()
+                        .zip(&means[a])
+                        .map(|(x, m)| (*x as f64 - m).powi(2))
+                        .sum();
+                    let db: f64 = row
+                        .iter()
+                        .zip(&means[b])
+                        .map(|(x, m)| (*x as f64 - m).powi(2))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if pred as u32 == test.labels[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.len() as f64;
+        assert!(acc > 0.6, "nearest-mean acc {acc}");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = make_corpus(&SyntheticSpec { seed: 1, train_samples: 64, ..Default::default() }).0;
+        let b = make_corpus(&SyntheticSpec { seed: 2, train_samples: 64, ..Default::default() }).0;
+        assert_ne!(a.features, b.features);
+    }
+}

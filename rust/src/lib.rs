@@ -1,0 +1,24 @@
+//! # DySTop
+//!
+//! Dynamic Staleness Control and Topology Construction for Asynchronous
+//! Decentralized Federated Learning — a full-system reproduction.
+//!
+//! Layer 3 of the three-layer stack (see DESIGN.md): the Rust coordinator
+//! owns worker activation (WAA), topology construction (PTCA), Lyapunov
+//! staleness queues, the edge-network simulator, the baselines and the
+//! PJRT runtime that executes the AOT-compiled JAX/Pallas artifacts.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod metrics;
+pub mod network;
+pub mod runtime;
+pub mod sim;
+pub mod testbed;
+pub mod topology;
+pub mod util;
+pub mod worker;

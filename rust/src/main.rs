@@ -1,0 +1,8 @@
+// L3 entrypoint: see `dystop help`.
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dystop::cli::main_with_args(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,200 @@
+//! Metrics: per-round records, evaluation snapshots, communication
+//! ledger, and the derived quantities the paper reports (completion time
+//! to a target accuracy, communication overhead to a target accuracy).
+
+use std::io::Write;
+use std::path::Path;
+
+/// One scheduler round.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Virtual time at the *end* of the round (s).
+    pub time_s: f64,
+    /// Duration H_t of this round (Eq. 9).
+    pub duration_s: f64,
+    pub active: usize,
+    /// Model transfers this round (pulls + pushes), in models.
+    pub transfers: usize,
+    /// Mean staleness over workers after the round.
+    pub avg_staleness: f64,
+    pub max_staleness: u64,
+    /// Mean training loss over the workers that trained this round.
+    pub train_loss: f64,
+}
+
+/// One evaluation snapshot (average over workers' local models).
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub round: usize,
+    pub time_s: f64,
+    pub avg_accuracy: f64,
+    pub avg_loss: f64,
+    /// Cumulative communication in model transfers at snapshot time.
+    pub cum_transfers: usize,
+}
+
+/// Full run output.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub label: String,
+    pub rounds: Vec<RoundRecord>,
+    pub evals: Vec<EvalRecord>,
+    /// Bits of one model transfer (P × 32 for f32).
+    pub model_bits: f64,
+}
+
+impl RunResult {
+    pub fn total_transfers(&self) -> usize {
+        self.rounds.iter().map(|r| r.transfers).sum()
+    }
+
+    /// Total communication in GB (paper's communication-overhead metric).
+    pub fn total_comm_gb(&self) -> f64 {
+        self.total_transfers() as f64 * self.model_bits / 8.0 / 1e9
+    }
+
+    pub fn final_time_s(&self) -> f64 {
+        self.rounds.last().map(|r| r.time_s).unwrap_or(0.0)
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.evals.iter().map(|e| e.avg_accuracy).fold(0.0, f64::max)
+    }
+
+    /// Completion time: first snapshot time with accuracy ≥ target.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.evals
+            .iter()
+            .find(|e| e.avg_accuracy >= target)
+            .map(|e| e.time_s)
+    }
+
+    /// Communication (GB) consumed to first reach the target accuracy.
+    pub fn comm_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.evals
+            .iter()
+            .find(|e| e.avg_accuracy >= target)
+            .map(|e| e.cum_transfers as f64 * self.model_bits / 8.0 / 1e9)
+    }
+
+    /// Mean staleness across all rounds (Fig. 14 metric).
+    pub fn mean_staleness(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.avg_staleness).sum::<f64>()
+            / self.rounds.len() as f64
+    }
+
+    /// Write the evaluation curve as CSV (`round,time_s,acc,loss,comm_gb`).
+    pub fn write_eval_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "round,time_s,accuracy,loss,comm_gb")?;
+        for e in &self.evals {
+            writeln!(
+                f,
+                "{},{:.4},{:.6},{:.6},{:.6}",
+                e.round,
+                e.time_s,
+                e.avg_accuracy,
+                e.avg_loss,
+                e.cum_transfers as f64 * self.model_bits / 8.0 / 1e9,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Write per-round records as CSV.
+    pub fn write_rounds_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(
+            f,
+            "round,time_s,duration_s,active,transfers,avg_staleness,max_staleness,train_loss"
+        )?;
+        for r in &self.rounds {
+            writeln!(
+                f,
+                "{},{:.4},{:.4},{},{},{:.4},{},{:.6}",
+                r.round,
+                r.time_s,
+                r.duration_s,
+                r.active,
+                r.transfers,
+                r.avg_staleness,
+                r.max_staleness,
+                r.train_loss,
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunResult {
+        RunResult {
+            label: "test".into(),
+            model_bits: 32.0 * 1000.0,
+            rounds: (0..4)
+                .map(|t| RoundRecord {
+                    round: t,
+                    time_s: (t + 1) as f64,
+                    duration_s: 1.0,
+                    active: 1,
+                    transfers: 10,
+                    avg_staleness: t as f64,
+                    max_staleness: t as u64,
+                    train_loss: 1.0 / (t + 1) as f64,
+                })
+                .collect(),
+            evals: vec![
+                EvalRecord { round: 1, time_s: 2.0, avg_accuracy: 0.5, avg_loss: 1.0, cum_transfers: 20 },
+                EvalRecord { round: 3, time_s: 4.0, avg_accuracy: 0.85, avg_loss: 0.4, cum_transfers: 40 },
+            ],
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let r = sample();
+        assert_eq!(r.total_transfers(), 40);
+        assert!((r.total_comm_gb() - 40.0 * 32000.0 / 8.0 / 1e9).abs() < 1e-12);
+        assert_eq!(r.final_time_s(), 4.0);
+        assert_eq!(r.best_accuracy(), 0.85);
+    }
+
+    #[test]
+    fn target_extraction() {
+        let r = sample();
+        assert_eq!(r.time_to_accuracy(0.8), Some(4.0));
+        assert_eq!(r.time_to_accuracy(0.4), Some(2.0));
+        assert_eq!(r.time_to_accuracy(0.99), None);
+        assert!(r.comm_to_accuracy(0.8).unwrap() > r.comm_to_accuracy(0.4).unwrap());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("dystop_metrics_test");
+        let path = dir.join("eval.csv");
+        sample().write_eval_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("round,time_s"));
+        assert_eq!(text.lines().count(), 3);
+        sample().write_rounds_csv(&dir.join("rounds.csv")).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mean_staleness() {
+        assert!((sample().mean_staleness() - 1.5).abs() < 1e-12);
+    }
+}

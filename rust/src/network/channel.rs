@@ -1,0 +1,131 @@
+//! Wireless channel model (paper §VI-A1).
+//!
+//! Transmission rate from Shannon capacity:
+//!
+//! ```text
+//! r = B · log2(1 + p·g / γ²)
+//! ```
+//!
+//! with channel gain `g ~ Exp(mean = G0 · d⁻⁴)` (exponential fading over a
+//! d⁻⁴ path-loss law, refs \[33\]\[34\]), `G0 = −43 dB` at 1 m,
+//! noise power `γ² = 1e-13 W`, `B = 1 MHz`.
+
+use crate::config::NetworkConfig;
+use crate::util::rng::Pcg;
+
+pub fn dbm_to_watts(dbm: f64) -> f64 {
+    10f64.powf(dbm / 10.0) * 1e-3
+}
+
+pub fn db_to_linear(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// Stateless channel calculator.
+#[derive(Clone, Debug)]
+pub struct ChannelModel {
+    pub bandwidth_hz: f64,
+    pub g0_linear: f64,
+    pub noise_w: f64,
+}
+
+impl ChannelModel {
+    pub fn from_config(cfg: &NetworkConfig) -> Self {
+        ChannelModel {
+            bandwidth_hz: cfg.bandwidth_hz,
+            g0_linear: db_to_linear(cfg.g0_db),
+            noise_w: cfg.noise_w,
+        }
+    }
+
+    /// Mean channel gain at distance `d` meters (d⁻⁴ path loss).
+    pub fn mean_gain(&self, d: f64) -> f64 {
+        self.g0_linear * d.max(1.0).powi(-4)
+    }
+
+    /// One transfer's effective rate, bits/s.
+    ///
+    /// A model transfer lasts many channel coherence intervals, so the
+    /// *effective* rate is the average Shannon rate over independent
+    /// fading draws (a single draw would make a deep fade stall a whole
+    /// multi-second transfer — unphysical and numerically explosive).
+    pub fn rate_bps(&self, tx_watts: f64, d: f64, rng: &mut Pcg) -> f64 {
+        const COHERENCE_BLOCKS: usize = 16;
+        let mean_gain = self.mean_gain(d);
+        let mut acc = 0.0;
+        for _ in 0..COHERENCE_BLOCKS {
+            let g = rng.exponential(mean_gain);
+            acc += self.shannon(tx_watts * g);
+        }
+        acc / COHERENCE_BLOCKS as f64
+    }
+
+    /// Rate at the mean gain (no fading), bits/s.
+    pub fn mean_rate_bps(&self, tx_watts: f64, d: f64) -> f64 {
+        self.shannon(tx_watts * self.mean_gain(d))
+    }
+
+    fn shannon(&self, signal_w: f64) -> f64 {
+        self.bandwidth_hz * (1.0 + signal_w / self.noise_w).log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ChannelModel {
+        ChannelModel::from_config(&NetworkConfig::default())
+    }
+
+    #[test]
+    fn dbm_conversion() {
+        assert!((dbm_to_watts(0.0) - 1e-3).abs() < 1e-12);
+        assert!((dbm_to_watts(30.0) - 1.0).abs() < 1e-9);
+        assert!((dbm_to_watts(10.0) - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn path_loss_is_quartic() {
+        let m = model();
+        let g10 = m.mean_gain(10.0);
+        let g20 = m.mean_gain(20.0);
+        assert!((g10 / g20 - 16.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn paper_scale_rate_is_plausible() {
+        // 15 dBm at 30 m over 1 MHz should land in the single-to-tens of
+        // Mbps band — the regime the paper's §VI-A1 constants imply.
+        let m = model();
+        let r = m.mean_rate_bps(dbm_to_watts(15.0), 30.0);
+        assert!(r > 1e5 && r < 1e8, "rate {r}");
+    }
+
+    #[test]
+    fn rate_monotone_in_power_and_distance() {
+        let m = model();
+        assert!(
+            m.mean_rate_bps(dbm_to_watts(20.0), 30.0)
+                > m.mean_rate_bps(dbm_to_watts(10.0), 30.0)
+        );
+        assert!(
+            m.mean_rate_bps(dbm_to_watts(15.0), 10.0)
+                > m.mean_rate_bps(dbm_to_watts(15.0), 50.0)
+        );
+    }
+
+    #[test]
+    fn fading_averages_near_mean_gain() {
+        let m = model();
+        let mut rng = Pcg::seeded(9);
+        let d = 25.0;
+        let n = 20000;
+        let mean_g = m.mean_gain(d);
+        let avg: f64 = (0..n)
+            .map(|_| rng.exponential(mean_g))
+            .sum::<f64>()
+            / n as f64;
+        assert!((avg / mean_g - 1.0).abs() < 0.05);
+    }
+}

@@ -1,0 +1,260 @@
+//! Edge-network substrate: worker geometry + mobility, the wireless
+//! channel model of §VI-A1 (Shannon capacity with d⁻⁴ path loss and
+//! exponential fading), and time-varying per-worker bandwidth budgets
+//! (constraint 12d).
+
+mod channel;
+
+pub use channel::{dbm_to_watts, ChannelModel};
+
+use crate::config::NetworkConfig;
+use crate::util::rng::Pcg;
+
+/// 2-D worker position in meters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pos {
+    pub x: f64,
+    pub y: f64,
+}
+
+impl Pos {
+    pub fn dist(self, other: Pos) -> f64 {
+        ((self.x - other.x).powi(2) + (self.y - other.y).powi(2)).sqrt()
+    }
+}
+
+/// The time-varying physical network: positions, tx powers, budgets,
+/// link state. `step(rng)` advances one round of edge dynamics.
+#[derive(Clone, Debug)]
+pub struct EdgeNetwork {
+    pub cfg: NetworkConfig,
+    pub positions: Vec<Pos>,
+    /// Per-worker transmit power in watts (paper: 10–20 dBm × jitter).
+    pub tx_watts: Vec<f64>,
+    /// Per-worker per-round bandwidth budget, in model transfers
+    /// (`\hat B_t^i` of Eq. 12d), refreshed each round.
+    pub budgets: Vec<f64>,
+    channel: ChannelModel,
+    /// Links dropped for the current round (edge dynamics), as a dense
+    /// n×n bitmap — `link_up` is on the per-round O(N²) hot path and a
+    /// linear scan here was the simulator's top cost (EXPERIMENTS §Perf).
+    dropped: Vec<bool>,
+}
+
+impl EdgeNetwork {
+    pub fn new(n: usize, cfg: NetworkConfig, rng: &mut Pcg) -> Self {
+        let positions = (0..n)
+            .map(|_| Pos {
+                x: rng.range_f64(0.0, cfg.region_m),
+                y: rng.range_f64(0.0, cfg.region_m),
+            })
+            .collect();
+        let tx_watts = (0..n)
+            .map(|_| {
+                let dbm = rng.range_f64(cfg.tx_dbm_min, cfg.tx_dbm_max);
+                let fluct = rng.normal_ms(1.0, 0.1).clamp(0.5, 1.5);
+                dbm_to_watts(dbm) * fluct
+            })
+            .collect();
+        let channel = ChannelModel::from_config(&cfg);
+        let mut net = EdgeNetwork {
+            cfg,
+            positions,
+            tx_watts,
+            budgets: vec![0.0; n],
+            channel,
+            dropped: vec![false; n * n],
+        };
+        net.refresh_budgets(rng);
+        net
+    }
+
+    pub fn len(&self) -> usize {
+        self.positions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.positions.is_empty()
+    }
+
+    /// Advance one round of edge dynamics: mobility, budget jitter,
+    /// random link drops.
+    pub fn step(&mut self, rng: &mut Pcg) {
+        let m = self.cfg.mobility_m;
+        if m > 0.0 {
+            for p in &mut self.positions {
+                p.x = (p.x + rng.normal_ms(0.0, m)).clamp(0.0, self.cfg.region_m);
+                p.y = (p.y + rng.normal_ms(0.0, m)).clamp(0.0, self.cfg.region_m);
+            }
+        }
+        self.refresh_budgets(rng);
+        self.dropped.fill(false);
+        if self.cfg.link_drop_prob > 0.0 {
+            let n = self.len();
+            for i in 0..n {
+                for j in 0..n {
+                    if i != j && rng.f64() < self.cfg.link_drop_prob {
+                        self.dropped[i * n + j] = true;
+                    }
+                }
+            }
+        }
+    }
+
+    fn refresh_budgets(&mut self, rng: &mut Pcg) {
+        let base = self.cfg.budget_models;
+        let jitter = self.cfg.budget_jitter;
+        for b in &mut self.budgets {
+            *b = (base * rng.normal_ms(1.0, jitter)).max(1.0);
+        }
+    }
+
+    /// Is `i → j` usable this round? (within range, not dropped)
+    pub fn link_up(&self, i: usize, j: usize) -> bool {
+        if i == j {
+            return true;
+        }
+        self.positions[i].dist(self.positions[j]) <= self.cfg.comm_range_m
+            && !self.dropped[i * self.len() + j]
+    }
+
+    /// Workers within communication range of `i` (the candidate set
+    /// `C_t^i` of Alg. 3), excluding `i` itself.
+    pub fn in_range(&self, i: usize) -> Vec<usize> {
+        (0..self.len())
+            .filter(|&j| j != i && self.link_up(j, i))
+            .collect()
+    }
+
+    pub fn distance(&self, i: usize, j: usize) -> f64 {
+        self.positions[i].dist(self.positions[j])
+    }
+
+    /// Expected model-transfer time `h_t^{i,j,com}` in seconds for a
+    /// payload of `bits` from `j` to `i` (Shannon capacity, §VI-A1).
+    pub fn transfer_time_s(&self, from: usize, to: usize, bits: f64, rng: &mut Pcg) -> f64 {
+        if from == to {
+            return 0.0;
+        }
+        let d = self.distance(from, to).max(1.0);
+        let rate = self.channel.rate_bps(self.tx_watts[from], d, rng);
+        bits / rate.max(1.0)
+    }
+
+    /// Deterministic mean-fading transfer time (used for H_t^i estimates
+    /// on the coordinator, which cannot observe the realised fading).
+    pub fn expected_transfer_time_s(&self, from: usize, to: usize, bits: f64) -> f64 {
+        if from == to {
+            return 0.0;
+        }
+        let d = self.distance(from, to).max(1.0);
+        let rate = self.channel.mean_rate_bps(self.tx_watts[from], d);
+        bits / rate.max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn cfg() -> NetworkConfig {
+        NetworkConfig::default()
+    }
+
+    fn net(n: usize, seed: u64) -> (EdgeNetwork, Pcg) {
+        let mut rng = Pcg::seeded(seed);
+        let net = EdgeNetwork::new(n, cfg(), &mut rng);
+        (net, rng)
+    }
+
+    #[test]
+    fn positions_in_region() {
+        let (net, _) = net(50, 1);
+        for p in &net.positions {
+            assert!((0.0..=100.0).contains(&p.x));
+            assert!((0.0..=100.0).contains(&p.y));
+        }
+    }
+
+    #[test]
+    fn budgets_positive_and_jittered() {
+        let (mut net, mut rng) = net(50, 2);
+        let before = net.budgets.clone();
+        net.step(&mut rng);
+        assert!(net.budgets.iter().all(|&b| b >= 1.0));
+        assert_ne!(before, net.budgets);
+    }
+
+    #[test]
+    fn in_range_is_symmetric_without_drops() {
+        let mut c = cfg();
+        c.link_drop_prob = 0.0;
+        let mut rng = Pcg::seeded(3);
+        let net = EdgeNetwork::new(30, c, &mut rng);
+        for i in 0..30 {
+            for j in net.in_range(i) {
+                assert!(net.in_range(j).contains(&i));
+            }
+        }
+    }
+
+    #[test]
+    fn transfer_time_increases_with_distance() {
+        let mut c = cfg();
+        c.mobility_m = 0.0;
+        c.link_drop_prob = 0.0;
+        let mut rng = Pcg::seeded(4);
+        let mut net = EdgeNetwork::new(3, c, &mut rng);
+        net.positions = vec![
+            Pos { x: 0.0, y: 0.0 },
+            Pos { x: 5.0, y: 0.0 },
+            Pos { x: 80.0, y: 0.0 },
+        ];
+        net.tx_watts = vec![0.05; 3];
+        let bits = 8.0 * 4.0 * 7000.0; // ~7k params
+        let near = net.expected_transfer_time_s(0, 1, bits);
+        let far = net.expected_transfer_time_s(0, 2, bits);
+        assert!(far > near * 10.0, "near={near} far={far}");
+    }
+
+    #[test]
+    fn mobility_moves_but_stays_in_region() {
+        let (mut net, mut rng) = net(20, 5);
+        let before = net.positions.clone();
+        for _ in 0..10 {
+            net.step(&mut rng);
+        }
+        assert_ne!(before, net.positions);
+        for p in &net.positions {
+            assert!((0.0..=100.0).contains(&p.x));
+        }
+    }
+
+    #[test]
+    fn self_link_always_up_and_free() {
+        let (mut net, mut rng) = net(10, 6);
+        net.step(&mut rng);
+        for i in 0..10 {
+            assert!(net.link_up(i, i));
+            assert_eq!(net.transfer_time_s(i, i, 1e6, &mut rng), 0.0);
+        }
+    }
+
+    #[test]
+    fn property_transfer_times_finite_positive() {
+        forall(21, |rng| {
+            let n = 2 + rng.below_usize(20);
+            let net = EdgeNetwork::new(n, cfg(), rng);
+            let i = rng.below_usize(n);
+            let mut j = rng.below_usize(n);
+            if i == j {
+                j = (j + 1) % n;
+            }
+            let t = net.transfer_time_s(i, j, 1e6, rng);
+            assert!(t.is_finite() && t > 0.0, "t={t}");
+            let e = net.expected_transfer_time_s(i, j, 1e6);
+            assert!(e.is_finite() && e > 0.0, "e={e}");
+        });
+    }
+}

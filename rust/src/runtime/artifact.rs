@@ -1,0 +1,211 @@
+//! Artifact manifest: the shape/layout contract between `python/compile/
+//! aot.py` and the Rust runtime (`artifacts/manifest.json`).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One named parameter block in the flat layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl LayoutEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Fan-in for He initialisation (product of all but the last dim;
+    /// 1 for bias vectors).
+    pub fn fan_in(&self) -> usize {
+        if self.shape.len() <= 1 {
+            1
+        } else {
+            self.shape[..self.shape.len() - 1].iter().product()
+        }
+    }
+}
+
+/// Manifest entry for one model variant.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub param_count: usize,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub k_max: usize,
+    pub layout: Vec<LayoutEntry>,
+    /// kind ("train"/"eval"/"agg") → absolute artifact path.
+    pub artifacts: BTreeMap<String, PathBuf>,
+}
+
+impl ModelManifest {
+    pub fn artifact(&self, kind: &str) -> Result<&Path, String> {
+        self.artifacts
+            .get(kind)
+            .map(|p| p.as_path())
+            .ok_or_else(|| format!("model {}: no {kind} artifact", self.name))
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        if j.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            return Err("manifest: expected format=hlo-text".into());
+        }
+        let models_j = j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or("manifest: missing models")?;
+        let mut models = BTreeMap::new();
+        for (name, m) in models_j {
+            let get = |k: &str| -> Result<usize, String> {
+                m.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| format!("model {name}: missing {k}"))
+            };
+            let layout = m
+                .get("layout")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("model {name}: missing layout"))?
+                .iter()
+                .map(|l| {
+                    Ok(LayoutEntry {
+                        name: l
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or("layout name")?
+                            .to_string(),
+                        offset: l
+                            .get("offset")
+                            .and_then(Json::as_usize)
+                            .ok_or("layout offset")?,
+                        shape: l
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or("layout shape")?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or("shape dim"))
+                            .collect::<Result<_, _>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>, &str>>()
+                .map_err(|e| format!("model {name}: bad layout ({e})"))?;
+            let artifacts = m
+                .get("artifacts")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| format!("model {name}: missing artifacts"))?
+                .iter()
+                .map(|(k, v)| {
+                    v.as_str()
+                        .map(|f| (k.clone(), dir.join(f)))
+                        .ok_or_else(|| format!("model {name}: bad artifact {k}"))
+                })
+                .collect::<Result<BTreeMap<_, _>, _>>()?;
+            let mm = ModelManifest {
+                name: name.clone(),
+                param_count: get("param_count")?,
+                input_dim: get("input_dim")?,
+                num_classes: get("num_classes")?,
+                train_batch: get("train_batch")?,
+                eval_batch: get("eval_batch")?,
+                k_max: get("k_max")?,
+                layout,
+                artifacts,
+            };
+            // layout consistency
+            let total: usize = mm.layout.iter().map(LayoutEntry::numel).sum();
+            if total != mm.param_count {
+                return Err(format!(
+                    "model {name}: layout covers {total} ≠ param_count {}",
+                    mm.param_count
+                ));
+            }
+            models.insert(name.clone(), mm);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest, String> {
+        self.models
+            .get(name)
+            .ok_or_else(|| format!("manifest has no model {name:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text", "version": 1,
+      "models": {
+        "mlp": {
+          "param_count": 6,
+          "input_dim": 2, "num_classes": 2,
+          "train_batch": 4, "eval_batch": 8, "k_max": 3,
+          "layout": [
+            {"name": "w", "offset": 0, "shape": [2, 2]},
+            {"name": "b", "offset": 4, "shape": [2]}
+          ],
+          "artifacts": {"train": "mlp_train.hlo.txt"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        let mlp = m.model("mlp").unwrap();
+        assert_eq!(mlp.param_count, 6);
+        assert_eq!(mlp.layout[0].fan_in(), 2);
+        assert_eq!(mlp.layout[1].fan_in(), 1);
+        assert_eq!(
+            mlp.artifact("train").unwrap(),
+            Path::new("/x/mlp_train.hlo.txt")
+        );
+        assert!(mlp.artifact("eval").is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_layout() {
+        let bad = SAMPLE.replace("\"param_count\": 6", "\"param_count\": 7");
+        let err = Manifest::parse(Path::new("/x"), &bad).unwrap_err();
+        assert!(err.contains("layout covers"), "{err}");
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let mlp = m.model("mlp").unwrap();
+        assert!(mlp.param_count > 1000);
+        assert!(mlp.artifact("train").unwrap().exists());
+        assert!(mlp.artifact("eval").unwrap().exists());
+        assert!(mlp.artifact("agg").unwrap().exists());
+    }
+}

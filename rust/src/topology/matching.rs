@@ -1,0 +1,131 @@
+//! Matching decomposition for the MATCHA baseline (paper \[9\]).
+//!
+//! MATCHA decomposes the base (undirected) communication graph into
+//! disjoint matchings — subgraphs where every worker talks to at most one
+//! peer — and activates a random subset of matchings each round. A greedy
+//! edge-coloring (Misra–Gries flavoured, but greedy suffices for the
+//! baseline: at most 2Δ−1 matchings) reproduces the mechanism.
+
+use crate::util::rng::Pcg;
+
+/// One matching: a set of disjoint undirected pairs.
+#[derive(Clone, Debug, Default)]
+pub struct Matching {
+    pub pairs: Vec<(usize, usize)>,
+}
+
+impl Matching {
+    /// No vertex may appear twice.
+    pub fn is_valid(&self) -> bool {
+        let mut seen = std::collections::BTreeSet::new();
+        for &(a, b) in &self.pairs {
+            if a == b || !seen.insert(a) || !seen.insert(b) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Greedily decompose undirected edges into disjoint matchings.
+pub fn greedy_matching_decomposition(
+    n: usize,
+    edges: &[(usize, usize)],
+) -> Vec<Matching> {
+    let mut matchings: Vec<Matching> = Vec::new();
+    let mut used: Vec<Vec<bool>> = Vec::new(); // used[m][v]
+    for &(a, b) in edges {
+        assert!(a < n && b < n && a != b, "bad edge ({a},{b})");
+        let slot = (0..matchings.len())
+            .find(|&m| !used[m][a] && !used[m][b])
+            .unwrap_or_else(|| {
+                matchings.push(Matching::default());
+                used.push(vec![false; n]);
+                matchings.len() - 1
+            });
+        matchings[slot].pairs.push((a, b));
+        used[slot][a] = true;
+        used[slot][b] = true;
+    }
+    matchings
+}
+
+/// Sample a subset of matchings (MATCHA's per-round activation with
+/// communication budget `frac` ∈ (0, 1]).
+pub fn sample_matchings<'a>(
+    matchings: &'a [Matching],
+    frac: f64,
+    rng: &mut Pcg,
+) -> Vec<&'a Matching> {
+    matchings.iter().filter(|_| rng.f64() < frac).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn decomposition_covers_all_edges() {
+        let edges = vec![(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)];
+        let ms = greedy_matching_decomposition(4, &edges);
+        let total: usize = ms.iter().map(|m| m.pairs.len()).sum();
+        assert_eq!(total, edges.len());
+        for m in &ms {
+            assert!(m.is_valid(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn star_graph_needs_degree_matchings() {
+        // star: center 0 to 5 leaves — every edge shares vertex 0
+        let edges: Vec<_> = (1..=5).map(|i| (0, i)).collect();
+        let ms = greedy_matching_decomposition(6, &edges);
+        assert_eq!(ms.len(), 5);
+        for m in &ms {
+            assert_eq!(m.pairs.len(), 1);
+        }
+    }
+
+    #[test]
+    fn property_matchings_always_disjoint() {
+        forall(31, |rng| {
+            let n = 4 + rng.below_usize(30);
+            let mut edges = Vec::new();
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if rng.f64() < 0.3 {
+                        edges.push((i, j));
+                    }
+                }
+            }
+            let ms = greedy_matching_decomposition(n, &edges);
+            assert_eq!(
+                ms.iter().map(|m| m.pairs.len()).sum::<usize>(),
+                edges.len()
+            );
+            for m in &ms {
+                assert!(m.is_valid());
+            }
+            // greedy bound: at most 2Δ − 1 colors
+            let mut deg = vec![0usize; n];
+            for &(a, b) in &edges {
+                deg[a] += 1;
+                deg[b] += 1;
+            }
+            let delta = deg.into_iter().max().unwrap_or(0);
+            if delta > 0 {
+                assert!(ms.len() <= 2 * delta - 1, "{} > 2*{delta}-1", ms.len());
+            }
+        });
+    }
+
+    #[test]
+    fn sampling_respects_frac_extremes() {
+        let edges = vec![(0, 1), (1, 2), (2, 3)];
+        let ms = greedy_matching_decomposition(4, &edges);
+        let mut rng = Pcg::seeded(5);
+        assert_eq!(sample_matchings(&ms, 1.0, &mut rng).len(), ms.len());
+        assert!(sample_matchings(&ms, 0.0, &mut rng).is_empty());
+    }
+}

@@ -1,0 +1,156 @@
+//! Topology substrate: the per-round directed communication graph
+//! `G_t = (V_t, E_t)` (paper §III-A), plus the matching decomposition the
+//! MATCHA baseline needs.
+
+mod matching;
+
+pub use matching::{greedy_matching_decomposition, sample_matchings, Matching};
+
+use std::collections::BTreeSet;
+
+/// Directed graph over `n` workers; edge `(i → j)` means `i` transmits to
+/// `j` (so `i ∈ N_t^j`, the in-neighbor set of `j`).
+#[derive(Clone, Debug, Default)]
+pub struct Topology {
+    n: usize,
+    /// in_neighbors[j] = sorted set of i with edge i→j (excluding j).
+    in_neighbors: Vec<BTreeSet<usize>>,
+    /// out_neighbors[i] = sorted set of j with edge i→j (excluding i).
+    out_neighbors: Vec<BTreeSet<usize>>,
+}
+
+impl Topology {
+    pub fn new(n: usize) -> Self {
+        Topology {
+            n,
+            in_neighbors: vec![BTreeSet::new(); n],
+            out_neighbors: vec![BTreeSet::new(); n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Add directed edge `from → to`. Self-loops are implicit (every
+    /// worker aggregates its own model, §III-A) and rejected here.
+    pub fn add_edge(&mut self, from: usize, to: usize) {
+        assert!(from < self.n && to < self.n, "edge out of range");
+        assert_ne!(from, to, "self-loops are implicit");
+        self.in_neighbors[to].insert(from);
+        self.out_neighbors[from].insert(to);
+    }
+
+    pub fn has_edge(&self, from: usize, to: usize) -> bool {
+        from < self.n && self.out_neighbors[from].contains(&to)
+    }
+
+    /// In-neighbors of `j` *excluding* j itself (the explicit pulls).
+    pub fn in_neighbors(&self, j: usize) -> impl Iterator<Item = usize> + '_ {
+        self.in_neighbors[j].iter().copied()
+    }
+
+    pub fn out_neighbors(&self, i: usize) -> impl Iterator<Item = usize> + '_ {
+        self.out_neighbors[i].iter().copied()
+    }
+
+    pub fn in_degree(&self, j: usize) -> usize {
+        self.in_neighbors[j].len()
+    }
+
+    pub fn out_degree(&self, i: usize) -> usize {
+        self.out_neighbors[i].len()
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.out_neighbors.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut v = Vec::with_capacity(self.edge_count());
+        for (i, outs) in self.out_neighbors.iter().enumerate() {
+            for &j in outs {
+                v.push((i, j));
+            }
+        }
+        v
+    }
+
+    /// Undirected connectivity check over the union of edge directions
+    /// (used by tests: a topology that fragments the network forever
+    /// cannot mix models).
+    pub fn weakly_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = stack.pop() {
+            for &v in self.out_neighbors[u].iter().chain(self.in_neighbors[u].iter()) {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        count == self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_query_edges() {
+        let mut t = Topology::new(4);
+        t.add_edge(0, 1);
+        t.add_edge(2, 1);
+        t.add_edge(1, 3);
+        assert!(t.has_edge(0, 1));
+        assert!(!t.has_edge(1, 0));
+        assert_eq!(t.in_neighbors(1).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(t.out_neighbors(1).collect::<Vec<_>>(), vec![3]);
+        assert_eq!(t.in_degree(1), 2);
+        assert_eq!(t.out_degree(1), 1);
+        assert_eq!(t.edge_count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loops")]
+    fn self_loop_rejected() {
+        Topology::new(2).add_edge(1, 1);
+    }
+
+    #[test]
+    fn duplicate_edges_idempotent() {
+        let mut t = Topology::new(3);
+        t.add_edge(0, 1);
+        t.add_edge(0, 1);
+        assert_eq!(t.edge_count(), 1);
+    }
+
+    #[test]
+    fn connectivity() {
+        let mut t = Topology::new(4);
+        t.add_edge(0, 1);
+        t.add_edge(1, 2);
+        assert!(!t.weakly_connected());
+        t.add_edge(3, 2);
+        assert!(t.weakly_connected());
+    }
+
+    #[test]
+    fn empty_graph_connected() {
+        assert!(Topology::new(0).weakly_connected());
+        assert!(Topology::new(1).weakly_connected());
+        assert!(!Topology::new(2).weakly_connected());
+    }
+}

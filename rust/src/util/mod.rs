@@ -1,0 +1,8 @@
+//! Utility substrates built in-repo because the offline environment only
+//! carries the `xla` crate closure: PRNG, statistics, property-testing,
+//! and JSON parsing.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,113 @@
+//! Worker substrate: per-worker state (model, staleness, data shard) and
+//! the training backends.
+//!
+//! Two [`Trainer`] implementations exist:
+//!
+//! * [`NativeTrainer`] — pure-Rust softmax regression. A fast, dependency-
+//!   free substrate used by the large-scale simulations, property tests
+//!   and benches (the paper's mechanisms are model-agnostic).
+//! * `PjrtTrainer` (in [`crate::runtime`]) — the real L2/L1 model
+//!   executed from the AOT HLO artifacts, used by the end-to-end examples
+//!   and the testbed.
+
+mod native;
+mod state;
+
+pub use native::NativeTrainer;
+pub use state::WorkerState;
+
+use crate::data::Dataset;
+use crate::util::rng::Pcg;
+
+/// A flattened model parameter vector (layout per artifacts/manifest.json
+/// for PJRT models; `[dim·C + C]` for the native trainer).
+pub type Params = Vec<f32>;
+
+/// Training backend interface. All methods are deterministic given `rng`.
+pub trait Trainer {
+    /// Length of the flattened parameter vector.
+    fn param_count(&self) -> usize;
+
+    /// Fresh initial parameters.
+    fn init(&self, seed: u64) -> Params;
+
+    /// Run `steps` minibatch-SGD steps (Eq. 5) on `shard`; returns the new
+    /// parameters and the mean minibatch loss.
+    fn train(
+        &mut self,
+        params: &[f32],
+        shard: &Dataset,
+        steps: usize,
+        batch: usize,
+        lr: f32,
+        rng: &mut Pcg,
+    ) -> (Params, f64);
+
+    /// Evaluate on `data`: (mean loss, accuracy).
+    fn evaluate(&mut self, params: &[f32], data: &Dataset) -> (f64, f64);
+
+    /// Weighted aggregation (Eq. 4). Weights must sum to 1.
+    fn aggregate(&mut self, models: &[&[f32]], weights: &[f32]) -> Params {
+        aggregate_native(models, weights)
+    }
+}
+
+/// Reference CPU aggregation: `Σ_j σ_j · w_j` over flattened models.
+pub fn aggregate_native(models: &[&[f32]], weights: &[f32]) -> Params {
+    assert_eq!(models.len(), weights.len());
+    assert!(!models.is_empty(), "aggregate of zero models");
+    let p = models[0].len();
+    let wsum: f32 = weights.iter().sum();
+    debug_assert!(
+        (wsum - 1.0).abs() < 1e-3,
+        "aggregation weights must sum to 1 (got {wsum})"
+    );
+    let mut out = vec![0.0f32; p];
+    for (m, &w) in models.iter().zip(weights) {
+        assert_eq!(m.len(), p, "model length mismatch");
+        for (o, &x) in out.iter_mut().zip(m.iter()) {
+            *o += w * x;
+        }
+    }
+    out
+}
+
+/// Aggregation weights σ_t^{i,j} = D_j / Σ D_{j'} over the in-neighbor
+/// set (paper Eq. 4); `sizes` aligned with `models`.
+pub fn data_size_weights(sizes: &[usize]) -> Vec<f32> {
+    let total: usize = sizes.iter().sum();
+    assert!(total > 0, "aggregation over empty datasets");
+    sizes.iter().map(|&s| s as f32 / total as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_sum_to_one() {
+        let w = data_size_weights(&[10, 30, 60]);
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!((w[2] - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn aggregate_mean_of_two() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 6.0];
+        let out = aggregate_native(&[&a, &b], &[0.5, 0.5]);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn aggregate_identity_single() {
+        let a = vec![1.5f32, -2.0, 0.25];
+        assert_eq!(aggregate_native(&[&a], &[1.0]), a);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero models")]
+    fn aggregate_empty_panics() {
+        aggregate_native(&[], &[]);
+    }
+}

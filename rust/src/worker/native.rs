@@ -1,0 +1,213 @@
+//! Pure-Rust softmax-regression trainer.
+//!
+//! Parameter layout: `[W (dim × C) row-major, b (C)]`, matching the
+//! flat-vector contract of the PJRT trainers so all coordinator code is
+//! backend-agnostic.
+
+use super::{Params, Trainer};
+use crate::data::Dataset;
+use crate::util::rng::Pcg;
+
+#[derive(Clone, Debug)]
+pub struct NativeTrainer {
+    pub dim: usize,
+    pub num_classes: usize,
+    /// Scratch: per-class logits/probabilities.
+    scratch: Vec<f64>,
+}
+
+impl NativeTrainer {
+    pub fn new(dim: usize, num_classes: usize) -> Self {
+        NativeTrainer { dim, num_classes, scratch: vec![0.0; num_classes] }
+    }
+
+    fn logits(&mut self, params: &[f32], x: &[f32]) {
+        let c = self.num_classes;
+        let d = self.dim;
+        let bias = &params[d * c..];
+        for k in 0..c {
+            self.scratch[k] = bias[k] as f64;
+        }
+        // W row-major [d][c]: logit_k += x_j * W[j][k]
+        for (j, &xj) in x.iter().enumerate() {
+            if xj == 0.0 {
+                continue;
+            }
+            let row = &params[j * c..(j + 1) * c];
+            for k in 0..c {
+                self.scratch[k] += xj as f64 * row[k] as f64;
+            }
+        }
+    }
+
+    /// In-place softmax over scratch; returns log-sum-exp.
+    fn softmax(&mut self) -> f64 {
+        let m = self.scratch.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut sum = 0.0;
+        for v in &mut self.scratch {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        for v in &mut self.scratch {
+            *v /= sum;
+        }
+        m + sum.ln()
+    }
+}
+
+impl Trainer for NativeTrainer {
+    fn param_count(&self) -> usize {
+        self.dim * self.num_classes + self.num_classes
+    }
+
+    fn init(&self, seed: u64) -> Params {
+        let mut rng = Pcg::new(seed, 0x1217);
+        let std = (2.0 / self.dim as f64).sqrt() * 0.5;
+        let mut p = rng.normal_vec(self.dim * self.num_classes, 0.0, std);
+        p.extend(std::iter::repeat(0.0f32).take(self.num_classes));
+        p
+    }
+
+    fn train(
+        &mut self,
+        params: &[f32],
+        shard: &Dataset,
+        steps: usize,
+        batch: usize,
+        lr: f32,
+        rng: &mut Pcg,
+    ) -> (Params, f64) {
+        assert_eq!(params.len(), self.param_count());
+        assert_eq!(shard.dim, self.dim);
+        assert!(!shard.is_empty(), "training on empty shard");
+        let c = self.num_classes;
+        let d = self.dim;
+        let mut p = params.to_vec();
+        let mut loss_acc = 0.0;
+        let batch = batch.min(shard.len());
+        for _ in 0..steps {
+            let idx = rng.sample_indices(shard.len(), batch);
+            // grad accumulators
+            let mut gw = vec![0.0f64; d * c];
+            let mut gb = vec![0.0f64; c];
+            let mut loss = 0.0f64;
+            for &i in &idx {
+                let x = shard.feature_row(i);
+                let y = shard.labels[i] as usize;
+                self.logits(&p, x);
+                let gold = self.scratch[y];
+                let lse = self.softmax();
+                loss += lse - gold;
+                // dlogit_k = p_k - 1[k==y]
+                for k in 0..c {
+                    let dk = self.scratch[k] - if k == y { 1.0 } else { 0.0 };
+                    gb[k] += dk;
+                    for (j, &xj) in x.iter().enumerate() {
+                        if xj != 0.0 {
+                            gw[j * c + k] += dk * xj as f64;
+                        }
+                    }
+                }
+            }
+            let scale = lr as f64 / batch as f64;
+            for (w, g) in p[..d * c].iter_mut().zip(&gw) {
+                *w -= (scale * g) as f32;
+            }
+            for (b, g) in p[d * c..].iter_mut().zip(&gb) {
+                *b -= (scale * g) as f32;
+            }
+            loss_acc += loss / batch as f64;
+        }
+        (p, loss_acc / steps.max(1) as f64)
+    }
+
+    fn evaluate(&mut self, params: &[f32], data: &Dataset) -> (f64, f64) {
+        assert!(!data.is_empty());
+        let mut loss = 0.0;
+        let mut correct = 0usize;
+        for i in 0..data.len() {
+            let x = data.feature_row(i);
+            let y = data.labels[i] as usize;
+            self.logits(params, x);
+            let gold = self.scratch[y];
+            let lse = self.softmax();
+            loss += lse - gold;
+            let pred = self
+                .scratch
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == y {
+                correct += 1;
+            }
+        }
+        (loss / data.len() as f64, correct as f64 / data.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{make_corpus, SyntheticSpec};
+
+    fn setup() -> (NativeTrainer, Dataset, Dataset) {
+        let spec = SyntheticSpec {
+            train_samples: 600,
+            test_samples: 300,
+            class_sep: 2.5,
+            ..Default::default()
+        };
+        let (train, test) = make_corpus(&spec);
+        (NativeTrainer::new(spec.dim, spec.num_classes), train, test)
+    }
+
+    #[test]
+    fn param_count_layout() {
+        let t = NativeTrainer::new(32, 10);
+        assert_eq!(t.param_count(), 32 * 10 + 10);
+        assert_eq!(t.init(1).len(), t.param_count());
+    }
+
+    #[test]
+    fn loss_decreases_and_accuracy_rises() {
+        let (mut t, train, test) = setup();
+        let mut rng = Pcg::seeded(1);
+        let p0 = t.init(0);
+        let (l0, a0) = t.evaluate(&p0, &test);
+        let (p1, _) = t.train(&p0, &train, 60, 32, 0.2, &mut rng);
+        let (l1, a1) = t.evaluate(&p1, &test);
+        assert!(l1 < l0 * 0.8, "loss {l0} → {l1}");
+        assert!(a1 > a0 + 0.2, "acc {a0} → {a1}");
+        assert!(a1 > 0.6, "final acc {a1}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (mut t, train, _) = setup();
+        let p0 = t.init(0);
+        let (a, la) = t.train(&p0, &train, 5, 16, 0.1, &mut Pcg::seeded(3));
+        let (b, lb) = t.train(&p0, &train, 5, 16, 0.1, &mut Pcg::seeded(3));
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn eval_of_zero_params_is_chance() {
+        let (mut t, _, test) = setup();
+        let zeros = vec![0.0f32; t.param_count()];
+        let (loss, acc) = t.evaluate(&zeros, &test);
+        assert!((loss - (10f64).ln()).abs() < 1e-6);
+        assert!(acc < 0.35);
+    }
+
+    #[test]
+    fn batch_larger_than_shard_clamps() {
+        let (mut t, train, _) = setup();
+        let small = train.subset(&[0, 1, 2]);
+        let p0 = t.init(0);
+        let (_p, loss) = t.train(&p0, &small, 2, 999, 0.1, &mut Pcg::seeded(5));
+        assert!(loss.is_finite());
+    }
+}

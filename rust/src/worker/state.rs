@@ -1,0 +1,128 @@
+//! Per-worker runtime state tracked by the simulator and the testbed.
+
+use super::Params;
+use crate::data::Dataset;
+
+/// State of one worker `v_i` (paper §III-A/B).
+#[derive(Clone, Debug)]
+pub struct WorkerState {
+    pub id: usize,
+    /// Current local model `w_t^i` — last updated at its latest
+    /// activation, so pulling from this worker naturally yields the stale
+    /// `w_{t−τ}^i` of Eq. (3).
+    pub params: Params,
+    /// Staleness τ_t^i (Eq. 6).
+    pub staleness: u64,
+    /// Lyapunov virtual queue q_t^i (Eq. 33).
+    pub queue: f64,
+    /// Local training shard D_i.
+    pub shard: Dataset,
+    /// Latent full local-training time h_i in seconds (heterogeneous).
+    pub h_train_s: f64,
+    /// Residual compute h_t^{i,cmp} (Eq. 7): seconds of the current local
+    /// training job still outstanding.
+    pub residual_s: f64,
+    /// Last recorded local training loss.
+    pub last_loss: f64,
+    /// Activation count (→ activating frequency ψ_i of Theorem 1).
+    pub activations: u64,
+}
+
+impl WorkerState {
+    pub fn new(id: usize, params: Params, shard: Dataset, h_train_s: f64) -> Self {
+        WorkerState {
+            id,
+            params,
+            staleness: 0,
+            queue: 0.0,
+            shard,
+            h_train_s,
+            residual_s: h_train_s,
+            last_loss: f64::NAN,
+            activations: 0,
+        }
+    }
+
+    pub fn data_size(&self) -> usize {
+        self.shard.len()
+    }
+
+    /// Advance this worker's background local training by `dt` seconds.
+    pub fn advance(&mut self, dt: f64) {
+        self.residual_s = (self.residual_s - dt).max(0.0);
+    }
+
+    /// Called when the coordinator activates this worker: staleness
+    /// resets (Eq. 6) and a fresh local-training job starts.
+    pub fn on_activated(&mut self) {
+        self.staleness = 0;
+        self.residual_s = self.h_train_s;
+        self.activations += 1;
+    }
+
+    /// Called each round for non-activated workers (Eq. 6).
+    pub fn on_skipped(&mut self) {
+        self.staleness += 1;
+    }
+
+    /// Lyapunov queue update (Eq. 33).
+    pub fn update_queue(&mut self, tau_bound: u64) {
+        self.queue =
+            (self.queue + self.staleness as f64 - tau_bound as f64).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn worker() -> WorkerState {
+        let shard = Dataset {
+            dim: 1,
+            num_classes: 2,
+            features: vec![0.0, 1.0],
+            labels: vec![0, 1],
+        };
+        WorkerState::new(0, vec![0.0; 4], shard, 2.0)
+    }
+
+    #[test]
+    fn staleness_cycle() {
+        let mut w = worker();
+        w.on_skipped();
+        w.on_skipped();
+        assert_eq!(w.staleness, 2);
+        w.on_activated();
+        assert_eq!(w.staleness, 0);
+        assert_eq!(w.activations, 1);
+        assert_eq!(w.residual_s, 2.0);
+    }
+
+    #[test]
+    fn residual_depletes_not_below_zero() {
+        let mut w = worker();
+        w.advance(1.5);
+        assert!((w.residual_s - 0.5).abs() < 1e-12);
+        w.advance(10.0);
+        assert_eq!(w.residual_s, 0.0);
+    }
+
+    #[test]
+    fn queue_tracks_excess_staleness() {
+        let mut w = worker();
+        // τ below bound: queue stays at 0
+        w.staleness = 1;
+        w.update_queue(3);
+        assert_eq!(w.queue, 0.0);
+        // τ above bound: queue grows by τ − bound
+        w.staleness = 5;
+        w.update_queue(3);
+        assert_eq!(w.queue, 2.0);
+        w.update_queue(3);
+        assert_eq!(w.queue, 4.0);
+        // recovers once staleness drops
+        w.staleness = 0;
+        w.update_queue(3);
+        assert_eq!(w.queue, 1.0);
+    }
+}

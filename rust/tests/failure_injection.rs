@@ -1,0 +1,135 @@
+//! Failure injection: the simulator must stay correct (not merely not
+//! crash) under degenerate edge conditions — total link loss, starved
+//! bandwidth, single-worker networks, immobile/hyper-mobile topologies.
+
+use dystop::config::{ExperimentConfig, NetworkConfig, SchedulerKind};
+use dystop::sim::SimEngine;
+
+fn base() -> ExperimentConfig {
+    ExperimentConfig {
+        workers: 10,
+        rounds: 40,
+        train_per_worker: 48,
+        test_samples: 128,
+        class_sep: 3.0,
+        eval_every: 10,
+        target_accuracy: 2.0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn survives_total_link_loss() {
+    // every link drops every round: no pulls possible, workers train solo
+    let mut cfg = base();
+    cfg.network.link_drop_prob = 1.0;
+    let res = SimEngine::new(cfg).run_full();
+    assert_eq!(res.rounds.len(), 40);
+    assert_eq!(res.total_transfers(), 0, "no transfers over dead links");
+    // local training alone still improves over init
+    let first = res.evals.first().unwrap().avg_accuracy;
+    assert!(res.best_accuracy() > first.max(0.2), "acc {}", res.best_accuracy());
+}
+
+#[test]
+fn survives_zero_bandwidth_budgets() {
+    let mut cfg = base();
+    cfg.network.budget_models = 0.0;
+    cfg.network.budget_jitter = 0.0;
+    let res = SimEngine::new(cfg).run_full();
+    // budgets floor at 1.0 transfer/round (EdgeNetwork::refresh_budgets),
+    // so communication is heavily throttled but the run proceeds
+    assert_eq!(res.rounds.len(), 40);
+    assert!(res.evals.iter().all(|e| e.avg_loss.is_finite()));
+}
+
+#[test]
+fn single_worker_network_degenerates_to_local_sgd() {
+    let mut cfg = base();
+    cfg.workers = 1;
+    cfg.scheduler = SchedulerKind::DySTop;
+    let res = SimEngine::new(cfg).run_full();
+    assert_eq!(res.total_transfers(), 0);
+    assert!(res.best_accuracy() > 0.3, "acc {}", res.best_accuracy());
+    // the lone worker is always activated ⇒ staleness pinned at 0
+    assert!(res.rounds.iter().all(|r| r.max_staleness == 0));
+}
+
+#[test]
+fn out_of_range_workers_never_communicate() {
+    // region much larger than range: most workers are isolated
+    let mut cfg = base();
+    cfg.network = NetworkConfig {
+        region_m: 10_000.0,
+        comm_range_m: 10.0,
+        mobility_m: 0.0,
+        ..Default::default()
+    };
+    let res = SimEngine::new(cfg).run_full();
+    assert_eq!(res.rounds.len(), 40);
+    // isolated workers still train locally; transfers near zero
+    assert!(res.total_transfers() < 40);
+}
+
+#[test]
+fn hyper_mobility_keeps_invariants() {
+    let mut cfg = base();
+    cfg.network.mobility_m = 50.0; // teleporting workers
+    cfg.network.link_drop_prob = 0.3;
+    let res = SimEngine::new(cfg).run_full();
+    let mut prev = 0.0;
+    for r in &res.rounds {
+        assert!(r.time_s >= prev && r.duration_s >= 0.0);
+        prev = r.time_s;
+    }
+}
+
+#[test]
+fn all_schedulers_survive_chaos() {
+    for k in [
+        SchedulerKind::DySTop,
+        SchedulerKind::AsyDfl,
+        SchedulerKind::SaAdfl,
+        SchedulerKind::Matcha,
+        SchedulerKind::DySTopPhase1Only,
+        SchedulerKind::DySTopPhase2Only,
+    ] {
+        let mut cfg = base();
+        cfg.rounds = 20;
+        cfg.scheduler = k;
+        cfg.network.link_drop_prob = 0.5;
+        cfg.network.mobility_m = 20.0;
+        cfg.network.budget_jitter = 1.0;
+        let res = SimEngine::new(cfg).run_full();
+        assert_eq!(res.rounds.len(), 20, "{}", res.label);
+        assert!(
+            res.evals.iter().all(|e| e.avg_loss.is_finite()),
+            "{}",
+            res.label
+        );
+    }
+}
+
+#[test]
+fn extreme_non_iid_each_worker_one_class() {
+    // φ→0 approximates one-class-per-worker; training must still move
+    let mut cfg = base();
+    cfg.phi = 0.01;
+    cfg.workers = 10;
+    let res = SimEngine::new(cfg).run_full();
+    let first = res.evals.first().unwrap().avg_accuracy;
+    assert!(res.best_accuracy() >= first);
+    assert!(res.best_accuracy() > 0.2, "acc {}", res.best_accuracy());
+}
+
+#[test]
+fn tau_bound_zero_forces_frequent_activation() {
+    let mut cfg = base();
+    cfg.tau_bound = 0;
+    cfg.rounds = 60;
+    let res = SimEngine::new(cfg).run_full();
+    // queues punish ANY staleness: activation pressure keeps τ tiny
+    let late: Vec<_> = res.rounds.iter().skip(20).collect();
+    let avg = late.iter().map(|r| r.avg_staleness).sum::<f64>() / late.len() as f64;
+    assert!(avg < 2.0, "avg staleness {avg} under τ_bound=0");
+}
