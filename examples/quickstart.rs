@@ -1,15 +1,17 @@
-//! Quickstart: DySTop on a simulated 20-worker edge network.
+//! Quickstart: DySTop on a simulated 20-worker edge network, through the
+//! unified Experiment builder API.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use dystop::config::ExperimentConfig;
-use dystop::sim::SimEngine;
+use dystop::config::{BackendKind, ExperimentConfig};
+use dystop::experiment::Experiment;
 
 fn main() {
     // Defaults are the paper's §VI-A setup scaled down; every field can
-    // also come from a config file via the `dystop train` CLI.
+    // also come from a config file via the `dystop train` CLI, and the
+    // backend from `--set run.backend=sim|testbed`.
     let cfg = ExperimentConfig {
         workers: 20,
         rounds: 150,
@@ -23,7 +25,13 @@ fn main() {
         cfg.workers, cfg.rounds, cfg.phi
     );
 
-    let res = SimEngine::new(cfg).run();
+    let res = Experiment::builder(cfg)
+        .backend(BackendKind::Sim)
+        .run()
+        .unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        });
 
     println!("\n  round  time(s)  accuracy   loss    comm(GB)");
     for e in &res.evals {

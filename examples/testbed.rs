@@ -1,13 +1,14 @@
 //! Testbed example — the §VII analog: 15 real OS threads with the
 //! Table II Jetson speed profile, real message passing, and wall-clock
-//! delays (compressed 100×), coordinated by DySTop.
+//! delays (compressed 100×), coordinated by DySTop — through the unified
+//! Experiment builder with the threaded backend.
 //!
 //! ```bash
 //! cargo run --release --example testbed
 //! ```
 
 use dystop::config::{ExperimentConfig, NetworkConfig, SchedulerKind};
-use dystop::testbed::{run_testbed, TestbedOptions};
+use dystop::experiment::{Experiment, TestbedOptions, ThreadedBackend};
 
 fn main() {
     let cfg = ExperimentConfig {
@@ -26,10 +27,18 @@ fn main() {
     println!(
         "testbed: {} worker threads (Table II speed profile), φ={}, \
          time compressed {}×",
-        cfg.workers, cfg.phi, 1000.0 / opts.time_scale
+        cfg.workers,
+        cfg.phi,
+        1000.0 / opts.time_scale
     );
 
-    let res = run_testbed(cfg, opts);
+    let res = Experiment::builder(cfg)
+        .backend_impl(Box::new(ThreadedBackend::with_options(opts)))
+        .run()
+        .unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        });
 
     println!("\n  round  wall(s)  accuracy   loss");
     for e in &res.evals {

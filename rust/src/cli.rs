@@ -8,11 +8,10 @@
 //! dystop inspect [--artifacts DIR]
 //! ```
 
-use crate::config::{Config, ExperimentConfig};
+use crate::config::{BackendKind, Config, ExperimentConfig};
+use crate::experiment::Experiment;
 use crate::figures::{self, FigScale};
 use crate::metrics::RunResult;
-use crate::sim::SimEngine;
-use crate::testbed::{run_testbed, TestbedOptions};
 use std::path::PathBuf;
 
 /// Parsed flag map: `--key value` pairs + repeated `--set k=v`.
@@ -104,13 +103,15 @@ pub fn main_with_args(args: &[String]) -> Result<(), String> {
         "train" => {
             let cfg = load_config(&flags)?;
             println!(
-                "train: scheduler={} workers={} rounds={} φ={}",
+                "train: scheduler={} backend={} workers={} rounds={} φ={}",
                 cfg.scheduler.name(),
+                cfg.backend.name(),
                 cfg.workers,
                 cfg.rounds,
                 cfg.phi
             );
-            let res = SimEngine::new(cfg).run();
+            let backend = cfg.backend;
+            let res = Experiment::builder(cfg).backend(backend).run()?;
             report(&res, &out)
         }
         "figures" => {
@@ -129,7 +130,9 @@ pub fn main_with_args(args: &[String]) -> Result<(), String> {
         }
         "testbed" => {
             let cfg = load_config(&flags)?;
-            let res = run_testbed(cfg, TestbedOptions::default());
+            let res = Experiment::builder(cfg)
+                .backend(BackendKind::Testbed)
+                .run()?;
             report(&res, &out)
         }
         "sweep" => {
@@ -150,7 +153,8 @@ pub fn main_with_args(args: &[String]) -> Result<(), String> {
                 }
                 cfg_raw.set(&key, &v);
                 let cfg = ExperimentConfig::from_config(&cfg_raw)?;
-                let mut res = SimEngine::new(cfg).run();
+                // run() dispatches on cfg.backend (run.backend knob)
+                let mut res = Experiment::builder(cfg).run()?;
                 res.label = format!("{}_{}{}", res.label, key.replace('.', "_"), v);
                 report(&res, &out)?;
             }
@@ -186,7 +190,7 @@ pub fn main_with_args(args: &[String]) -> Result<(), String> {
 fn usage() -> String {
     "usage: dystop <train|figures|testbed|sweep|inspect|help> [flags]\n\
      \n\
-     train   --config FILE --set sim.workers=40 --out results/\n\
+     train   --config FILE --set sim.workers=40 --set run.backend=sim|testbed --out results/\n\
      figures --fig <3|4..18|20..25|all> --out results/ [--workers N --rounds R]\n\
      testbed --set sim.workers=15 --out results/\n\
      sweep   --key dystop.tau_bound --values 2,5,8 --out results/\n\
@@ -224,6 +228,29 @@ mod tests {
     fn unknown_command_errors() {
         assert!(main_with_args(&s(&["bogus"])).is_err());
         assert!(main_with_args(&[]).is_err());
+    }
+
+    #[test]
+    fn pjrt_without_artifacts_is_clean_error() {
+        // construction-path failures surface as Err, never a panic/abort
+        let err = main_with_args(&s(&[
+            "train",
+            "--set", "sim.trainer=pjrt",
+            "--set", "sim.workers=4",
+            "--set", "sim.rounds=2",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("trainer required"), "{err}");
+    }
+
+    #[test]
+    fn bad_backend_knob_is_clean_error() {
+        let err = main_with_args(&s(&[
+            "train",
+            "--set", "run.backend=quantum",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("unknown backend"), "{err}");
     }
 
     #[test]

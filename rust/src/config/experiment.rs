@@ -90,6 +90,37 @@ impl TrainerKind {
     }
 }
 
+/// Which execution backend drives rounds (`run.backend` knob): the
+/// virtual-clock simulator (§VI) or the thread-per-worker testbed (§VII).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Deterministic virtual-clock simulation (`experiment::VirtualClockBackend`).
+    #[default]
+    Sim,
+    /// Thread-per-worker runtime with real message passing
+    /// (`experiment::ThreadedBackend`).
+    Testbed,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "sim" | "virtual" | "virtual-clock" => Ok(Self::Sim),
+            "testbed" | "threaded" => Ok(Self::Testbed),
+            other => Err(format!(
+                "unknown backend {other:?} (sim|testbed)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Sim => "sim",
+            Self::Testbed => "testbed",
+        }
+    }
+}
+
 /// Wireless edge-network model constants (paper §VI-A1).
 #[derive(Clone, Debug)]
 pub struct NetworkConfig {
@@ -160,6 +191,8 @@ pub struct ExperimentConfig {
     pub scheduler: SchedulerKind,
     pub model: ModelKind,
     pub trainer: TrainerKind,
+    /// Execution backend (`run.backend=sim|testbed`).
+    pub backend: BackendKind,
 
     // --- DySTop knobs ---
     /// Staleness bound τ_bound (Eq. 12c); Fig. 14/15 sweep.
@@ -210,6 +243,7 @@ impl Default for ExperimentConfig {
             scheduler: SchedulerKind::DySTop,
             model: ModelKind::Mlp,
             trainer: TrainerKind::Native,
+            backend: BackendKind::Sim,
             tau_bound: 5,
             v: 10.0,
             neighbor_cap: 7,
@@ -255,6 +289,9 @@ impl ExperimentConfig {
         }
         if let Some(s) = cfg.get("sim.trainer") {
             e.trainer = TrainerKind::parse(s)?;
+        }
+        if let Some(s) = cfg.get("run.backend") {
+            e.backend = BackendKind::parse(s)?;
         }
         opt!(e.tau_bound, get_u64, "dystop.tau_bound");
         opt!(e.v, get_f64, "dystop.v");
@@ -351,6 +388,21 @@ mod tests {
         assert!(ExperimentConfig::from_config(&cfg).is_err());
         let cfg = Config::parse("[train]\nbatch = 100000").unwrap();
         assert!(ExperimentConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn backend_knob_parses() {
+        assert_eq!(BackendKind::parse("sim").unwrap(), BackendKind::Sim);
+        assert_eq!(
+            BackendKind::parse("Testbed").unwrap(),
+            BackendKind::Testbed
+        );
+        assert!(BackendKind::parse("bogus").is_err());
+        let cfg = Config::parse("[run]\nbackend = testbed").unwrap();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.backend, BackendKind::Testbed);
+        // default stays sim
+        assert_eq!(ExperimentConfig::default().backend, BackendKind::Sim);
     }
 
     #[test]

@@ -18,7 +18,8 @@
 mod experiment;
 
 pub use experiment::{
-    ExperimentConfig, ModelKind, NetworkConfig, SchedulerKind, TrainerKind,
+    BackendKind, ExperimentConfig, ModelKind, NetworkConfig, SchedulerKind,
+    TrainerKind,
 };
 
 use std::collections::BTreeMap;

@@ -125,9 +125,18 @@ impl RoundPlan {
                 }
             }
         }
+        let mut push_seen = std::collections::BTreeSet::new();
         for &(f, t) in &self.pushes {
             if f >= n || t >= n || f == t {
                 return Err(format!("bad push edge ({f},{t})"));
+            }
+            if !seen[f] {
+                return Err(format!(
+                    "push ({f},{t}) originates from non-activated worker {f}"
+                ));
+            }
+            if !push_seen.insert((f, t)) {
+                return Err(format!("duplicate push edge ({f},{t})"));
             }
         }
         Ok(())
@@ -288,6 +297,28 @@ mod tests {
         assert!(p.validate(3).is_err());
         let q = RoundPlan { active: vec![0, 0], pulls_from: vec![vec![], vec![]], pushes: vec![] };
         assert!(q.validate(3).is_err());
+
+        // push-edge invariants
+        let base = RoundPlan {
+            active: vec![0],
+            pulls_from: vec![vec![]],
+            pushes: vec![(0, 1), (0, 2)],
+        };
+        assert!(base.validate(3).is_ok());
+        let mut bad = base.clone();
+        bad.pushes = vec![(0, 1), (0, 1)]; // duplicate edge
+        let err = bad.validate(3).unwrap_err();
+        assert!(err.contains("duplicate push"), "{err}");
+        let mut bad = base.clone();
+        bad.pushes = vec![(1, 2)]; // sender not activated
+        let err = bad.validate(3).unwrap_err();
+        assert!(err.contains("non-activated"), "{err}");
+        let mut bad = base.clone();
+        bad.pushes = vec![(0, 0)]; // self-push
+        assert!(bad.validate(3).is_err());
+        let mut bad = base;
+        bad.pushes = vec![(0, 7)]; // out of range
+        assert!(bad.validate(3).is_err());
     }
 
     #[test]

@@ -1,0 +1,345 @@
+//! Unified experiment API: one builder, pluggable execution backends,
+//! pluggable round observers.
+//!
+//! The paper evaluates DySTop in two harnesses — large-scale simulation
+//! (§VI) and a real-device testbed (§VII). Both need the *same* setup:
+//! synthetic corpus, Dirichlet partition, [`EdgeNetwork`] substrate,
+//! per-worker compute heterogeneity, scheduler, trainer. This module owns
+//! that setup exactly once and exposes it behind three small contracts:
+//!
+//! * [`Experiment::builder`] — fallible construction (every invalid
+//!   config or trainer mismatch is an [`ExperimentError`], never a
+//!   panic) of the shared substrate;
+//! * [`Backend`] — how rounds are *executed*:
+//!   [`VirtualClockBackend`] (deterministic virtual-clock simulation,
+//!   §VI) or [`ThreadedBackend`] (thread-per-worker with real message
+//!   passing and compressed wall-clock delays, §VII);
+//! * [`RoundObserver`] — how rounds are *watched*: metrics recording is
+//!   itself the first observer ([`RunRecorder`]), and callers can attach
+//!   more (figure capture, fault injection, live dashboards) without
+//!   touching the engines.
+//!
+//! ```no_run
+//! use dystop::config::{BackendKind, ExperimentConfig};
+//! use dystop::experiment::Experiment;
+//!
+//! let cfg = ExperimentConfig { workers: 20, rounds: 50, ..Default::default() };
+//! let res = Experiment::builder(cfg)
+//!     .backend(BackendKind::Sim)
+//!     .run()
+//!     .expect("experiment failed");
+//! println!("best accuracy {:.3}", res.best_accuracy());
+//! ```
+//!
+//! The legacy entry points `sim::SimEngine::new` / `testbed::run_testbed`
+//! are retained as thin wrappers over this module and are deprecated.
+
+mod observer;
+mod threaded;
+mod virtual_clock;
+
+pub use observer::{ObserverChain, RoundObserver, RunRecorder};
+pub use threaded::{TestbedOptions, ThreadedBackend};
+pub use virtual_clock::{VirtualClockBackend, VirtualClockEngine};
+
+use crate::config::{BackendKind, ExperimentConfig};
+use crate::coordinator::{make_scheduler, Scheduler};
+use crate::data::{dirichlet_partition, make_corpus, Dataset, SyntheticSpec};
+use crate::metrics::RunResult;
+use crate::network::EdgeNetwork;
+use crate::util::rng::Pcg;
+use crate::worker::{default_trainer, Trainer, WorkerState};
+use std::fmt;
+
+/// Everything that can go wrong constructing or executing an experiment.
+#[derive(Debug)]
+pub enum ExperimentError {
+    /// The [`ExperimentConfig`] failed validation.
+    InvalidConfig(String),
+    /// The configured trainer kind has no default constructor; pass one
+    /// explicitly via [`ExperimentBuilder::trainer`] (e.g. a
+    /// `PjrtTrainer` loaded from AOT artifacts).
+    TrainerRequired(String),
+    /// The chosen backend cannot execute this configuration.
+    Unsupported(String),
+    /// A backend failed at runtime (e.g. a worker thread died).
+    Backend(String),
+}
+
+impl fmt::Display for ExperimentError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExperimentError::InvalidConfig(m) => {
+                write!(f, "invalid experiment config: {m}")
+            }
+            ExperimentError::TrainerRequired(m) => {
+                write!(f, "trainer required: {m}")
+            }
+            ExperimentError::Unsupported(m) => {
+                write!(f, "unsupported configuration: {m}")
+            }
+            ExperimentError::Backend(m) => write!(f, "backend failure: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ExperimentError {}
+
+impl From<ExperimentError> for String {
+    fn from(e: ExperimentError) -> String {
+        e.to_string()
+    }
+}
+
+/// An execution backend: consumes a fully-built [`Experiment`] and
+/// drives Alg. 1 to completion, reporting through the experiment's
+/// observers and returning the recorded [`RunResult`].
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    fn run(&mut self, exp: Experiment) -> Result<RunResult, ExperimentError>;
+}
+
+/// The shared, backend-agnostic substrate of one experiment: config,
+/// corpus, partitioned workers, edge network, scheduler, trainer, and
+/// the RNG stream construction left off at (backends continue it so a
+/// seeded run is deterministic end to end).
+pub struct Experiment {
+    pub cfg: ExperimentConfig,
+    pub net: EdgeNetwork,
+    pub workers: Vec<WorkerState>,
+    pub test: Dataset,
+    /// Per-worker label distributions over the static shards (PTCA
+    /// phase-1 / EMD inputs).
+    pub label_dist: Vec<Vec<f64>>,
+    /// Bits of one model transfer on the simulated wire.
+    pub model_bits: f64,
+    pub(crate) trainer: Box<dyn Trainer>,
+    pub(crate) scheduler: Box<dyn Scheduler>,
+    pub(crate) rng: Pcg,
+    pub(crate) observers: Vec<Box<dyn RoundObserver>>,
+}
+
+impl Experiment {
+    /// Start building an experiment from a config.
+    pub fn builder(cfg: ExperimentConfig) -> ExperimentBuilder {
+        ExperimentBuilder {
+            cfg,
+            trainer: None,
+            backend: None,
+            observers: Vec::new(),
+        }
+    }
+
+    /// The scheduler's display name (labels results).
+    pub fn scheduler_name(&self) -> &'static str {
+        self.scheduler.name()
+    }
+}
+
+/// Fluent constructor for [`Experiment`]; terminal methods are
+/// [`build`](Self::build) (substrate only) and [`run`](Self::run)
+/// (build + execute on the selected backend).
+pub struct ExperimentBuilder {
+    cfg: ExperimentConfig,
+    trainer: Option<Box<dyn Trainer>>,
+    backend: Option<Box<dyn Backend>>,
+    observers: Vec<Box<dyn RoundObserver>>,
+}
+
+impl ExperimentBuilder {
+    /// Use an explicit training backend (e.g. `PjrtTrainer` over AOT
+    /// artifacts). Without this, the config's [`TrainerKind`] must have
+    /// a default constructor (native softmax regression).
+    ///
+    /// [`TrainerKind`]: crate::config::TrainerKind
+    pub fn trainer(mut self, trainer: Box<dyn Trainer>) -> Self {
+        self.trainer = Some(trainer);
+        self
+    }
+
+    /// Select a built-in execution backend (overrides `cfg.backend`,
+    /// the `run.backend=sim|testbed` knob).
+    pub fn backend(self, kind: BackendKind) -> Self {
+        match kind {
+            BackendKind::Sim => {
+                self.backend_impl(Box::new(VirtualClockBackend::new()))
+            }
+            BackendKind::Testbed => {
+                self.backend_impl(Box::new(ThreadedBackend::default()))
+            }
+        }
+    }
+
+    /// Select a custom execution backend implementation.
+    pub fn backend_impl(mut self, backend: Box<dyn Backend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Attach a [`RoundObserver`]; may be called repeatedly. Observers
+    /// fire after the built-in [`RunRecorder`], in attachment order.
+    pub fn observer(mut self, obs: Box<dyn RoundObserver>) -> Self {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Perform the shared setup once: corpus, Dirichlet partition, edge
+    /// network, heterogeneous worker speeds, scheduler, trainer.
+    ///
+    /// Deterministic given `cfg.seed` — the RNG draw order here is the
+    /// contract the seeded-parity tests pin down; change it and every
+    /// recorded curve shifts.
+    pub fn build(self) -> Result<Experiment, ExperimentError> {
+        let cfg = self.cfg;
+        cfg.validate().map_err(ExperimentError::InvalidConfig)?;
+        let trainer: Box<dyn Trainer> = match self.trainer {
+            Some(t) => t,
+            None => default_trainer(&cfg).ok_or_else(|| {
+                ExperimentError::TrainerRequired(format!(
+                    "trainer kind {:?} has no default constructor; pass one \
+                     via ExperimentBuilder::trainer (e.g. PjrtTrainer from \
+                     AOT artifacts)",
+                    cfg.trainer
+                ))
+            })?,
+        };
+
+        let mut rng = Pcg::new(cfg.seed, 0x51B);
+        let spec = SyntheticSpec {
+            dim: cfg.feature_dim,
+            num_classes: cfg.num_classes,
+            train_samples: cfg.train_per_worker * cfg.workers,
+            test_samples: cfg.test_samples,
+            class_sep: cfg.class_sep,
+            seed: cfg.seed,
+        };
+        let (train, test) = make_corpus(&spec);
+        let min_per = cfg.batch.max(cfg.train_per_worker / 4);
+        let (shards, stats) =
+            dirichlet_partition(&train, cfg.workers, cfg.phi, min_per, &mut rng);
+
+        let net = EdgeNetwork::new(cfg.workers, cfg.network.clone(), &mut rng);
+
+        // heterogeneous compute: h_i = mean × lognormal(0, jitter).
+        // Edge-device speeds are heavy-tailed (the paper's Table II spans
+        // ~10× between Jetson Nano and Orin) — the lognormal gives the
+        // straggler regime the synchronous baselines suffer in (§VI-B1).
+        let workers: Vec<WorkerState> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let coeff = rng.normal_ms(0.0, cfg.compute_jitter).exp();
+                let h = cfg.compute_mean_s * coeff;
+                let params = trainer.init(cfg.seed.wrapping_add(i as u64));
+                WorkerState::new(i, params, shard, h)
+            })
+            .collect();
+
+        let scheduler = make_scheduler(cfg.scheduler);
+        let model_bits = if cfg.network.payload_bits > 0.0 {
+            cfg.network.payload_bits
+        } else {
+            trainer.param_count() as f64 * 32.0
+        };
+        let label_dist = stats.label_distributions;
+
+        Ok(Experiment {
+            cfg,
+            net,
+            workers,
+            test,
+            label_dist,
+            model_bits,
+            trainer,
+            scheduler,
+            rng,
+            observers: self.observers,
+        })
+    }
+
+    /// Build and execute: dispatches to the selected backend (explicit
+    /// [`backend`](Self::backend)/[`backend_impl`](Self::backend_impl)
+    /// call, else the config's `run.backend` knob).
+    pub fn run(mut self) -> Result<RunResult, ExperimentError> {
+        let mut backend: Box<dyn Backend> = match self.backend.take() {
+            Some(b) => b,
+            None => match self.cfg.backend {
+                BackendKind::Sim => Box::new(VirtualClockBackend::new()),
+                BackendKind::Testbed => Box::new(ThreadedBackend::default()),
+            },
+        };
+        let exp = self.build()?;
+        backend.run(exp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SchedulerKind, TrainerKind};
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            workers: 6,
+            rounds: 8,
+            train_per_worker: 48,
+            test_samples: 100,
+            eval_every: 4,
+            target_accuracy: 2.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn builder_constructs_shared_substrate() {
+        let exp = Experiment::builder(tiny_cfg()).build().unwrap();
+        assert_eq!(exp.workers.len(), 6);
+        assert_eq!(exp.label_dist.len(), 6);
+        assert!(exp.model_bits > 0.0);
+        assert_eq!(exp.scheduler_name(), "dystop");
+        assert!(!exp.test.is_empty());
+    }
+
+    #[test]
+    fn invalid_config_is_err_not_panic() {
+        let mut cfg = tiny_cfg();
+        cfg.workers = 0;
+        match Experiment::builder(cfg).build() {
+            Err(ExperimentError::InvalidConfig(m)) => {
+                assert!(m.contains("workers"), "{m}");
+            }
+            Err(other) => panic!("expected InvalidConfig, got {other:?}"),
+            Ok(_) => panic!("expected InvalidConfig, got Ok"),
+        }
+    }
+
+    #[test]
+    fn pjrt_without_trainer_is_err_not_panic() {
+        let mut cfg = tiny_cfg();
+        cfg.trainer = TrainerKind::Pjrt;
+        match Experiment::builder(cfg).build() {
+            Err(ExperimentError::TrainerRequired(m)) => {
+                assert!(m.contains("Pjrt"), "{m}");
+            }
+            Err(other) => panic!("expected TrainerRequired, got {other:?}"),
+            Ok(_) => panic!("expected TrainerRequired, got Ok"),
+        }
+    }
+
+    #[test]
+    fn run_dispatches_on_config_backend() {
+        let mut cfg = tiny_cfg();
+        cfg.scheduler = SchedulerKind::DySTop;
+        let res = Experiment::builder(cfg).run().unwrap();
+        assert_eq!(res.rounds.len(), 8);
+        assert_eq!(res.label, "dystop");
+    }
+
+    #[test]
+    fn errors_render_cleanly() {
+        let e = ExperimentError::InvalidConfig("sim.workers must be > 0".into());
+        let s: String = e.into();
+        assert!(s.starts_with("invalid experiment config"));
+    }
+}

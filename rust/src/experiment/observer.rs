@@ -1,0 +1,176 @@
+//! Round observers: pluggable hooks both backends fire as a run
+//! progresses. Metrics recording is itself the first observer
+//! ([`RunRecorder`]), so figure capture, fault injection, or live
+//! dashboards are additional plug-ins rather than engine fields.
+
+use crate::coordinator::RoundPlan;
+use crate::metrics::{EvalRecord, RoundRecord, RunResult};
+
+/// Hooks fired by every [`Backend`](super::Backend) on the coordinator
+/// thread (never concurrently). All methods default to no-ops so an
+/// observer implements only what it watches.
+pub trait RoundObserver {
+    /// The scheduler produced (and the engine validated) a round plan,
+    /// before execution.
+    fn on_plan(&mut self, round: usize, plan: &RoundPlan) {
+        let _ = (round, plan);
+    }
+
+    /// A round finished executing and its record is final.
+    fn on_round_end(&mut self, rec: &RoundRecord) {
+        let _ = rec;
+    }
+
+    /// An evaluation snapshot was taken.
+    fn on_eval(&mut self, rec: &EvalRecord) {
+        let _ = rec;
+    }
+}
+
+/// The built-in first observer: accumulates the [`RunResult`] every
+/// backend returns.
+pub struct RunRecorder {
+    result: RunResult,
+}
+
+impl RunRecorder {
+    pub fn new(label: impl Into<String>, model_bits: f64) -> Self {
+        RunRecorder { result: RunResult::new(label, model_bits) }
+    }
+
+    pub fn result(&self) -> &RunResult {
+        &self.result
+    }
+
+    pub fn into_result(self) -> RunResult {
+        self.result
+    }
+}
+
+impl RoundObserver for RunRecorder {
+    fn on_round_end(&mut self, rec: &RoundRecord) {
+        self.result.rounds.push(rec.clone());
+    }
+
+    fn on_eval(&mut self, rec: &EvalRecord) {
+        self.result.evals.push(rec.clone());
+    }
+}
+
+/// The recorder plus any user-attached observers, dispatched in order
+/// (recorder first). Owned by a backend for the duration of one run.
+pub struct ObserverChain {
+    recorder: RunRecorder,
+    others: Vec<Box<dyn RoundObserver>>,
+}
+
+impl ObserverChain {
+    pub fn new(
+        recorder: RunRecorder,
+        others: Vec<Box<dyn RoundObserver>>,
+    ) -> Self {
+        ObserverChain { recorder, others }
+    }
+
+    pub fn plan(&mut self, round: usize, plan: &RoundPlan) {
+        self.recorder.on_plan(round, plan);
+        for o in &mut self.others {
+            o.on_plan(round, plan);
+        }
+    }
+
+    pub fn round_end(&mut self, rec: &RoundRecord) {
+        self.recorder.on_round_end(rec);
+        for o in &mut self.others {
+            o.on_round_end(rec);
+        }
+    }
+
+    pub fn eval(&mut self, rec: &EvalRecord) {
+        self.recorder.on_eval(rec);
+        for o in &mut self.others {
+            o.on_eval(rec);
+        }
+    }
+
+    pub fn result(&self) -> &RunResult {
+        self.recorder.result()
+    }
+
+    pub fn into_result(self) -> RunResult {
+        self.recorder.into_result()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_rec(round: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            time_s: round as f64,
+            duration_s: 1.0,
+            active: 2,
+            transfers: 3,
+            avg_staleness: 0.5,
+            max_staleness: 1,
+            train_loss: 0.9,
+        }
+    }
+
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    /// (plans, rounds, evals) tallies shared out of the boxed observer.
+    struct Counter(Rc<RefCell<(usize, usize, usize)>>);
+
+    impl RoundObserver for Counter {
+        fn on_plan(&mut self, _round: usize, _plan: &RoundPlan) {
+            self.0.borrow_mut().0 += 1;
+        }
+        fn on_round_end(&mut self, _rec: &RoundRecord) {
+            self.0.borrow_mut().1 += 1;
+        }
+        fn on_eval(&mut self, _rec: &EvalRecord) {
+            self.0.borrow_mut().2 += 1;
+        }
+    }
+
+    #[test]
+    fn recorder_accumulates_run_result() {
+        let mut chain = ObserverChain::new(
+            RunRecorder::new("test", 64.0),
+            vec![],
+        );
+        chain.plan(1, &RoundPlan::default());
+        chain.round_end(&round_rec(1));
+        chain.eval(&EvalRecord {
+            round: 1,
+            time_s: 1.0,
+            avg_accuracy: 0.5,
+            avg_loss: 1.0,
+            cum_transfers: 3,
+        });
+        let res = chain.into_result();
+        assert_eq!(res.label, "test");
+        assert_eq!(res.rounds.len(), 1);
+        assert_eq!(res.evals.len(), 1);
+        assert_eq!(res.model_bits, 64.0);
+    }
+
+    #[test]
+    fn user_observers_fire_after_recorder() {
+        let counts = Rc::new(RefCell::new((0, 0, 0)));
+        let mut chain = ObserverChain::new(
+            RunRecorder::new("test", 64.0),
+            vec![Box::new(Counter(counts.clone()))],
+        );
+        for t in 1..=3 {
+            chain.plan(t, &RoundPlan::default());
+            chain.round_end(&round_rec(t));
+        }
+        assert_eq!(chain.result().rounds.len(), 3);
+        assert_eq!(*counts.borrow(), (3, 3, 0));
+    }
+}

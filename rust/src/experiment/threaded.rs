@@ -1,0 +1,371 @@
+//! Thread-per-worker execution backend — the §VII testbed analog.
+//!
+//! Unlike the virtual-clock backend, this mode actually runs one OS
+//! thread per worker with real message passing and wall-clock delays:
+//!
+//! * each worker owns an **updating thread** (Alg. 1 lines 3–7) that
+//!   reacts to EXECUTE messages: pull neighbor models, aggregate (Eq. 4),
+//!   emulate heterogeneous compute (scaled sleep), train for real, publish
+//!   the new model;
+//! * the **pushing thread** role (lines 8–10) is played by a shared
+//!   `Mutex<Published>` snapshot per worker — a pull locks the source's
+//!   snapshot exactly like the paper's pushing thread serves the latest
+//!   `w_{t−τ}^i`;
+//! * the coordinator thread runs the same
+//!   [`Scheduler`](crate::coordinator::Scheduler) implementations as the
+//!   simulator and advances rounds on completions.
+//!
+//! Delays are the paper's §VI-A1 channel/compute model compressed by
+//! `time_scale` (default 1000× — a 1 s training job sleeps 1 ms) so a
+//! full run finishes in seconds while preserving relative asynchrony.
+
+use super::observer::{ObserverChain, RunRecorder};
+use super::{Backend, Experiment, ExperimentError};
+use crate::config::{ExperimentConfig, TrainerKind};
+use crate::coordinator::{SchedView, SchedulerParams};
+use crate::data::Dataset;
+use crate::metrics::{EvalRecord, RoundRecord, RunResult};
+use crate::worker::{data_size_weights, NativeTrainer, Trainer};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Latest published model of one worker (what pulls observe).
+struct Published {
+    params: Vec<f32>,
+    data_size: usize,
+}
+
+/// Coordinator → worker message.
+enum Execute {
+    /// Pull from these neighbors, then aggregate + train.
+    Round { neighbors: Vec<usize>, pull_delays_ms: Vec<u64> },
+    Shutdown,
+}
+
+/// Worker → coordinator completion report.
+struct Done {
+    id: usize,
+    loss: f64,
+}
+
+/// Extra knobs for the threaded (testbed) backend.
+#[derive(Clone, Copy, Debug)]
+pub struct TestbedOptions {
+    /// Virtual-seconds → real-milliseconds compression factor.
+    pub time_scale: f64,
+    /// Use the explicit Table II per-worker speed profile when the
+    /// worker count matches (15); otherwise keep the builder's sampled
+    /// lognormal heterogeneity.
+    pub profile: bool,
+}
+
+impl Default for TestbedOptions {
+    fn default() -> Self {
+        TestbedOptions { time_scale: 1000.0, profile: true }
+    }
+}
+
+/// Thread-per-worker [`Backend`] with real message passing and
+/// compressed wall-clock delays (§VII).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ThreadedBackend {
+    opts: TestbedOptions,
+}
+
+impl ThreadedBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_options(opts: TestbedOptions) -> Self {
+        ThreadedBackend { opts }
+    }
+}
+
+impl Backend for ThreadedBackend {
+    fn name(&self) -> &'static str {
+        "testbed"
+    }
+
+    fn run(&mut self, exp: Experiment) -> Result<RunResult, ExperimentError> {
+        run_threaded(exp, self.opts)
+    }
+}
+
+fn run_threaded(
+    exp: Experiment,
+    opts: TestbedOptions,
+) -> Result<RunResult, ExperimentError> {
+    let Experiment {
+        cfg,
+        mut net,
+        workers,
+        test,
+        label_dist,
+        model_bits,
+        mut trainer,
+        mut scheduler,
+        mut rng,
+        observers,
+    } = exp;
+    if cfg.trainer != TrainerKind::Native {
+        return Err(ExperimentError::Unsupported(
+            "the threaded backend trains with one NativeTrainer per worker \
+             thread; run.backend=sim for PJRT trainers"
+                .into(),
+        ));
+    }
+    let n = cfg.workers;
+    let recorder =
+        RunRecorder::new(format!("testbed-{}", scheduler.name()), model_bits);
+    let mut chain = ObserverChain::new(recorder, observers);
+
+    // heterogeneous compute: explicit Table II profile (when the worker
+    // count matches the paper's testbed) or the builder's sampled draw
+    let h_train: Vec<f64> = if opts.profile && n == 15 {
+        crate::figures::testbed_profile_speeds()
+            .iter()
+            .map(|s| cfg.compute_mean_s / s)
+            .collect()
+    } else {
+        workers.iter().map(|w| w.h_train_s).collect()
+    };
+
+    // --- shared published models (initial params from the builder) ---
+    let published: Vec<Arc<Mutex<Published>>> = workers
+        .iter()
+        .map(|w| {
+            Arc::new(Mutex::new(Published {
+                params: w.params.clone(),
+                data_size: w.data_size(),
+            }))
+        })
+        .collect();
+
+    // --- spawn workers ---
+    let (done_tx, done_rx) = mpsc::channel::<Done>();
+    let mut exec_txs = Vec::with_capacity(n);
+    let mut handles = Vec::with_capacity(n);
+    for (i, w) in workers.into_iter().enumerate() {
+        let (tx, rx) = mpsc::channel::<Execute>();
+        exec_txs.push(tx);
+        let done = done_tx.clone();
+        let pubs: Vec<Arc<Mutex<Published>>> = published.clone();
+        let my_h = h_train[i];
+        let scale = opts.time_scale;
+        let wcfg = cfg.clone();
+        let shard = w.shard;
+        handles.push(thread::spawn(move || {
+            worker_loop(i, shard, my_h, scale, &wcfg, pubs, rx, done)
+        }));
+    }
+    drop(done_tx);
+
+    // --- coordinator loop ---
+    let mut tau = vec![0u64; n];
+    let mut queues = vec![0.0f64; n];
+    let mut residual = h_train.clone();
+    let mut pulls = vec![vec![0u64; n]; n];
+    let start = Instant::now();
+    let mut cum_transfers = 0usize;
+
+    for round in 1..=cfg.rounds {
+        net.step(&mut rng);
+        let candidates: Vec<Vec<usize>> =
+            (0..n).map(|i| net.in_range(i)).collect();
+        let h_est: Vec<f64> = (0..n)
+            .map(|i| {
+                let worst = candidates[i]
+                    .iter()
+                    .take(cfg.neighbor_cap)
+                    .map(|&j| net.expected_transfer_time_s(j, i, model_bits))
+                    .fold(0.0f64, f64::max);
+                residual[i] + worst
+            })
+            .collect();
+        let data_sizes: Vec<usize> = published
+            .iter()
+            .map(|p| p.lock().unwrap().data_size)
+            .collect();
+        let plan = {
+            let view = SchedView {
+                round,
+                tau: &tau,
+                queues: &queues,
+                h_cmp: &residual,
+                h_est: &h_est,
+                data_sizes: &data_sizes,
+                label_dist: &label_dist,
+                candidates: &candidates,
+                budgets: &net.budgets,
+                pulls: &pulls,
+                net: &net,
+                params: SchedulerParams::from(&cfg),
+            };
+            scheduler.plan(&view, &mut rng)
+        };
+        debug_assert!(plan.validate(n).is_ok());
+        chain.plan(round, &plan);
+
+        // dispatch EXECUTE to the active workers with realised delays
+        let round_t0 = Instant::now();
+        for (k, &i) in plan.active.iter().enumerate() {
+            let delays: Vec<u64> = plan.pulls_from[k]
+                .iter()
+                .map(|&j| {
+                    let t = net.transfer_time_s(j, i, model_bits, &mut rng);
+                    (t * opts.time_scale) as u64
+                })
+                .collect();
+            for &j in &plan.pulls_from[k] {
+                pulls[i][j] += 1;
+            }
+            exec_txs[i]
+                .send(Execute::Round {
+                    neighbors: plan.pulls_from[k].clone(),
+                    pull_delays_ms: delays,
+                })
+                .map_err(|_| {
+                    ExperimentError::Backend(format!(
+                        "worker {i} hung up (thread died?)"
+                    ))
+                })?;
+        }
+
+        // wait for completions (the synchronization point is per-plan,
+        // matching the round abstraction of Alg. 1)
+        let mut losses = Vec::with_capacity(plan.active.len());
+        for _ in &plan.active {
+            let d = done_rx.recv().map_err(|_| {
+                ExperimentError::Backend(
+                    "a worker thread died mid-round".into(),
+                )
+            })?;
+            debug_assert!(plan.active.contains(&d.id));
+            losses.push(d.loss);
+        }
+        let h_round = round_t0.elapsed().as_secs_f64();
+
+        // staleness + queues + residual bookkeeping (Eqs. 6/33/7)
+        let mut active_mask = vec![false; n];
+        for &i in &plan.active {
+            active_mask[i] = true;
+        }
+        let h_virtual = h_round / opts.time_scale * 1000.0; // ms→virtual s
+        for i in 0..n {
+            residual[i] = (residual[i] - h_virtual).max(0.0);
+            if active_mask[i] {
+                tau[i] = 0;
+                residual[i] = h_train[i];
+            } else {
+                tau[i] += 1;
+            }
+            queues[i] =
+                (queues[i] + tau[i] as f64 - cfg.tau_bound as f64).max(0.0);
+        }
+
+        let transfers = plan.transfers();
+        cum_transfers += transfers;
+        chain.round_end(&RoundRecord {
+            round,
+            time_s: start.elapsed().as_secs_f64(),
+            duration_s: h_round,
+            active: plan.active.len(),
+            transfers,
+            avg_staleness: tau.iter().sum::<u64>() as f64 / n as f64,
+            max_staleness: tau.iter().copied().max().unwrap_or(0),
+            train_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
+        });
+
+        if round % cfg.eval_every.max(1) == 0 || round == cfg.rounds {
+            let mut acc_sum = 0.0;
+            let mut loss_sum = 0.0;
+            for p in &published {
+                let params = p.lock().unwrap().params.clone();
+                let (l, a) = trainer.evaluate(&params, &test);
+                acc_sum += a;
+                loss_sum += l;
+            }
+            chain.eval(&EvalRecord {
+                round,
+                time_s: start.elapsed().as_secs_f64(),
+                avg_accuracy: acc_sum / n as f64,
+                avg_loss: loss_sum / n as f64,
+                cum_transfers,
+            });
+        }
+    }
+
+    for tx in &exec_txs {
+        let _ = tx.send(Execute::Shutdown);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(chain.into_result())
+}
+
+/// The per-worker updating thread (Alg. 1 lines 3–7).
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    id: usize,
+    shard: Dataset,
+    h_train_s: f64,
+    time_scale: f64,
+    cfg: &ExperimentConfig,
+    published: Vec<Arc<Mutex<Published>>>,
+    rx: mpsc::Receiver<Execute>,
+    done: mpsc::Sender<Done>,
+) {
+    let mut trainer = NativeTrainer::new(cfg.feature_dim, cfg.num_classes);
+    let mut rng = crate::util::rng::Pcg::new(cfg.seed ^ 0xBEEF, id as u64);
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Execute::Shutdown => break,
+            Execute::Round { neighbors, pull_delays_ms } => {
+                // PULL: read each neighbor's published snapshot (the
+                // "pushing thread" contract), paying the channel delay
+                let mut models: Vec<Vec<f32>> =
+                    Vec::with_capacity(neighbors.len() + 1);
+                let mut sizes: Vec<usize> =
+                    Vec::with_capacity(neighbors.len() + 1);
+                {
+                    let own = published[id].lock().unwrap();
+                    models.push(own.params.clone());
+                    sizes.push(own.data_size);
+                }
+                let worst_delay =
+                    pull_delays_ms.iter().copied().max().unwrap_or(0);
+                for &j in &neighbors {
+                    let p = published[j].lock().unwrap();
+                    models.push(p.params.clone());
+                    sizes.push(p.data_size);
+                }
+                // pulls happen in parallel → pay only the slowest link
+                thread::sleep(Duration::from_millis(worst_delay));
+
+                // aggregate (Eq. 4) + emulated heterogeneous compute
+                let refs: Vec<&[f32]> =
+                    models.iter().map(|m| m.as_slice()).collect();
+                let weights = data_size_weights(&sizes);
+                let agg = trainer.aggregate(&refs, &weights);
+                thread::sleep(Duration::from_millis(
+                    (h_train_s * time_scale) as u64,
+                ));
+                // real local training (Eq. 5)
+                let (new_params, loss) = trainer.train(
+                    &agg,
+                    &shard,
+                    cfg.local_steps,
+                    cfg.batch,
+                    cfg.lr,
+                    &mut rng,
+                );
+                published[id].lock().unwrap().params = new_params;
+                let _ = done.send(Done { id, loss });
+            }
+        }
+    }
+}

@@ -7,8 +7,8 @@
 //! reproduction claim. All series land as CSV under `--out`.
 
 use crate::config::{ExperimentConfig, SchedulerKind};
+use crate::experiment::{Backend, Experiment, VirtualClockBackend};
 use crate::metrics::RunResult;
-use crate::sim::SimEngine;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
@@ -93,15 +93,21 @@ fn run_cached(
     speeds: Option<&[f64]>,
 ) -> std::io::Result<RunResult> {
     let csv = out.join(format!("{name}.csv"));
-    let mut sim = SimEngine::new(cfg.clone());
+    let to_io = |e: crate::experiment::ExperimentError| {
+        std::io::Error::other(e.to_string())
+    };
+    let mut exp = Experiment::builder(cfg.clone()).build().map_err(to_io)?;
     if let Some(sp) = speeds {
         // impose explicit heterogeneity profile (testbed figures)
-        for (w, &s) in sim.workers.iter_mut().zip(sp) {
+        for (w, &s) in exp.workers.iter_mut().zip(sp) {
             w.h_train_s = cfg.compute_mean_s / s;
             w.residual_s = w.h_train_s;
         }
     }
-    let res = sim.run_full();
+    // figures want full curves: never early-stop
+    let res = VirtualClockBackend::full_curves()
+        .run(exp)
+        .map_err(to_io)?;
     res.write_eval_csv(&csv)?;
     Ok(res)
 }

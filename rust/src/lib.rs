@@ -13,6 +13,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod experiment;
 pub mod figures;
 pub mod metrics;
 pub mod network;

@@ -45,6 +45,11 @@ pub struct RunResult {
 }
 
 impl RunResult {
+    /// Empty result with identity fields set (what a recorder starts from).
+    pub fn new(label: impl Into<String>, model_bits: f64) -> Self {
+        RunResult { label: label.into(), model_bits, ..Default::default() }
+    }
+
     pub fn total_transfers(&self) -> usize {
         self.rounds.iter().map(|r| r.transfers).sum()
     }

@@ -1,407 +1,98 @@
-//! Virtual-clock simulation engine (paper §VI).
+//! Virtual-clock simulation engine (paper §VI) — legacy facade.
 //!
-//! Drives Alg. 1 end to end over the edge-network substrate: each round
-//! the engine snapshots worker state into a [`SchedView`], asks the
-//! configured [`Scheduler`] for a [`RoundPlan`], executes the plan
-//! (pull-aggregate-train per Eqs. 3–5, *real* training through the
-//! configured [`Trainer`]), advances the virtual clock by the realised
-//! round duration H_t (Eqs. 7–9), and updates staleness (Eq. 6) and the
-//! Lyapunov queues (Eq. 33).
+//! **Deprecated:** the engine now lives in [`crate::experiment`]
+//! ([`VirtualClockEngine`] driven by
+//! [`VirtualClockBackend`](crate::experiment::VirtualClockBackend));
+//! construct runs through [`Experiment::builder`]. [`SimEngine`] is kept
+//! as a thin wrapper so existing callers (benches, examples, tests)
+//! continue to work, with the old panic-on-error construction semantics.
+//!
+//! ```no_run
+//! // old:                              // new:
+//! // SimEngine::new(cfg).run()         Experiment::builder(cfg).run()?
+//! ```
 
-use crate::config::{ExperimentConfig, TrainerKind};
-use crate::coordinator::{
-    make_scheduler, RoundPlan, SchedView, Scheduler, SchedulerParams,
-};
-use crate::data::{dirichlet_partition, make_corpus, Dataset, SyntheticSpec};
-use crate::metrics::{EvalRecord, RoundRecord, RunResult};
-use crate::network::EdgeNetwork;
-use crate::util::rng::Pcg;
-use crate::worker::{data_size_weights, NativeTrainer, Trainer, WorkerState};
+use crate::config::ExperimentConfig;
+use crate::coordinator::RoundPlan;
+use crate::experiment::{Experiment, VirtualClockEngine};
+use crate::metrics::{EvalRecord, RunResult};
+use crate::worker::Trainer;
 
-/// The assembled simulation.
+pub use crate::experiment::VirtualClockBackend;
+
+/// The assembled simulation (legacy facade over [`VirtualClockEngine`]).
 pub struct SimEngine {
-    pub cfg: ExperimentConfig,
-    pub net: EdgeNetwork,
-    pub workers: Vec<WorkerState>,
-    pub test: Dataset,
-    trainer: Box<dyn Trainer>,
-    scheduler: Box<dyn Scheduler>,
-    /// pulls\[i\]\[j\]: times worker i pulled from j (Eq. 47's history).
-    pulls: Vec<Vec<u64>>,
-    /// Pushed-model inboxes: models received via PUSH wait here until the
-    /// receiver's next activation (SA-ADFL semantics — receivers don't
-    /// interrupt training to merge).
-    inbox: Vec<Vec<(usize, Vec<f32>)>>,
-    clock_s: f64,
-    round: usize,
-    cum_transfers: usize,
-    rng: Pcg,
-    result: RunResult,
-    /// Precomputed label distributions per worker (static shards).
-    label_dist: Vec<Vec<f64>>,
-    model_bits: f64,
+    engine: VirtualClockEngine,
 }
 
 impl SimEngine {
-    /// Build a simulation with the native trainer (no artifacts needed).
+    /// Build a simulation with the config's default trainer.
+    ///
+    /// Deprecated: panics on invalid configs and on trainer kinds without
+    /// a default constructor — use
+    /// `Experiment::builder(cfg).build()` for a `Result` instead.
     pub fn new(cfg: ExperimentConfig) -> Self {
-        let trainer: Box<dyn Trainer> = match cfg.trainer {
-            TrainerKind::Native => Box::new(NativeTrainer::new(
-                cfg.feature_dim,
-                cfg.num_classes,
-            )),
-            TrainerKind::Pjrt => {
-                panic!("use SimEngine::with_trainer for PJRT backends")
-            }
-        };
-        Self::with_trainer(cfg, trainer)
+        let exp = Experiment::builder(cfg)
+            .build()
+            .expect("invalid experiment config");
+        SimEngine { engine: VirtualClockEngine::new(exp) }
     }
 
     /// Build with an explicit trainer backend (PJRT path).
-    pub fn with_trainer(cfg: ExperimentConfig, trainer: Box<dyn Trainer>) -> Self {
-        cfg.validate().expect("invalid experiment config");
-        let mut rng = Pcg::new(cfg.seed, 0x51B);
-        let spec = SyntheticSpec {
-            dim: cfg.feature_dim,
-            num_classes: cfg.num_classes,
-            train_samples: cfg.train_per_worker * cfg.workers,
-            test_samples: cfg.test_samples,
-            class_sep: cfg.class_sep,
-            seed: cfg.seed,
-        };
-        let (train, test) = make_corpus(&spec);
-        let min_per = cfg.batch.max(cfg.train_per_worker / 4);
-        let (shards, stats) =
-            dirichlet_partition(&train, cfg.workers, cfg.phi, min_per, &mut rng);
-
-        let net = EdgeNetwork::new(cfg.workers, cfg.network.clone(), &mut rng);
-
-        // heterogeneous compute: h_i = mean × lognormal(0, jitter).
-        // Edge-device speeds are heavy-tailed (the paper's Table II spans
-        // ~10× between Jetson Nano and Orin) — the lognormal gives the
-        // straggler regime the synchronous baselines suffer in (§VI-B1).
-        let workers: Vec<WorkerState> = shards
-            .into_iter()
-            .enumerate()
-            .map(|(i, shard)| {
-                let coeff = rng.normal_ms(0.0, cfg.compute_jitter).exp();
-                let h = cfg.compute_mean_s * coeff;
-                let params = trainer.init(cfg.seed.wrapping_add(i as u64));
-                WorkerState::new(i, params, shard, h)
-            })
-            .collect();
-
-        let scheduler = make_scheduler(cfg.scheduler);
-        let model_bits = if cfg.network.payload_bits > 0.0 {
-            cfg.network.payload_bits
-        } else {
-            trainer.param_count() as f64 * 32.0
-        };
-        let label_dist = stats.label_distributions;
-        let n = cfg.workers;
-        SimEngine {
-            result: RunResult {
-                label: scheduler.name().to_string(),
-                model_bits,
-                ..Default::default()
-            },
-            cfg,
-            net,
-            workers,
-            test,
-            trainer,
-            scheduler,
-            pulls: vec![vec![0; n]; n],
-            inbox: vec![Vec::new(); n],
-            clock_s: 0.0,
-            round: 0,
-            cum_transfers: 0,
-            rng,
-            label_dist,
-            model_bits,
-        }
+    ///
+    /// Deprecated: panics on invalid configs — use
+    /// `Experiment::builder(cfg).trainer(t).build()` instead.
+    pub fn with_trainer(
+        cfg: ExperimentConfig,
+        trainer: Box<dyn Trainer>,
+    ) -> Self {
+        let exp = Experiment::builder(cfg)
+            .trainer(trainer)
+            .build()
+            .expect("invalid experiment config");
+        SimEngine { engine: VirtualClockEngine::new(exp) }
     }
 
     pub fn clock_s(&self) -> f64 {
-        self.clock_s
-    }
-
-    /// Estimated per-worker round cost H_t^i (Eq. 8): residual compute
-    /// plus the worst expected pull transfer over its (≤ s nearest)
-    /// candidates.
-    fn estimate_h(&self, candidates: &[Vec<usize>]) -> Vec<f64> {
-        let s = self.cfg.neighbor_cap;
-        (0..self.workers.len())
-            .map(|i| {
-                // PTCA will pick ≤ s in-neighbors; estimate with the s
-                // *nearest* candidates (best case the coordinator can
-                // predict without knowing the realised priorities).
-                let mut near: Vec<usize> = candidates[i].clone();
-                near.sort_by(|&a, &b| {
-                    self.net
-                        .distance(i, a)
-                        .partial_cmp(&self.net.distance(i, b))
-                        .unwrap()
-                });
-                let worst = near
-                    .iter()
-                    .take(s)
-                    .map(|&j| {
-                        self.net
-                            .expected_transfer_time_s(j, i, self.model_bits)
-                    })
-                    .fold(0.0f64, f64::max);
-                self.workers[i].residual_s + worst
-            })
-            .collect()
+        self.engine.clock_s()
     }
 
     /// Run one round of Alg. 1; returns the realised plan.
     pub fn step(&mut self) -> RoundPlan {
-        self.round += 1;
-        self.net.step(&mut self.rng);
-
-        let candidates: Vec<Vec<usize>> = (0..self.workers.len())
-            .map(|i| self.net.in_range(i))
-            .collect();
-        let h_cmp: Vec<f64> =
-            self.workers.iter().map(|w| w.residual_s).collect();
-        let h_est = self.estimate_h(&candidates);
-        let tau: Vec<u64> = self.workers.iter().map(|w| w.staleness).collect();
-        let queues: Vec<f64> = self.workers.iter().map(|w| w.queue).collect();
-        let data_sizes: Vec<usize> =
-            self.workers.iter().map(|w| w.data_size()).collect();
-
-        let plan = {
-            let view = SchedView {
-                round: self.round,
-                tau: &tau,
-                queues: &queues,
-                h_cmp: &h_cmp,
-                h_est: &h_est,
-                data_sizes: &data_sizes,
-                label_dist: &self.label_dist,
-                candidates: &candidates,
-                budgets: &self.net.budgets,
-                pulls: &self.pulls,
-                net: &self.net,
-                params: SchedulerParams::from(&self.cfg),
-            };
-            self.scheduler.plan(&view, &mut self.rng)
-        };
-        debug_assert!(plan.validate(self.workers.len()).is_ok());
-
-        self.execute(&plan);
-        plan
+        self.engine.step()
     }
 
-    /// Execute a round plan: aggregate + train the active workers,
-    /// advance the clock, update staleness/queues/ledgers.
-    fn execute(&mut self, plan: &RoundPlan) {
-        let n = self.workers.len();
-        // --- realised round duration (Eqs. 7–9) ---
-        let mut h_round = 0.0f64;
-        let mut durations = Vec::with_capacity(plan.active.len());
-        let channels = self.cfg.network.channels.max(1);
-        for (k, &i) in plan.active.iter().enumerate() {
-            // pulls beyond the radio's orthogonal channels serialize:
-            // K transfers take ⌈K/channels⌉ slots of the worst link time
-            let worst_pull = plan.pulls_from[k]
-                .iter()
-                .map(|&j| {
-                    self.net
-                        .transfer_time_s(j, i, self.model_bits, &mut self.rng)
-                })
-                .fold(0.0f64, f64::max);
-            let pull_slots = plan.pulls_from[k].len().div_ceil(channels);
-            // pushes originating at i (SA-ADFL's send-to-all) also occupy
-            // its radio, serialized the same way
-            let push_times: Vec<f64> = plan
-                .pushes
-                .iter()
-                .filter(|&&(from, _)| from == i)
-                .map(|&(_, to)| {
-                    self.net
-                        .transfer_time_s(i, to, self.model_bits, &mut self.rng)
-                })
-                .collect();
-            let worst_push = push_times.iter().cloned().fold(0.0f64, f64::max);
-            let push_slots = push_times.len().div_ceil(channels);
-            let d = self.workers[i].residual_s
-                + worst_pull * pull_slots as f64
-                + worst_push * push_slots as f64;
-            durations.push(d);
-            h_round = h_round.max(d);
-        }
-        if plan.active.is_empty() {
-            h_round = 0.01; // avoid stalling the clock
-        }
-
-        // --- aggregate + train (Eqs. 4–5), pull-count ledger ---
-        // snapshot models first so intra-round pulls see pre-round state
-        let mut losses = Vec::with_capacity(plan.active.len());
-        let mut new_models: Vec<(usize, Vec<f32>, f64)> = Vec::new();
-        for (k, &i) in plan.active.iter().enumerate() {
-            let mut srcs: Vec<usize> = vec![i];
-            srcs.extend(plan.pulls_from[k].iter().copied());
-            let mut models: Vec<&[f32]> = srcs
-                .iter()
-                .map(|&j| self.workers[j].params.as_slice())
-                .collect();
-            let mut sizes: Vec<usize> =
-                srcs.iter().map(|&j| self.workers[j].data_size()).collect();
-            // pushed models waiting in the inbox join the aggregation
-            // (skipping senders we just pulled fresh models from)
-            for (from, params) in &self.inbox[i] {
-                if !srcs.contains(from) {
-                    models.push(params.as_slice());
-                    sizes.push(self.workers[*from].data_size());
-                }
-            }
-            let weights = data_size_weights(&sizes);
-            let agg = self.trainer.aggregate(&models, &weights);
-            let (trained, loss) = self.trainer.train(
-                &agg,
-                &self.workers[i].shard,
-                self.cfg.local_steps,
-                self.cfg.batch,
-                self.cfg.lr,
-                &mut self.rng,
-            );
-            new_models.push((i, trained, loss));
-            losses.push(loss);
-            for &j in &plan.pulls_from[k] {
-                self.pulls[i][j] += 1;
-            }
-        }
-        for (i, params, loss) in new_models {
-            self.workers[i].params = params;
-            self.workers[i].last_loss = loss;
-            self.inbox[i].clear(); // consumed by this aggregation
-        }
-
-        // --- pushes (SA-ADFL): the updated model lands in each
-        // receiver's inbox for *their* next aggregation (latest wins)
-        for &(from, to) in &plan.pushes {
-            let pushed = self.workers[from].params.clone();
-            self.inbox[to].retain(|(f, _)| *f != from);
-            self.inbox[to].push((from, pushed));
-        }
-
-        // --- clock + staleness + queues (Eqs. 6, 33) ---
-        self.clock_s += h_round;
-        let active_set: Vec<bool> = {
-            let mut v = vec![false; n];
-            for &i in &plan.active {
-                v[i] = true;
-            }
-            v
-        };
-        for (i, w) in self.workers.iter_mut().enumerate() {
-            w.advance(h_round);
-            if active_set[i] {
-                w.on_activated();
-            } else {
-                w.on_skipped();
-            }
-            w.update_queue(self.cfg.tau_bound);
-        }
-
-        // --- metrics ---
-        let transfers = plan.transfers();
-        self.cum_transfers += transfers;
-        let avg_tau = self
-            .workers
-            .iter()
-            .map(|w| w.staleness as f64)
-            .sum::<f64>()
-            / n as f64;
-        let max_tau = self.workers.iter().map(|w| w.staleness).max().unwrap_or(0);
-        let train_loss = if losses.is_empty() {
-            f64::NAN
-        } else {
-            losses.iter().sum::<f64>() / losses.len() as f64
-        };
-        self.result.rounds.push(RoundRecord {
-            round: self.round,
-            time_s: self.clock_s,
-            duration_s: h_round,
-            active: plan.active.len(),
-            transfers,
-            avg_staleness: avg_tau,
-            max_staleness: max_tau,
-            train_loss,
-        });
-    }
-
-    /// Evaluate the average of all (or a sampled fraction of) workers'
-    /// local models on the test set and record a snapshot.
+    /// Evaluate and record a snapshot.
     pub fn evaluate(&mut self) -> EvalRecord {
-        let n = self.workers.len();
-        let count = ((n as f64 * self.cfg.eval_worker_frac).round() as usize)
-            .clamp(1, n);
-        let ids: Vec<usize> = if count == n {
-            (0..n).collect()
-        } else {
-            self.rng.sample_indices(n, count)
-        };
-        let mut acc_sum = 0.0;
-        let mut loss_sum = 0.0;
-        for &i in &ids {
-            let (loss, acc) =
-                self.trainer.evaluate(&self.workers[i].params, &self.test);
-            acc_sum += acc;
-            loss_sum += loss;
-        }
-        let rec = EvalRecord {
-            round: self.round,
-            time_s: self.clock_s,
-            avg_accuracy: acc_sum / ids.len() as f64,
-            avg_loss: loss_sum / ids.len() as f64,
-            cum_transfers: self.cum_transfers,
-        };
-        self.result.evals.push(rec.clone());
-        rec
+        self.engine.evaluate()
     }
 
     /// Run the configured number of rounds (with periodic evaluation);
     /// stops early once `target_accuracy` is reached *and* at least one
     /// later snapshot confirms it.
-    pub fn run(mut self) -> RunResult {
-        let rounds = self.cfg.rounds;
-        let every = self.cfg.eval_every.max(1);
-        let mut hits = 0;
-        for t in 1..=rounds {
-            self.step();
-            if t % every == 0 || t == rounds {
-                let rec = self.evaluate();
-                if rec.avg_accuracy >= self.cfg.target_accuracy {
-                    hits += 1;
-                    if hits >= 2 {
-                        break;
-                    }
-                }
-            }
-        }
-        self.result
+    pub fn run(self) -> RunResult {
+        self.engine.run(true)
     }
 
-    /// Like [`run`] but without early stopping (full curves for figures).
-    pub fn run_full(mut self) -> RunResult {
-        let rounds = self.cfg.rounds;
-        let every = self.cfg.eval_every.max(1);
-        for t in 1..=rounds {
-            self.step();
-            if t % every == 0 || t == rounds {
-                self.evaluate();
-            }
-        }
-        self.result
+    /// Like [`run`](Self::run) but without early stopping (full curves
+    /// for figures).
+    pub fn run_full(self) -> RunResult {
+        self.engine.run(false)
     }
 
     /// Immutable access to collected metrics (tests).
     pub fn result(&self) -> &RunResult {
-        &self.result
+        self.engine.result()
+    }
+
+    /// The underlying engine (workers, network, clock) for callers that
+    /// poked at the old public fields.
+    pub fn engine(&self) -> &VirtualClockEngine {
+        &self.engine
+    }
+
+    pub fn engine_mut(&mut self) -> &mut VirtualClockEngine {
+        &mut self.engine
     }
 }
 
@@ -409,6 +100,7 @@ impl SimEngine {
 mod tests {
     use super::*;
     use crate::config::SchedulerKind;
+    use crate::metrics::RoundRecord;
 
     fn small_cfg(scheduler: SchedulerKind) -> ExperimentConfig {
         ExperimentConfig {

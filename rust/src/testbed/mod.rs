@@ -1,329 +1,36 @@
-//! Testbed runtime — the §VII analog.
+//! Testbed runtime — the §VII analog; legacy facade.
 //!
-//! Unlike the virtual-clock simulator, this mode actually runs one
-//! OS thread per worker with real message passing and wall-clock delays:
+//! **Deprecated:** the thread-per-worker runtime now lives in
+//! [`crate::experiment`] as
+//! [`ThreadedBackend`](crate::experiment::ThreadedBackend), consuming the
+//! same shared setup ([`Experiment::builder`]) as the simulator instead
+//! of duplicating it. [`run_testbed`] is kept as a thin wrapper with the
+//! old panic-on-error semantics.
 //!
-//! * each worker owns an **updating thread** (Alg. 1 lines 3–7) that
-//!   reacts to EXECUTE messages: pull neighbor models, aggregate (Eq. 4),
-//!   emulate heterogeneous compute (scaled sleep), train for real, publish
-//!   the new model;
-//! * the **pushing thread** role (lines 8–10) is played by a shared
-//!   `Mutex<Published>` snapshot per worker — a pull locks the source's
-//!   snapshot exactly like the paper's pushing thread serves the latest
-//!   `w_{t−τ}^i`;
-//! * the coordinator thread runs the same [`Scheduler`] implementations
-//!   as the simulator and advances rounds on completions.
-//!
-//! Delays are the paper's §VI-A1 channel/compute model compressed by
-//! `time_scale` (default 1000× — a 1 s training job sleeps 1 ms) so a
-//! full run finishes in seconds while preserving relative asynchrony.
+//! ```no_run
+//! // old: run_testbed(cfg, opts)
+//! // new: Experiment::builder(cfg)
+//! //          .backend_impl(Box::new(ThreadedBackend::with_options(opts)))
+//! //          .run()?
+//! ```
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::{make_scheduler, SchedView, SchedulerParams};
-use crate::data::{dirichlet_partition, make_corpus, Dataset, SyntheticSpec};
-use crate::metrics::{EvalRecord, RoundRecord, RunResult};
-use crate::network::EdgeNetwork;
-use crate::util::rng::Pcg;
-use crate::worker::{data_size_weights, NativeTrainer, Trainer};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::thread;
-use std::time::{Duration, Instant};
+use crate::experiment::{Experiment, ThreadedBackend};
+use crate::metrics::RunResult;
 
-/// Latest published model of one worker (what pulls observe).
-struct Published {
-    params: Vec<f32>,
-    data_size: usize,
-}
-
-/// Coordinator → worker message.
-enum Execute {
-    /// Pull from these neighbors, then aggregate + train.
-    Round { neighbors: Vec<usize>, pull_delays_ms: Vec<u64> },
-    Shutdown,
-}
-
-/// Worker → coordinator completion report.
-struct Done {
-    id: usize,
-    loss: f64,
-}
-
-/// Extra knobs for the testbed runtime.
-#[derive(Clone, Copy, Debug)]
-pub struct TestbedOptions {
-    /// Virtual-seconds → real-milliseconds compression factor.
-    pub time_scale: f64,
-    /// Optional explicit per-worker speed multipliers (Table II profile);
-    /// `None` draws from the config's normal jitter.
-    pub profile: bool,
-}
-
-impl Default for TestbedOptions {
-    fn default() -> Self {
-        TestbedOptions { time_scale: 1000.0, profile: true }
-    }
-}
+pub use crate::experiment::TestbedOptions;
 
 /// Run a full testbed experiment; returns metrics like the simulator
 /// (times are wall-clock seconds of the compressed run).
+///
+/// Deprecated: panics on invalid configs and backend failures — use
+/// `Experiment::builder(cfg).backend_impl(...).run()` for a `Result`.
+/// Behaviour change vs. the pre-builder implementation: configs asking
+/// for a non-native trainer now panic here (the old code silently
+/// trained with the native trainer regardless of `cfg.trainer`).
 pub fn run_testbed(cfg: ExperimentConfig, opts: TestbedOptions) -> RunResult {
-    cfg.validate().expect("invalid config");
-    let n = cfg.workers;
-    let mut rng = Pcg::new(cfg.seed, 0x7E57);
-
-    // --- data + network substrate (same as the simulator) ---
-    let spec = SyntheticSpec {
-        dim: cfg.feature_dim,
-        num_classes: cfg.num_classes,
-        train_samples: cfg.train_per_worker * n,
-        test_samples: cfg.test_samples,
-        class_sep: cfg.class_sep,
-        seed: cfg.seed,
-    };
-    let (train, test) = make_corpus(&spec);
-    let min_per = cfg.batch.max(cfg.train_per_worker / 4);
-    let (shards, stats) = dirichlet_partition(&train, n, cfg.phi, min_per, &mut rng);
-    let mut net = EdgeNetwork::new(n, cfg.network.clone(), &mut rng);
-
-    // heterogeneous compute: explicit Table II profile or sampled
-    let speeds: Vec<f64> = if opts.profile && n == 15 {
-        crate::figures::testbed_profile_speeds()
-    } else {
-        (0..n)
-            .map(|_| rng.normal_ms(0.0, cfg.compute_jitter).exp().recip())
-            .collect()
-    };
-    let h_train: Vec<f64> =
-        speeds.iter().map(|s| cfg.compute_mean_s / s).collect();
-
-    // --- shared published models ---
-    let trainer0 = NativeTrainer::new(cfg.feature_dim, cfg.num_classes);
-    let published: Vec<Arc<Mutex<Published>>> = (0..n)
-        .map(|i| {
-            Arc::new(Mutex::new(Published {
-                params: trainer0.init(cfg.seed.wrapping_add(i as u64)),
-                data_size: shards[i].len(),
-            }))
-        })
-        .collect();
-
-    // --- spawn workers ---
-    let (done_tx, done_rx) = mpsc::channel::<Done>();
-    let mut exec_txs = Vec::with_capacity(n);
-    let mut handles = Vec::with_capacity(n);
-    for (i, shard) in shards.into_iter().enumerate() {
-        let (tx, rx) = mpsc::channel::<Execute>();
-        exec_txs.push(tx);
-        let done = done_tx.clone();
-        let pubs: Vec<Arc<Mutex<Published>>> = published.clone();
-        let my_h = h_train[i];
-        let scale = opts.time_scale;
-        let wcfg = cfg.clone();
-        handles.push(thread::spawn(move || {
-            worker_loop(i, shard, my_h, scale, &wcfg, pubs, rx, done)
-        }));
-    }
-    drop(done_tx);
-
-    // --- coordinator loop ---
-    let mut scheduler = make_scheduler(cfg.scheduler);
-    let mut eval_trainer = NativeTrainer::new(cfg.feature_dim, cfg.num_classes);
-    let model_bits = if cfg.network.payload_bits > 0.0 {
-        cfg.network.payload_bits
-    } else {
-        trainer0.param_count() as f64 * 32.0
-    };
-    let mut result = RunResult {
-        label: format!("testbed-{}", scheduler.name()),
-        model_bits,
-        ..Default::default()
-    };
-    let mut tau = vec![0u64; n];
-    let mut queues = vec![0.0f64; n];
-    let mut residual = h_train.clone();
-    let mut pulls = vec![vec![0u64; n]; n];
-    let start = Instant::now();
-    let mut cum_transfers = 0usize;
-
-    for round in 1..=cfg.rounds {
-        net.step(&mut rng);
-        let candidates: Vec<Vec<usize>> = (0..n).map(|i| net.in_range(i)).collect();
-        let h_est: Vec<f64> = (0..n)
-            .map(|i| {
-                let worst = candidates[i]
-                    .iter()
-                    .take(cfg.neighbor_cap)
-                    .map(|&j| net.expected_transfer_time_s(j, i, model_bits))
-                    .fold(0.0f64, f64::max);
-                residual[i] + worst
-            })
-            .collect();
-        let data_sizes: Vec<usize> =
-            published.iter().map(|p| p.lock().unwrap().data_size).collect();
-        let plan = {
-            let view = SchedView {
-                round,
-                tau: &tau,
-                queues: &queues,
-                h_cmp: &residual,
-                h_est: &h_est,
-                data_sizes: &data_sizes,
-                label_dist: &stats.label_distributions,
-                candidates: &candidates,
-                budgets: &net.budgets,
-                pulls: &pulls,
-                net: &net,
-                params: SchedulerParams::from(&cfg),
-            };
-            scheduler.plan(&view, &mut rng)
-        };
-        debug_assert!(plan.validate(n).is_ok());
-
-        // dispatch EXECUTE to the active workers with realised delays
-        let round_t0 = Instant::now();
-        for (k, &i) in plan.active.iter().enumerate() {
-            let delays: Vec<u64> = plan.pulls_from[k]
-                .iter()
-                .map(|&j| {
-                    let t = net.transfer_time_s(j, i, model_bits, &mut rng);
-                    (t * opts.time_scale) as u64
-                })
-                .collect();
-            for &j in &plan.pulls_from[k] {
-                pulls[i][j] += 1;
-            }
-            exec_txs[i]
-                .send(Execute::Round {
-                    neighbors: plan.pulls_from[k].clone(),
-                    pull_delays_ms: delays,
-                })
-                .expect("worker hung up");
-        }
-
-        // wait for completions (the synchronization point is per-plan,
-        // matching the round abstraction of Alg. 1)
-        let mut losses = Vec::with_capacity(plan.active.len());
-        for _ in &plan.active {
-            let d = done_rx.recv().expect("worker died");
-            debug_assert!(plan.active.contains(&d.id));
-            losses.push(d.loss);
-        }
-        let h_round = round_t0.elapsed().as_secs_f64();
-
-        // staleness + queues + residual bookkeeping (Eqs. 6/33/7)
-        let mut active_mask = vec![false; n];
-        for &i in &plan.active {
-            active_mask[i] = true;
-        }
-        let h_virtual = h_round / opts.time_scale * 1000.0; // ms→virtual s
-        for i in 0..n {
-            residual[i] = (residual[i] - h_virtual).max(0.0);
-            if active_mask[i] {
-                tau[i] = 0;
-                residual[i] = h_train[i];
-            } else {
-                tau[i] += 1;
-            }
-            queues[i] = (queues[i] + tau[i] as f64 - cfg.tau_bound as f64).max(0.0);
-        }
-
-        let transfers = plan.transfers();
-        cum_transfers += transfers;
-        result.rounds.push(RoundRecord {
-            round,
-            time_s: start.elapsed().as_secs_f64(),
-            duration_s: h_round,
-            active: plan.active.len(),
-            transfers,
-            avg_staleness: tau.iter().sum::<u64>() as f64 / n as f64,
-            max_staleness: tau.iter().copied().max().unwrap_or(0),
-            train_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
-        });
-
-        if round % cfg.eval_every.max(1) == 0 || round == cfg.rounds {
-            let mut acc_sum = 0.0;
-            let mut loss_sum = 0.0;
-            for p in &published {
-                let params = p.lock().unwrap().params.clone();
-                let (l, a) = eval_trainer.evaluate(&params, &test);
-                acc_sum += a;
-                loss_sum += l;
-            }
-            result.evals.push(EvalRecord {
-                round,
-                time_s: start.elapsed().as_secs_f64(),
-                avg_accuracy: acc_sum / n as f64,
-                avg_loss: loss_sum / n as f64,
-                cum_transfers,
-            });
-        }
-    }
-
-    for tx in &exec_txs {
-        let _ = tx.send(Execute::Shutdown);
-    }
-    for h in handles {
-        let _ = h.join();
-    }
-    result
-}
-
-/// The per-worker updating thread (Alg. 1 lines 3–7).
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    id: usize,
-    shard: Dataset,
-    h_train_s: f64,
-    time_scale: f64,
-    cfg: &ExperimentConfig,
-    published: Vec<Arc<Mutex<Published>>>,
-    rx: mpsc::Receiver<Execute>,
-    done: mpsc::Sender<Done>,
-) {
-    let mut trainer = NativeTrainer::new(cfg.feature_dim, cfg.num_classes);
-    let mut rng = Pcg::new(cfg.seed ^ 0xBEEF, id as u64);
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            Execute::Shutdown => break,
-            Execute::Round { neighbors, pull_delays_ms } => {
-                // PULL: read each neighbor's published snapshot (the
-                // "pushing thread" contract), paying the channel delay
-                let mut models: Vec<Vec<f32>> = Vec::with_capacity(neighbors.len() + 1);
-                let mut sizes: Vec<usize> = Vec::with_capacity(neighbors.len() + 1);
-                {
-                    let own = published[id].lock().unwrap();
-                    models.push(own.params.clone());
-                    sizes.push(own.data_size);
-                }
-                let worst_delay = pull_delays_ms.iter().copied().max().unwrap_or(0);
-                for &j in &neighbors {
-                    let p = published[j].lock().unwrap();
-                    models.push(p.params.clone());
-                    sizes.push(p.data_size);
-                }
-                // pulls happen in parallel → pay only the slowest link
-                thread::sleep(Duration::from_millis(worst_delay));
-
-                // aggregate (Eq. 4) + emulated heterogeneous compute
-                let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
-                let weights = data_size_weights(&sizes);
-                let agg = trainer.aggregate(&refs, &weights);
-                thread::sleep(Duration::from_millis(
-                    (h_train_s * time_scale) as u64,
-                ));
-                // real local training (Eq. 5)
-                let (new_params, loss) = trainer.train(
-                    &agg,
-                    &shard,
-                    cfg.local_steps,
-                    cfg.batch,
-                    cfg.lr,
-                    &mut rng,
-                );
-                published[id].lock().unwrap().params = new_params;
-                let _ = done.send(Done { id, loss });
-            }
-        }
-    }
+    Experiment::builder(cfg)
+        .backend_impl(Box::new(ThreadedBackend::with_options(opts)))
+        .run()
+        .expect("testbed run failed")
 }

@@ -16,8 +16,24 @@ mod state;
 pub use native::NativeTrainer;
 pub use state::WorkerState;
 
+use crate::config::{ExperimentConfig, TrainerKind};
 use crate::data::Dataset;
 use crate::util::rng::Pcg;
+
+/// Default trainer factory for a config: `Some` when the configured
+/// [`TrainerKind`] can be constructed without external inputs (the
+/// native softmax-regression trainer), `None` when the caller must
+/// supply one (PJRT trainers need an artifact directory — pass them via
+/// `ExperimentBuilder::trainer`).
+pub fn default_trainer(cfg: &ExperimentConfig) -> Option<Box<dyn Trainer>> {
+    match cfg.trainer {
+        TrainerKind::Native => Some(Box::new(NativeTrainer::new(
+            cfg.feature_dim,
+            cfg.num_classes,
+        ))),
+        TrainerKind::Pjrt => None,
+    }
+}
 
 /// A flattened model parameter vector (layout per artifacts/manifest.json
 /// for PJRT models; `[dim·C + C]` for the native trainer).

@@ -1,0 +1,180 @@
+//! The unified Experiment API: builder errors, backend dispatch, observer
+//! hooks, and — the load-bearing one — bit-identical parity between the
+//! new `Experiment::builder → VirtualClockBackend` path and the legacy
+//! `SimEngine::run` path for a seeded config.
+
+use dystop::config::{BackendKind, ExperimentConfig, SchedulerKind, TrainerKind};
+use dystop::coordinator::RoundPlan;
+use dystop::experiment::{
+    Experiment, ExperimentError, RoundObserver, TestbedOptions,
+    ThreadedBackend,
+};
+use dystop::metrics::{EvalRecord, RoundRecord, RunResult};
+use dystop::sim::SimEngine;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn small_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        workers: 6,
+        rounds: 10,
+        train_per_worker: 48,
+        test_samples: 120,
+        eval_every: 2,
+        seed: 42,
+        scheduler: SchedulerKind::DySTop,
+        target_accuracy: 0.8, // exercise the early-stop path too
+        ..Default::default()
+    }
+}
+
+fn assert_bit_identical(a: &RunResult, b: &RunResult) {
+    assert_eq!(a.label, b.label);
+    assert_eq!(a.model_bits.to_bits(), b.model_bits.to_bits());
+    assert_eq!(a.rounds.len(), b.rounds.len(), "round count");
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.time_s.to_bits(), y.time_s.to_bits(), "round {}", x.round);
+        assert_eq!(x.duration_s.to_bits(), y.duration_s.to_bits());
+        assert_eq!(x.active, y.active);
+        assert_eq!(x.transfers, y.transfers);
+        assert_eq!(x.avg_staleness.to_bits(), y.avg_staleness.to_bits());
+        assert_eq!(x.max_staleness, y.max_staleness);
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+    }
+    assert_eq!(a.evals.len(), b.evals.len(), "eval count");
+    for (x, y) in a.evals.iter().zip(&b.evals) {
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.time_s.to_bits(), y.time_s.to_bits());
+        assert_eq!(x.avg_accuracy.to_bits(), y.avg_accuracy.to_bits());
+        assert_eq!(x.avg_loss.to_bits(), y.avg_loss.to_bits());
+        assert_eq!(x.cum_transfers, y.cum_transfers);
+    }
+}
+
+#[test]
+fn builder_backend_matches_legacy_sim_engine_bit_for_bit() {
+    // legacy path (early-stopping `run`, as the CLI `train` used it)
+    let legacy = SimEngine::new(small_cfg()).run();
+    // new path: builder + virtual-clock backend
+    let new = Experiment::builder(small_cfg())
+        .backend(BackendKind::Sim)
+        .run()
+        .unwrap();
+    assert_bit_identical(&legacy, &new);
+    assert!(!new.rounds.is_empty());
+}
+
+#[test]
+fn parity_holds_for_full_curves_across_schedulers() {
+    for kind in [SchedulerKind::DySTop, SchedulerKind::SaAdfl] {
+        let mut cfg = small_cfg();
+        cfg.scheduler = kind;
+        cfg.target_accuracy = 2.0;
+        let legacy = SimEngine::new(cfg.clone()).run_full();
+        let new = Experiment::builder(cfg)
+            .backend(BackendKind::Sim)
+            .run()
+            .unwrap();
+        // `run()` early-stops at target 2.0 → never fires → identical
+        assert_bit_identical(&legacy, &new);
+    }
+}
+
+#[test]
+fn invalid_config_surfaces_as_error() {
+    let mut cfg = small_cfg();
+    cfg.batch = 0;
+    match Experiment::builder(cfg).build() {
+        Err(ExperimentError::InvalidConfig(_)) => {}
+        Err(other) => panic!("expected InvalidConfig, got {other:?}"),
+        Ok(_) => panic!("expected InvalidConfig, got Ok"),
+    }
+}
+
+#[test]
+fn pjrt_mismatch_surfaces_as_error() {
+    let mut cfg = small_cfg();
+    cfg.trainer = TrainerKind::Pjrt;
+    assert!(matches!(
+        Experiment::builder(cfg).build(),
+        Err(ExperimentError::TrainerRequired(_))
+    ));
+}
+
+#[derive(Default)]
+struct Counts {
+    plans: AtomicUsize,
+    rounds: AtomicUsize,
+    evals: AtomicUsize,
+}
+
+struct CountingObserver(Arc<Counts>);
+
+impl RoundObserver for CountingObserver {
+    fn on_plan(&mut self, _round: usize, _plan: &RoundPlan) {
+        self.0.plans.fetch_add(1, Ordering::Relaxed);
+    }
+    fn on_round_end(&mut self, _rec: &RoundRecord) {
+        self.0.rounds.fetch_add(1, Ordering::Relaxed);
+    }
+    fn on_eval(&mut self, _rec: &EvalRecord) {
+        self.0.evals.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[test]
+fn observers_fire_on_every_round_and_eval() {
+    let counts = Arc::new(Counts::default());
+    let mut cfg = small_cfg();
+    cfg.target_accuracy = 2.0;
+    let res = Experiment::builder(cfg)
+        .observer(Box::new(CountingObserver(counts.clone())))
+        .backend(BackendKind::Sim)
+        .run()
+        .unwrap();
+    assert_eq!(counts.plans.load(Ordering::Relaxed), res.rounds.len());
+    assert_eq!(counts.rounds.load(Ordering::Relaxed), res.rounds.len());
+    assert_eq!(counts.evals.load(Ordering::Relaxed), res.evals.len());
+    assert_eq!(res.rounds.len(), 10);
+}
+
+#[test]
+fn threaded_backend_runs_through_builder() {
+    let mut cfg = small_cfg();
+    cfg.rounds = 6;
+    cfg.target_accuracy = 2.0;
+    cfg.compute_mean_s = 0.5;
+    let counts = Arc::new(Counts::default());
+    // aggressive compression (1 virtual s = 2 ms) keeps the suite fast
+    let opts = TestbedOptions { time_scale: 2.0, profile: false };
+    let res = Experiment::builder(cfg)
+        .observer(Box::new(CountingObserver(counts.clone())))
+        .backend_impl(Box::new(ThreadedBackend::with_options(opts)))
+        .run()
+        .unwrap();
+    assert_eq!(res.rounds.len(), 6);
+    assert_eq!(counts.rounds.load(Ordering::Relaxed), 6);
+    assert!(res.label.starts_with("testbed-"));
+    assert!(res.evals.iter().all(|e| e.avg_loss.is_finite()));
+}
+
+#[test]
+fn threaded_backend_rejects_pjrt_configs() {
+    let mut cfg = small_cfg();
+    cfg.trainer = TrainerKind::Pjrt;
+    // even with an explicit trainer, the threaded backend can't ship it
+    // across worker threads — must be a clean Unsupported error
+    let trainer = dystop::worker::default_trainer(&ExperimentConfig {
+        trainer: TrainerKind::Native,
+        ..small_cfg()
+    })
+    .unwrap();
+    let opts = TestbedOptions { time_scale: 2.0, profile: false };
+    let err = Experiment::builder(cfg)
+        .trainer(trainer)
+        .backend_impl(Box::new(ThreadedBackend::with_options(opts)))
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, ExperimentError::Unsupported(_)), "{err}");
+}
