@@ -1,94 +1,231 @@
-//! Bench: end-to-end system performance.
+//! Bench: end-to-end system performance, emitting `BENCH_sim.json` so
+//! the perf trajectory is tracked across PRs.
 //!
-//! * whole-round throughput per mechanism (the cost behind every figure
-//!   regeneration — Figs. 4–18 series all run through this loop);
-//! * PJRT hot-path latencies (train step / aggregate / eval chunk) when
-//!   artifacts are present — the L1/L2 request-path numbers for
-//!   EXPERIMENTS.md §Perf.
+//! * `sim_round` — whole-round throughput at N ∈ {60, 200, 500} for
+//!   threads=1 vs threads=auto (the cost behind every figure
+//!   regeneration — Figs. 4–18 all run through this loop), plus the
+//!   scheduler variants at N=60;
+//! * native-trainer hot-path microbenches (train step / aggregate /
+//!   eval) — the per-activation inner loop;
+//! * PJRT hot-path latencies when artifacts are present;
+//! * a threads=1 vs threads=4 bit-identity check (the parallel engine's
+//!   core invariant), recorded in the report.
+//!
+//! `DYSTOP_BENCH_QUICK=1` shrinks warmup/measure budgets for CI smoke
+//! runs; the report schema is identical.
 
-use dystop::bench::{bench, bench_with};
+use dystop::bench::{bench_with, write_json_report, BenchResult};
 use dystop::config::{ExperimentConfig, ModelKind, SchedulerKind};
-use dystop::sim::SimEngine;
-use std::path::PathBuf;
+use dystop::data::{make_corpus, SyntheticSpec};
+use dystop::experiment::{Experiment, VirtualClockEngine};
+use dystop::util::json::Json;
+use dystop::util::rng::Pcg;
+use dystop::worker::{NativeTrainer, Params, Trainer};
+use std::path::{Path, PathBuf};
 
-fn sim_round_bench(kind: SchedulerKind) {
+fn sim_engine(n: usize, threads: usize, kind: SchedulerKind) -> VirtualClockEngine {
     let cfg = ExperimentConfig {
-        workers: 60,
+        workers: n,
         rounds: 10_000, // never reached; we step manually
         train_per_worker: 64,
         eval_every: usize::MAX,
         target_accuracy: 2.0,
         scheduler: kind,
+        threads,
         ..Default::default()
     };
-    let mut sim = SimEngine::new(cfg);
-    // warmup handled by bench(); each call = one full coordinator round
-    bench(&format!("sim_round N=60 {}", kind.name()), || {
-        std::hint::black_box(sim.step());
-    });
+    let exp = Experiment::builder(cfg).build().expect("valid bench config");
+    VirtualClockEngine::new(exp)
 }
 
-fn pjrt_benches() {
+fn sim_round_benches(
+    results: &mut Vec<BenchResult>,
+    warm: usize,
+    budget: f64,
+) {
+    println!("== sim_round: one full coordinator round (Figs. 4–18 inner loop) ==");
+    for &n in &[60usize, 200, 500] {
+        // threads=auto first under the historical name (cross-PR
+        // comparisons key on it), then the sequential baseline
+        let mut auto = sim_engine(n, 0, SchedulerKind::DySTop);
+        let width = auto.threads();
+        results.push(bench_with(
+            &format!("sim_round N={n} dystop"),
+            warm,
+            budget,
+            &mut || {
+                std::hint::black_box(auto.step());
+            },
+        ));
+        println!("  (threads=auto resolved to {width})");
+        let mut seq = sim_engine(n, 1, SchedulerKind::DySTop);
+        results.push(bench_with(
+            &format!("sim_round N={n} dystop threads=1"),
+            warm,
+            budget,
+            &mut || {
+                std::hint::black_box(seq.step());
+            },
+        ));
+    }
+    println!("\n== sim_round scheduler variants (N=60, threads=auto) ==");
+    for kind in [
+        SchedulerKind::AsyDfl,
+        SchedulerKind::SaAdfl,
+        SchedulerKind::Matcha,
+    ] {
+        let mut eng = sim_engine(60, 0, kind);
+        results.push(bench_with(
+            &format!("sim_round N=60 {}", kind.name()),
+            warm,
+            budget,
+            &mut || {
+                std::hint::black_box(eng.step());
+            },
+        ));
+    }
+}
+
+fn native_trainer_benches(
+    results: &mut Vec<BenchResult>,
+    warm: usize,
+    budget: f64,
+) {
+    println!("\n== native trainer hot path (per-activation inner loop) ==");
+    let spec = SyntheticSpec {
+        train_samples: 600,
+        test_samples: 300,
+        class_sep: 2.5,
+        ..Default::default()
+    };
+    let (train, test) = make_corpus(&spec);
+    let mut t = NativeTrainer::new(spec.dim, spec.num_classes);
+    let p0 = t.init(0);
+    let mut rng = Pcg::seeded(7);
+    results.push(bench_with(
+        "native train_step batch=32 (softmax reg)",
+        warm,
+        budget,
+        &mut || {
+            std::hint::black_box(t.train(&p0, &train, 1, 32, 0.1, &mut rng));
+        },
+    ));
+    let models: Vec<Params> = (0..8u64).map(|s| t.init(s)).collect();
+    let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+    let w = vec![0.125f32; 8];
+    let mut agg = Params::new();
+    results.push(bench_with("native aggregate K=8", warm, budget, &mut || {
+        t.aggregate_into(&refs, &w, &mut agg);
+        std::hint::black_box(agg.len());
+    }));
+    results.push(bench_with(
+        "native eval 300 samples",
+        warm,
+        budget,
+        &mut || {
+            std::hint::black_box(t.evaluate(&p0, &test));
+        },
+    ));
+}
+
+fn pjrt_benches(results: &mut Vec<BenchResult>) {
+    println!("\n== PJRT hot path (L1/L2 via HLO artifacts) ==");
     let dir = PathBuf::from("artifacts");
     if !dir.join("manifest.json").exists() {
         println!("(artifacts missing — skipping PJRT hot-path benches; run `make artifacts`)");
         return;
     }
-    use dystop::data::{make_corpus, SyntheticSpec};
     use dystop::runtime::PjrtTrainer;
-    use dystop::util::rng::Pcg;
-    use dystop::worker::Trainer;
 
     let mut t = PjrtTrainer::new(&dir, ModelKind::Mlp).expect("load artifacts");
     let dim = t.manifest().input_dim;
     let b = t.manifest().train_batch;
-    let (train, test) = make_corpus(&SyntheticSpec {
+    let (_train, test) = make_corpus(&SyntheticSpec {
         dim,
         train_samples: 512,
         test_samples: 256,
         ..Default::default()
     });
-    let mut rng = Pcg::seeded(1);
     let params = t.init(0);
 
     // L2/L1 train step through PJRT (the per-worker hot path)
     let x: Vec<f32> = (0..b * dim).map(|i| (i % 7) as f32 * 0.1).collect();
     let y: Vec<i32> = (0..b).map(|i| (i % 10) as i32).collect();
-    bench_with("pjrt train_batch (mlp)", 5, 1.0, &mut || {
+    results.push(bench_with("pjrt train_batch (mlp)", 5, 1.0, &mut || {
         std::hint::black_box(t.train_batch(&params, &x, &y, 0.1).unwrap());
-    });
+    }));
 
     // aggregation via the Pallas kernel artifact (K_max padded)
     let models: Vec<Vec<f32>> = (0..4).map(|s| t.init(s as u64)).collect();
     let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
     let w = vec![0.25f32; 4];
-    bench_with("pjrt aggregate K=4 (pallas)", 5, 1.0, &mut || {
+    results.push(bench_with("pjrt aggregate K=4 (pallas)", 5, 1.0, &mut || {
         std::hint::black_box(t.aggregate(&refs, &w));
-    });
+    }));
 
     // eval chunk
-    bench_with("pjrt eval 256 samples (mlp)", 3, 1.0, &mut || {
+    results.push(bench_with("pjrt eval 256 samples (mlp)", 3, 1.0, &mut || {
         std::hint::black_box(t.evaluate(&params, &test));
-    });
+    }));
+}
 
-    // native-vs-pjrt train comparison point
-    let mut nt = dystop::worker::NativeTrainer::new(dim, 10);
-    let np = nt.init(0);
-    bench_with("native train step (softmax reg)", 5, 0.5, &mut || {
-        std::hint::black_box(nt.train(&np, &train, 1, 32, 0.1, &mut rng));
-    });
+/// The parallel engine's core invariant: a seeded run is bit-identical
+/// for any `run.threads` setting. Checked here so the recorded perf
+/// numbers always come with a correctness witness.
+fn determinism_check() -> bool {
+    let run_with = |threads: usize| {
+        let cfg = ExperimentConfig {
+            workers: 20,
+            rounds: 6,
+            train_per_worker: 48,
+            test_samples: 64,
+            eval_every: 3,
+            target_accuracy: 2.0,
+            threads,
+            ..Default::default()
+        };
+        Experiment::builder(cfg).run().expect("determinism run")
+    };
+    let a = run_with(1);
+    let b = run_with(4);
+    a.bits_eq(&b)
 }
 
 fn main() {
-    println!("== end-to-end round throughput (Figs. 4–18 inner loop) ==");
-    for kind in [
-        SchedulerKind::DySTop,
-        SchedulerKind::AsyDfl,
-        SchedulerKind::SaAdfl,
-        SchedulerKind::Matcha,
-    ] {
-        sim_round_bench(kind);
-    }
-    println!("\n== PJRT hot path (L1/L2 via HLO artifacts) ==");
-    pjrt_benches();
+    let quick = matches!(
+        std::env::var("DYSTOP_BENCH_QUICK").as_deref(),
+        Ok(v) if !v.is_empty() && v != "0"
+    );
+    let (warm, budget) = if quick { (1, 0.03) } else { (3, 0.5) };
+    let available = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    sim_round_benches(&mut results, warm, budget);
+    native_trainer_benches(&mut results, warm, budget.min(0.3));
+    pjrt_benches(&mut results);
+
+    let det_ok = determinism_check();
+    println!(
+        "\ndeterminism threads=1 vs threads=4: {}",
+        if det_ok { "bit-identical" } else { "MISMATCH" }
+    );
+
+    let meta = vec![
+        ("bench".to_string(), Json::Str("sim".to_string())),
+        ("quick".to_string(), Json::Bool(quick)),
+        (
+            "available_parallelism".to_string(),
+            Json::Num(available as f64),
+        ),
+        (
+            "determinism_threads_1_vs_4".to_string(),
+            Json::Bool(det_ok),
+        ),
+    ];
+    write_json_report(Path::new("BENCH_sim.json"), meta, &results)
+        .expect("write BENCH_sim.json");
+    println!("wrote BENCH_sim.json ({} cases)", results.len());
+    assert!(det_ok, "threads=1 vs threads=4 results diverged");
 }

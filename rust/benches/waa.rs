@@ -1,9 +1,15 @@
 //! Bench: Worker Activation Algorithm (Alg. 2) — the per-round cost of
 //! the coordinator's activation decision at paper scale (N=100) and 10×.
+//!
+//! The substrate (geometry, budgets, shards → label distributions) comes
+//! from [`Experiment::builder`] — the same construction path the engines
+//! use — instead of a hand-rolled copy; only the per-round scheduler
+//! inputs (staleness, queues, H estimates) are synthetic.
 
 use dystop::bench::bench;
-use dystop::config::NetworkConfig;
+use dystop::config::ExperimentConfig;
 use dystop::coordinator::{waa_select, SchedView, SchedulerParams};
+use dystop::experiment::Experiment;
 use dystop::network::EdgeNetwork;
 use dystop::util::rng::Pcg;
 
@@ -21,22 +27,28 @@ struct Fix {
 }
 
 fn fixture(n: usize, seed: u64) -> Fix {
-    let mut rng = Pcg::seeded(seed);
-    let mut cfg = NetworkConfig::default();
-    cfg.comm_range_m = 45.0;
-    let net = EdgeNetwork::new(n, cfg, &mut rng);
-    let candidates: Vec<Vec<usize>> = (0..n).map(|i| net.in_range(i)).collect();
+    let cfg = ExperimentConfig {
+        workers: n,
+        seed,
+        train_per_worker: 64,
+        test_samples: 64,
+        ..Default::default()
+    };
+    let exp = Experiment::builder(cfg).build().expect("bench substrate");
+    let mut rng = Pcg::new(seed, 7);
+    let candidates: Vec<Vec<usize>> =
+        (0..n).map(|i| exp.net.in_range(i)).collect();
     Fix {
         tau: (0..n).map(|_| rng.below(8)).collect(),
         queues: (0..n).map(|_| rng.f64() * 4.0).collect(),
         h_cmp: (0..n).map(|_| rng.f64() * 2.0).collect(),
         h_est: (0..n).map(|_| 0.3 + rng.f64() * 3.0).collect(),
-        data_sizes: (0..n).map(|_| 64 + rng.below_usize(128)).collect(),
-        label_dist: (0..n).map(|_| rng.dirichlet(0.5, 10)).collect(),
+        data_sizes: exp.workers.iter().map(|w| w.data_size()).collect(),
+        label_dist: exp.label_dist,
         candidates,
-        budgets: vec![16.0; n],
+        budgets: exp.net.budgets.clone(),
         pulls: vec![vec![0; n]; n],
-        net,
+        net: exp.net,
     }
 }
 

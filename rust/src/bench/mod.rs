@@ -1,7 +1,13 @@
 //! Micro-benchmark kit (no `criterion` offline): warmup + timed
-//! iterations with mean/stddev/percentile reporting.
+//! iterations with mean/stddev/percentile reporting, plus a
+//! machine-readable `BENCH_*.json` report writer so the perf trajectory
+//! is tracked across PRs.
 
+use crate::util::json::Json;
 use crate::util::stats::{mean, percentile, stddev};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
 use std::time::Instant;
 
 /// Result of one benchmark case.
@@ -16,6 +22,18 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// One JSON object per case, keyed like the printed columns.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("mean_ns".to_string(), Json::Num(self.mean_ns));
+        m.insert("stddev_ns".to_string(), Json::Num(self.stddev_ns));
+        m.insert("p50_ns".to_string(), Json::Num(self.p50_ns));
+        m.insert("p99_ns".to_string(), Json::Num(self.p99_ns));
+        Json::Obj(m)
+    }
+
     pub fn print(&self) {
         println!(
             "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}  ±{:>10}",
@@ -39,6 +57,27 @@ pub fn fmt_ns(ns: f64) -> String {
     } else {
         format!("{:.3} s", ns / 1e9)
     }
+}
+
+/// Write a machine-readable bench report: top-level metadata keys plus a
+/// `"results"` array with one entry per case. The output round-trips
+/// through [`Json::parse`], so downstream tooling (CI artifacts,
+/// cross-PR perf tracking) needs no bespoke parser.
+pub fn write_json_report(
+    path: &Path,
+    meta: Vec<(String, Json)>,
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    let mut root = BTreeMap::new();
+    for (k, v) in meta {
+        root.insert(k, v);
+    }
+    root.insert(
+        "results".to_string(),
+        Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+    );
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", Json::Obj(root))
 }
 
 /// Benchmark `f`, auto-scaling iteration count to the target duration.
@@ -101,5 +140,39 @@ mod tests {
         assert!(fmt_ns(5e4).contains("µs"));
         assert!(fmt_ns(5e7).contains("ms"));
         assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let r = BenchResult {
+            name: "case".into(),
+            iters: 10,
+            mean_ns: 1500.0,
+            stddev_ns: 10.0,
+            p50_ns: 1490.0,
+            p99_ns: 1600.0,
+        };
+        // pid-suffixed so concurrent test runs on one machine don't race
+        let path = std::env::temp_dir().join(format!(
+            "dystop_bench_report_test_{}.json",
+            std::process::id()
+        ));
+        write_json_report(
+            &path,
+            vec![("quick".to_string(), Json::Bool(true))],
+            &[r],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("quick"), Some(&Json::Bool(true)));
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(
+            results[0].get("name").unwrap().as_str(),
+            Some("case")
+        );
+        assert_eq!(results[0].get("mean_ns").unwrap().as_f64(), Some(1500.0));
+        let _ = std::fs::remove_file(&path);
     }
 }

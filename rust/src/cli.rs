@@ -102,10 +102,16 @@ pub fn main_with_args(args: &[String]) -> Result<(), String> {
     match cmd.as_str() {
         "train" => {
             let cfg = load_config(&flags)?;
+            let threads = if cfg.threads == 0 {
+                "auto".to_string()
+            } else {
+                cfg.threads.to_string()
+            };
             println!(
-                "train: scheduler={} backend={} workers={} rounds={} φ={}",
+                "train: scheduler={} backend={} threads={} workers={} rounds={} φ={}",
                 cfg.scheduler.name(),
                 cfg.backend.name(),
+                threads,
                 cfg.workers,
                 cfg.rounds,
                 cfg.phi
@@ -191,6 +197,7 @@ fn usage() -> String {
     "usage: dystop <train|figures|testbed|sweep|inspect|help> [flags]\n\
      \n\
      train   --config FILE --set sim.workers=40 --set run.backend=sim|testbed --out results/\n\
+     \x20       --set run.threads=N  round-execution threads (0 = all cores; bit-identical)\n\
      figures --fig <3|4..18|20..25|all> --out results/ [--workers N --rounds R]\n\
      testbed --set sim.workers=15 --out results/\n\
      sweep   --key dystop.tau_bound --values 2,5,8 --out results/\n\

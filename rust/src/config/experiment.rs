@@ -193,6 +193,13 @@ pub struct ExperimentConfig {
     pub trainer: TrainerKind,
     /// Execution backend (`run.backend=sim|testbed`).
     pub backend: BackendKind,
+    /// Worker-pool size for parallel round execution in the
+    /// virtual-clock backend (`run.threads`). `0` (the default) means
+    /// "use all available parallelism"; `1` forces sequential
+    /// execution. Results are bit-identical for every setting — the
+    /// engine trains on per-activation RNG streams keyed by
+    /// `(seed, round, worker)`, so thread count never reorders draws.
+    pub threads: usize,
 
     // --- DySTop knobs ---
     /// Staleness bound τ_bound (Eq. 12c); Fig. 14/15 sweep.
@@ -244,6 +251,7 @@ impl Default for ExperimentConfig {
             model: ModelKind::Mlp,
             trainer: TrainerKind::Native,
             backend: BackendKind::Sim,
+            threads: 0,
             tau_bound: 5,
             v: 10.0,
             neighbor_cap: 7,
@@ -293,6 +301,7 @@ impl ExperimentConfig {
         if let Some(s) = cfg.get("run.backend") {
             e.backend = BackendKind::parse(s)?;
         }
+        opt!(e.threads, get_usize, "run.threads");
         opt!(e.tau_bound, get_u64, "dystop.tau_bound");
         opt!(e.v, get_f64, "dystop.v");
         opt!(e.neighbor_cap, get_usize, "dystop.neighbor_cap");
@@ -403,6 +412,14 @@ mod tests {
         assert_eq!(e.backend, BackendKind::Testbed);
         // default stays sim
         assert_eq!(ExperimentConfig::default().backend, BackendKind::Sim);
+    }
+
+    #[test]
+    fn threads_knob_parses_and_defaults_to_auto() {
+        assert_eq!(ExperimentConfig::default().threads, 0); // 0 = auto
+        let cfg = Config::parse("[run]\nthreads = 4").unwrap();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.threads, 4);
     }
 
     #[test]

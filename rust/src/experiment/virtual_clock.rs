@@ -7,6 +7,25 @@
 //! *real* training through the configured trainer), advances the virtual
 //! clock by the realised round duration H_t (Eqs. 7–9), and updates
 //! staleness (Eq. 6) and the Lyapunov queues (Eq. 33).
+//!
+//! # Parallel round execution
+//!
+//! Activated workers are independent within a round — each aggregates a
+//! pre-round snapshot and trains its own model — so the engine fans the
+//! per-activation work (realised transfer times + aggregate + train)
+//! across a hand-rolled [`std::thread::scope`] worker pool. Determinism
+//! is preserved by construction, not by locking:
+//!
+//! * every activation draws from its own RNG stream keyed purely by
+//!   `(seed, round, worker)` ([`Pcg::activation_stream`]), so no thread
+//!   interleaving can reorder draws;
+//! * tasks only read the shared pre-round state; results are applied
+//!   sequentially in plan order, so every float reduction (`H_t` max,
+//!   mean loss) happens in a fixed order.
+//!
+//! A run is therefore **bit-identical for every `run.threads` setting**,
+//! including the sequential fallback used when the trainer cannot be
+//! cloned across threads (PJRT executables).
 
 use super::observer::{ObserverChain, RunRecorder};
 use super::{Backend, Experiment, ExperimentError};
@@ -16,10 +35,11 @@ use crate::data::Dataset;
 use crate::metrics::{EvalRecord, RoundRecord, RunResult};
 use crate::network::EdgeNetwork;
 use crate::util::rng::Pcg;
-use crate::worker::{data_size_weights, Trainer, WorkerState};
+use crate::worker::{data_size_weights_into, Params, Trainer, WorkerState};
+use std::thread;
 
-/// Virtual-clock [`Backend`]: deterministic, single-threaded, fast —
-/// the harness behind every figure and the large-scale sweeps.
+/// Virtual-clock [`Backend`]: deterministic, parallel, fast — the
+/// harness behind every figure and the large-scale sweeps.
 pub struct VirtualClockBackend {
     early_stop: bool,
 }
@@ -53,6 +73,120 @@ impl Backend for VirtualClockBackend {
     }
 }
 
+/// Reusable per-activation aggregation scratch — one per pool slot (and
+/// one for the sequential path) so the aggregation path stops allocating
+/// (the one exception: the short-lived `Vec<&[f32]>` of model refs,
+/// which cannot live in scratch without self-referential lifetimes).
+#[derive(Default)]
+struct ActScratch {
+    srcs: Vec<usize>,
+    sizes: Vec<usize>,
+    weights: Vec<f32>,
+    agg: Params,
+}
+
+/// One slot of the hand-rolled worker pool: a cloned trainer plus its
+/// scratch, kept across rounds so thread-local state is reused.
+struct WorkerSlot {
+    trainer: Box<dyn Trainer + Send>,
+    scratch: ActScratch,
+}
+
+/// Shared read-only view of the pre-round state handed to every
+/// activation task.
+struct RoundCtx<'a> {
+    cfg: &'a ExperimentConfig,
+    net: &'a EdgeNetwork,
+    workers: &'a [WorkerState],
+    inbox: &'a [Vec<(usize, Params)>],
+    plan: &'a RoundPlan,
+    model_bits: f64,
+    round: usize,
+}
+
+/// Output of one activation task (`k` indexes `plan.active`).
+struct ActOut {
+    k: usize,
+    duration_s: f64,
+    params: Params,
+    loss: f64,
+}
+
+/// Execute one activation: realised pull/push transfer times (Eqs. 7–9),
+/// aggregate (Eq. 4) over self + pulls + inbox, then local training
+/// (Eq. 5) — all on the activation's private RNG stream.
+fn run_activation(
+    trainer: &mut dyn Trainer,
+    scr: &mut ActScratch,
+    ctx: &RoundCtx<'_>,
+    k: usize,
+) -> ActOut {
+    let i = ctx.plan.active[k];
+    let mut rng = Pcg::activation_stream(
+        ctx.cfg.seed,
+        ctx.round as u64,
+        i as u64,
+    );
+    // --- realised round duration (Eqs. 7–9) ---
+    // pulls beyond the radio's orthogonal channels serialize: K transfers
+    // take ⌈K/channels⌉ slots of the worst link time
+    let channels = ctx.cfg.network.channels.max(1);
+    let worst_pull = ctx.plan.pulls_from[k]
+        .iter()
+        .map(|&j| ctx.net.transfer_time_s(j, i, ctx.model_bits, &mut rng))
+        .fold(0.0f64, f64::max);
+    let pull_slots = ctx.plan.pulls_from[k].len().div_ceil(channels);
+    // pushes originating at i (SA-ADFL's send-to-all) also occupy its
+    // radio, serialized the same way
+    let mut worst_push = 0.0f64;
+    let mut n_push = 0usize;
+    for &(from, to) in &ctx.plan.pushes {
+        if from == i {
+            worst_push = worst_push
+                .max(ctx.net.transfer_time_s(i, to, ctx.model_bits, &mut rng));
+            n_push += 1;
+        }
+    }
+    let push_slots = n_push.div_ceil(channels);
+    let duration_s = ctx.workers[i].residual_s
+        + worst_pull * pull_slots as f64
+        + worst_push * push_slots as f64;
+
+    // --- aggregate (Eq. 4) over the pre-round snapshot ---
+    scr.srcs.clear();
+    scr.srcs.push(i);
+    scr.srcs.extend(ctx.plan.pulls_from[k].iter().copied());
+    let mut models: Vec<&[f32]> = scr
+        .srcs
+        .iter()
+        .map(|&j| ctx.workers[j].params.as_slice())
+        .collect();
+    scr.sizes.clear();
+    scr.sizes
+        .extend(scr.srcs.iter().map(|&j| ctx.workers[j].data_size()));
+    // pushed models waiting in the inbox join the aggregation (skipping
+    // senders we just pulled fresh models from)
+    for (from, params) in &ctx.inbox[i] {
+        if !scr.srcs.contains(from) {
+            models.push(params.as_slice());
+            scr.sizes.push(ctx.workers[*from].data_size());
+        }
+    }
+    data_size_weights_into(&scr.sizes, &mut scr.weights);
+    trainer.aggregate_into(&models, &scr.weights, &mut scr.agg);
+
+    // --- local training (Eq. 5) ---
+    let (params, loss) = trainer.train(
+        &scr.agg,
+        &ctx.workers[i].shard,
+        ctx.cfg.local_steps,
+        ctx.cfg.batch,
+        ctx.cfg.lr,
+        &mut rng,
+    );
+    ActOut { k, duration_s, params, loss }
+}
+
 /// The assembled simulation engine. Public so callers that need
 /// fine-grained control (benches stepping round by round, tests probing
 /// mid-run state) can drive it manually; everyone else goes through
@@ -69,7 +203,10 @@ pub struct VirtualClockEngine {
     /// Pushed-model inboxes: models received via PUSH wait here until the
     /// receiver's next activation (SA-ADFL semantics — receivers don't
     /// interrupt training to merge).
-    inbox: Vec<Vec<(usize, Vec<f32>)>>,
+    inbox: Vec<Vec<(usize, Params)>>,
+    /// Retired parameter buffers, recycled for future inbox pushes so
+    /// push delivery never allocates in steady state.
+    inbox_free: Vec<Params>,
     clock_s: f64,
     round: usize,
     cum_transfers: usize,
@@ -78,6 +215,15 @@ pub struct VirtualClockEngine {
     /// Precomputed label distributions per worker (static shards).
     label_dist: Vec<Vec<f64>>,
     model_bits: f64,
+    /// Worker pool for parallel round execution; empty ⇒ sequential
+    /// (run.threads=1, or the trainer cannot be cloned across threads).
+    slots: Vec<WorkerSlot>,
+    /// Scratch for the sequential path.
+    scratch: ActScratch,
+    /// Reusable per-round buffers.
+    active_mask: Vec<bool>,
+    losses: Vec<f64>,
+    near: Vec<usize>,
 }
 
 impl VirtualClockEngine {
@@ -86,6 +232,31 @@ impl VirtualClockEngine {
         let n = exp.cfg.workers;
         let recorder =
             RunRecorder::new(exp.scheduler.name(), exp.model_bits);
+        let requested = match exp.cfg.threads {
+            0 => thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1),
+            t => t,
+        }
+        // at most n activations can run concurrently — don't build
+        // trainer clones that could never be used
+        .min(n.max(1));
+        let mut slots = Vec::new();
+        if requested > 1 {
+            for _ in 0..requested {
+                match exp.trainer.clone_box() {
+                    Some(t) => slots.push(WorkerSlot {
+                        trainer: t,
+                        scratch: ActScratch::default(),
+                    }),
+                    None => {
+                        // non-cloneable trainer: stay sequential
+                        slots.clear();
+                        break;
+                    }
+                }
+            }
+        }
         VirtualClockEngine {
             observers: ObserverChain::new(recorder, exp.observers),
             cfg: exp.cfg,
@@ -96,12 +267,18 @@ impl VirtualClockEngine {
             scheduler: exp.scheduler,
             pulls: vec![vec![0; n]; n],
             inbox: vec![Vec::new(); n],
+            inbox_free: Vec::new(),
             clock_s: 0.0,
             round: 0,
             cum_transfers: 0,
             rng: exp.rng,
             label_dist: exp.label_dist,
             model_bits: exp.model_bits,
+            slots,
+            scratch: ActScratch::default(),
+            active_mask: vec![false; n],
+            losses: Vec::new(),
+            near: Vec::new(),
         }
     }
 
@@ -109,32 +286,43 @@ impl VirtualClockEngine {
         self.clock_s
     }
 
+    /// Resolved worker-pool width (1 = sequential execution).
+    pub fn threads(&self) -> usize {
+        self.slots.len().max(1)
+    }
+
     /// Estimated per-worker round cost H_t^i (Eq. 8): residual compute
     /// plus the worst expected pull transfer over its (≤ s nearest)
     /// candidates.
-    fn estimate_h(&self, candidates: &[Vec<usize>]) -> Vec<f64> {
+    fn estimate_h(&mut self, candidates: &[Vec<usize>]) -> Vec<f64> {
         let s = self.cfg.neighbor_cap;
-        (0..self.workers.len())
+        let net = &self.net;
+        let workers = &self.workers;
+        let model_bits = self.model_bits;
+        let near = &mut self.near;
+        (0..workers.len())
             .map(|i| {
                 // PTCA will pick ≤ s in-neighbors; estimate with the s
                 // *nearest* candidates (best case the coordinator can
                 // predict without knowing the realised priorities).
-                let mut near: Vec<usize> = candidates[i].clone();
-                near.sort_by(|&a, &b| {
-                    self.net
-                        .distance(i, a)
-                        .partial_cmp(&self.net.distance(i, b))
-                        .unwrap()
-                });
-                let worst = near
+                let cand = &candidates[i];
+                let nearest: &[usize] = if cand.len() > s {
+                    // only the s nearest matter — select into a reused
+                    // index buffer instead of clone + full sort
+                    near.clear();
+                    near.extend_from_slice(cand);
+                    near.select_nth_unstable_by(s - 1, |&a, &b| {
+                        net.distance(i, a).total_cmp(&net.distance(i, b))
+                    });
+                    &near[..s]
+                } else {
+                    cand
+                };
+                let worst = nearest
                     .iter()
-                    .take(s)
-                    .map(|&j| {
-                        self.net
-                            .expected_transfer_time_s(j, i, self.model_bits)
-                    })
+                    .map(|&j| net.expected_transfer_time_s(j, i, model_bits))
                     .fold(0.0f64, f64::max);
-                self.workers[i].residual_s + worst
+                workers[i].residual_s + worst
             })
             .collect()
     }
@@ -179,111 +367,126 @@ impl VirtualClockEngine {
         plan
     }
 
+    /// Run every activation of the plan: in parallel across the worker
+    /// pool when available, sequentially otherwise. Results come back in
+    /// plan order either way (tasks are stream-isolated, so the outcome
+    /// is identical).
+    fn run_activations(&mut self, plan: &RoundPlan) -> Vec<ActOut> {
+        let n_act = plan.active.len();
+        let ctx = RoundCtx {
+            cfg: &self.cfg,
+            net: &self.net,
+            workers: &self.workers,
+            inbox: &self.inbox,
+            plan,
+            model_bits: self.model_bits,
+            round: self.round,
+        };
+        let mut outs: Vec<ActOut> = Vec::with_capacity(n_act);
+        if self.slots.len() > 1 && n_act > 1 {
+            let pool = self.slots.len().min(n_act);
+            let slots = &mut self.slots[..pool];
+            let ctx = &ctx;
+            let parts: Vec<Vec<ActOut>> = thread::scope(|s| {
+                let handles: Vec<_> = slots
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(si, slot)| {
+                        s.spawn(move || {
+                            let mut part = Vec::new();
+                            let mut k = si;
+                            while k < n_act {
+                                part.push(run_activation(
+                                    slot.trainer.as_mut(),
+                                    &mut slot.scratch,
+                                    ctx,
+                                    k,
+                                ));
+                                k += pool;
+                            }
+                            part
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("round worker thread panicked"))
+                    .collect()
+            });
+            for part in parts {
+                outs.extend(part);
+            }
+            outs.sort_unstable_by_key(|o| o.k);
+        } else {
+            for k in 0..n_act {
+                outs.push(run_activation(
+                    self.trainer.as_mut(),
+                    &mut self.scratch,
+                    &ctx,
+                    k,
+                ));
+            }
+        }
+        outs
+    }
+
     /// Execute a round plan: aggregate + train the active workers,
     /// advance the clock, update staleness/queues/ledgers.
     fn execute(&mut self, plan: &RoundPlan) {
         let n = self.workers.len();
-        // --- realised round duration (Eqs. 7–9) ---
-        let mut h_round = 0.0f64;
-        let mut durations = Vec::with_capacity(plan.active.len());
-        let channels = self.cfg.network.channels.max(1);
-        for (k, &i) in plan.active.iter().enumerate() {
-            // pulls beyond the radio's orthogonal channels serialize:
-            // K transfers take ⌈K/channels⌉ slots of the worst link time
-            let worst_pull = plan.pulls_from[k]
-                .iter()
-                .map(|&j| {
-                    self.net
-                        .transfer_time_s(j, i, self.model_bits, &mut self.rng)
-                })
-                .fold(0.0f64, f64::max);
-            let pull_slots = plan.pulls_from[k].len().div_ceil(channels);
-            // pushes originating at i (SA-ADFL's send-to-all) also occupy
-            // its radio, serialized the same way
-            let push_times: Vec<f64> = plan
-                .pushes
-                .iter()
-                .filter(|&&(from, _)| from == i)
-                .map(|&(_, to)| {
-                    self.net
-                        .transfer_time_s(i, to, self.model_bits, &mut self.rng)
-                })
-                .collect();
-            let worst_push = push_times.iter().cloned().fold(0.0f64, f64::max);
-            let push_slots = push_times.len().div_ceil(channels);
-            let d = self.workers[i].residual_s
-                + worst_pull * pull_slots as f64
-                + worst_push * push_slots as f64;
-            durations.push(d);
-            h_round = h_round.max(d);
-        }
+        let outs = self.run_activations(plan);
+
+        // --- apply results in plan order (fixed reduction order) ---
+        let mut h_round =
+            outs.iter().fold(0.0f64, |a, o| a.max(o.duration_s));
         if plan.active.is_empty() {
             h_round = 0.01; // avoid stalling the clock
         }
-
-        // --- aggregate + train (Eqs. 4–5), pull-count ledger ---
-        // snapshot models first so intra-round pulls see pre-round state
-        let mut losses = Vec::with_capacity(plan.active.len());
-        let mut new_models: Vec<(usize, Vec<f32>, f64)> = Vec::new();
-        for (k, &i) in plan.active.iter().enumerate() {
-            let mut srcs: Vec<usize> = vec![i];
-            srcs.extend(plan.pulls_from[k].iter().copied());
-            let mut models: Vec<&[f32]> = srcs
-                .iter()
-                .map(|&j| self.workers[j].params.as_slice())
-                .collect();
-            let mut sizes: Vec<usize> =
-                srcs.iter().map(|&j| self.workers[j].data_size()).collect();
-            // pushed models waiting in the inbox join the aggregation
-            // (skipping senders we just pulled fresh models from)
-            for (from, params) in &self.inbox[i] {
-                if !srcs.contains(from) {
-                    models.push(params.as_slice());
-                    sizes.push(self.workers[*from].data_size());
-                }
-            }
-            let weights = data_size_weights(&sizes);
-            let agg = self.trainer.aggregate(&models, &weights);
-            let (trained, loss) = self.trainer.train(
-                &agg,
-                &self.workers[i].shard,
-                self.cfg.local_steps,
-                self.cfg.batch,
-                self.cfg.lr,
-                &mut self.rng,
-            );
-            new_models.push((i, trained, loss));
-            losses.push(loss);
-            for &j in &plan.pulls_from[k] {
+        self.losses.clear();
+        for o in outs {
+            let i = plan.active[o.k];
+            // recycle the replaced parameter buffer for future pushes
+            let old =
+                std::mem::replace(&mut self.workers[i].params, o.params);
+            self.inbox_free.push(old);
+            self.workers[i].last_loss = o.loss;
+            self.losses.push(o.loss);
+            for &j in &plan.pulls_from[o.k] {
                 self.pulls[i][j] += 1;
             }
-        }
-        for (i, params, loss) in new_models {
-            self.workers[i].params = params;
-            self.workers[i].last_loss = loss;
-            self.inbox[i].clear(); // consumed by this aggregation
+            // inbox consumed by this aggregation — recycle its buffers
+            for (_, buf) in self.inbox[i].drain(..) {
+                self.inbox_free.push(buf);
+            }
         }
 
         // --- pushes (SA-ADFL): the updated model lands in each
         // receiver's inbox for *their* next aggregation (latest wins)
         for &(from, to) in &plan.pushes {
-            let pushed = self.workers[from].params.clone();
-            self.inbox[to].retain(|(f, _)| *f != from);
-            self.inbox[to].push((from, pushed));
+            let mut buf = self.inbox_free.pop().unwrap_or_default();
+            buf.clear();
+            buf.extend_from_slice(&self.workers[from].params);
+            if let Some(pos) =
+                self.inbox[to].iter().position(|(f, _)| *f == from)
+            {
+                let (_, old) = self.inbox[to].swap_remove(pos);
+                self.inbox_free.push(old);
+            }
+            self.inbox[to].push((from, buf));
         }
+        // every activation retires a buffer but only pushes consume them:
+        // cap the free list so pull-only schedulers don't grow it forever
+        self.inbox_free.truncate(n);
 
         // --- clock + staleness + queues (Eqs. 6, 33) ---
         self.clock_s += h_round;
-        let active_set: Vec<bool> = {
-            let mut v = vec![false; n];
-            for &i in &plan.active {
-                v[i] = true;
-            }
-            v
-        };
+        self.active_mask.fill(false);
+        for &i in &plan.active {
+            self.active_mask[i] = true;
+        }
         for (i, w) in self.workers.iter_mut().enumerate() {
             w.advance(h_round);
-            if active_set[i] {
+            if self.active_mask[i] {
                 w.on_activated();
             } else {
                 w.on_skipped();
@@ -301,10 +504,10 @@ impl VirtualClockEngine {
             .sum::<f64>()
             / n as f64;
         let max_tau = self.workers.iter().map(|w| w.staleness).max().unwrap_or(0);
-        let train_loss = if losses.is_empty() {
+        let train_loss = if self.losses.is_empty() {
             f64::NAN
         } else {
-            losses.iter().sum::<f64>() / losses.len() as f64
+            self.losses.iter().sum::<f64>() / self.losses.len() as f64
         };
         let rec = RoundRecord {
             round: self.round,
@@ -320,7 +523,9 @@ impl VirtualClockEngine {
     }
 
     /// Evaluate the average of all (or a sampled fraction of) workers'
-    /// local models on the test set and record a snapshot.
+    /// local models on the test set and record a snapshot. Per-worker
+    /// evaluations fan across the pool; sums reduce in id order, so the
+    /// snapshot is bit-identical for any thread count.
     pub fn evaluate(&mut self) -> EvalRecord {
         let n = self.workers.len();
         let count = ((n as f64 * self.cfg.eval_worker_frac).round() as usize)
@@ -330,11 +535,56 @@ impl VirtualClockEngine {
         } else {
             self.rng.sample_indices(n, count)
         };
+        let mut pairs: Vec<(f64, f64)> = vec![(0.0, 0.0); ids.len()];
+        if self.slots.len() > 1 && ids.len() > 1 {
+            let pool = self.slots.len().min(ids.len());
+            let slots = &mut self.slots[..pool];
+            let workers = &self.workers;
+            let test = &self.test;
+            let ids = &ids;
+            let parts: Vec<Vec<(usize, (f64, f64))>> = thread::scope(|s| {
+                let handles: Vec<_> = slots
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(si, slot)| {
+                        s.spawn(move || {
+                            let mut part = Vec::new();
+                            let mut p = si;
+                            while p < ids.len() {
+                                let i = ids[p];
+                                part.push((
+                                    p,
+                                    slot.trainer.evaluate(
+                                        &workers[i].params,
+                                        test,
+                                    ),
+                                ));
+                                p += pool;
+                            }
+                            part
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("eval worker thread panicked"))
+                    .collect()
+            });
+            for part in parts {
+                for (p, la) in part {
+                    pairs[p] = la;
+                }
+            }
+        } else {
+            for (p, &i) in ids.iter().enumerate() {
+                pairs[p] = self
+                    .trainer
+                    .evaluate(&self.workers[i].params, &self.test);
+            }
+        }
         let mut acc_sum = 0.0;
         let mut loss_sum = 0.0;
-        for &i in &ids {
-            let (loss, acc) =
-                self.trainer.evaluate(&self.workers[i].params, &self.test);
+        for &(loss, acc) in &pairs {
             acc_sum += acc;
             loss_sum += loss;
         }

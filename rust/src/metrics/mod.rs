@@ -83,6 +83,35 @@ impl RunResult {
             .map(|e| e.cum_transfers as f64 * self.model_bits / 8.0 / 1e9)
     }
 
+    /// Bit-exact equality over every recorded field (floats compared by
+    /// `to_bits`, so NaN == NaN and -0.0 != 0.0). The single definition
+    /// of "bit-identical run" — used by the `experiment_api` parity and
+    /// thread-count-determinism tests and by the bench determinism
+    /// witness recorded in `BENCH_sim.json`.
+    pub fn bits_eq(&self, other: &RunResult) -> bool {
+        self.label == other.label
+            && self.model_bits.to_bits() == other.model_bits.to_bits()
+            && self.rounds.len() == other.rounds.len()
+            && self.evals.len() == other.evals.len()
+            && self.rounds.iter().zip(&other.rounds).all(|(x, y)| {
+                x.round == y.round
+                    && x.time_s.to_bits() == y.time_s.to_bits()
+                    && x.duration_s.to_bits() == y.duration_s.to_bits()
+                    && x.active == y.active
+                    && x.transfers == y.transfers
+                    && x.avg_staleness.to_bits() == y.avg_staleness.to_bits()
+                    && x.max_staleness == y.max_staleness
+                    && x.train_loss.to_bits() == y.train_loss.to_bits()
+            })
+            && self.evals.iter().zip(&other.evals).all(|(x, y)| {
+                x.round == y.round
+                    && x.time_s.to_bits() == y.time_s.to_bits()
+                    && x.avg_accuracy.to_bits() == y.avg_accuracy.to_bits()
+                    && x.avg_loss.to_bits() == y.avg_loss.to_bits()
+                    && x.cum_transfers == y.cum_transfers
+            })
+    }
+
     /// Mean staleness across all rounds (Fig. 14 metric).
     pub fn mean_staleness(&self) -> f64 {
         if self.rounds.is_empty() {

@@ -270,4 +270,15 @@ impl Trainer for PjrtTrainer {
         let out = run1(&self.model.agg, &args).expect("pjrt aggregate failed");
         out[0].to_vec::<f32>().expect("agg output")
     }
+
+    fn aggregate_into(
+        &mut self,
+        models: &[&[f32]],
+        weights: &[f32],
+        out: &mut Params,
+    ) {
+        // move the kernel result in rather than copying it (the trait
+        // default would memcpy the returned Vec into `out`)
+        *out = self.aggregate(models, weights);
+    }
 }

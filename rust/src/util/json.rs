@@ -79,6 +79,67 @@ impl Json {
     }
 }
 
+/// Compact serializer — `format!("{json}")` round-trips through
+/// [`Json::parse`]. Non-finite numbers render as `null` (JSON has no
+/// NaN/∞); integral numbers render without a fraction.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(x) => {
+                if !x.is_finite() {
+                    f.write_str("null")
+                } else if x.fract() == 0.0 && x.abs() < 9.0e15 {
+                    write!(f, "{}", *x as i64)
+                } else {
+                    write!(f, "{x}")
+                }
+            }
+            Json::Str(s) => write_json_string(f, s),
+            Json::Arr(v) => {
+                f.write_str("[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(m) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_json_string(f, k)?;
+                    f.write_str(":")?;
+                    write!(f, "{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_json_string(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    use std::fmt::Write as _;
+    f.write_str("\"")?;
+    for ch in s.chars() {
+        match ch {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => f.write_char(c)?,
+        }
+    }
+    f.write_str("\"")
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
@@ -305,5 +366,26 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn display_round_trips_through_parse() {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str("sim \"round\"\n".into()));
+        obj.insert("iters".to_string(), Json::Num(120.0));
+        obj.insert("mean_ns".to_string(), Json::Num(1234.5));
+        obj.insert("ok".to_string(), Json::Bool(true));
+        obj.insert("none".to_string(), Json::Null);
+        obj.insert(
+            "xs".to_string(),
+            Json::Arr(vec![Json::Num(-0.25), Json::Num(3.0)]),
+        );
+        let v = Json::Obj(obj);
+        let text = format!("{v}");
+        assert_eq!(Json::parse(&text).unwrap(), v);
+        // integral floats render without a fraction
+        assert_eq!(format!("{}", Json::Num(120.0)), "120");
+        // non-finite numbers degrade to null rather than invalid JSON
+        assert_eq!(format!("{}", Json::Num(f64::NAN)), "null");
     }
 }

@@ -17,6 +17,15 @@ pub struct Pcg {
 
 const PCG_MULT: u64 = 6364136223846793005;
 
+/// SplitMix64 finalizer (Steele et al. 2014): a bijective 64-bit mix used
+/// to turn structured keys like `(seed, round, worker)` into
+/// decorrelated stream seeds.
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 impl Pcg {
     /// Create a generator from a seed and stream id.
     pub fn new(seed: u64, stream: u64) -> Self {
@@ -29,6 +38,19 @@ impl Pcg {
     /// Convenience constructor on stream 0.
     pub fn seeded(seed: u64) -> Self {
         Self::new(seed, 0)
+    }
+
+    /// Deterministic per-activation stream: a generator keyed purely by
+    /// `(seed, round, worker)`. It depends on *nothing else* — not the
+    /// thread count, not the total worker count, not how much any other
+    /// stream has consumed — so fanning activations across a thread pool
+    /// cannot reorder draws, and round results are bit-identical for any
+    /// `run.threads` setting.
+    pub fn activation_stream(seed: u64, round: u64, worker: u64) -> Pcg {
+        let h = mix64(seed ^ 0xA076_1D64_78BD_642F);
+        let h = mix64(h ^ round.wrapping_mul(0xE703_7ED1_A0B4_28DB));
+        let h = mix64(h ^ worker.wrapping_mul(0x8EBC_6AF0_9C88_C6E3));
+        Pcg::new(h, mix64(h ^ 0x5899_65CC_7537_4CC3))
     }
 
     /// Derive an independent child generator (split by label).
@@ -157,6 +179,34 @@ impl Pcg {
         self.shuffle(&mut idx);
         idx.truncate(n);
         idx
+    }
+
+    /// Sample `n` distinct indices from [0, pool) into `buf` — the
+    /// allocation-free hot-path counterpart of [`sample_indices`]: a
+    /// partial Fisher–Yates over a refilled pool that draws exactly `n`
+    /// variates and reuses `buf`'s capacity across calls.
+    ///
+    /// **Not draw-compatible with [`sample_indices`]**: the full
+    /// shuffle+truncate there consumes `pool − 1` variates in a
+    /// different order, so the two return different samples from the
+    /// same generator state. Don't swap one for the other in seeded
+    /// code without re-pinning trajectories.
+    ///
+    /// [`sample_indices`]: Self::sample_indices
+    pub fn sample_indices_into(
+        &mut self,
+        pool: usize,
+        n: usize,
+        buf: &mut Vec<usize>,
+    ) {
+        debug_assert!(n <= pool);
+        buf.clear();
+        buf.extend(0..pool);
+        for i in 0..n {
+            let j = i + self.below_usize(pool - i);
+            buf.swap(i, j);
+        }
+        buf.truncate(n);
     }
 
     /// Standard-normal f32 vector (model init, synthetic features).
@@ -291,6 +341,57 @@ mod tests {
         d.sort_unstable();
         d.dedup();
         assert_eq!(d.len(), 30);
+    }
+
+    #[test]
+    fn sample_indices_into_distinct_and_reusable() {
+        let mut r = Pcg::seeded(29);
+        let mut buf = Vec::new();
+        r.sample_indices_into(100, 30, &mut buf);
+        assert_eq!(buf.len(), 30);
+        assert!(buf.iter().all(|&i| i < 100));
+        let mut d = buf.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 30);
+        // n == pool → a full permutation, buffer reused
+        r.sample_indices_into(10, 10, &mut buf);
+        let mut sorted = buf.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn activation_streams_deterministic_and_decorrelated() {
+        let mut a = Pcg::activation_stream(9, 4, 2);
+        let mut b = Pcg::activation_stream(9, 4, 2);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // neighboring keys give uncorrelated streams
+        for (round, worker) in [(4u64, 3u64), (5, 2), (3, 2), (4, 1)] {
+            let mut x = Pcg::activation_stream(9, 4, 2);
+            let mut y = Pcg::activation_stream(9, round, worker);
+            let same =
+                (0..64).filter(|_| x.next_u32() == y.next_u32()).count();
+            assert!(same < 4, "round={round} worker={worker} same={same}");
+        }
+    }
+
+    #[test]
+    fn activation_stream_is_pure_function_of_its_key() {
+        // the stream for (seed=7, round=3, worker=5) is identical no
+        // matter what other streams exist or how much they've consumed —
+        // i.e. it cannot depend on worker count or thread schedule
+        let mut a = Pcg::activation_stream(7, 3, 5);
+        for w in 0..1000u64 {
+            let mut other = Pcg::activation_stream(7, 3, w);
+            other.next_u64(); // consume freely
+        }
+        let mut b = Pcg::activation_stream(7, 3, 5);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

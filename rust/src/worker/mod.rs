@@ -66,10 +66,47 @@ pub trait Trainer {
     fn aggregate(&mut self, models: &[&[f32]], weights: &[f32]) -> Params {
         aggregate_native(models, weights)
     }
+
+    /// Weighted aggregation (Eq. 4) into a reusable buffer (`out` is
+    /// overwritten). The engines call this on the round hot path so the
+    /// per-activation aggregate allocates nothing; the default routes
+    /// through [`aggregate`](Self::aggregate) so trainers that override
+    /// only that (e.g. the Pallas-kernel PJRT aggregate) keep their fast
+    /// path.
+    fn aggregate_into(
+        &mut self,
+        models: &[&[f32]],
+        weights: &[f32],
+        out: &mut Params,
+    ) {
+        let r = self.aggregate(models, weights);
+        out.clear();
+        out.extend_from_slice(&r);
+    }
+
+    /// Clone this trainer for one slot of the parallel round executor
+    /// (each pool thread owns its clone, keeping scratch thread-local).
+    /// `None` — the default — keeps round execution sequential; correct
+    /// for trainers whose state cannot cross threads (PJRT executables).
+    fn clone_box(&self) -> Option<Box<dyn Trainer + Send>> {
+        None
+    }
 }
 
 /// Reference CPU aggregation: `Σ_j σ_j · w_j` over flattened models.
 pub fn aggregate_native(models: &[&[f32]], weights: &[f32]) -> Params {
+    let mut out = Params::new();
+    aggregate_native_into(models, weights, &mut out);
+    out
+}
+
+/// [`aggregate_native`] into a reusable buffer (no allocation once `out`
+/// has the right capacity).
+pub fn aggregate_native_into(
+    models: &[&[f32]],
+    weights: &[f32],
+    out: &mut Params,
+) {
     assert_eq!(models.len(), weights.len());
     assert!(!models.is_empty(), "aggregate of zero models");
     let p = models[0].len();
@@ -78,22 +115,30 @@ pub fn aggregate_native(models: &[&[f32]], weights: &[f32]) -> Params {
         (wsum - 1.0).abs() < 1e-3,
         "aggregation weights must sum to 1 (got {wsum})"
     );
-    let mut out = vec![0.0f32; p];
+    out.clear();
+    out.resize(p, 0.0);
     for (m, &w) in models.iter().zip(weights) {
         assert_eq!(m.len(), p, "model length mismatch");
         for (o, &x) in out.iter_mut().zip(m.iter()) {
             *o += w * x;
         }
     }
-    out
 }
 
 /// Aggregation weights σ_t^{i,j} = D_j / Σ D_{j'} over the in-neighbor
 /// set (paper Eq. 4); `sizes` aligned with `models`.
 pub fn data_size_weights(sizes: &[usize]) -> Vec<f32> {
+    let mut out = Vec::new();
+    data_size_weights_into(sizes, &mut out);
+    out
+}
+
+/// [`data_size_weights`] into a reusable buffer.
+pub fn data_size_weights_into(sizes: &[usize], out: &mut Vec<f32>) {
     let total: usize = sizes.iter().sum();
     assert!(total > 0, "aggregation over empty datasets");
-    sizes.iter().map(|&s| s as f32 / total as f32).collect()
+    out.clear();
+    out.extend(sizes.iter().map(|&s| s as f32 / total as f32));
 }
 
 #[cfg(test)]
@@ -125,5 +170,23 @@ mod tests {
     #[should_panic(expected = "zero models")]
     fn aggregate_empty_panics() {
         aggregate_native(&[], &[]);
+    }
+
+    #[test]
+    fn aggregate_into_reuses_buffer_and_matches() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 6.0];
+        let mut out = vec![9.0f32; 7]; // stale content must be overwritten
+        aggregate_native_into(&[&a, &b], &[0.5, 0.5], &mut out);
+        assert_eq!(out, aggregate_native(&[&a, &b], &[0.5, 0.5]));
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn weights_into_matches_allocating_variant() {
+        let sizes = [10usize, 30, 60];
+        let mut out = vec![0.5f32; 1];
+        data_size_weights_into(&sizes, &mut out);
+        assert_eq!(out, data_size_weights(&sizes));
     }
 }

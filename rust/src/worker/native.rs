@@ -3,8 +3,14 @@
 //! Parameter layout: `[W (dim × C) row-major, b (C)]`, matching the
 //! flat-vector contract of the PJRT trainers so all coordinator code is
 //! backend-agnostic.
+//!
+//! The train/eval hot path is allocation-free after construction: batch
+//! indices, logits and gradient accumulators live in reusable scratch
+//! owned by the trainer, and the gradient update is one fused
+//! feature-major pass per sample (contiguous `gw` row writes) in f32
+//! arithmetic — only the loss accumulates in f64.
 
-use super::{Params, Trainer};
+use super::{aggregate_native_into, Params, Trainer};
 use crate::data::Dataset;
 use crate::util::rng::Pcg;
 
@@ -12,44 +18,57 @@ use crate::util::rng::Pcg;
 pub struct NativeTrainer {
     pub dim: usize,
     pub num_classes: usize,
-    /// Scratch: per-class logits/probabilities.
-    scratch: Vec<f64>,
+    /// Scratch: per-class logits, softmaxed in place to probabilities.
+    logits: Vec<f32>,
+    /// Scratch: per-class logit gradient δ_k = p_k − 1[k==y].
+    delta: Vec<f32>,
+    /// Scratch: minibatch gradient accumulators for W and b.
+    gw: Vec<f32>,
+    gb: Vec<f32>,
+    /// Scratch: minibatch index sample.
+    idx: Vec<usize>,
 }
 
 impl NativeTrainer {
     pub fn new(dim: usize, num_classes: usize) -> Self {
-        NativeTrainer { dim, num_classes, scratch: vec![0.0; num_classes] }
+        NativeTrainer {
+            dim,
+            num_classes,
+            logits: vec![0.0; num_classes],
+            delta: vec![0.0; num_classes],
+            gw: vec![0.0; dim * num_classes],
+            gb: vec![0.0; num_classes],
+            idx: Vec::new(),
+        }
     }
 
-    fn logits(&mut self, params: &[f32], x: &[f32]) {
+    fn compute_logits(&mut self, params: &[f32], x: &[f32]) {
         let c = self.num_classes;
         let d = self.dim;
-        let bias = &params[d * c..];
-        for k in 0..c {
-            self.scratch[k] = bias[k] as f64;
-        }
+        self.logits.copy_from_slice(&params[d * c..]);
         // W row-major [d][c]: logit_k += x_j * W[j][k]
         for (j, &xj) in x.iter().enumerate() {
             if xj == 0.0 {
                 continue;
             }
             let row = &params[j * c..(j + 1) * c];
-            for k in 0..c {
-                self.scratch[k] += xj as f64 * row[k] as f64;
+            for (l, &w) in self.logits.iter_mut().zip(row) {
+                *l += xj * w;
             }
         }
     }
 
-    /// In-place softmax over scratch; returns log-sum-exp.
-    fn softmax(&mut self) -> f64 {
-        let m = self.scratch.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let mut sum = 0.0;
-        for v in &mut self.scratch {
+    /// In-place softmax over the logits scratch; returns log-sum-exp.
+    fn softmax(&mut self) -> f32 {
+        let m = self.logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut sum = 0.0f32;
+        for v in &mut self.logits {
             *v = (*v - m).exp();
             sum += *v;
         }
-        for v in &mut self.scratch {
-            *v /= sum;
+        let inv = 1.0 / sum;
+        for v in &mut self.logits {
+            *v *= inv;
         }
         m + sum.ln()
     }
@@ -86,35 +105,51 @@ impl Trainer for NativeTrainer {
         let mut loss_acc = 0.0;
         let batch = batch.min(shard.len());
         for _ in 0..steps {
-            let idx = rng.sample_indices(shard.len(), batch);
-            // grad accumulators
-            let mut gw = vec![0.0f64; d * c];
-            let mut gb = vec![0.0f64; c];
+            rng.sample_indices_into(shard.len(), batch, &mut self.idx);
+            self.gw.fill(0.0);
+            self.gb.fill(0.0);
             let mut loss = 0.0f64;
+            // lift the index buffer out so iterating it doesn't hold a
+            // borrow of self across compute_logits (restored below)
+            let idx = std::mem::take(&mut self.idx);
             for &i in &idx {
                 let x = shard.feature_row(i);
                 let y = shard.labels[i] as usize;
-                self.logits(&p, x);
-                let gold = self.scratch[y];
+                self.compute_logits(&p, x);
+                let gold = self.logits[y];
                 let lse = self.softmax();
-                loss += lse - gold;
-                // dlogit_k = p_k - 1[k==y]
-                for k in 0..c {
-                    let dk = self.scratch[k] - if k == y { 1.0 } else { 0.0 };
-                    gb[k] += dk;
-                    for (j, &xj) in x.iter().enumerate() {
-                        if xj != 0.0 {
-                            gw[j * c + k] += dk * xj as f64;
-                        }
+                loss += (lse - gold) as f64;
+                // δ_k = p_k − 1[k==y]
+                for (k, (dv, gv)) in self
+                    .delta
+                    .iter_mut()
+                    .zip(self.gb.iter_mut())
+                    .enumerate()
+                {
+                    let dk =
+                        self.logits[k] - if k == y { 1.0 } else { 0.0 };
+                    *dv = dk;
+                    *gv += dk;
+                }
+                // fused feature-major pass: each nonzero x_j touches one
+                // contiguous gw row, instead of C strided feature sweeps
+                for (j, &xj) in x.iter().enumerate() {
+                    if xj == 0.0 {
+                        continue;
+                    }
+                    let row = &mut self.gw[j * c..(j + 1) * c];
+                    for (g, &dk) in row.iter_mut().zip(&self.delta) {
+                        *g += dk * xj;
                     }
                 }
             }
-            let scale = lr as f64 / batch as f64;
-            for (w, g) in p[..d * c].iter_mut().zip(&gw) {
-                *w -= (scale * g) as f32;
+            self.idx = idx;
+            let scale = lr / batch as f32;
+            for (w, &g) in p[..d * c].iter_mut().zip(&self.gw) {
+                *w -= scale * g;
             }
-            for (b, g) in p[d * c..].iter_mut().zip(&gb) {
-                *b -= (scale * g) as f32;
+            for (b, &g) in p[d * c..].iter_mut().zip(&self.gb) {
+                *b -= scale * g;
             }
             loss_acc += loss / batch as f64;
         }
@@ -123,27 +158,43 @@ impl Trainer for NativeTrainer {
 
     fn evaluate(&mut self, params: &[f32], data: &Dataset) -> (f64, f64) {
         assert!(!data.is_empty());
-        let mut loss = 0.0;
+        let mut loss = 0.0f64;
         let mut correct = 0usize;
         for i in 0..data.len() {
             let x = data.feature_row(i);
             let y = data.labels[i] as usize;
-            self.logits(params, x);
-            let gold = self.scratch[y];
+            self.compute_logits(params, x);
+            let gold = self.logits[y];
             let lse = self.softmax();
-            loss += lse - gold;
-            let pred = self
-                .scratch
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
+            loss += (lse - gold) as f64;
+            // total-order argmax: NaN probabilities (reachable with a hot
+            // LR blowing up the params) never win and never panic
+            let mut pred = 0usize;
+            let mut best = f32::NEG_INFINITY;
+            for (k, &v) in self.logits.iter().enumerate() {
+                if v > best {
+                    best = v;
+                    pred = k;
+                }
+            }
             if pred == y {
                 correct += 1;
             }
         }
         (loss / data.len() as f64, correct as f64 / data.len() as f64)
+    }
+
+    fn aggregate_into(
+        &mut self,
+        models: &[&[f32]],
+        weights: &[f32],
+        out: &mut Params,
+    ) {
+        aggregate_native_into(models, weights, out);
+    }
+
+    fn clone_box(&self) -> Option<Box<dyn Trainer + Send>> {
+        Some(Box::new(self.clone()))
     }
 }
 
@@ -194,12 +245,36 @@ mod tests {
     }
 
     #[test]
+    fn clone_box_trains_identically_to_the_original() {
+        // the parallel engine hands each pool thread a clone — cloned
+        // scratch must not change results
+        let (mut t, train, _) = setup();
+        let p0 = t.init(0);
+        let mut c = t.clone_box().expect("native trainer is cloneable");
+        let (a, la) = t.train(&p0, &train, 3, 16, 0.1, &mut Pcg::seeded(3));
+        let (b, lb) = c.train(&p0, &train, 3, 16, 0.1, &mut Pcg::seeded(3));
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
     fn eval_of_zero_params_is_chance() {
         let (mut t, _, test) = setup();
         let zeros = vec![0.0f32; t.param_count()];
         let (loss, acc) = t.evaluate(&zeros, &test);
         assert!((loss - (10f64).ln()).abs() < 1e-6);
         assert!(acc < 0.35);
+    }
+
+    #[test]
+    fn evaluate_with_nan_params_does_not_panic() {
+        // regression: the old argmax used partial_cmp().unwrap(), which
+        // panicked as soon as a hot LR produced NaN parameters
+        let (mut t, _, test) = setup();
+        let p = vec![f32::NAN; t.param_count()];
+        let (loss, acc) = t.evaluate(&p, &test);
+        assert!(loss.is_nan());
+        assert!((0.0..=1.0).contains(&acc));
     }
 
     #[test]

@@ -1,7 +1,12 @@
 //! The unified Experiment API: builder errors, backend dispatch, observer
-//! hooks, and — the load-bearing one — bit-identical parity between the
-//! new `Experiment::builder → VirtualClockBackend` path and the legacy
-//! `SimEngine::run` path for a seeded config.
+//! hooks, and two load-bearing bit-identity pins:
+//!
+//! * the legacy `SimEngine::run` facade vs. the
+//!   `Experiment::builder → VirtualClockBackend` path for a seeded
+//!   config (re-pinned for the parallel engine: per-activation RNG
+//!   streams changed every trajectory once, in this PR);
+//! * `run.threads=1` vs. `run.threads=N` — the parallel round executor
+//!   must be bit-identical for every thread count.
 
 use dystop::config::{BackendKind, ExperimentConfig, SchedulerKind, TrainerKind};
 use dystop::coordinator::RoundPlan;
@@ -28,6 +33,9 @@ fn small_cfg() -> ExperimentConfig {
     }
 }
 
+/// Field-by-field asserts (readable failure messages) backed by the one
+/// shared definition of "bit-identical run", `RunResult::bits_eq` — the
+/// same predicate the bench determinism witness records.
 fn assert_bit_identical(a: &RunResult, b: &RunResult) {
     assert_eq!(a.label, b.label);
     assert_eq!(a.model_bits.to_bits(), b.model_bits.to_bits());
@@ -50,6 +58,8 @@ fn assert_bit_identical(a: &RunResult, b: &RunResult) {
         assert_eq!(x.avg_loss.to_bits(), y.avg_loss.to_bits());
         assert_eq!(x.cum_transfers, y.cum_transfers);
     }
+    // the shared predicate must agree with the field-by-field asserts
+    assert!(a.bits_eq(b), "bits_eq diverged from field asserts");
 }
 
 #[test]
@@ -79,6 +89,31 @@ fn parity_holds_for_full_curves_across_schedulers() {
         // `run()` early-stops at target 2.0 → never fires → identical
         assert_bit_identical(&legacy, &new);
     }
+}
+
+#[test]
+fn thread_count_never_changes_results() {
+    // the tentpole invariant of the parallel virtual-clock engine:
+    // per-activation RNG streams + plan-order reduction make the run a
+    // pure function of the config, not of the thread schedule
+    let run_with = |threads: usize| {
+        let mut cfg = small_cfg();
+        cfg.workers = 10;
+        cfg.rounds = 8;
+        cfg.target_accuracy = 2.0;
+        cfg.threads = threads;
+        Experiment::builder(cfg)
+            .backend(BackendKind::Sim)
+            .run()
+            .unwrap()
+    };
+    let sequential = run_with(1);
+    for threads in [2usize, 4, 7] {
+        let parallel = run_with(threads);
+        assert_bit_identical(&sequential, &parallel);
+    }
+    // threads=0 (auto = available parallelism) included
+    assert_bit_identical(&sequential, &run_with(0));
 }
 
 #[test]
