@@ -1,0 +1,83 @@
+//! Churn quickstart: DySTop on a simulated edge network whose worker
+//! population follows the `diurnal` scenario preset — devices leave and
+//! rejoin tracking a day/night wave, with light random churn on top.
+//!
+//! Shows the scenario knobs (`ExperimentConfig::scenario` /
+//! `--set scenario.preset=...` on the CLI), the per-round population in
+//! the round records, and the applied event log in the run result.
+//!
+//! ```bash
+//! cargo run --release --example churn
+//! ```
+
+use dystop::config::{
+    BackendKind, ExperimentConfig, ScenarioConfig, ScenarioPreset,
+};
+use dystop::experiment::Experiment;
+
+fn main() {
+    let cfg = ExperimentConfig {
+        workers: 24,
+        rounds: 120,
+        phi: 0.7,
+        class_sep: 3.0,
+        eval_every: 10,
+        target_accuracy: 2.0, // full curve
+        scenario: ScenarioConfig::preset(ScenarioPreset::Diurnal),
+        ..Default::default()
+    };
+    println!(
+        "churn quickstart: {} workers, {} rounds, scenario={} \
+         (churn_rate={}, mean_downtime={} rounds)",
+        cfg.workers,
+        cfg.rounds,
+        cfg.scenario.preset.name(),
+        cfg.scenario.churn_rate,
+        cfg.scenario.mean_downtime_rounds,
+    );
+
+    let res = Experiment::builder(cfg)
+        .backend(BackendKind::Sim)
+        .run()
+        .unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        });
+
+    println!("\n  round  population  accuracy   loss");
+    for e in &res.evals {
+        let pop = res
+            .rounds
+            .iter()
+            .find(|r| r.round == e.round)
+            .map(|r| r.population)
+            .unwrap_or(0);
+        println!(
+            "  {:>5}  {:>10}  {:>8.3}  {:>6.3}",
+            e.round, pop, e.avg_accuracy, e.avg_loss
+        );
+    }
+
+    let (lo, hi) = res.population_range();
+    let count = |k: &str| res.events.iter().filter(|e| e.kind == k).count();
+    println!(
+        "\npopulation ranged {lo}–{hi} across {} applied events \
+         ({} leave, {} crash, {} rejoin, {} join)",
+        res.events.len(),
+        count("leave"),
+        count("crash"),
+        count("rejoin"),
+        count("join"),
+    );
+    println!(
+        "best accuracy {:.3} | total comm {:.4} GB | mean staleness {:.2}",
+        res.best_accuracy(),
+        res.total_comm_gb(),
+        res.mean_staleness()
+    );
+    assert!(
+        !res.events.is_empty() && lo < hi,
+        "diurnal scenario should have churned the population"
+    );
+    println!("ok: event log accounts for {} population changes", res.events.len());
+}

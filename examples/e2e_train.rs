@@ -12,8 +12,8 @@
 //! ```
 
 use dystop::config::{ExperimentConfig, ModelKind, SchedulerKind, TrainerKind};
+use dystop::experiment::{Experiment, VirtualClockBackend};
 use dystop::runtime::PjrtTrainer;
-use dystop::sim::SimEngine;
 use std::path::PathBuf;
 
 fn main() {
@@ -53,8 +53,14 @@ fn main() {
     );
 
     let wall = std::time::Instant::now();
-    let sim = SimEngine::with_trainer(cfg, Box::new(trainer));
-    let res = sim.run_full();
+    let res = Experiment::builder(cfg)
+        .trainer(Box::new(trainer))
+        .backend_impl(Box::new(VirtualClockBackend::full_curves()))
+        .run()
+        .unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        });
     let wall_s = wall.elapsed().as_secs_f64();
 
     println!("\n  round  vtime(s)  accuracy   loss");

@@ -8,7 +8,7 @@
 //! ```
 
 use dystop::config::{ExperimentConfig, SchedulerKind};
-use dystop::sim::SimEngine;
+use dystop::experiment::{Experiment, VirtualClockBackend};
 
 fn main() {
     let base = ExperimentConfig {
@@ -47,7 +47,13 @@ fn main() {
     ] {
         let mut cfg = base.clone();
         cfg.scheduler = kind;
-        let res = SimEngine::new(cfg).run_full();
+        let res = Experiment::builder(cfg)
+            .backend_impl(Box::new(VirtualClockBackend::full_curves()))
+            .run()
+            .unwrap_or_else(|e| {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            });
         let max_tau = res.rounds.iter().map(|r| r.max_staleness).max().unwrap();
         println!(
             "{:>10} | {:>9.3} | {:>9} | {:>10} | {:>9.2} | {:>7}",

@@ -20,6 +20,7 @@ struct Fix {
     h_cmp: Vec<f64>,
     h_est: Vec<f64>,
     data_sizes: Vec<usize>,
+    ids: Vec<usize>,
     label_dist: Vec<Vec<f64>>,
     candidates: Vec<Vec<usize>>,
     budgets: Vec<f64>,
@@ -44,6 +45,7 @@ fn fixture(n: usize, seed: u64) -> Fix {
         h_cmp: (0..n).map(|_| rng.f64() * 2.0).collect(),
         h_est: (0..n).map(|_| 0.3 + rng.f64() * 3.0).collect(),
         data_sizes: exp.workers.iter().map(|w| w.data_size()).collect(),
+        ids: (0..n).collect(),
         label_dist: exp.label_dist,
         candidates,
         budgets: exp.net.budgets.clone(),
@@ -60,6 +62,7 @@ fn view(f: &Fix, round: usize) -> SchedView<'_> {
         h_cmp: &f.h_cmp,
         h_est: &f.h_est,
         data_sizes: &f.data_sizes,
+        ids: &f.ids,
         label_dist: &f.label_dist,
         candidates: &f.candidates,
         budgets: &f.budgets,

@@ -15,7 +15,10 @@
 //! runs; the report schema is identical.
 
 use dystop::bench::{bench_with, write_json_report, BenchResult};
-use dystop::config::{ExperimentConfig, ModelKind, SchedulerKind};
+use dystop::config::{
+    ExperimentConfig, ModelKind, ScenarioConfig, ScenarioPreset,
+    SchedulerKind,
+};
 use dystop::data::{make_corpus, SyntheticSpec};
 use dystop::experiment::{Experiment, VirtualClockEngine};
 use dystop::util::json::Json;
@@ -24,6 +27,15 @@ use dystop::worker::{NativeTrainer, Params, Trainer};
 use std::path::{Path, PathBuf};
 
 fn sim_engine(n: usize, threads: usize, kind: SchedulerKind) -> VirtualClockEngine {
+    scenario_sim_engine(n, threads, kind, ScenarioConfig::default())
+}
+
+fn scenario_sim_engine(
+    n: usize,
+    threads: usize,
+    kind: SchedulerKind,
+    scenario: ScenarioConfig,
+) -> VirtualClockEngine {
     let cfg = ExperimentConfig {
         workers: n,
         rounds: 10_000, // never reached; we step manually
@@ -32,6 +44,7 @@ fn sim_engine(n: usize, threads: usize, kind: SchedulerKind) -> VirtualClockEngi
         target_accuracy: 2.0,
         scheduler: kind,
         threads,
+        scenario,
         ..Default::default()
     };
     let exp = Experiment::builder(cfg).build().expect("valid bench config");
@@ -84,6 +97,25 @@ fn sim_round_benches(
             },
         ));
     }
+
+    // churn overhead: the same round loop with the diurnal scenario
+    // active (membership compaction + event application on the hot path)
+    println!("\n== sim_round under churn (N=200, scenario=diurnal) ==");
+    let mut churn = scenario_sim_engine(
+        200,
+        0,
+        SchedulerKind::DySTop,
+        ScenarioConfig::preset(ScenarioPreset::Diurnal),
+    );
+    results.push(bench_with(
+        "sim_round N=200 dystop scenario=diurnal",
+        warm,
+        budget,
+        &mut || {
+            std::hint::black_box(churn.step());
+        },
+    ));
+    println!("  (population after benched rounds: {})", churn.population());
 }
 
 fn native_trainer_benches(
@@ -170,9 +202,10 @@ fn pjrt_benches(results: &mut Vec<BenchResult>) {
 }
 
 /// The parallel engine's core invariant: a seeded run is bit-identical
-/// for any `run.threads` setting. Checked here so the recorded perf
-/// numbers always come with a correctness witness.
-fn determinism_check() -> bool {
+/// for any `run.threads` setting — with or without an active scenario.
+/// Checked here so the recorded perf numbers always come with a
+/// correctness witness.
+fn determinism_check(scenario: ScenarioConfig) -> bool {
     let run_with = |threads: usize| {
         let cfg = ExperimentConfig {
             workers: 20,
@@ -182,6 +215,7 @@ fn determinism_check() -> bool {
             eval_every: 3,
             target_accuracy: 2.0,
             threads,
+            scenario,
             ..Default::default()
         };
         Experiment::builder(cfg).run().expect("determinism run")
@@ -206,10 +240,16 @@ fn main() {
     native_trainer_benches(&mut results, warm, budget.min(0.3));
     pjrt_benches(&mut results);
 
-    let det_ok = determinism_check();
+    let det_ok = determinism_check(ScenarioConfig::default());
     println!(
         "\ndeterminism threads=1 vs threads=4: {}",
         if det_ok { "bit-identical" } else { "MISMATCH" }
+    );
+    let det_churn_ok =
+        determinism_check(ScenarioConfig::preset(ScenarioPreset::Diurnal));
+    println!(
+        "determinism threads=1 vs threads=4 (scenario=diurnal): {}",
+        if det_churn_ok { "bit-identical" } else { "MISMATCH" }
     );
 
     let meta = vec![
@@ -223,9 +263,17 @@ fn main() {
             "determinism_threads_1_vs_4".to_string(),
             Json::Bool(det_ok),
         ),
+        (
+            "determinism_diurnal_threads_1_vs_4".to_string(),
+            Json::Bool(det_churn_ok),
+        ),
     ];
     write_json_report(Path::new("BENCH_sim.json"), meta, &results)
         .expect("write BENCH_sim.json");
     println!("wrote BENCH_sim.json ({} cases)", results.len());
     assert!(det_ok, "threads=1 vs threads=4 results diverged");
+    assert!(
+        det_churn_ok,
+        "threads=1 vs threads=4 diverged under scenario=diurnal"
+    );
 }

@@ -80,6 +80,10 @@ fn report(res: &RunResult, out: &PathBuf) -> Result<(), String> {
         .map_err(|e| e.to_string())?;
     res.write_rounds_csv(&out.join(format!("{}_rounds.csv", res.label)))
         .map_err(|e| e.to_string())?;
+    if !res.events.is_empty() {
+        res.write_events_csv(&out.join(format!("{}_events.csv", res.label)))
+            .map_err(|e| e.to_string())?;
+    }
     println!(
         "{}: {} rounds, final t={:.1}s, best acc={:.3}, comm={:.4} GB, mean τ={:.2}",
         res.label,
@@ -89,6 +93,13 @@ fn report(res: &RunResult, out: &PathBuf) -> Result<(), String> {
         res.total_comm_gb(),
         res.mean_staleness()
     );
+    if !res.events.is_empty() {
+        let (lo, hi) = res.population_range();
+        println!(
+            "scenario: {} events applied, population ranged {lo}–{hi}",
+            res.events.len()
+        );
+    }
     println!("wrote CSVs under {}", out.display());
     Ok(())
 }
@@ -108,13 +119,14 @@ pub fn main_with_args(args: &[String]) -> Result<(), String> {
                 cfg.threads.to_string()
             };
             println!(
-                "train: scheduler={} backend={} threads={} workers={} rounds={} φ={}",
+                "train: scheduler={} backend={} threads={} workers={} rounds={} φ={} scenario={}",
                 cfg.scheduler.name(),
                 cfg.backend.name(),
                 threads,
                 cfg.workers,
                 cfg.rounds,
-                cfg.phi
+                cfg.phi,
+                cfg.scenario.preset.name()
             );
             let backend = cfg.backend;
             let res = Experiment::builder(cfg).backend(backend).run()?;
@@ -198,7 +210,10 @@ fn usage() -> String {
      \n\
      train   --config FILE --set sim.workers=40 --set run.backend=sim|testbed --out results/\n\
      \x20       --set run.threads=N  round-execution threads (0 = all cores; bit-identical)\n\
-     figures --fig <3|4..18|20..25|all> --out results/ [--workers N --rounds R]\n\
+     \x20       --set scenario.preset=stable|diurnal|flash-crowd|degraded  population dynamics\n\
+     \x20       --set scenario.churn_rate=0.05 --set scenario.mean_downtime_rounds=6\n\
+     \x20       --set scenario.crash_frac=0.5  individual churn knobs (override preset)\n\
+     figures --fig <3|4..18|20..25|26|churn|all> --out results/ [--workers N --rounds R]\n\
      testbed --set sim.workers=15 --out results/\n\
      sweep   --key dystop.tau_bound --values 2,5,8 --out results/\n\
      inspect --artifacts artifacts/"
@@ -258,6 +273,37 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(err.contains("unknown backend"), "{err}");
+    }
+
+    #[test]
+    fn train_with_churn_scenario_writes_event_log() {
+        let dir = std::env::temp_dir().join("dystop_cli_churn_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        main_with_args(&s(&[
+            "train",
+            "--set", "sim.workers=10",
+            "--set", "sim.rounds=20",
+            "--set", "data.train_per_worker=48",
+            "--set", "eval.every=10",
+            "--set", "scenario.preset=diurnal",
+            "--out", dir.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let events = dir.join("dystop_events.csv");
+        assert!(events.exists(), "diurnal run must log scenario events");
+        let text = std::fs::read_to_string(&events).unwrap();
+        assert!(text.lines().count() > 1, "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_scenario_preset_is_clean_error() {
+        let err = main_with_args(&s(&[
+            "train",
+            "--set", "scenario.preset=apocalypse",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("unknown scenario preset"), "{err}");
     }
 
     #[test]

@@ -121,6 +121,104 @@ impl BackendKind {
     }
 }
 
+/// Which scenario preset drives the population/environment timeline
+/// (`scenario.preset` knob — see [`crate::scenario`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ScenarioPreset {
+    /// Static population, nominal environment: the empty timeline. The
+    /// default — bit-identical to the pre-scenario engine.
+    #[default]
+    Stable,
+    /// Day/night population wave: workers leave and rejoin tracking a
+    /// sinusoidal target, plus light random churn.
+    Diurnal,
+    /// Population surge: a reduced initial cast, a mass join wave
+    /// mid-run (fresh devices), then mass departure.
+    FlashCrowd,
+    /// Hostile environment: heavy churn with crashes, a bandwidth
+    /// collapse window, a mobility burst, and a region partition.
+    Degraded,
+}
+
+impl ScenarioPreset {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "stable" => Ok(Self::Stable),
+            "diurnal" => Ok(Self::Diurnal),
+            "flash-crowd" | "flashcrowd" | "flash_crowd" => Ok(Self::FlashCrowd),
+            "degraded" => Ok(Self::Degraded),
+            other => Err(format!(
+                "unknown scenario preset {other:?} (stable|diurnal|flash-crowd|degraded)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Stable => "stable",
+            Self::Diurnal => "diurnal",
+            Self::FlashCrowd => "flash-crowd",
+            Self::Degraded => "degraded",
+        }
+    }
+
+    /// Preset knob defaults: (churn_rate, mean_downtime_rounds,
+    /// crash_frac). Explicit `scenario.*` keys override these.
+    pub fn default_knobs(self) -> (f64, f64, f64) {
+        match self {
+            Self::Stable => (0.0, 10.0, 0.0),
+            Self::Diurnal => (0.02, 12.0, 0.1),
+            Self::FlashCrowd => (0.01, 8.0, 0.25),
+            Self::Degraded => (0.05, 6.0, 0.5),
+        }
+    }
+}
+
+/// Scenario-layer knobs: which preset timeline to generate and the
+/// stochastic-churn generator parameters (`scenario.*` keys).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScenarioConfig {
+    pub preset: ScenarioPreset,
+    /// Per-present-worker, per-round probability of departing
+    /// (`scenario.churn_rate`).
+    pub churn_rate: f64,
+    /// Mean downtime before a departed worker returns, in rounds
+    /// (`scenario.mean_downtime_rounds`; exponential draw, ceiled to a
+    /// whole number of rounds, min 1).
+    pub mean_downtime_rounds: f64,
+    /// Fraction of departures that are crashes (in-flight models
+    /// dropped) rather than graceful leaves (`scenario.crash_frac`).
+    pub crash_frac: f64,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        Self::preset(ScenarioPreset::Stable)
+    }
+}
+
+impl ScenarioConfig {
+    /// A scenario config carrying the preset's default knob values.
+    pub fn preset(preset: ScenarioPreset) -> Self {
+        let (churn_rate, mean_downtime_rounds, crash_frac) =
+            preset.default_knobs();
+        ScenarioConfig { preset, churn_rate, mean_downtime_rounds, crash_frac }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&self.churn_rate) {
+            return Err("scenario.churn_rate must be in [0,1]".into());
+        }
+        if self.mean_downtime_rounds < 1.0 {
+            return Err("scenario.mean_downtime_rounds must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.crash_frac) {
+            return Err("scenario.crash_frac must be in [0,1]".into());
+        }
+        Ok(())
+    }
+}
+
 /// Wireless edge-network model constants (paper §VI-A1).
 #[derive(Clone, Debug)]
 pub struct NetworkConfig {
@@ -238,6 +336,11 @@ pub struct ExperimentConfig {
     pub target_accuracy: f64,
 
     pub network: NetworkConfig,
+
+    /// Population/environment dynamics (`scenario.*` knobs). The default
+    /// (`preset=stable`) is the empty timeline: bit-identical to the
+    /// pre-scenario engine.
+    pub scenario: ScenarioConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -270,6 +373,7 @@ impl Default for ExperimentConfig {
             eval_worker_frac: 1.0,
             target_accuracy: 0.8,
             network: NetworkConfig::default(),
+            scenario: ScenarioConfig::default(),
         }
     }
 }
@@ -334,6 +438,16 @@ impl ExperimentConfig {
         opt!(e.network.mobility_m, get_f64, "net.mobility_m");
         opt!(e.network.payload_bits, get_f64, "net.payload_bits");
         opt!(e.network.channels, get_usize, "net.channels");
+        if let Some(s) = cfg.get("scenario.preset") {
+            e.scenario = ScenarioConfig::preset(ScenarioPreset::parse(s)?);
+        }
+        opt!(e.scenario.churn_rate, get_f64, "scenario.churn_rate");
+        opt!(
+            e.scenario.mean_downtime_rounds,
+            get_f64,
+            "scenario.mean_downtime_rounds"
+        );
+        opt!(e.scenario.crash_frac, get_f64, "scenario.crash_frac");
         e.validate()?;
         Ok(e)
     }
@@ -360,6 +474,7 @@ impl ExperimentConfig {
         if self.network.comm_range_m <= 0.0 {
             return Err("net.comm_range_m must be > 0".into());
         }
+        self.scenario.validate()?;
         Ok(())
     }
 }
@@ -420,6 +535,45 @@ mod tests {
         let cfg = Config::parse("[run]\nthreads = 4").unwrap();
         let e = ExperimentConfig::from_config(&cfg).unwrap();
         assert_eq!(e.threads, 4);
+    }
+
+    #[test]
+    fn scenario_knobs_parse_with_preset_defaults_and_overrides() {
+        // default is stable with zero churn
+        let d = ExperimentConfig::default();
+        assert_eq!(d.scenario.preset, ScenarioPreset::Stable);
+        assert_eq!(d.scenario.churn_rate, 0.0);
+        // preset sets knob defaults
+        let cfg = Config::parse("[scenario]\npreset = diurnal\n").unwrap();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.scenario.preset, ScenarioPreset::Diurnal);
+        assert!(e.scenario.churn_rate > 0.0);
+        // explicit knobs override the preset defaults
+        let cfg = Config::parse(
+            "[scenario]\npreset = degraded\nchurn_rate = 0.11\ncrash_frac = 0.9\n",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.scenario.preset, ScenarioPreset::Degraded);
+        assert_eq!(e.scenario.churn_rate, 0.11);
+        assert_eq!(e.scenario.crash_frac, 0.9);
+        // invalid values rejected
+        let cfg = Config::parse("[scenario]\nchurn_rate = 1.5\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[scenario]\npreset = bogus\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn scenario_preset_names_roundtrip() {
+        for p in [
+            ScenarioPreset::Stable,
+            ScenarioPreset::Diurnal,
+            ScenarioPreset::FlashCrowd,
+            ScenarioPreset::Degraded,
+        ] {
+            assert_eq!(ScenarioPreset::parse(p.name()).unwrap(), p);
+        }
     }
 
     #[test]

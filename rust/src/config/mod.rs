@@ -18,8 +18,8 @@
 mod experiment;
 
 pub use experiment::{
-    BackendKind, ExperimentConfig, ModelKind, NetworkConfig, SchedulerKind,
-    TrainerKind,
+    BackendKind, ExperimentConfig, ModelKind, NetworkConfig, ScenarioConfig,
+    ScenarioPreset, SchedulerKind, TrainerKind,
 };
 
 use std::collections::BTreeMap;

@@ -65,8 +65,8 @@ impl Scheduler for AsyDfl {
                 .filter(|&j| j != i)
                 .collect();
             cands.sort_by(|&a, &b| {
-                let ua = emd(&view.label_dist[i], &view.label_dist[a]);
-                let ub = emd(&view.label_dist[i], &view.label_dist[b]);
+                let ua = emd(view.labels(i), view.labels(a));
+                let ub = emd(view.labels(i), view.labels(b));
                 ub.partial_cmp(&ua).unwrap()
             });
             let mut picked = Vec::new();

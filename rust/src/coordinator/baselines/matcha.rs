@@ -47,10 +47,7 @@ impl Scheduler for Matcha {
                 .filter(|&j| view.candidates[j].contains(&i))
                 .collect();
             near.sort_by(|&a, &b| {
-                view.net
-                    .distance(i, a)
-                    .partial_cmp(&view.net.distance(i, b))
-                    .unwrap()
+                view.dist(i, a).partial_cmp(&view.dist(i, b)).unwrap()
             });
             for &j in near.iter().take(self.base_degree) {
                 keep[i].insert(j);

@@ -17,6 +17,7 @@ pub use waa::waa_select;
 use crate::config::ExperimentConfig;
 use crate::network::EdgeNetwork;
 use crate::util::rng::Pcg;
+use std::fmt;
 
 /// DySTop-specific knobs carried into the schedulers.
 #[derive(Clone, Copy, Debug)]
@@ -43,35 +44,73 @@ impl From<&ExperimentConfig> for SchedulerParams {
 }
 
 /// Read-only per-round snapshot handed to schedulers.
+///
+/// # Indexing under dynamic populations
+///
+/// The view is *compacted over present workers*: every dense slice
+/// (`tau`, `queues`, `h_cmp`, `h_est`, `data_sizes`, `candidates`,
+/// `budgets`) has one entry per **present** worker, and `candidates`
+/// contains these dense indices too. Schedulers therefore plan over a
+/// shrinking/growing population without any membership logic of their
+/// own; the engine remaps the returned [`RoundPlan`] back to global
+/// worker ids through [`ids`](Self::ids).
+///
+/// The run-long stores (`label_dist`, `pulls`, `net`) stay indexed by
+/// global id — access them through [`labels`](Self::labels),
+/// [`pull_count`](Self::pull_count) and [`dist`](Self::dist), which
+/// remap internally. With everyone present `ids` is the identity and
+/// the view is exactly the pre-scenario one.
 pub struct SchedView<'a> {
     /// Round index t (1-based like the paper).
     pub round: usize,
-    /// Staleness τ_t^i per worker.
+    /// Staleness τ_t^i per present worker.
     pub tau: &'a [u64],
-    /// Lyapunov queues q_t^i per worker.
+    /// Lyapunov queues q_t^i per present worker.
     pub queues: &'a [f64],
-    /// Residual compute h_t^{i,cmp} (Eq. 7) per worker, seconds.
+    /// Residual compute h_t^{i,cmp} (Eq. 7) per present worker, seconds.
     pub h_cmp: &'a [f64],
     /// Estimated per-worker round cost H_t^i (Eq. 8), seconds.
     pub h_est: &'a [f64],
     /// Data sizes D_i.
     pub data_sizes: &'a [usize],
+    /// Dense→global worker-id map (identity when everyone is present).
+    pub ids: &'a [usize],
     /// Per-worker label distributions (PTCA phase 1 / EMD).
+    /// **Global-indexed** — use [`labels`](Self::labels).
     pub label_dist: &'a [Vec<f64>],
-    /// Candidate in-range workers C_t^i (Alg. 3 input), per worker.
+    /// Candidate in-range workers C_t^i (Alg. 3 input), per present
+    /// worker, as dense indices.
     pub candidates: &'a [Vec<usize>],
     /// Per-worker bandwidth budgets \hat B_t^i, in model transfers.
     pub budgets: &'a [f64],
     /// Pull history: pulls\[i\]\[j\] = times i pulled from j (Eq. 47).
+    /// **Global-indexed** — use [`pull_count`](Self::pull_count).
     pub pulls: &'a [Vec<u64>],
-    /// The physical network (distances for p1).
+    /// The physical network. **Global-indexed** — use
+    /// [`dist`](Self::dist) for distances.
     pub net: &'a EdgeNetwork,
     pub params: SchedulerParams,
 }
 
 impl<'a> SchedView<'a> {
+    /// Number of present workers (the dense dimension).
     pub fn n(&self) -> usize {
         self.tau.len()
+    }
+
+    /// Label distribution of dense worker `k`.
+    pub fn labels(&self, k: usize) -> &[f64] {
+        &self.label_dist[self.ids[k]]
+    }
+
+    /// Physical distance between dense workers `a` and `b`.
+    pub fn dist(&self, a: usize, b: usize) -> f64 {
+        self.net.distance(self.ids[a], self.ids[b])
+    }
+
+    /// Times dense worker `a` pulled from dense worker `b` (Eq. 47).
+    pub fn pull_count(&self, a: usize, b: usize) -> u64 {
+        self.pulls[self.ids[a]][self.ids[b]]
     }
 }
 
@@ -88,6 +127,68 @@ pub struct RoundPlan {
     pub pushes: Vec<(usize, usize)>,
 }
 
+/// Every way a [`RoundPlan`] can violate the engines' invariants.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlanError {
+    /// `active` and `pulls_from` have different lengths.
+    LengthMismatch { active: usize, pulls_from: usize },
+    /// An activation or pull source references a worker id ≥ n.
+    OutOfRange { worker: usize, n: usize },
+    /// A worker appears twice in `active`.
+    DuplicateActivation { worker: usize },
+    /// A worker pulls from itself (self-aggregation is implicit).
+    SelfPull { worker: usize },
+    /// The same pull edge appears twice for one activation.
+    DuplicatePull { worker: usize, source: usize },
+    /// A push edge is out of range or a self-push.
+    BadPushEdge { from: usize, to: usize },
+    /// A push originates from a worker that is not activated.
+    NonActivatedPush { from: usize, to: usize },
+    /// The same push edge appears twice.
+    DuplicatePush { from: usize, to: usize },
+    /// The plan references a worker that is absent this round
+    /// (departed/crashed — scenario layer).
+    AbsentWorker { worker: usize },
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            PlanError::LengthMismatch { active, pulls_from } => write!(
+                f,
+                "active/pulls_from length mismatch ({active} vs {pulls_from})"
+            ),
+            PlanError::OutOfRange { worker, n } => {
+                write!(f, "worker {worker} out of range (n={n})")
+            }
+            PlanError::DuplicateActivation { worker } => {
+                write!(f, "worker {worker} activated twice")
+            }
+            PlanError::SelfPull { worker } => {
+                write!(f, "worker {worker} pulls from itself")
+            }
+            PlanError::DuplicatePull { worker, source } => {
+                write!(f, "duplicate pull {worker}←{source}")
+            }
+            PlanError::BadPushEdge { from, to } => {
+                write!(f, "bad push edge ({from},{to})")
+            }
+            PlanError::NonActivatedPush { from, to } => write!(
+                f,
+                "push ({from},{to}) originates from non-activated worker {from}"
+            ),
+            PlanError::DuplicatePush { from, to } => {
+                write!(f, "duplicate push edge ({from},{to})")
+            }
+            PlanError::AbsentWorker { worker } => {
+                write!(f, "plan references absent worker {worker}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
 impl RoundPlan {
     /// Total model transfers this round (each pull + each push moves one
     /// model — Eq. 10's accounting).
@@ -95,18 +196,45 @@ impl RoundPlan {
         self.pulls_from.iter().map(|v| v.len()).sum::<usize>() + self.pushes.len()
     }
 
-    /// Sanity: every plan invariant the sim relies on.
-    pub fn validate(&self, n: usize) -> Result<(), String> {
+    /// Sanity: every plan invariant the sim relies on, ignoring
+    /// membership (all `n` workers assumed present).
+    pub fn validate(&self, n: usize) -> Result<(), PlanError> {
+        self.validate_members(n, None)
+    }
+
+    /// Like [`validate`](Self::validate), but additionally rejects any
+    /// reference to an absent worker (`present[i] == false`).
+    pub fn validate_present(&self, present: &[bool]) -> Result<(), PlanError> {
+        self.validate_members(present.len(), Some(present))
+    }
+
+    fn validate_members(
+        &self,
+        n: usize,
+        present: Option<&[bool]>,
+    ) -> Result<(), PlanError> {
+        let check_member = |w: usize| -> Result<(), PlanError> {
+            if w >= n {
+                return Err(PlanError::OutOfRange { worker: w, n });
+            }
+            if let Some(p) = present {
+                if !p[w] {
+                    return Err(PlanError::AbsentWorker { worker: w });
+                }
+            }
+            Ok(())
+        };
         if self.active.len() != self.pulls_from.len() {
-            return Err("active/pulls_from length mismatch".into());
+            return Err(PlanError::LengthMismatch {
+                active: self.active.len(),
+                pulls_from: self.pulls_from.len(),
+            });
         }
         let mut seen = vec![false; n];
         for &a in &self.active {
-            if a >= n {
-                return Err(format!("active worker {a} out of range"));
-            }
+            check_member(a)?;
             if seen[a] {
-                return Err(format!("worker {a} activated twice"));
+                return Err(PlanError::DuplicateActivation { worker: a });
             }
             seen[a] = true;
         }
@@ -114,29 +242,27 @@ impl RoundPlan {
             let owner = self.active[k];
             let mut dedup = std::collections::BTreeSet::new();
             for &j in pulls {
-                if j >= n {
-                    return Err(format!("pull source {j} out of range"));
-                }
+                check_member(j)?;
                 if j == owner {
-                    return Err(format!("worker {owner} pulls from itself"));
+                    return Err(PlanError::SelfPull { worker: owner });
                 }
                 if !dedup.insert(j) {
-                    return Err(format!("duplicate pull {owner}←{j}"));
+                    return Err(PlanError::DuplicatePull { worker: owner, source: j });
                 }
             }
         }
         let mut push_seen = std::collections::BTreeSet::new();
         for &(f, t) in &self.pushes {
             if f >= n || t >= n || f == t {
-                return Err(format!("bad push edge ({f},{t})"));
+                return Err(PlanError::BadPushEdge { from: f, to: t });
             }
+            check_member(f)?;
+            check_member(t)?;
             if !seen[f] {
-                return Err(format!(
-                    "push ({f},{t}) originates from non-activated worker {f}"
-                ));
+                return Err(PlanError::NonActivatedPush { from: f, to: t });
             }
             if !push_seen.insert((f, t)) {
-                return Err(format!("duplicate push edge ({f},{t})"));
+                return Err(PlanError::DuplicatePush { from: f, to: t });
             }
         }
         Ok(())
@@ -218,6 +344,7 @@ pub(crate) mod testutil {
         pub h_cmp: Vec<f64>,
         pub h_est: Vec<f64>,
         pub data_sizes: Vec<usize>,
+        pub ids: Vec<usize>,
         pub label_dist: Vec<Vec<f64>>,
         pub candidates: Vec<Vec<usize>>,
         pub budgets: Vec<f64>,
@@ -241,6 +368,7 @@ pub(crate) mod testutil {
                 h_cmp: (0..n).map(|_| rng.f64() * 2.0).collect(),
                 h_est: (0..n).map(|_| 0.5 + rng.f64() * 3.0).collect(),
                 data_sizes: (0..n).map(|_| 64 + rng.below_usize(128)).collect(),
+                ids: (0..n).collect(), // everyone present
                 label_dist,
                 candidates,
                 budgets: vec![8.0; n],
@@ -264,6 +392,7 @@ pub(crate) mod testutil {
                 h_cmp: &self.h_cmp,
                 h_est: &self.h_est,
                 data_sizes: &self.data_sizes,
+                ids: &self.ids,
                 label_dist: &self.label_dist,
                 candidates: &self.candidates,
                 budgets: &self.budgets,
@@ -290,13 +419,27 @@ mod tests {
         };
         assert!(p.validate(3).is_ok());
         p.pulls_from[0] = vec![0]; // self-pull
-        assert!(p.validate(3).is_err());
+        assert_eq!(p.validate(3), Err(PlanError::SelfPull { worker: 0 }));
         p.pulls_from[0] = vec![1, 1]; // duplicate
-        assert!(p.validate(3).is_err());
+        assert_eq!(
+            p.validate(3),
+            Err(PlanError::DuplicatePull { worker: 0, source: 1 })
+        );
         p.pulls_from[0] = vec![5]; // out of range
-        assert!(p.validate(3).is_err());
+        assert_eq!(
+            p.validate(3),
+            Err(PlanError::OutOfRange { worker: 5, n: 3 })
+        );
         let q = RoundPlan { active: vec![0, 0], pulls_from: vec![vec![], vec![]], pushes: vec![] };
-        assert!(q.validate(3).is_err());
+        assert_eq!(
+            q.validate(3),
+            Err(PlanError::DuplicateActivation { worker: 0 })
+        );
+        let r = RoundPlan { active: vec![0], pulls_from: vec![], pushes: vec![] };
+        assert!(matches!(
+            r.validate(3),
+            Err(PlanError::LengthMismatch { .. })
+        ));
 
         // push-edge invariants
         let base = RoundPlan {
@@ -308,17 +451,53 @@ mod tests {
         let mut bad = base.clone();
         bad.pushes = vec![(0, 1), (0, 1)]; // duplicate edge
         let err = bad.validate(3).unwrap_err();
-        assert!(err.contains("duplicate push"), "{err}");
+        assert_eq!(err, PlanError::DuplicatePush { from: 0, to: 1 });
+        assert!(err.to_string().contains("duplicate push"), "{err}");
         let mut bad = base.clone();
         bad.pushes = vec![(1, 2)]; // sender not activated
         let err = bad.validate(3).unwrap_err();
-        assert!(err.contains("non-activated"), "{err}");
+        assert_eq!(err, PlanError::NonActivatedPush { from: 1, to: 2 });
+        assert!(err.to_string().contains("non-activated"), "{err}");
         let mut bad = base.clone();
         bad.pushes = vec![(0, 0)]; // self-push
-        assert!(bad.validate(3).is_err());
+        assert_eq!(
+            bad.validate(3),
+            Err(PlanError::BadPushEdge { from: 0, to: 0 })
+        );
         let mut bad = base;
         bad.pushes = vec![(0, 7)]; // out of range
-        assert!(bad.validate(3).is_err());
+        assert_eq!(
+            bad.validate(3),
+            Err(PlanError::BadPushEdge { from: 0, to: 7 })
+        );
+    }
+
+    #[test]
+    fn plan_error_is_std_error_with_messages() {
+        let e: Box<dyn std::error::Error> =
+            Box::new(PlanError::AbsentWorker { worker: 4 });
+        assert!(e.to_string().contains("absent worker 4"), "{e}");
+    }
+
+    #[test]
+    fn validate_present_rejects_absent_references() {
+        let plan = RoundPlan {
+            active: vec![0, 2],
+            pulls_from: vec![vec![2], vec![1]],
+            pushes: vec![(0, 1)],
+        };
+        let all = vec![true; 3];
+        assert!(plan.validate_present(&all).is_ok());
+        // absent activation
+        assert_eq!(
+            plan.validate_present(&[true, true, false]),
+            Err(PlanError::AbsentWorker { worker: 2 })
+        );
+        // absent pull source / push target
+        assert_eq!(
+            plan.validate_present(&[true, false, true]),
+            Err(PlanError::AbsentWorker { worker: 1 })
+        );
     }
 
     #[test]

@@ -17,7 +17,8 @@
 use super::SchedView;
 use crate::data::emd;
 
-/// Phase-1 priority p1(v_i, v_j) (Eq. 46).
+/// Phase-1 priority p1(v_i, v_j) (Eq. 46). Indices are the view's dense
+/// (present-worker) indices; the view remaps to global stores.
 pub fn phase1_priority(
     view: &SchedView<'_>,
     i: usize,
@@ -25,15 +26,15 @@ pub fn phase1_priority(
     emd_max: f64,
     dist_max: f64,
 ) -> f64 {
-    let e = emd(&view.label_dist[i], &view.label_dist[j]);
-    let d = view.net.distance(i, j);
+    let e = emd(view.labels(i), view.labels(j));
+    let d = view.dist(i, j);
     e / emd_max.max(1e-9) + (1.0 - d / dist_max.max(1e-9))
 }
 
 /// Phase-2 priority p2(v_i, v_j) (Eq. 47).
 pub fn phase2_priority(view: &SchedView<'_>, i: usize, j: usize) -> f64 {
     let t = view.round.max(1) as f64;
-    let pull_frac = view.pulls[i][j] as f64 / t;
+    let pull_frac = view.pull_count(i, j) as f64 / t;
     let tau_gap = (view.tau[i] as i64 - view.tau[j] as i64).unsigned_abs() as f64;
     (1.0 - pull_frac) * (1.0 / (1.0 + tau_gap))
 }
@@ -94,8 +95,8 @@ impl Ptca {
             let mut dm = 0.0f64;
             for &i in active {
                 for &j in &view.candidates[i] {
-                    em = em.max(emd(&view.label_dist[i], &view.label_dist[j]));
-                    dm = dm.max(view.net.distance(i, j));
+                    em = em.max(emd(view.labels(i), view.labels(j)));
+                    dm = dm.max(view.dist(i, j));
                 }
             }
             (em.max(1e-9), dm.max(1e-9))

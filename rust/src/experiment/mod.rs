@@ -14,10 +14,17 @@
 //!   [`VirtualClockBackend`] (deterministic virtual-clock simulation,
 //!   §VI) or [`ThreadedBackend`] (thread-per-worker with real message
 //!   passing and compressed wall-clock delays, §VII);
-//! * [`RoundObserver`] — how rounds are *watched*: metrics recording is
-//!   itself the first observer ([`RunRecorder`]), and callers can attach
-//!   more (figure capture, fault injection, live dashboards) without
-//!   touching the engines.
+//! * [`RoundObserver`] — how rounds are *watched*
+//!   (`on_scenario_event`/`on_plan`/`on_round_end`/`on_eval`): metrics
+//!   recording is itself the first observer ([`RunRecorder`]), and
+//!   callers can attach more (figure capture, fault injection, live
+//!   dashboards) without touching the engines.
+//!
+//! Population/environment dynamics come from the scenario layer
+//! ([`crate::scenario`]): the builder generates a deterministic event
+//! timeline from `cfg.scenario` (or an explicit
+//! [`ExperimentBuilder::scenario`] script) and both backends apply it at
+//! round boundaries.
 //!
 //! ```no_run
 //! use dystop::config::{BackendKind, ExperimentConfig};
@@ -31,8 +38,9 @@
 //! println!("best accuracy {:.3}", res.best_accuracy());
 //! ```
 //!
-//! The legacy entry points `sim::SimEngine::new` / `testbed::run_testbed`
-//! are retained as thin wrappers over this module and are deprecated.
+//! The legacy facades `sim::SimEngine` / `testbed::run_testbed` (thin
+//! deprecated wrappers kept through PR 1–2) are gone; this module is the
+//! only construction path.
 
 mod observer;
 mod threaded;
@@ -47,6 +55,7 @@ use crate::coordinator::{make_scheduler, Scheduler};
 use crate::data::{dirichlet_partition, make_corpus, Dataset, SyntheticSpec};
 use crate::metrics::RunResult;
 use crate::network::EdgeNetwork;
+use crate::scenario::Scenario;
 use crate::util::rng::Pcg;
 use crate::worker::{default_trainer, Trainer, WorkerState};
 use std::fmt;
@@ -114,6 +123,9 @@ pub struct Experiment {
     pub label_dist: Vec<Vec<f64>>,
     /// Bits of one model transfer on the simulated wire.
     pub model_bits: f64,
+    /// The population/environment event timeline both backends apply at
+    /// round boundaries (empty under `scenario.preset=stable`).
+    pub scenario: Scenario,
     pub(crate) trainer: Box<dyn Trainer>,
     pub(crate) scheduler: Box<dyn Scheduler>,
     pub(crate) rng: Pcg,
@@ -128,6 +140,7 @@ impl Experiment {
             trainer: None,
             backend: None,
             observers: Vec::new(),
+            scenario: None,
         }
     }
 
@@ -145,6 +158,7 @@ pub struct ExperimentBuilder {
     trainer: Option<Box<dyn Trainer>>,
     backend: Option<Box<dyn Backend>>,
     observers: Vec<Box<dyn RoundObserver>>,
+    scenario: Option<Scenario>,
 }
 
 impl ExperimentBuilder {
@@ -181,6 +195,13 @@ impl ExperimentBuilder {
     /// fire after the built-in [`RunRecorder`], in attachment order.
     pub fn observer(mut self, obs: Box<dyn RoundObserver>) -> Self {
         self.observers.push(obs);
+        self
+    }
+
+    /// Use an explicit, hand-scripted event timeline instead of the one
+    /// generated from `cfg.scenario` (fault-injection tests, replays).
+    pub fn scenario(mut self, scenario: Scenario) -> Self {
+        self.scenario = Some(scenario);
         self
     }
 
@@ -244,6 +265,28 @@ impl ExperimentBuilder {
         };
         let label_dist = stats.label_distributions;
 
+        // the event timeline draws from its own dedicated RNG stream, so
+        // scenario generation never perturbs the substrate construction
+        // above (stable preset ⇒ empty timeline ⇒ pre-scenario bits)
+        let scenario = self.scenario.unwrap_or_else(|| {
+            Scenario::generate(
+                &cfg.scenario,
+                cfg.workers,
+                cfg.rounds,
+                cfg.seed,
+            )
+        });
+        // hand-scripted timelines are unchecked input: reject worker ids
+        // beyond the population before an engine can index out of bounds
+        if let Some(w) = scenario.max_worker() {
+            if w >= cfg.workers {
+                return Err(ExperimentError::InvalidConfig(format!(
+                    "scenario references worker {w} but sim.workers = {}",
+                    cfg.workers
+                )));
+            }
+        }
+
         Ok(Experiment {
             cfg,
             net,
@@ -251,6 +294,7 @@ impl ExperimentBuilder {
             test,
             label_dist,
             model_bits,
+            scenario,
             trainer,
             scheduler,
             rng,
@@ -299,6 +343,32 @@ mod tests {
         assert!(exp.model_bits > 0.0);
         assert_eq!(exp.scheduler_name(), "dystop");
         assert!(!exp.test.is_empty());
+    }
+
+    #[test]
+    fn builder_generates_scenario_from_config() {
+        use crate::config::{ScenarioConfig, ScenarioPreset};
+        use crate::scenario::{Scenario, ScenarioEvent};
+        // default config → stable → empty timeline
+        let exp = Experiment::builder(tiny_cfg()).build().unwrap();
+        assert!(exp.scenario.is_empty());
+        // diurnal preset → generated timeline
+        let mut cfg = tiny_cfg();
+        cfg.workers = 20;
+        cfg.rounds = 80;
+        cfg.scenario = ScenarioConfig::preset(ScenarioPreset::Diurnal);
+        let exp = Experiment::builder(cfg).build().unwrap();
+        assert!(!exp.scenario.is_empty());
+        // explicit timeline overrides generation
+        let script = Scenario::from_events(vec![(
+            2,
+            ScenarioEvent::Leave { worker: 1 },
+        )]);
+        let exp = Experiment::builder(tiny_cfg())
+            .scenario(script)
+            .build()
+            .unwrap();
+        assert_eq!(exp.scenario.len(), 1);
     }
 
     #[test]

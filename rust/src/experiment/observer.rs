@@ -4,12 +4,18 @@
 //! dashboards are additional plug-ins rather than engine fields.
 
 use crate::coordinator::RoundPlan;
-use crate::metrics::{EvalRecord, RoundRecord, RunResult};
+use crate::metrics::{EvalRecord, EventRecord, RoundRecord, RunResult};
 
 /// Hooks fired by every [`Backend`](super::Backend) on the coordinator
 /// thread (never concurrently). All methods default to no-ops so an
 /// observer implements only what it watches.
 pub trait RoundObserver {
+    /// A scenario event (churn, failure, environment shift) was applied
+    /// at a round boundary, before that round's plan.
+    fn on_scenario_event(&mut self, rec: &EventRecord) {
+        let _ = rec;
+    }
+
     /// The scheduler produced (and the engine validated) a round plan,
     /// before execution.
     fn on_plan(&mut self, round: usize, plan: &RoundPlan) {
@@ -48,6 +54,10 @@ impl RunRecorder {
 }
 
 impl RoundObserver for RunRecorder {
+    fn on_scenario_event(&mut self, rec: &EventRecord) {
+        self.result.events.push(rec.clone());
+    }
+
     fn on_round_end(&mut self, rec: &RoundRecord) {
         self.result.rounds.push(rec.clone());
     }
@@ -70,6 +80,13 @@ impl ObserverChain {
         others: Vec<Box<dyn RoundObserver>>,
     ) -> Self {
         ObserverChain { recorder, others }
+    }
+
+    pub fn scenario_event(&mut self, rec: &EventRecord) {
+        self.recorder.on_scenario_event(rec);
+        for o in &mut self.others {
+            o.on_scenario_event(rec);
+        }
     }
 
     pub fn plan(&mut self, round: usize, plan: &RoundPlan) {
@@ -112,6 +129,7 @@ mod tests {
             time_s: round as f64,
             duration_s: 1.0,
             active: 2,
+            population: 4,
             transfers: 3,
             avg_staleness: 0.5,
             max_staleness: 1,
@@ -135,6 +153,23 @@ mod tests {
         fn on_eval(&mut self, _rec: &EvalRecord) {
             self.0.borrow_mut().2 += 1;
         }
+    }
+
+    #[test]
+    fn recorder_accumulates_scenario_events() {
+        let mut chain =
+            ObserverChain::new(RunRecorder::new("test", 64.0), vec![]);
+        chain.scenario_event(&EventRecord {
+            round: 1,
+            kind: "crash",
+            worker: Some(2),
+            population: 9,
+        });
+        chain.round_end(&round_rec(1));
+        let res = chain.into_result();
+        assert_eq!(res.events.len(), 1);
+        assert_eq!(res.events[0].kind, "crash");
+        assert_eq!(res.events[0].population, 9);
     }
 
     #[test]

@@ -18,6 +18,22 @@
 //! Delays are the paper's §VI-A1 channel/compute model compressed by
 //! `time_scale` (default 1000× — a 1 s training job sleeps 1 ms) so a
 //! full run finishes in seconds while preserving relative asynchrony.
+//!
+//! # Dynamic populations
+//!
+//! The scenario timeline ([`crate::scenario`]) applies on the
+//! coordinator at round boundaries, exactly as in the simulator. A
+//! departed worker's thread is *parked*: the coordinator stops
+//! dispatching EXECUTE messages to it, so the thread blocks on its
+//! channel (OS-parked, zero CPU) until the worker rejoins — its
+//! published snapshot stays around, which is precisely the stale model a
+//! `Rejoin` resumes from. A `Join` (fresh device on the slot) resets the
+//! published snapshot to re-initialised parameters before the thread is
+//! unparked by the next EXECUTE. One deliberate asymmetry with the
+//! virtual-clock engine: this backend is pull-only and every pull of a
+//! round completes before the round boundary, so there are never
+//! in-flight models for a `Crash` to drop — `Crash` and `Leave` are
+//! mechanically identical here and differ only in the event log.
 
 use super::observer::{ObserverChain, RunRecorder};
 use super::{Backend, Experiment, ExperimentError};
@@ -25,6 +41,7 @@ use crate::config::{ExperimentConfig, TrainerKind};
 use crate::coordinator::{SchedView, SchedulerParams};
 use crate::data::Dataset;
 use crate::metrics::{EvalRecord, RoundRecord, RunResult};
+use crate::scenario::ScenarioEvent;
 use crate::worker::{data_size_weights, NativeTrainer, Trainer};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -105,6 +122,7 @@ fn run_threaded(
         test,
         label_dist,
         model_bits,
+        scenario,
         mut trainer,
         mut scheduler,
         mut rng,
@@ -170,43 +188,105 @@ fn run_threaded(
     let mut pulls = vec![vec![0u64; n]; n];
     let start = Instant::now();
     let mut cum_transfers = 0usize;
+    // dense↔global maps over present workers, rebuilt each round
+    let mut ids: Vec<usize> = (0..n).collect();
+    let mut gdx: Vec<usize> = (0..n).collect();
+    let mut range_buf: Vec<usize> = Vec::new();
+    let mut cand_buf: Vec<Vec<usize>> = Vec::new();
 
     for round in 1..=cfg.rounds {
+        // --- scenario events (round boundary, coordinator-side) ---
+        // the shared skeleton owns the guards and membership flips; the
+        // hook below is this backend's bookkeeping
+        crate::scenario::apply_round_events(
+            &scenario,
+            round,
+            &mut net,
+            |ev| match *ev {
+                ScenarioEvent::Join { worker } => {
+                    // fresh device: reset the published snapshot and
+                    // the coordinator's bookkeeping for this slot
+                    published[worker].lock().unwrap().params =
+                        trainer.init(cfg.seed.wrapping_add(worker as u64));
+                    tau[worker] = 0;
+                    queues[worker] = 0.0;
+                    residual[worker] = h_train[worker];
+                    for row in pulls.iter_mut() {
+                        row[worker] = 0;
+                    }
+                    pulls[worker].fill(0);
+                }
+                ScenarioEvent::Rejoin { worker } => {
+                    // stale published model and accumulated τ kept
+                    residual[worker] = h_train[worker];
+                }
+                // Leave/Crash: the membership flip parks the worker's
+                // thread (no more EXECUTE messages until it rejoins).
+                // There is no crash-specific cleanup: this backend is
+                // pull-only and each round's pulls complete before the
+                // boundary, so no in-flight models exist for a Crash to
+                // drop — Crash and Leave differ only in the event log
+                // (see the module docs and DESIGN.md §Scenarios).
+                _ => {}
+            },
+            |rec| chain.scenario_event(&rec),
+        );
+
         net.step(&mut rng);
-        let candidates: Vec<Vec<usize>> =
-            (0..n).map(|i| net.in_range(i)).collect();
-        let h_est: Vec<f64> = (0..n)
-            .map(|i| {
-                let worst = candidates[i]
+
+        // dense view over present workers (same compaction as the
+        // virtual-clock engine — shared helpers in crate::scenario)
+        crate::scenario::rebuild_dense_maps(&net, &mut ids, &mut gdx);
+        let p = ids.len();
+        crate::scenario::build_dense_candidates(
+            &net,
+            &ids,
+            &gdx,
+            &mut range_buf,
+            &mut cand_buf,
+        );
+        let d_tau: Vec<u64> = ids.iter().map(|&i| tau[i]).collect();
+        let d_queues: Vec<f64> = ids.iter().map(|&i| queues[i]).collect();
+        let d_residual: Vec<f64> = ids.iter().map(|&i| residual[i]).collect();
+        let h_est: Vec<f64> = (0..p)
+            .map(|k| {
+                let gi = ids[k];
+                let worst = cand_buf[k]
                     .iter()
                     .take(cfg.neighbor_cap)
-                    .map(|&j| net.expected_transfer_time_s(j, i, model_bits))
+                    .map(|&j| {
+                        net.expected_transfer_time_s(ids[j], gi, model_bits)
+                    })
                     .fold(0.0f64, f64::max);
-                residual[i] + worst
+                residual[gi] + worst
             })
             .collect();
-        let data_sizes: Vec<usize> = published
+        let data_sizes: Vec<usize> = ids
             .iter()
-            .map(|p| p.lock().unwrap().data_size)
+            .map(|&i| published[i].lock().unwrap().data_size)
             .collect();
-        let plan = {
+        let budgets: Vec<f64> = ids.iter().map(|&i| net.budgets[i]).collect();
+        let mut plan = {
             let view = SchedView {
                 round,
-                tau: &tau,
-                queues: &queues,
-                h_cmp: &residual,
+                tau: &d_tau,
+                queues: &d_queues,
+                h_cmp: &d_residual,
                 h_est: &h_est,
                 data_sizes: &data_sizes,
+                ids: &ids,
                 label_dist: &label_dist,
-                candidates: &candidates,
-                budgets: &net.budgets,
+                candidates: &cand_buf[..p],
+                budgets: &budgets,
                 pulls: &pulls,
                 net: &net,
                 params: SchedulerParams::from(&cfg),
             };
             scheduler.plan(&view, &mut rng)
         };
-        debug_assert!(plan.validate(n).is_ok());
+        // remap the dense plan to global worker ids
+        crate::scenario::remap_plan_to_global(&mut plan, &ids);
+        debug_assert!(plan.validate_present(net.present_mask()).is_ok());
         chain.plan(round, &plan);
 
         // dispatch EXECUTE to the active workers with realised delays
@@ -248,13 +328,18 @@ fn run_threaded(
         }
         let h_round = round_t0.elapsed().as_secs_f64();
 
-        // staleness + queues + residual bookkeeping (Eqs. 6/33/7)
+        // staleness + queues + residual bookkeeping (Eqs. 6/33/7);
+        // absent workers keep aging (τ) but queues/residual freeze
         let mut active_mask = vec![false; n];
         for &i in &plan.active {
             active_mask[i] = true;
         }
         let h_virtual = h_round / opts.time_scale * 1000.0; // ms→virtual s
         for i in 0..n {
+            if !net.is_present(i) {
+                tau[i] += 1;
+                continue;
+            }
             residual[i] = (residual[i] - h_virtual).max(0.0);
             if active_mask[i] {
                 tau[i] = 0;
@@ -268,22 +353,30 @@ fn run_threaded(
 
         let transfers = plan.transfers();
         cum_transfers += transfers;
+        let mut tau_sum = 0u64;
+        let mut max_tau = 0u64;
+        for &i in &ids {
+            tau_sum += tau[i];
+            max_tau = max_tau.max(tau[i]);
+        }
         chain.round_end(&RoundRecord {
             round,
             time_s: start.elapsed().as_secs_f64(),
             duration_s: h_round,
             active: plan.active.len(),
+            population: p,
             transfers,
-            avg_staleness: tau.iter().sum::<u64>() as f64 / n as f64,
-            max_staleness: tau.iter().copied().max().unwrap_or(0),
+            avg_staleness: tau_sum as f64 / p as f64,
+            max_staleness: max_tau,
             train_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
         });
 
         if round % cfg.eval_every.max(1) == 0 || round == cfg.rounds {
+            // evaluate the present population's published models
             let mut acc_sum = 0.0;
             let mut loss_sum = 0.0;
-            for p in &published {
-                let params = p.lock().unwrap().params.clone();
+            for &i in &ids {
+                let params = published[i].lock().unwrap().params.clone();
                 let (l, a) = trainer.evaluate(&params, &test);
                 acc_sum += a;
                 loss_sum += l;
@@ -291,8 +384,8 @@ fn run_threaded(
             chain.eval(&EvalRecord {
                 round,
                 time_s: start.elapsed().as_secs_f64(),
-                avg_accuracy: acc_sum / n as f64,
-                avg_loss: loss_sum / n as f64,
+                avg_accuracy: acc_sum / p as f64,
+                avg_loss: loss_sum / p as f64,
                 cum_transfers,
             });
         }

@@ -1,12 +1,25 @@
 //! Virtual-clock execution backend (paper §VI).
 //!
 //! Drives Alg. 1 end to end over the edge-network substrate: each round
-//! the engine snapshots worker state into a [`SchedView`], asks the
-//! configured [`Scheduler`](crate::coordinator::Scheduler) for a
-//! [`RoundPlan`], executes the plan (pull-aggregate-train per Eqs. 3–5,
-//! *real* training through the configured trainer), advances the virtual
-//! clock by the realised round duration H_t (Eqs. 7–9), and updates
-//! staleness (Eq. 6) and the Lyapunov queues (Eq. 33).
+//! the engine applies the scenario timeline (worker churn, failures,
+//! environment shifts — [`crate::scenario`]), snapshots the *present*
+//! workers into a compacted [`SchedView`], asks the configured
+//! [`Scheduler`](crate::coordinator::Scheduler) for a [`RoundPlan`],
+//! executes the plan (pull-aggregate-train per Eqs. 3–5, *real* training
+//! through the configured trainer), advances the virtual clock by the
+//! realised round duration H_t (Eqs. 7–9), and updates staleness (Eq. 6)
+//! and the Lyapunov queues (Eq. 33).
+//!
+//! # Dynamic populations
+//!
+//! Scenario events apply at the *start* of a round, before edge dynamics
+//! and scheduling. Membership lives on the [`EdgeNetwork`] as a
+//! query-time mask; the engine builds the scheduler's view over present
+//! workers only (dense indices) and remaps the returned plan back to
+//! global ids, so schedulers carry no membership logic. While absent, a
+//! worker's staleness keeps advancing (its model *is* getting stale) but
+//! its queue and residual compute freeze; on `Rejoin` it resumes from
+//! its stale parameters, on `Join` the slot restarts fresh.
 //!
 //! # Parallel round execution
 //!
@@ -21,11 +34,13 @@
 //!   interleaving can reorder draws;
 //! * tasks only read the shared pre-round state; results are applied
 //!   sequentially in plan order, so every float reduction (`H_t` max,
-//!   mean loss) happens in a fixed order.
+//!   mean loss) happens in a fixed order;
+//! * scenario events apply on the coordinator, never inside tasks.
 //!
-//! A run is therefore **bit-identical for every `run.threads` setting**,
-//! including the sequential fallback used when the trainer cannot be
-//! cloned across threads (PJRT executables).
+//! A run is therefore **bit-identical for every `run.threads` setting**
+//! — with or without an active scenario — including the sequential
+//! fallback used when the trainer cannot be cloned across threads (PJRT
+//! executables).
 
 use super::observer::{ObserverChain, RunRecorder};
 use super::{Backend, Experiment, ExperimentError};
@@ -34,6 +49,7 @@ use crate::coordinator::{RoundPlan, SchedView, Scheduler, SchedulerParams};
 use crate::data::Dataset;
 use crate::metrics::{EvalRecord, RoundRecord, RunResult};
 use crate::network::EdgeNetwork;
+use crate::scenario::{Scenario, ScenarioEvent};
 use crate::util::rng::Pcg;
 use crate::worker::{data_size_weights_into, Params, Trainer, WorkerState};
 use std::thread;
@@ -93,7 +109,7 @@ struct WorkerSlot {
 }
 
 /// Shared read-only view of the pre-round state handed to every
-/// activation task.
+/// activation task. All worker indices here are global ids.
 struct RoundCtx<'a> {
     cfg: &'a ExperimentConfig,
     net: &'a EdgeNetwork,
@@ -187,6 +203,48 @@ fn run_activation(
     ActOut { k, duration_s, params, loss }
 }
 
+/// Estimated per-present-worker round cost H_t^i (Eq. 8): residual
+/// compute plus the worst expected pull transfer over its (≤ s nearest)
+/// candidates. `candidates` holds dense indices; `ids` maps them back to
+/// global ids for the physical network.
+fn estimate_h(
+    net: &EdgeNetwork,
+    workers: &[WorkerState],
+    ids: &[usize],
+    candidates: &[Vec<usize>],
+    model_bits: f64,
+    s: usize,
+    near: &mut Vec<usize>,
+) -> Vec<f64> {
+    (0..ids.len())
+        .map(|k| {
+            let gi = ids[k];
+            // PTCA will pick ≤ s in-neighbors; estimate with the s
+            // *nearest* candidates (best case the coordinator can
+            // predict without knowing the realised priorities).
+            let cand = &candidates[k];
+            let nearest: &[usize] = if cand.len() > s {
+                // only the s nearest matter — select into a reused
+                // index buffer instead of clone + full sort
+                near.clear();
+                near.extend_from_slice(cand);
+                near.select_nth_unstable_by(s - 1, |&a, &b| {
+                    net.distance(gi, ids[a])
+                        .total_cmp(&net.distance(gi, ids[b]))
+                });
+                &near[..s]
+            } else {
+                cand
+            };
+            let worst = nearest
+                .iter()
+                .map(|&j| net.expected_transfer_time_s(ids[j], gi, model_bits))
+                .fold(0.0f64, f64::max);
+            workers[gi].residual_s + worst
+        })
+        .collect()
+}
+
 /// The assembled simulation engine. Public so callers that need
 /// fine-grained control (benches stepping round by round, tests probing
 /// mid-run state) can drive it manually; everyone else goes through
@@ -198,6 +256,8 @@ pub struct VirtualClockEngine {
     pub test: Dataset,
     trainer: Box<dyn Trainer>,
     scheduler: Box<dyn Scheduler>,
+    /// The event timeline applied at round boundaries.
+    scenario: Scenario,
     /// pulls\[i\]\[j\]: times worker i pulled from j (Eq. 47's history).
     pulls: Vec<Vec<u64>>,
     /// Pushed-model inboxes: models received via PUSH wait here until the
@@ -220,6 +280,14 @@ pub struct VirtualClockEngine {
     slots: Vec<WorkerSlot>,
     /// Scratch for the sequential path.
     scratch: ActScratch,
+    /// Dense→global map over present workers, rebuilt each round.
+    ids: Vec<usize>,
+    /// Global→dense inverse (usize::MAX for absent workers).
+    gdx: Vec<usize>,
+    /// Reusable dense candidate-list buffers (one per present worker).
+    cand_buf: Vec<Vec<usize>>,
+    /// Scratch for `EdgeNetwork::in_range_into`.
+    range_buf: Vec<usize>,
     /// Reusable per-round buffers.
     active_mask: Vec<bool>,
     losses: Vec<f64>,
@@ -265,6 +333,7 @@ impl VirtualClockEngine {
             test: exp.test,
             trainer: exp.trainer,
             scheduler: exp.scheduler,
+            scenario: exp.scenario,
             pulls: vec![vec![0; n]; n],
             inbox: vec![Vec::new(); n],
             inbox_free: Vec::new(),
@@ -276,6 +345,10 @@ impl VirtualClockEngine {
             model_bits: exp.model_bits,
             slots,
             scratch: ActScratch::default(),
+            ids: (0..n).collect(),
+            gdx: (0..n).collect(),
+            cand_buf: Vec::new(),
+            range_buf: Vec::new(),
             active_mask: vec![false; n],
             losses: Vec::new(),
             near: Vec::new(),
@@ -291,59 +364,125 @@ impl VirtualClockEngine {
         self.slots.len().max(1)
     }
 
-    /// Estimated per-worker round cost H_t^i (Eq. 8): residual compute
-    /// plus the worst expected pull transfer over its (≤ s nearest)
-    /// candidates.
-    fn estimate_h(&mut self, candidates: &[Vec<usize>]) -> Vec<f64> {
-        let s = self.cfg.neighbor_cap;
-        let net = &self.net;
-        let workers = &self.workers;
-        let model_bits = self.model_bits;
-        let near = &mut self.near;
-        (0..workers.len())
-            .map(|i| {
-                // PTCA will pick ≤ s in-neighbors; estimate with the s
-                // *nearest* candidates (best case the coordinator can
-                // predict without knowing the realised priorities).
-                let cand = &candidates[i];
-                let nearest: &[usize] = if cand.len() > s {
-                    // only the s nearest matter — select into a reused
-                    // index buffer instead of clone + full sort
-                    near.clear();
-                    near.extend_from_slice(cand);
-                    near.select_nth_unstable_by(s - 1, |&a, &b| {
-                        net.distance(i, a).total_cmp(&net.distance(i, b))
-                    });
-                    &near[..s]
-                } else {
-                    cand
-                };
-                let worst = nearest
-                    .iter()
-                    .map(|&j| net.expected_transfer_time_s(j, i, model_bits))
-                    .fold(0.0f64, f64::max);
-                workers[i].residual_s + worst
-            })
-            .collect()
+    /// Present workers after the last applied round boundary.
+    pub fn population(&self) -> usize {
+        self.ids.len()
     }
 
-    /// Run one round of Alg. 1; returns the realised plan.
+    /// Dense→global map of the present workers (ascending global ids).
+    pub fn present_ids(&self) -> &[usize] {
+        &self.ids
+    }
+
+    /// Apply this round's scenario events through the shared skeleton
+    /// ([`crate::scenario::apply_round_events`] owns the guards and
+    /// membership flips); the hook below is this engine's bookkeeping:
+    /// inbox garbage collection and worker-state resets.
+    fn apply_scenario_events(&mut self) {
+        let round = self.round;
+        // split disjoint field borrows for the two closures
+        let scenario = &self.scenario;
+        let net = &mut self.net;
+        let workers = &mut self.workers;
+        let inbox = &mut self.inbox;
+        let inbox_free = &mut self.inbox_free;
+        let pulls = &mut self.pulls;
+        let trainer = &self.trainer;
+        let seed = self.cfg.seed;
+        let observers = &mut self.observers;
+        crate::scenario::apply_round_events(
+            scenario,
+            round,
+            net,
+            |ev| match *ev {
+                ScenarioEvent::Leave { worker } => {
+                    // the departed worker's pending aggregation inputs
+                    // are garbage-collected
+                    for (_, buf) in inbox[worker].drain(..) {
+                        inbox_free.push(buf);
+                    }
+                }
+                ScenarioEvent::Crash { worker } => {
+                    for (_, buf) in inbox[worker].drain(..) {
+                        inbox_free.push(buf);
+                    }
+                    // crash = no notice: its in-flight models (pushes
+                    // already delivered but not merged) drop everywhere
+                    for ib in inbox.iter_mut() {
+                        if let Some(pos) =
+                            ib.iter().position(|(f, _)| *f == worker)
+                        {
+                            let (_, buf) = ib.swap_remove(pos);
+                            inbox_free.push(buf);
+                        }
+                    }
+                }
+                ScenarioEvent::Join { worker } => {
+                    // fresh device on this slot: params re-initialised
+                    // with the slot's builder seed, bookkeeping reset
+                    let w = &mut workers[worker];
+                    w.params = trainer.init(seed.wrapping_add(worker as u64));
+                    w.staleness = 0;
+                    w.queue = 0.0;
+                    w.residual_s = w.h_train_s;
+                    w.last_loss = f64::NAN;
+                    for row in pulls.iter_mut() {
+                        row[worker] = 0;
+                    }
+                    pulls[worker].fill(0);
+                }
+                ScenarioEvent::Rejoin { worker } => {
+                    // stale params and accumulated τ kept; the device
+                    // restarts its local training job from scratch
+                    let w = &mut workers[worker];
+                    w.residual_s = w.h_train_s;
+                }
+                _ => {}
+            },
+            |rec| observers.scenario_event(&rec),
+        );
+    }
+
+    /// Run one round of Alg. 1; returns the realised plan (global ids).
     pub fn step(&mut self) -> RoundPlan {
         self.round += 1;
+        self.apply_scenario_events();
         self.net.step(&mut self.rng);
+        crate::scenario::rebuild_dense_maps(
+            &self.net,
+            &mut self.ids,
+            &mut self.gdx,
+        );
+        let p = self.ids.len();
+        crate::scenario::build_dense_candidates(
+            &self.net,
+            &self.ids,
+            &self.gdx,
+            &mut self.range_buf,
+            &mut self.cand_buf,
+        );
 
-        let candidates: Vec<Vec<usize>> = (0..self.workers.len())
-            .map(|i| self.net.in_range(i))
-            .collect();
         let h_cmp: Vec<f64> =
-            self.workers.iter().map(|w| w.residual_s).collect();
-        let h_est = self.estimate_h(&candidates);
-        let tau: Vec<u64> = self.workers.iter().map(|w| w.staleness).collect();
-        let queues: Vec<f64> = self.workers.iter().map(|w| w.queue).collect();
+            self.ids.iter().map(|&i| self.workers[i].residual_s).collect();
+        let h_est = estimate_h(
+            &self.net,
+            &self.workers,
+            &self.ids,
+            &self.cand_buf[..p],
+            self.model_bits,
+            self.cfg.neighbor_cap,
+            &mut self.near,
+        );
+        let tau: Vec<u64> =
+            self.ids.iter().map(|&i| self.workers[i].staleness).collect();
+        let queues: Vec<f64> =
+            self.ids.iter().map(|&i| self.workers[i].queue).collect();
         let data_sizes: Vec<usize> =
-            self.workers.iter().map(|w| w.data_size()).collect();
+            self.ids.iter().map(|&i| self.workers[i].data_size()).collect();
+        let budgets: Vec<f64> =
+            self.ids.iter().map(|&i| self.net.budgets[i]).collect();
 
-        let plan = {
+        let mut plan = {
             let view = SchedView {
                 round: self.round,
                 tau: &tau,
@@ -351,16 +490,22 @@ impl VirtualClockEngine {
                 h_cmp: &h_cmp,
                 h_est: &h_est,
                 data_sizes: &data_sizes,
+                ids: &self.ids,
                 label_dist: &self.label_dist,
-                candidates: &candidates,
-                budgets: &self.net.budgets,
+                candidates: &self.cand_buf[..p],
+                budgets: &budgets,
                 pulls: &self.pulls,
                 net: &self.net,
                 params: SchedulerParams::from(&self.cfg),
             };
             self.scheduler.plan(&view, &mut self.rng)
         };
-        debug_assert!(plan.validate(self.workers.len()).is_ok());
+        // schedulers plan in dense indices — remap to global worker ids
+        // (identity when everyone is present)
+        crate::scenario::remap_plan_to_global(&mut plan, &self.ids);
+        debug_assert!(plan
+            .validate_present(self.net.present_mask())
+            .is_ok());
         self.observers.plan(self.round, &plan);
 
         self.execute(&plan);
@@ -484,7 +629,14 @@ impl VirtualClockEngine {
         for &i in &plan.active {
             self.active_mask[i] = true;
         }
-        for (i, w) in self.workers.iter_mut().enumerate() {
+        for i in 0..n {
+            let w = &mut self.workers[i];
+            if !self.net.is_present(i) {
+                // absent: the model keeps getting stale, but the queue
+                // and the local training job freeze until it returns
+                w.on_skipped();
+                continue;
+            }
             w.advance(h_round);
             if self.active_mask[i] {
                 w.on_activated();
@@ -494,16 +646,18 @@ impl VirtualClockEngine {
             w.update_queue(self.cfg.tau_bound);
         }
 
-        // --- metrics ---
+        // --- metrics (population = present workers) ---
+        let pop = self.ids.len();
         let transfers = plan.transfers();
         self.cum_transfers += transfers;
-        let avg_tau = self
-            .workers
-            .iter()
-            .map(|w| w.staleness as f64)
-            .sum::<f64>()
-            / n as f64;
-        let max_tau = self.workers.iter().map(|w| w.staleness).max().unwrap_or(0);
+        let mut tau_sum = 0.0f64;
+        let mut max_tau = 0u64;
+        for &i in &self.ids {
+            let t = self.workers[i].staleness;
+            tau_sum += t as f64;
+            max_tau = max_tau.max(t);
+        }
+        let avg_tau = tau_sum / pop as f64;
         let train_loss = if self.losses.is_empty() {
             f64::NAN
         } else {
@@ -514,6 +668,7 @@ impl VirtualClockEngine {
             time_s: self.clock_s,
             duration_s: h_round,
             active: plan.active.len(),
+            population: pop,
             transfers,
             avg_staleness: avg_tau,
             max_staleness: max_tau,
@@ -522,26 +677,30 @@ impl VirtualClockEngine {
         self.observers.round_end(&rec);
     }
 
-    /// Evaluate the average of all (or a sampled fraction of) workers'
-    /// local models on the test set and record a snapshot. Per-worker
-    /// evaluations fan across the pool; sums reduce in id order, so the
-    /// snapshot is bit-identical for any thread count.
+    /// Evaluate the average of all (or a sampled fraction of) *present*
+    /// workers' local models on the test set and record a snapshot.
+    /// Per-worker evaluations fan across the pool; sums reduce in id
+    /// order, so the snapshot is bit-identical for any thread count.
     pub fn evaluate(&mut self) -> EvalRecord {
-        let n = self.workers.len();
-        let count = ((n as f64 * self.cfg.eval_worker_frac).round() as usize)
-            .clamp(1, n);
-        let ids: Vec<usize> = if count == n {
-            (0..n).collect()
+        let p = self.ids.len();
+        let count = ((p as f64 * self.cfg.eval_worker_frac).round() as usize)
+            .clamp(1, p.max(1));
+        let eval_ids: Vec<usize> = if count >= p {
+            self.ids.clone()
         } else {
-            self.rng.sample_indices(n, count)
+            self.rng
+                .sample_indices(p, count)
+                .into_iter()
+                .map(|k| self.ids[k])
+                .collect()
         };
-        let mut pairs: Vec<(f64, f64)> = vec![(0.0, 0.0); ids.len()];
-        if self.slots.len() > 1 && ids.len() > 1 {
-            let pool = self.slots.len().min(ids.len());
+        let mut pairs: Vec<(f64, f64)> = vec![(0.0, 0.0); eval_ids.len()];
+        if self.slots.len() > 1 && eval_ids.len() > 1 {
+            let pool = self.slots.len().min(eval_ids.len());
             let slots = &mut self.slots[..pool];
             let workers = &self.workers;
             let test = &self.test;
-            let ids = &ids;
+            let ids = &eval_ids;
             let parts: Vec<Vec<(usize, (f64, f64))>> = thread::scope(|s| {
                 let handles: Vec<_> = slots
                     .iter_mut()
@@ -549,17 +708,17 @@ impl VirtualClockEngine {
                     .map(|(si, slot)| {
                         s.spawn(move || {
                             let mut part = Vec::new();
-                            let mut p = si;
-                            while p < ids.len() {
-                                let i = ids[p];
+                            let mut pos = si;
+                            while pos < ids.len() {
+                                let i = ids[pos];
                                 part.push((
-                                    p,
+                                    pos,
                                     slot.trainer.evaluate(
                                         &workers[i].params,
                                         test,
                                     ),
                                 ));
-                                p += pool;
+                                pos += pool;
                             }
                             part
                         })
@@ -571,13 +730,13 @@ impl VirtualClockEngine {
                     .collect()
             });
             for part in parts {
-                for (p, la) in part {
-                    pairs[p] = la;
+                for (pos, la) in part {
+                    pairs[pos] = la;
                 }
             }
         } else {
-            for (p, &i) in ids.iter().enumerate() {
-                pairs[p] = self
+            for (pos, &i) in eval_ids.iter().enumerate() {
+                pairs[pos] = self
                     .trainer
                     .evaluate(&self.workers[i].params, &self.test);
             }
@@ -591,8 +750,8 @@ impl VirtualClockEngine {
         let rec = EvalRecord {
             round: self.round,
             time_s: self.clock_s,
-            avg_accuracy: acc_sum / ids.len() as f64,
-            avg_loss: loss_sum / ids.len() as f64,
+            avg_accuracy: acc_sum / eval_ids.len() as f64,
+            avg_loss: loss_sum / eval_ids.len() as f64,
             cum_transfers: self.cum_transfers,
         };
         self.observers.eval(&rec);

@@ -6,7 +6,9 @@
 //! result (ordering of mechanisms, crossovers, rough factors) is the
 //! reproduction claim. All series land as CSV under `--out`.
 
-use crate::config::{ExperimentConfig, SchedulerKind};
+use crate::config::{
+    ExperimentConfig, ScenarioConfig, ScenarioPreset, SchedulerKind,
+};
 use crate::experiment::{Backend, Experiment, VirtualClockBackend};
 use crate::metrics::RunResult;
 use std::io::Write;
@@ -282,6 +284,49 @@ pub fn fig_testbed(out: &Path, scale: FigScale) -> std::io::Result<()> {
     )
 }
 
+/// Fig. 26 (beyond the paper) — dynamic worker populations: accuracy vs
+/// time for DySTop against the three baselines under the `diurnal`
+/// churn preset (workers leaving/rejoining mid-run). Emits per-mechanism
+/// curves + event logs and a summary CSV with population ranges.
+pub fn fig_churn(out: &Path, scale: FigScale) -> std::io::Result<()> {
+    let mut lines = Vec::new();
+    for kind in COMPARED {
+        let mut cfg = base_cfg(scale);
+        cfg.scheduler = kind;
+        cfg.scenario = ScenarioConfig::preset(ScenarioPreset::Diurnal);
+        let name = format!("fig26_churn_{}", kind.name());
+        let res = run_cached(out, &name, &cfg, None)?;
+        res.write_events_csv(&out.join(format!("{name}_events.csv")))?;
+        let (lo, hi) = res.population_range();
+        let tgt = completion_target(&res);
+        println!(
+            "fig26 churn {:>8}: best {:.3} | t@{tgt:.2} {:>8} | pop {lo}–{hi} | {} events",
+            kind.name(),
+            res.best_accuracy(),
+            res.time_to_accuracy(tgt)
+                .map(|x| format!("{x:.1}s"))
+                .unwrap_or("—".into()),
+            res.events.len(),
+        );
+        lines.push(format!(
+            "{},{},{},{},{},{}",
+            kind.name(),
+            res.best_accuracy(),
+            res.time_to_accuracy(tgt)
+                .map(|x| x.to_string())
+                .unwrap_or_default(),
+            lo,
+            hi,
+            res.events.len()
+        ));
+    }
+    write_lines(
+        &out.join("fig26_churn.csv"),
+        "scheduler,best_accuracy,time_to_target_s,min_population,max_population,events",
+        &lines,
+    )
+}
+
 /// Dispatch by figure id.
 pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> {
     let go = |r: std::io::Result<()>| r.map_err(|e| e.to_string());
@@ -295,6 +340,7 @@ pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> 
         "16" => go(fig16(out, scale)),
         "17" | "18" => go(fig17_18(out, scale)),
         "20" | "21" | "22" | "23" | "24" | "25" => go(fig_testbed(out, scale)),
+        "26" | "churn" => go(fig_churn(out, scale)),
         "all" => {
             go(fig3(out, scale))?;
             go(fig_main(out, scale, &[1.0, 0.7, 0.4]))?;
@@ -302,9 +348,12 @@ pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> 
             go(fig15(out, scale))?;
             go(fig16(out, scale))?;
             go(fig17_18(out, scale))?;
-            go(fig_testbed(out, scale))
+            go(fig_testbed(out, scale))?;
+            go(fig_churn(out, scale))
         }
-        other => Err(format!("unknown figure {other:?} (3,4..18,20..25,all)")),
+        other => Err(format!(
+            "unknown figure {other:?} (3,4..18,20..25,26|churn,all)"
+        )),
     }
 }
 
@@ -344,6 +393,20 @@ mod tests {
         let text =
             std::fs::read_to_string(dir.join("fig14_staleness.csv")).unwrap();
         assert_eq!(text.lines().count(), 6); // header + 5 bounds
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fig26_churn_tiny_runs() {
+        let dir = std::env::temp_dir().join("dystop_figtest_churn");
+        let _ = std::fs::remove_dir_all(&dir);
+        let scale = FigScale { workers: 10, rounds: 24, seed: 5 };
+        fig_churn(&dir, scale).unwrap();
+        let text =
+            std::fs::read_to_string(dir.join("fig26_churn.csv")).unwrap();
+        assert_eq!(text.lines().count(), 5); // header + 4 mechanisms
+        // each mechanism's churn event log landed next to its curve
+        assert!(dir.join("fig26_churn_dystop_events.csv").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

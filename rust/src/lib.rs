@@ -18,8 +18,7 @@ pub mod figures;
 pub mod metrics;
 pub mod network;
 pub mod runtime;
-pub mod sim;
-pub mod testbed;
+pub mod scenario;
 pub mod topology;
 pub mod util;
 pub mod worker;

@@ -14,13 +14,33 @@ pub struct RoundRecord {
     /// Duration H_t of this round (Eq. 9).
     pub duration_s: f64,
     pub active: usize,
+    /// Present workers this round (scenario layer — constant and equal
+    /// to `sim.workers` under `scenario.preset=stable`).
+    pub population: usize,
     /// Model transfers this round (pulls + pushes), in models.
     pub transfers: usize,
-    /// Mean staleness over workers after the round.
+    /// Mean staleness over *present* workers after the round.
     pub avg_staleness: f64,
     pub max_staleness: u64,
     /// Mean training loss over the workers that trained this round.
     pub train_loss: f64,
+}
+
+/// One applied scenario event (population or environment change). Only
+/// events that actually changed state are recorded, so replaying the log
+/// accounts for every population change of the run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EventRecord {
+    /// Round at whose start the event applied (1-based).
+    pub round: usize,
+    /// Event tag: `leave`, `crash`, `join`, `rejoin`, `bandwidth-shift`,
+    /// `mobility-burst`, `region-partition`.
+    pub kind: &'static str,
+    /// Affected worker (global id) for population events; `None` for
+    /// environment-wide events.
+    pub worker: Option<usize>,
+    /// Present-worker count immediately after the event applied.
+    pub population: usize,
 }
 
 /// One evaluation snapshot (average over workers' local models).
@@ -40,6 +60,9 @@ pub struct RunResult {
     pub label: String,
     pub rounds: Vec<RoundRecord>,
     pub evals: Vec<EvalRecord>,
+    /// Applied scenario events, in application order (empty under
+    /// `scenario.preset=stable`).
+    pub events: Vec<EventRecord>,
     /// Bits of one model transfer (P × 32 for f32).
     pub model_bits: f64,
 }
@@ -93,11 +116,13 @@ impl RunResult {
             && self.model_bits.to_bits() == other.model_bits.to_bits()
             && self.rounds.len() == other.rounds.len()
             && self.evals.len() == other.evals.len()
+            && self.events == other.events
             && self.rounds.iter().zip(&other.rounds).all(|(x, y)| {
                 x.round == y.round
                     && x.time_s.to_bits() == y.time_s.to_bits()
                     && x.duration_s.to_bits() == y.duration_s.to_bits()
                     && x.active == y.active
+                    && x.population == y.population
                     && x.transfers == y.transfers
                     && x.avg_staleness.to_bits() == y.avg_staleness.to_bits()
                     && x.max_staleness == y.max_staleness
@@ -110,6 +135,22 @@ impl RunResult {
                     && x.avg_loss.to_bits() == y.avg_loss.to_bits()
                     && x.cum_transfers == y.cum_transfers
             })
+    }
+
+    /// Smallest / largest present-worker count over the run (population
+    /// range under churn; `(n, n)` when stable, `(0, 0)` when empty).
+    pub fn population_range(&self) -> (usize, usize) {
+        let mut lo = usize::MAX;
+        let mut hi = 0usize;
+        for r in &self.rounds {
+            lo = lo.min(r.population);
+            hi = hi.max(r.population);
+        }
+        if lo == usize::MAX {
+            (0, 0)
+        } else {
+            (lo, hi)
+        }
     }
 
     /// Mean staleness across all rounds (Fig. 14 metric).
@@ -150,20 +191,42 @@ impl RunResult {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,time_s,duration_s,active,transfers,avg_staleness,max_staleness,train_loss"
+            "round,time_s,duration_s,active,population,transfers,avg_staleness,max_staleness,train_loss"
         )?;
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{:.4},{:.4},{},{},{:.4},{},{:.6}",
+                "{},{:.4},{:.4},{},{},{},{:.4},{},{:.6}",
                 r.round,
                 r.time_s,
                 r.duration_s,
                 r.active,
+                r.population,
                 r.transfers,
                 r.avg_staleness,
                 r.max_staleness,
                 r.train_loss,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Write the applied scenario-event log as CSV
+    /// (`round,kind,worker,population`).
+    pub fn write_events_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "round,kind,worker,population")?;
+        for e in &self.events {
+            writeln!(
+                f,
+                "{},{},{},{}",
+                e.round,
+                e.kind,
+                e.worker.map(|w| w.to_string()).unwrap_or_default(),
+                e.population,
             )?;
         }
         Ok(())
@@ -184,6 +247,7 @@ mod tests {
                     time_s: (t + 1) as f64,
                     duration_s: 1.0,
                     active: 1,
+                    population: 8 - t,
                     transfers: 10,
                     avg_staleness: t as f64,
                     max_staleness: t as u64,
@@ -194,6 +258,12 @@ mod tests {
                 EvalRecord { round: 1, time_s: 2.0, avg_accuracy: 0.5, avg_loss: 1.0, cum_transfers: 20 },
                 EvalRecord { round: 3, time_s: 4.0, avg_accuracy: 0.85, avg_loss: 0.4, cum_transfers: 40 },
             ],
+            events: vec![EventRecord {
+                round: 2,
+                kind: "leave",
+                worker: Some(3),
+                population: 7,
+            }],
         }
     }
 
@@ -230,5 +300,31 @@ mod tests {
     #[test]
     fn mean_staleness() {
         assert!((sample().mean_staleness() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn population_range_and_events_csv() {
+        let r = sample();
+        assert_eq!(r.population_range(), (5, 8));
+        assert_eq!(RunResult::default().population_range(), (0, 0));
+        let dir = std::env::temp_dir().join("dystop_metrics_events_test");
+        let path = dir.join("events.csv");
+        r.write_events_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("round,kind,worker,population"));
+        assert!(text.contains("2,leave,3,7"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bits_eq_detects_population_and_event_divergence() {
+        let a = sample();
+        let mut b = sample();
+        assert!(a.bits_eq(&b));
+        b.rounds[0].population += 1;
+        assert!(!a.bits_eq(&b));
+        let mut c = sample();
+        c.events.clear();
+        assert!(!a.bits_eq(&c));
     }
 }

@@ -24,7 +24,20 @@ impl Pos {
 }
 
 /// The time-varying physical network: positions, tx powers, budgets,
-/// link state. `step(rng)` advances one round of edge dynamics.
+/// link state, and membership. `step(rng)` advances one round of edge
+/// dynamics.
+///
+/// # Membership
+///
+/// The scenario layer (worker churn — [`crate::scenario`]) flips a
+/// per-worker present/absent mask. Membership is a *query-time* filter:
+/// [`link_up`](Self::link_up) and [`in_range`](Self::in_range) treat an
+/// absent worker as unreachable (radio off), but the physical substrate
+/// — positions, tx powers, budgets, the dropped-link bitmap — keeps
+/// evolving for everyone. That keeps `step`'s RNG draw sequence
+/// independent of membership, so a run under `scenario.preset=stable`
+/// is bit-identical to the pre-scenario engine, and churn timelines
+/// never perturb the dynamics of the workers that stayed.
 #[derive(Clone, Debug)]
 pub struct EdgeNetwork {
     pub cfg: NetworkConfig,
@@ -39,6 +52,17 @@ pub struct EdgeNetwork {
     /// n×n bitmap — `link_up` is on the per-round O(N²) hot path and a
     /// linear scan here was the simulator's top cost (EXPERIMENTS §Perf).
     dropped: Vec<bool>,
+    /// Membership mask: `false` = departed/crashed (radio off).
+    present: Vec<bool>,
+    /// Scenario modifier: multiplies the per-round budget refresh
+    /// (`BandwidthShift` events). 1.0 = nominal.
+    budget_scale: f64,
+    /// Scenario modifier: multiplies per-round mobility σ
+    /// (`MobilityBurst` events). 1.0 = nominal.
+    mobility_scale: f64,
+    /// Scenario modifier: when set, links crossing the region's vertical
+    /// midline are down (`RegionPartition` events).
+    partitioned: bool,
 }
 
 impl EdgeNetwork {
@@ -64,6 +88,10 @@ impl EdgeNetwork {
             budgets: vec![0.0; n],
             channel,
             dropped: vec![false; n * n],
+            present: vec![true; n],
+            budget_scale: 1.0,
+            mobility_scale: 1.0,
+            partitioned: false,
         };
         net.refresh_budgets(rng);
         net
@@ -77,10 +105,65 @@ impl EdgeNetwork {
         self.positions.is_empty()
     }
 
+    // --- membership (scenario layer) ---
+
+    /// Is worker `i` currently part of the population?
+    pub fn is_present(&self, i: usize) -> bool {
+        self.present[i]
+    }
+
+    /// Flip worker `i`'s membership (Join/Leave/Crash/Rejoin events).
+    pub fn set_present(&mut self, i: usize, present: bool) {
+        self.present[i] = present;
+    }
+
+    /// The full membership mask, indexed by worker id.
+    pub fn present_mask(&self) -> &[bool] {
+        &self.present
+    }
+
+    /// Number of present workers.
+    pub fn present_count(&self) -> usize {
+        self.present.iter().filter(|&&p| p).count()
+    }
+
+    // --- scenario environment modifiers ---
+
+    /// Scale the per-round bandwidth-budget refresh (`BandwidthShift`).
+    pub fn set_budget_scale(&mut self, factor: f64) {
+        self.budget_scale = factor.max(0.0);
+    }
+
+    /// Scale per-round mobility σ (`MobilityBurst`).
+    pub fn set_mobility_scale(&mut self, factor: f64) {
+        self.mobility_scale = factor.max(0.0);
+    }
+
+    /// Enable/disable the region partition (`RegionPartition`): while
+    /// enabled, links crossing x = region/2 are down.
+    pub fn set_partitioned(&mut self, enabled: bool) {
+        self.partitioned = enabled;
+    }
+
+    /// Are `i` and `j` on the same side of an active region partition?
+    /// Always true when no partition is active.
+    fn same_side(&self, i: usize, j: usize) -> bool {
+        if !self.partitioned {
+            return true;
+        }
+        let mid = self.cfg.region_m * 0.5;
+        (self.positions[i].x < mid) == (self.positions[j].x < mid)
+    }
+
     /// Advance one round of edge dynamics: mobility, budget jitter,
     /// random link drops.
+    ///
+    /// Deliberately membership-independent: every worker draws its
+    /// mobility/budget randomness whether present or not, so the RNG
+    /// stream (and therefore every present worker's trajectory) does not
+    /// depend on who is absent this round.
     pub fn step(&mut self, rng: &mut Pcg) {
-        let m = self.cfg.mobility_m;
+        let m = self.cfg.mobility_m * self.mobility_scale;
         if m > 0.0 {
             for p in &mut self.positions {
                 p.x = (p.x + rng.normal_ms(0.0, m)).clamp(0.0, self.cfg.region_m);
@@ -102,28 +185,46 @@ impl EdgeNetwork {
     }
 
     fn refresh_budgets(&mut self, rng: &mut Pcg) {
-        let base = self.cfg.budget_models;
+        // budget_scale is 1.0 outside BandwidthShift windows; multiplying
+        // by exactly 1.0 is bit-exact, preserving stable-preset parity
+        let base = self.cfg.budget_models * self.budget_scale;
         let jitter = self.cfg.budget_jitter;
         for b in &mut self.budgets {
             *b = (base * rng.normal_ms(1.0, jitter)).max(1.0);
         }
     }
 
-    /// Is `i → j` usable this round? (within range, not dropped)
+    /// Is `i → j` usable this round? (both present, within range, same
+    /// partition side, not dropped)
     pub fn link_up(&self, i: usize, j: usize) -> bool {
+        if !self.present[i] || !self.present[j] {
+            return false;
+        }
         if i == j {
             return true;
         }
         self.positions[i].dist(self.positions[j]) <= self.cfg.comm_range_m
+            && self.same_side(i, j)
             && !self.dropped[i * self.len() + j]
     }
 
     /// Workers within communication range of `i` (the candidate set
-    /// `C_t^i` of Alg. 3), excluding `i` itself.
+    /// `C_t^i` of Alg. 3), excluding `i` itself and absent workers.
+    ///
+    /// Allocates a fresh `Vec` per call; the per-round candidate build is
+    /// O(N) such calls, so the engines use
+    /// [`in_range_into`](Self::in_range_into) with a reused buffer.
     pub fn in_range(&self, i: usize) -> Vec<usize> {
-        (0..self.len())
-            .filter(|&j| j != i && self.link_up(j, i))
-            .collect()
+        let mut out = Vec::new();
+        self.in_range_into(i, &mut out);
+        out
+    }
+
+    /// Allocation-free [`in_range`](Self::in_range): clears `out` and
+    /// fills it with the candidate set.
+    pub fn in_range_into(&self, i: usize, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend((0..self.len()).filter(|&j| j != i && self.link_up(j, i)));
     }
 
     pub fn distance(&self, i: usize, j: usize) -> f64 {
@@ -239,6 +340,109 @@ mod tests {
             assert!(net.link_up(i, i));
             assert_eq!(net.transfer_time_s(i, i, 1e6, &mut rng), 0.0);
         }
+    }
+
+    #[test]
+    fn in_range_into_matches_allocating_variant() {
+        let (mut net, mut rng) = net(30, 7);
+        let mut buf = Vec::new();
+        for _ in 0..5 {
+            net.step(&mut rng);
+            for i in 0..30 {
+                net.in_range_into(i, &mut buf);
+                assert_eq!(buf, net.in_range(i));
+            }
+        }
+    }
+
+    #[test]
+    fn absent_workers_drop_out_of_links_and_candidates() {
+        let mut c = cfg();
+        c.link_drop_prob = 0.0;
+        c.comm_range_m = 200.0; // everyone in range of everyone
+        let mut rng = Pcg::seeded(8);
+        let mut net = EdgeNetwork::new(10, c, &mut rng);
+        assert_eq!(net.present_count(), 10);
+        net.set_present(3, false);
+        assert_eq!(net.present_count(), 9);
+        assert!(!net.is_present(3));
+        // absent worker unreachable in either direction, even self-link
+        for i in 0..10 {
+            if i != 3 {
+                assert!(!net.link_up(i, 3));
+                assert!(!net.link_up(3, i));
+                assert!(!net.in_range(i).contains(&3));
+            }
+        }
+        assert!(net.in_range(3).is_empty());
+        // membership is a query-time mask: rejoin restores links
+        net.set_present(3, true);
+        assert!(net.link_up(0, 3) && net.link_up(3, 0));
+    }
+
+    #[test]
+    fn membership_does_not_perturb_dynamics_rng() {
+        // step() must draw identically whether workers are absent or not
+        let (mut a, mut rng_a) = net(12, 9);
+        let (mut b, mut rng_b) = net(12, 9);
+        b.set_present(2, false);
+        b.set_present(7, false);
+        for _ in 0..4 {
+            a.step(&mut rng_a);
+            b.step(&mut rng_b);
+        }
+        assert_eq!(a.positions, b.positions);
+        assert_eq!(a.budgets, b.budgets);
+    }
+
+    #[test]
+    fn bandwidth_shift_scales_budget_refresh() {
+        let (mut net, mut rng) = net(20, 10);
+        net.set_budget_scale(0.0);
+        net.step(&mut rng);
+        // base×0 floors at the 1.0 minimum transfer
+        assert!(net.budgets.iter().all(|&b| b == 1.0));
+        net.set_budget_scale(10.0);
+        net.step(&mut rng);
+        let mean = net.budgets.iter().sum::<f64>() / 20.0;
+        assert!(mean > 50.0, "mean budget {mean} under 10× shift");
+    }
+
+    #[test]
+    fn region_partition_severs_cross_midline_links() {
+        let mut c = cfg();
+        c.link_drop_prob = 0.0;
+        c.mobility_m = 0.0;
+        c.comm_range_m = 200.0;
+        let mut rng = Pcg::seeded(11);
+        let mut net = EdgeNetwork::new(2, c, &mut rng);
+        net.positions = vec![Pos { x: 10.0, y: 50.0 }, Pos { x: 90.0, y: 50.0 }];
+        assert!(net.link_up(0, 1));
+        net.set_partitioned(true);
+        assert!(!net.link_up(0, 1), "cross-partition link must be down");
+        assert!(net.link_up(0, 0), "self link unaffected");
+        net.set_partitioned(false);
+        assert!(net.link_up(0, 1));
+    }
+
+    #[test]
+    fn mobility_burst_scales_movement() {
+        let mut c = cfg();
+        c.mobility_m = 1.0;
+        c.region_m = 100_000.0; // no clamping, pure diffusion
+        let mut rng = Pcg::seeded(12);
+        let mut net = EdgeNetwork::new(30, c, &mut rng);
+        let start = net.positions.clone();
+        net.set_mobility_scale(50.0);
+        net.step(&mut rng);
+        let mean_move = net
+            .positions
+            .iter()
+            .zip(&start)
+            .map(|(a, b)| a.dist(*b))
+            .sum::<f64>()
+            / 30.0;
+        assert!(mean_move > 10.0, "burst should amplify movement: {mean_move}");
     }
 
     #[test]

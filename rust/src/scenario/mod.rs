@@ -1,0 +1,612 @@
+//! Scenario engine: deterministic, seeded timelines of population and
+//! environment events (worker churn, failures, scripted dynamics).
+//!
+//! DySTop's claim is efficiency under *dynamic* edge environments; the
+//! DFL surveys (Yuan et al., 2306.01603; Valerio et al., 2312.04504)
+//! identify node churn and failure as the defining stressor of real
+//! deployments. This module turns the simulator's static cast into a
+//! scenario-driven harness: a [`Scenario`] is a pre-generated list of
+//! `(round, event)` pairs that both execution backends apply at round
+//! boundaries, before edge dynamics and scheduling.
+//!
+//! # Event model
+//!
+//! * [`Leave`](ScenarioEvent::Leave) — graceful departure: the worker's
+//!   radio goes off; models it already pushed remain valid.
+//! * [`Crash`](ScenarioEvent::Crash) — departure without notice:
+//!   additionally, its in-flight models (inbox entries it sent) are
+//!   dropped everywhere.
+//! * [`Join`](ScenarioEvent::Join) — a fresh device takes the slot:
+//!   re-initialised parameters, staleness/queue/pull history reset.
+//! * [`Rejoin`](ScenarioEvent::Rejoin) — the departed device returns:
+//!   it resumes from its last (now stale) parameters with staleness τ
+//!   advanced by its downtime.
+//! * [`BandwidthShift`](ScenarioEvent::BandwidthShift) /
+//!   [`MobilityBurst`](ScenarioEvent::MobilityBurst) /
+//!   [`RegionPartition`](ScenarioEvent::RegionPartition) — environment
+//!   modifiers on the [`EdgeNetwork`](crate::network::EdgeNetwork).
+//!
+//! # Determinism contract
+//!
+//! The timeline is generated up-front from
+//! `(ScenarioConfig, workers, rounds, seed)` on a *dedicated* RNG stream
+//! — engines draw nothing scenario-related from the main experiment
+//! stream. Consequently:
+//!
+//! * `scenario.preset=stable` (the default) generates the empty timeline
+//!   and reproduces the pre-scenario trajectories bit-for-bit;
+//! * any scenario is itself fully reproducible from the config, across
+//!   backends and for every `run.threads` setting.
+
+use crate::config::{ScenarioConfig, ScenarioPreset};
+use crate::coordinator::RoundPlan;
+use crate::metrics::EventRecord;
+use crate::network::EdgeNetwork;
+use crate::util::rng::Pcg;
+
+/// Apply `scenario`'s events for `round` to the network — the one
+/// definition of the round-boundary semantics both backends share:
+/// no-op guards (departures of absent workers, arrivals of present
+/// ones), the never-empty-the-population floor, membership flips, and
+/// the environment-modifier dispatch. For every event that actually
+/// changed state, `on_applied(&ev)` runs the engine-specific
+/// bookkeeping (inbox GC, parameter resets) and `record` receives the
+/// [`EventRecord`]; refused events produce neither, so the recorded log
+/// accounts for every population change exactly — and identically
+/// across backends.
+pub fn apply_round_events<F, R>(
+    scenario: &Scenario,
+    round: usize,
+    net: &mut EdgeNetwork,
+    mut on_applied: F,
+    mut record: R,
+) where
+    F: FnMut(&ScenarioEvent),
+    R: FnMut(EventRecord),
+{
+    for &(_, ev) in scenario.events_at(round) {
+        let applied = match ev {
+            ScenarioEvent::Leave { worker } | ScenarioEvent::Crash { worker } => {
+                // never empty the population: a plan needs ≥ 1 worker
+                if !net.is_present(worker) || net.present_count() <= 1 {
+                    false
+                } else {
+                    net.set_present(worker, false);
+                    true
+                }
+            }
+            ScenarioEvent::Join { worker } | ScenarioEvent::Rejoin { worker } => {
+                if net.is_present(worker) {
+                    false
+                } else {
+                    net.set_present(worker, true);
+                    true
+                }
+            }
+            ScenarioEvent::BandwidthShift { factor } => {
+                net.set_budget_scale(factor);
+                true
+            }
+            ScenarioEvent::MobilityBurst { factor } => {
+                net.set_mobility_scale(factor);
+                true
+            }
+            ScenarioEvent::RegionPartition { enabled } => {
+                net.set_partitioned(enabled);
+                true
+            }
+        };
+        if applied {
+            on_applied(&ev);
+            record(EventRecord {
+                round,
+                kind: ev.kind(),
+                worker: ev.worker(),
+                population: net.present_count(),
+            });
+        }
+    }
+}
+
+/// Rebuild the dense↔global worker-id maps from the network's
+/// membership mask: `ids[k]` is the k-th present worker's global id,
+/// `gdx[i]` its dense index (`usize::MAX` for absent workers). Shared by
+/// both execution backends so the compaction rule exists exactly once.
+pub fn rebuild_dense_maps(
+    net: &EdgeNetwork,
+    ids: &mut Vec<usize>,
+    gdx: &mut Vec<usize>,
+) {
+    ids.clear();
+    gdx.clear();
+    gdx.resize(net.len(), usize::MAX);
+    for i in 0..net.len() {
+        if net.is_present(i) {
+            gdx[i] = ids.len();
+            ids.push(i);
+        }
+    }
+}
+
+/// Fill `cand_buf[k]` with the dense-index candidate set of each present
+/// worker (reusing buffers; `range_buf` is `in_range_into` scratch).
+pub fn build_dense_candidates(
+    net: &EdgeNetwork,
+    ids: &[usize],
+    gdx: &[usize],
+    range_buf: &mut Vec<usize>,
+    cand_buf: &mut Vec<Vec<usize>>,
+) {
+    let p = ids.len();
+    if cand_buf.len() < p {
+        cand_buf.resize_with(p, Vec::new);
+    }
+    for k in 0..p {
+        net.in_range_into(ids[k], range_buf);
+        let dst = &mut cand_buf[k];
+        dst.clear();
+        dst.extend(range_buf.iter().map(|&j| gdx[j]));
+    }
+}
+
+/// Remap a plan produced over the dense (present-worker) view back to
+/// global worker ids — the identity when everyone is present.
+pub fn remap_plan_to_global(plan: &mut RoundPlan, ids: &[usize]) {
+    for a in &mut plan.active {
+        *a = ids[*a];
+    }
+    for lst in &mut plan.pulls_from {
+        for j in lst.iter_mut() {
+            *j = ids[*j];
+        }
+    }
+    for e in &mut plan.pushes {
+        e.0 = ids[e.0];
+        e.1 = ids[e.1];
+    }
+}
+
+/// One population or environment event. Population events carry the
+/// affected worker's *global* id (stable across the whole run).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScenarioEvent {
+    /// Graceful departure.
+    Leave { worker: usize },
+    /// Departure without notice: in-flight models dropped.
+    Crash { worker: usize },
+    /// Fresh device joins on this slot (params re-initialised).
+    Join { worker: usize },
+    /// Departed device returns with stale params and advanced τ.
+    Rejoin { worker: usize },
+    /// Set the bandwidth-budget scale factor (1.0 = nominal).
+    BandwidthShift { factor: f64 },
+    /// Set the mobility scale factor (1.0 = nominal).
+    MobilityBurst { factor: f64 },
+    /// Toggle the region partition at x = region/2.
+    RegionPartition { enabled: bool },
+}
+
+impl ScenarioEvent {
+    /// Stable lowercase tag for logs/metrics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ScenarioEvent::Leave { .. } => "leave",
+            ScenarioEvent::Crash { .. } => "crash",
+            ScenarioEvent::Join { .. } => "join",
+            ScenarioEvent::Rejoin { .. } => "rejoin",
+            ScenarioEvent::BandwidthShift { .. } => "bandwidth-shift",
+            ScenarioEvent::MobilityBurst { .. } => "mobility-burst",
+            ScenarioEvent::RegionPartition { .. } => "region-partition",
+        }
+    }
+
+    /// The affected worker, for population events.
+    pub fn worker(&self) -> Option<usize> {
+        match *self {
+            ScenarioEvent::Leave { worker }
+            | ScenarioEvent::Crash { worker }
+            | ScenarioEvent::Join { worker }
+            | ScenarioEvent::Rejoin { worker } => Some(worker),
+            _ => None,
+        }
+    }
+
+    /// Does this event change the present/absent population?
+    pub fn is_population(&self) -> bool {
+        self.worker().is_some()
+    }
+
+    /// +1 / −1 / 0 population delta when applied.
+    pub fn population_delta(&self) -> i64 {
+        match self {
+            ScenarioEvent::Leave { .. } | ScenarioEvent::Crash { .. } => -1,
+            ScenarioEvent::Join { .. } | ScenarioEvent::Rejoin { .. } => 1,
+            _ => 0,
+        }
+    }
+}
+
+/// A full, immutable event timeline, sorted by round. Rounds are
+/// 1-based (like the engines'); events for round `t` are applied at the
+/// *start* of round `t`, before edge dynamics and scheduling.
+#[derive(Clone, Debug, Default)]
+pub struct Scenario {
+    events: Vec<(usize, ScenarioEvent)>,
+}
+
+impl Scenario {
+    /// The empty timeline (the `stable` preset).
+    pub fn stable() -> Self {
+        Scenario::default()
+    }
+
+    /// Build from explicit `(round, event)` pairs (hand-scripted
+    /// dynamics). Stable-sorts by round, preserving intra-round order.
+    pub fn from_events(mut events: Vec<(usize, ScenarioEvent)>) -> Self {
+        events.sort_by_key(|&(r, _)| r);
+        Scenario { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// All events, in application order.
+    pub fn events(&self) -> &[(usize, ScenarioEvent)] {
+        &self.events
+    }
+
+    /// The events to apply at the start of `round`, in order.
+    pub fn events_at(&self, round: usize) -> &[(usize, ScenarioEvent)] {
+        let lo = self.events.partition_point(|&(r, _)| r < round);
+        let hi = self.events.partition_point(|&(r, _)| r <= round);
+        &self.events[lo..hi]
+    }
+
+    /// Highest worker id referenced by any population event (None when
+    /// the timeline has no population events). The experiment builder
+    /// rejects hand-scripted timelines whose ids exceed the worker
+    /// count, so engines never index out of bounds.
+    pub fn max_worker(&self) -> Option<usize> {
+        self.events.iter().filter_map(|(_, e)| e.worker()).max()
+    }
+
+    /// The generator floor: scripted timelines never take the population
+    /// below this (and the engines additionally refuse to empty it).
+    pub fn min_present(workers: usize) -> usize {
+        (workers / 5).max(1)
+    }
+
+    /// Generate the timeline for a config. Deterministic: keyed purely
+    /// by `(cfg, workers, rounds, seed)`, on a dedicated RNG stream.
+    ///
+    /// Invariants the generator maintains (checked by tests):
+    /// * `Leave`/`Crash` only target present workers, `Join`/`Rejoin`
+    ///   only absent ones;
+    /// * the present count never drops below
+    ///   [`min_present`](Self::min_present);
+    /// * the `stable` preset with zero churn yields the empty timeline.
+    pub fn generate(
+        cfg: &ScenarioConfig,
+        workers: usize,
+        rounds: usize,
+        seed: u64,
+    ) -> Scenario {
+        if cfg.preset == ScenarioPreset::Stable && cfg.churn_rate == 0.0 {
+            return Scenario::stable();
+        }
+        let mut rng = Pcg::new(seed ^ 0x5CE4_A210_D15E_0001, 0x5CE);
+        let min_present = Self::min_present(workers);
+        let mut present = vec![true; workers];
+        let mut count = workers;
+        // returns[t] = workers scheduled to come back at round t
+        // (true = fresh Join, false = Rejoin)
+        let mut returns: Vec<Vec<(usize, bool)>> = vec![Vec::new(); rounds + 2];
+        let mut events: Vec<(usize, ScenarioEvent)> = Vec::new();
+
+        // scripted environment windows (degraded preset)
+        if cfg.preset == ScenarioPreset::Degraded {
+            let q1 = (rounds / 4).max(1);
+            let q2 = (rounds / 2).max(1);
+            let q3 = (3 * rounds / 4).max(1);
+            events.push((q1, ScenarioEvent::BandwidthShift { factor: 0.35 }));
+            events.push((q3, ScenarioEvent::BandwidthShift { factor: 1.0 }));
+            let t1 = (rounds / 3).max(1);
+            events.push((t1, ScenarioEvent::MobilityBurst { factor: 4.0 }));
+            events.push((q2, ScenarioEvent::MobilityBurst { factor: 1.0 }));
+            events.push((q2, ScenarioEvent::RegionPartition { enabled: true }));
+            events.push((q3, ScenarioEvent::RegionPartition { enabled: false }));
+        }
+
+        for t in 1..=rounds {
+            // 1) scheduled returns (random-churn downtimes expiring)
+            let due = std::mem::take(&mut returns[t]);
+            for (w, fresh) in due {
+                if !present[w] {
+                    present[w] = true;
+                    count += 1;
+                    let ev = if fresh {
+                        ScenarioEvent::Join { worker: w }
+                    } else {
+                        ScenarioEvent::Rejoin { worker: w }
+                    };
+                    events.push((t, ev));
+                }
+            }
+
+            // 2) random churn: each present worker departs with prob
+            // churn_rate; downtime is geometric-ish with the configured
+            // mean, after which it rejoins with its stale model
+            if cfg.churn_rate > 0.0 {
+                for w in 0..workers {
+                    if !present[w] || count <= min_present {
+                        continue;
+                    }
+                    if rng.f64() < cfg.churn_rate {
+                        present[w] = false;
+                        count -= 1;
+                        let ev = if rng.f64() < cfg.crash_frac {
+                            ScenarioEvent::Crash { worker: w }
+                        } else {
+                            ScenarioEvent::Leave { worker: w }
+                        };
+                        events.push((t, ev));
+                        let down = rng
+                            .exponential(cfg.mean_downtime_rounds)
+                            .ceil()
+                            .max(1.0) as usize;
+                        let back = t + down;
+                        if back <= rounds {
+                            returns[back].push((w, false));
+                        }
+                    }
+                }
+            }
+
+            // 3) preset population target (scripted waves)
+            if let Some((target, fresh)) =
+                preset_target(cfg.preset, workers, rounds, t, min_present)
+            {
+                match count.cmp(&target) {
+                    std::cmp::Ordering::Greater => {
+                        let pres: Vec<usize> =
+                            (0..workers).filter(|&w| present[w]).collect();
+                        let k = count - target;
+                        for p in
+                            rng.sample_indices(pres.len(), k.min(pres.len()))
+                        {
+                            let w = pres[p];
+                            if count <= target || count <= min_present {
+                                break;
+                            }
+                            present[w] = false;
+                            count -= 1;
+                            let ev = if rng.f64() < cfg.crash_frac {
+                                ScenarioEvent::Crash { worker: w }
+                            } else {
+                                ScenarioEvent::Leave { worker: w }
+                            };
+                            events.push((t, ev));
+                        }
+                    }
+                    std::cmp::Ordering::Less => {
+                        let abs: Vec<usize> =
+                            (0..workers).filter(|&w| !present[w]).collect();
+                        let k = target - count;
+                        for p in
+                            rng.sample_indices(abs.len(), k.min(abs.len()))
+                        {
+                            let w = abs[p];
+                            present[w] = true;
+                            count += 1;
+                            let ev = if fresh {
+                                ScenarioEvent::Join { worker: w }
+                            } else {
+                                ScenarioEvent::Rejoin { worker: w }
+                            };
+                            events.push((t, ev));
+                        }
+                    }
+                    std::cmp::Ordering::Equal => {}
+                }
+            }
+        }
+
+        Scenario::from_events(events)
+    }
+}
+
+/// The preset's target population at round `t` (None = churn only).
+/// The bool says whether workers added to reach the target arrive fresh
+/// (`Join`) or resume (`Rejoin`).
+fn preset_target(
+    preset: ScenarioPreset,
+    workers: usize,
+    rounds: usize,
+    t: usize,
+    min_present: usize,
+) -> Option<(usize, bool)> {
+    match preset {
+        ScenarioPreset::Stable | ScenarioPreset::Degraded => None,
+        ScenarioPreset::Diurnal => {
+            // day/night wave: full at t=1, trough at half-period
+            let period = (rounds as f64 / 2.0).max(20.0);
+            let phase = 2.0 * std::f64::consts::PI * (t as f64 - 1.0) / period;
+            let frac = 0.6 + 0.4 * phase.cos();
+            let target = ((workers as f64 * frac).round() as usize)
+                .clamp(min_present, workers);
+            Some((target, false))
+        }
+        ScenarioPreset::FlashCrowd => {
+            // reduced cast → surge of fresh devices → mass departure
+            let third = (rounds / 3).max(1);
+            let low = ((workers as f64 * 0.4).round() as usize)
+                .clamp(min_present, workers);
+            if t <= third {
+                Some((low, true))
+            } else if t <= 2 * third {
+                Some((workers, true))
+            } else {
+                Some((low, true))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn replay_invariants(sc: &Scenario, workers: usize) -> (usize, usize) {
+        // returns (min population seen, max population seen)
+        let mut present = vec![true; workers];
+        let mut count = workers;
+        let (mut lo, mut hi) = (workers, workers);
+        for &(round, ev) in sc.events() {
+            assert!(round >= 1, "round 0 event {ev:?}");
+            match ev {
+                ScenarioEvent::Leave { worker } | ScenarioEvent::Crash { worker } => {
+                    assert!(present[worker], "departure of absent {worker}");
+                    present[worker] = false;
+                    count -= 1;
+                }
+                ScenarioEvent::Join { worker } | ScenarioEvent::Rejoin { worker } => {
+                    assert!(!present[worker], "arrival of present {worker}");
+                    present[worker] = true;
+                    count += 1;
+                }
+                _ => {}
+            }
+            lo = lo.min(count);
+            hi = hi.max(count);
+        }
+        (lo, hi)
+    }
+
+    #[test]
+    fn stable_preset_is_empty_timeline() {
+        let sc = Scenario::generate(&ScenarioConfig::default(), 50, 200, 1);
+        assert!(sc.is_empty());
+        assert_eq!(sc.events_at(10).len(), 0);
+    }
+
+    #[test]
+    fn generation_is_deterministic_in_seed() {
+        let cfg = ScenarioConfig::preset(ScenarioPreset::Diurnal);
+        let a = Scenario::generate(&cfg, 40, 120, 7);
+        let b = Scenario::generate(&cfg, 40, 120, 7);
+        assert_eq!(a.events(), b.events());
+        assert!(!a.is_empty());
+        let c = Scenario::generate(&cfg, 40, 120, 8);
+        assert_ne!(a.events(), c.events(), "different seed, same timeline");
+    }
+
+    #[test]
+    fn diurnal_respects_population_floor_and_varies() {
+        for seed in [1u64, 2, 3] {
+            let cfg = ScenarioConfig::preset(ScenarioPreset::Diurnal);
+            let sc = Scenario::generate(&cfg, 30, 160, seed);
+            let (lo, hi) = replay_invariants(&sc, 30);
+            assert!(lo >= Scenario::min_present(30), "floor violated: {lo}");
+            assert!(hi > lo, "population never varied");
+        }
+    }
+
+    #[test]
+    fn flash_crowd_surges_with_fresh_joins() {
+        let cfg = ScenarioConfig::preset(ScenarioPreset::FlashCrowd);
+        let sc = Scenario::generate(&cfg, 30, 90, 5);
+        replay_invariants(&sc, 30);
+        let joins = sc
+            .events()
+            .iter()
+            .filter(|(_, e)| matches!(e, ScenarioEvent::Join { .. }))
+            .count();
+        let leaves = sc
+            .events()
+            .iter()
+            .filter(|(_, e)| e.population_delta() < 0)
+            .count();
+        assert!(joins > 0, "surge must bring fresh devices");
+        assert!(leaves > 0, "initial/final troughs must shed workers");
+    }
+
+    #[test]
+    fn degraded_emits_environment_windows_and_crashes() {
+        let cfg = ScenarioConfig::preset(ScenarioPreset::Degraded);
+        let sc = Scenario::generate(&cfg, 40, 200, 9);
+        replay_invariants(&sc, 40);
+        let has = |k: &str| sc.events().iter().any(|(_, e)| e.kind() == k);
+        assert!(has("bandwidth-shift"));
+        assert!(has("mobility-burst"));
+        assert!(has("region-partition"));
+        assert!(has("crash"), "degraded churn should include crashes");
+        assert!(has("rejoin"), "crashed workers should come back");
+    }
+
+    #[test]
+    fn events_at_slices_by_round() {
+        let sc = Scenario::from_events(vec![
+            (3, ScenarioEvent::Leave { worker: 1 }),
+            (1, ScenarioEvent::BandwidthShift { factor: 0.5 }),
+            (3, ScenarioEvent::Rejoin { worker: 2 }),
+        ]);
+        assert_eq!(sc.len(), 3);
+        assert_eq!(sc.events_at(1).len(), 1);
+        assert_eq!(sc.events_at(2).len(), 0);
+        let at3 = sc.events_at(3);
+        assert_eq!(at3.len(), 2);
+        // stable sort preserves intra-round order
+        assert_eq!(at3[0].1, ScenarioEvent::Leave { worker: 1 });
+        assert_eq!(at3[1].1, ScenarioEvent::Rejoin { worker: 2 });
+    }
+
+    #[test]
+    fn dense_maps_and_plan_remap_follow_membership() {
+        use crate::config::NetworkConfig;
+        let mut rng = Pcg::seeded(21);
+        let mut net = EdgeNetwork::new(6, NetworkConfig::default(), &mut rng);
+        net.set_present(1, false);
+        net.set_present(4, false);
+        let (mut ids, mut gdx) = (Vec::new(), Vec::new());
+        rebuild_dense_maps(&net, &mut ids, &mut gdx);
+        assert_eq!(ids, vec![0, 2, 3, 5]);
+        assert_eq!(gdx[2], 1);
+        assert_eq!(gdx[4], usize::MAX);
+        let mut plan = RoundPlan {
+            active: vec![0, 2],
+            pulls_from: vec![vec![1], vec![3]],
+            pushes: vec![(2, 0)],
+        };
+        remap_plan_to_global(&mut plan, &ids);
+        assert_eq!(plan.active, vec![0, 3]);
+        assert_eq!(plan.pulls_from, vec![vec![2], vec![5]]);
+        assert_eq!(plan.pushes, vec![(3, 0)]);
+        assert!(plan.validate_present(net.present_mask()).is_ok());
+        // candidates come back in dense indices, only present workers
+        let (mut range_buf, mut cand_buf) = (Vec::new(), Vec::new());
+        build_dense_candidates(&net, &ids, &gdx, &mut range_buf, &mut cand_buf);
+        for lst in &cand_buf[..ids.len()] {
+            assert!(lst.iter().all(|&k| k < ids.len()));
+        }
+    }
+
+    #[test]
+    fn churn_only_config_sheds_and_recovers() {
+        let cfg = ScenarioConfig {
+            preset: ScenarioPreset::Stable,
+            churn_rate: 0.1,
+            mean_downtime_rounds: 5.0,
+            crash_frac: 0.5,
+        };
+        let sc = Scenario::generate(&cfg, 20, 100, 3);
+        assert!(!sc.is_empty());
+        let (lo, _) = replay_invariants(&sc, 20);
+        assert!(lo >= Scenario::min_present(20));
+        assert!(sc.events().iter().any(|(_, e)| e.kind() == "rejoin"));
+    }
+}

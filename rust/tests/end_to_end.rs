@@ -3,8 +3,16 @@
 //! with less communication, while keeping staleness controlled.
 
 use dystop::config::{ExperimentConfig, SchedulerKind};
+use dystop::experiment::{Experiment, VirtualClockBackend};
 use dystop::metrics::RunResult;
-use dystop::sim::SimEngine;
+
+/// Full-curve run through the builder (ex `SimEngine::run_full`).
+fn run_full(cfg: ExperimentConfig) -> RunResult {
+    Experiment::builder(cfg)
+        .backend_impl(Box::new(VirtualClockBackend::full_curves()))
+        .run()
+        .expect("experiment failed")
+}
 
 fn cfg(scheduler: SchedulerKind, phi: f64, seed: u64) -> ExperimentConfig {
     ExperimentConfig {
@@ -25,7 +33,7 @@ fn cfg(scheduler: SchedulerKind, phi: f64, seed: u64) -> ExperimentConfig {
 }
 
 fn run(scheduler: SchedulerKind, phi: f64, seed: u64) -> RunResult {
-    SimEngine::new(cfg(scheduler, phi, seed)).run_full()
+    run_full(cfg(scheduler, phi, seed))
 }
 
 /// Time to reach the given accuracy, or the final time if never reached
@@ -79,10 +87,10 @@ fn dystop_beats_saadfl_on_communication() {
     for seed in [7u64, 8] {
         let mut c = cfg(SchedulerKind::DySTop, 1.0, seed);
         c.workers = 60;
-        let d = SimEngine::new(c).run_full();
+        let d = run_full(c);
         let mut c = cfg(SchedulerKind::SaAdfl, 1.0, seed);
         c.workers = 60;
-        let s = SimEngine::new(c).run_full();
+        let s = run_full(c);
         cd_sum += d.comm_to_accuracy(target).expect("dystop must converge");
         cs_sum += s
             .comm_to_accuracy(target)
@@ -156,7 +164,7 @@ fn tau_bound_sweep_orders_average_staleness() {
         let mut c = cfg(SchedulerKind::DySTop, 1.0, 15);
         c.tau_bound = tau;
         c.rounds = 100;
-        SimEngine::new(c).run_full().mean_staleness()
+        run_full(c).mean_staleness()
     };
     let lo = s(2);
     let hi = s(15);

@@ -1,21 +1,24 @@
 //! The unified Experiment API: builder errors, backend dispatch, observer
-//! hooks, and two load-bearing bit-identity pins:
+//! hooks, and the load-bearing bit-identity pins:
 //!
-//! * the legacy `SimEngine::run` facade vs. the
-//!   `Experiment::builder → VirtualClockBackend` path for a seeded
-//!   config (re-pinned for the parallel engine: per-activation RNG
-//!   streams changed every trajectory once, in this PR);
-//! * `run.threads=1` vs. `run.threads=N` — the parallel round executor
-//!   must be bit-identical for every thread count.
+//! * seeded runs are a pure function of the config — same config, same
+//!   bits (the parity contract that replaced the legacy `SimEngine`
+//!   facade, deleted in this PR after all callers migrated);
+//! * `run.threads=1` vs `run.threads=N` — the parallel round executor
+//!   must be bit-identical for every thread count;
+//! * the early-stop path (`run`) agrees with the full-curve path when
+//!   the target is unreachable.
+//!
+//! Also folds in the engine-behaviour tests that used to live in
+//! `sim::tests` (training, staleness bounds, scheduler orderings).
 
 use dystop::config::{BackendKind, ExperimentConfig, SchedulerKind, TrainerKind};
 use dystop::coordinator::RoundPlan;
 use dystop::experiment::{
     Experiment, ExperimentError, RoundObserver, TestbedOptions,
-    ThreadedBackend,
+    ThreadedBackend, VirtualClockBackend,
 };
 use dystop::metrics::{EvalRecord, RoundRecord, RunResult};
-use dystop::sim::SimEngine;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -33,18 +36,42 @@ fn small_cfg() -> ExperimentConfig {
     }
 }
 
+/// The engine-test scale the old `sim::tests` used.
+fn engine_cfg(scheduler: SchedulerKind) -> ExperimentConfig {
+    ExperimentConfig {
+        workers: 12,
+        rounds: 60,
+        train_per_worker: 64,
+        test_samples: 200,
+        eval_every: 10,
+        scheduler,
+        target_accuracy: 2.0, // never early-stop
+        ..Default::default()
+    }
+}
+
+/// Full-curve run through the builder (ex `SimEngine::run_full`).
+fn run_full(cfg: ExperimentConfig) -> RunResult {
+    Experiment::builder(cfg)
+        .backend_impl(Box::new(VirtualClockBackend::full_curves()))
+        .run()
+        .expect("experiment failed")
+}
+
 /// Field-by-field asserts (readable failure messages) backed by the one
 /// shared definition of "bit-identical run", `RunResult::bits_eq` — the
 /// same predicate the bench determinism witness records.
 fn assert_bit_identical(a: &RunResult, b: &RunResult) {
     assert_eq!(a.label, b.label);
     assert_eq!(a.model_bits.to_bits(), b.model_bits.to_bits());
+    assert_eq!(a.events, b.events, "scenario event log");
     assert_eq!(a.rounds.len(), b.rounds.len(), "round count");
     for (x, y) in a.rounds.iter().zip(&b.rounds) {
         assert_eq!(x.round, y.round);
         assert_eq!(x.time_s.to_bits(), y.time_s.to_bits(), "round {}", x.round);
         assert_eq!(x.duration_s.to_bits(), y.duration_s.to_bits());
         assert_eq!(x.active, y.active);
+        assert_eq!(x.population, y.population);
         assert_eq!(x.transfers, y.transfers);
         assert_eq!(x.avg_staleness.to_bits(), y.avg_staleness.to_bits());
         assert_eq!(x.max_staleness, y.max_staleness);
@@ -63,31 +90,35 @@ fn assert_bit_identical(a: &RunResult, b: &RunResult) {
 }
 
 #[test]
-fn builder_backend_matches_legacy_sim_engine_bit_for_bit() {
-    // legacy path (early-stopping `run`, as the CLI `train` used it)
-    let legacy = SimEngine::new(small_cfg()).run();
-    // new path: builder + virtual-clock backend
-    let new = Experiment::builder(small_cfg())
+fn seeded_runs_are_bit_identical() {
+    let a = Experiment::builder(small_cfg())
         .backend(BackendKind::Sim)
         .run()
         .unwrap();
-    assert_bit_identical(&legacy, &new);
-    assert!(!new.rounds.is_empty());
+    let b = Experiment::builder(small_cfg())
+        .backend(BackendKind::Sim)
+        .run()
+        .unwrap();
+    assert_bit_identical(&a, &b);
+    assert!(!a.rounds.is_empty());
+    // the default (stable) scenario keeps the population constant
+    assert!(a.events.is_empty());
+    assert!(a.rounds.iter().all(|r| r.population == 6));
 }
 
 #[test]
-fn parity_holds_for_full_curves_across_schedulers() {
+fn early_stop_agrees_with_full_curves_when_target_unreachable() {
     for kind in [SchedulerKind::DySTop, SchedulerKind::SaAdfl] {
         let mut cfg = small_cfg();
         cfg.scheduler = kind;
         cfg.target_accuracy = 2.0;
-        let legacy = SimEngine::new(cfg.clone()).run_full();
-        let new = Experiment::builder(cfg)
+        let full = run_full(cfg.clone());
+        // `run()` early-stops at target 2.0 → never fires → identical
+        let stopped = Experiment::builder(cfg)
             .backend(BackendKind::Sim)
             .run()
             .unwrap();
-        // `run()` early-stops at target 2.0 → never fires → identical
-        assert_bit_identical(&legacy, &new);
+        assert_bit_identical(&full, &stopped);
     }
 }
 
@@ -212,4 +243,93 @@ fn threaded_backend_rejects_pjrt_configs() {
         .run()
         .unwrap_err();
     assert!(matches!(err, ExperimentError::Unsupported(_)), "{err}");
+}
+
+// --- engine behaviour, folded in from the deleted `sim::tests` ---
+
+#[test]
+fn dystop_sim_trains() {
+    let res = run_full(engine_cfg(SchedulerKind::DySTop));
+    assert_eq!(res.rounds.len(), 60);
+    assert!(!res.evals.is_empty());
+    let first = res.evals.first().unwrap().avg_accuracy;
+    let best = res.best_accuracy();
+    assert!(best > first, "no learning: {first} → {best}");
+    assert!(best > 0.5, "best acc {best}");
+}
+
+#[test]
+fn staleness_stays_bounded_under_dystop() {
+    let mut cfg = engine_cfg(SchedulerKind::DySTop);
+    cfg.rounds = 80;
+    cfg.tau_bound = 4;
+    let res = run_full(cfg);
+    // after warmup, staleness must hover near the bound
+    let late: Vec<&RoundRecord> = res.rounds.iter().skip(30).collect();
+    let avg = late.iter().map(|r| r.avg_staleness).sum::<f64>()
+        / late.len() as f64;
+    assert!(avg < 8.0, "avg staleness {avg} too high for bound 4");
+}
+
+#[test]
+fn all_schedulers_run_and_learn() {
+    for k in [
+        SchedulerKind::DySTop,
+        SchedulerKind::SaAdfl,
+        SchedulerKind::AsyDfl,
+        SchedulerKind::Matcha,
+    ] {
+        let res = run_full(engine_cfg(k));
+        assert!(
+            res.best_accuracy() > 0.4,
+            "{}: best acc {}",
+            res.label,
+            res.best_accuracy()
+        );
+    }
+}
+
+#[test]
+fn clock_monotone_and_positive() {
+    let res = run_full(engine_cfg(SchedulerKind::DySTop));
+    let mut prev = 0.0;
+    for r in &res.rounds {
+        assert!(r.time_s > prev);
+        assert!(r.duration_s > 0.0);
+        prev = r.time_s;
+    }
+}
+
+#[test]
+fn matcha_is_synchronous_straggler_bound() {
+    let res_m = run_full(engine_cfg(SchedulerKind::Matcha));
+    let res_d = run_full(engine_cfg(SchedulerKind::DySTop));
+    // per-round duration of MATCHA ≈ slowest worker; DySTop's mean
+    // round must be meaningfully shorter
+    let mean = |r: &RunResult| {
+        r.rounds.iter().map(|x| x.duration_s).sum::<f64>()
+            / r.rounds.len() as f64
+    };
+    assert!(
+        mean(&res_d) < mean(&res_m),
+        "dystop {} vs matcha {}",
+        mean(&res_d),
+        mean(&res_m)
+    );
+}
+
+#[test]
+fn sa_adfl_uses_more_comm_per_round_than_dystop() {
+    let res_s = run_full(engine_cfg(SchedulerKind::SaAdfl));
+    let res_d = run_full(engine_cfg(SchedulerKind::DySTop));
+    let per_active = |r: &RunResult| {
+        r.rounds.iter().map(|x| x.transfers).sum::<usize>() as f64
+            / r.rounds.iter().map(|x| x.active).sum::<usize>() as f64
+    };
+    assert!(
+        per_active(&res_s) > per_active(&res_d),
+        "sa-adfl {} vs dystop {}",
+        per_active(&res_s),
+        per_active(&res_d)
+    );
 }

@@ -3,7 +3,16 @@
 //! bandwidth, single-worker networks, immobile/hyper-mobile topologies.
 
 use dystop::config::{ExperimentConfig, NetworkConfig, SchedulerKind};
-use dystop::sim::SimEngine;
+use dystop::experiment::{Experiment, VirtualClockBackend};
+use dystop::metrics::RunResult;
+
+/// Full-curve run through the builder (ex `SimEngine::run_full`).
+fn run_full(cfg: ExperimentConfig) -> RunResult {
+    Experiment::builder(cfg)
+        .backend_impl(Box::new(VirtualClockBackend::full_curves()))
+        .run()
+        .expect("experiment failed")
+}
 
 fn base() -> ExperimentConfig {
     ExperimentConfig {
@@ -23,7 +32,7 @@ fn survives_total_link_loss() {
     // every link drops every round: no pulls possible, workers train solo
     let mut cfg = base();
     cfg.network.link_drop_prob = 1.0;
-    let res = SimEngine::new(cfg).run_full();
+    let res = run_full(cfg);
     assert_eq!(res.rounds.len(), 40);
     assert_eq!(res.total_transfers(), 0, "no transfers over dead links");
     // local training alone still improves over init
@@ -36,7 +45,7 @@ fn survives_zero_bandwidth_budgets() {
     let mut cfg = base();
     cfg.network.budget_models = 0.0;
     cfg.network.budget_jitter = 0.0;
-    let res = SimEngine::new(cfg).run_full();
+    let res = run_full(cfg);
     // budgets floor at 1.0 transfer/round (EdgeNetwork::refresh_budgets),
     // so communication is heavily throttled but the run proceeds
     assert_eq!(res.rounds.len(), 40);
@@ -48,7 +57,7 @@ fn single_worker_network_degenerates_to_local_sgd() {
     let mut cfg = base();
     cfg.workers = 1;
     cfg.scheduler = SchedulerKind::DySTop;
-    let res = SimEngine::new(cfg).run_full();
+    let res = run_full(cfg);
     assert_eq!(res.total_transfers(), 0);
     assert!(res.best_accuracy() > 0.3, "acc {}", res.best_accuracy());
     // the lone worker is always activated ⇒ staleness pinned at 0
@@ -65,7 +74,7 @@ fn out_of_range_workers_never_communicate() {
         mobility_m: 0.0,
         ..Default::default()
     };
-    let res = SimEngine::new(cfg).run_full();
+    let res = run_full(cfg);
     assert_eq!(res.rounds.len(), 40);
     // isolated workers still train locally; transfers near zero
     assert!(res.total_transfers() < 40);
@@ -76,7 +85,7 @@ fn hyper_mobility_keeps_invariants() {
     let mut cfg = base();
     cfg.network.mobility_m = 50.0; // teleporting workers
     cfg.network.link_drop_prob = 0.3;
-    let res = SimEngine::new(cfg).run_full();
+    let res = run_full(cfg);
     let mut prev = 0.0;
     for r in &res.rounds {
         assert!(r.time_s >= prev && r.duration_s >= 0.0);
@@ -100,7 +109,15 @@ fn all_schedulers_survive_chaos() {
         cfg.network.link_drop_prob = 0.5;
         cfg.network.mobility_m = 20.0;
         cfg.network.budget_jitter = 1.0;
-        let res = SimEngine::new(cfg).run_full();
+        // chaos now includes population chaos: heavy crash-y churn on top
+        // of the flaky links and teleporting workers
+        cfg.scenario = dystop::config::ScenarioConfig {
+            preset: dystop::config::ScenarioPreset::Stable,
+            churn_rate: 0.2,
+            mean_downtime_rounds: 3.0,
+            crash_frac: 0.8,
+        };
+        let res = run_full(cfg);
         assert_eq!(res.rounds.len(), 20, "{}", res.label);
         assert!(
             res.evals.iter().all(|e| e.avg_loss.is_finite()),
@@ -116,7 +133,7 @@ fn extreme_non_iid_each_worker_one_class() {
     let mut cfg = base();
     cfg.phi = 0.01;
     cfg.workers = 10;
-    let res = SimEngine::new(cfg).run_full();
+    let res = run_full(cfg);
     let first = res.evals.first().unwrap().avg_accuracy;
     assert!(res.best_accuracy() >= first);
     assert!(res.best_accuracy() > 0.2, "acc {}", res.best_accuracy());
@@ -127,7 +144,7 @@ fn tau_bound_zero_forces_frequent_activation() {
     let mut cfg = base();
     cfg.tau_bound = 0;
     cfg.rounds = 60;
-    let res = SimEngine::new(cfg).run_full();
+    let res = run_full(cfg);
     // queues punish ANY staleness: activation pressure keeps τ tiny
     let late: Vec<_> = res.rounds.iter().skip(20).collect();
     let avg = late.iter().map(|r| r.avg_staleness).sum::<f64>() / late.len() as f64;

@@ -111,7 +111,7 @@ fn deterministic_training() {
 fn sim_engine_runs_on_pjrt_trainer() {
     let Some(dir) = artifact_dir() else { return };
     use dystop::config::{ExperimentConfig, SchedulerKind, TrainerKind};
-    use dystop::sim::SimEngine;
+    use dystop::experiment::{Experiment, VirtualClockBackend};
     let t = PjrtTrainer::new(&dir, ModelKind::Mlp).unwrap();
     let cfg = ExperimentConfig {
         workers: 6,
@@ -126,8 +126,11 @@ fn sim_engine_runs_on_pjrt_trainer() {
         target_accuracy: 2.0,
         ..Default::default()
     };
-    let sim = SimEngine::with_trainer(cfg, Box::new(t));
-    let res = sim.run_full();
+    let res = Experiment::builder(cfg)
+        .trainer(Box::new(t))
+        .backend_impl(Box::new(VirtualClockBackend::full_curves()))
+        .run()
+        .expect("pjrt experiment failed");
     assert_eq!(res.rounds.len(), 60);
     // DFL cold-start on a fresh MLP is slow; the signal we need is that
     // the stack *learns* through the artifacts, not that it converges.

@@ -1,0 +1,328 @@
+//! Scenario-engine integration: dynamic worker populations threaded
+//! through the network, the schedulers and both backends.
+//!
+//! The load-bearing properties:
+//!
+//! * every scheduler's plan under randomized churn timelines references
+//!   only present workers (membership compaction is scheduler-agnostic);
+//! * `threads=1` vs `threads=N` stay bit-identical with scenarios
+//!   active (events apply on the coordinator only);
+//! * the recorded event log accounts for every population change;
+//! * `Rejoin` resumes from stale parameters with τ advanced, `Leave`
+//!   freezes a worker out of planning.
+
+use dystop::config::{
+    BackendKind, ExperimentConfig, ScenarioConfig, ScenarioPreset,
+    SchedulerKind,
+};
+use dystop::experiment::{
+    Experiment, TestbedOptions, ThreadedBackend, VirtualClockEngine,
+};
+use dystop::metrics::RunResult;
+use dystop::scenario::{Scenario, ScenarioEvent};
+use dystop::util::rng::Pcg;
+
+fn tiny_cfg(scheduler: SchedulerKind) -> ExperimentConfig {
+    ExperimentConfig {
+        workers: 12,
+        rounds: 30,
+        train_per_worker: 48,
+        test_samples: 64,
+        eval_every: 10,
+        seed: 7,
+        scheduler,
+        target_accuracy: 2.0,
+        ..Default::default()
+    }
+}
+
+const ALL_SCHEDULERS: [SchedulerKind; 6] = [
+    SchedulerKind::DySTop,
+    SchedulerKind::DySTopPhase1Only,
+    SchedulerKind::DySTopPhase2Only,
+    SchedulerKind::SaAdfl,
+    SchedulerKind::AsyDfl,
+    SchedulerKind::Matcha,
+];
+
+/// Replay the event log over the round records: every `EventRecord`
+/// must carry the correct running population, and every `RoundRecord`
+/// must report the population left after its boundary events.
+fn assert_event_log_accounts_for_population(res: &RunResult, n0: usize) {
+    let mut pop = n0 as i64;
+    let mut ev_idx = 0;
+    for r in &res.rounds {
+        while ev_idx < res.events.len() && res.events[ev_idx].round <= r.round {
+            let e = &res.events[ev_idx];
+            pop += match e.kind {
+                "leave" | "crash" => -1,
+                "join" | "rejoin" => 1,
+                _ => 0,
+            };
+            assert_eq!(
+                e.population as i64, pop,
+                "event {ev_idx} ({}) population mismatch",
+                e.kind
+            );
+            ev_idx += 1;
+        }
+        assert_eq!(
+            r.population as i64, pop,
+            "round {} population mismatch",
+            r.round
+        );
+    }
+    assert_eq!(ev_idx, res.events.len(), "events after the last round");
+}
+
+#[test]
+fn stable_preset_keeps_population_constant() {
+    let res = Experiment::builder(tiny_cfg(SchedulerKind::DySTop))
+        .backend(BackendKind::Sim)
+        .run()
+        .unwrap();
+    assert!(res.events.is_empty());
+    assert!(res.rounds.iter().all(|r| r.population == 12));
+}
+
+#[test]
+fn churn_presets_run_all_schedulers_to_completion() {
+    // the acceptance criterion: a churn preset runs all six schedulers
+    // to completion with workers joining/leaving mid-run, and the event
+    // log accounts for every population change
+    for kind in ALL_SCHEDULERS {
+        let mut cfg = tiny_cfg(kind);
+        cfg.workers = 15;
+        cfg.rounds = 40;
+        cfg.scenario = ScenarioConfig::preset(ScenarioPreset::Diurnal);
+        let res = Experiment::builder(cfg)
+            .backend(BackendKind::Sim)
+            .run()
+            .unwrap();
+        assert_eq!(res.rounds.len(), 40, "{}", res.label);
+        assert!(!res.events.is_empty(), "{}: no churn happened", res.label);
+        let (lo, hi) = res.population_range();
+        assert!(lo < hi, "{}: population never varied", res.label);
+        assert!(lo >= 1, "{}", res.label);
+        assert_event_log_accounts_for_population(&res, 15);
+        assert!(
+            res.evals.iter().all(|e| e.avg_loss.is_finite()),
+            "{}",
+            res.label
+        );
+    }
+}
+
+#[test]
+fn plans_reference_only_present_workers_under_randomized_churn() {
+    // property test: randomized churn knobs × every scheduler; after
+    // each step the realised (global-id) plan must validate against the
+    // network's membership mask
+    let mut rng = Pcg::seeded(91);
+    for trial in 0..6 {
+        let kind = ALL_SCHEDULERS[trial % ALL_SCHEDULERS.len()];
+        let mut cfg = tiny_cfg(kind);
+        cfg.seed = 100 + trial as u64;
+        cfg.rounds = 25;
+        cfg.scenario = ScenarioConfig {
+            preset: ScenarioPreset::Stable,
+            churn_rate: 0.05 + rng.f64() * 0.2,
+            mean_downtime_rounds: 1.0 + rng.f64() * 8.0,
+            crash_frac: rng.f64(),
+        };
+        let exp = Experiment::builder(cfg.clone()).build().unwrap();
+        assert!(!exp.scenario.is_empty(), "churn must generate events");
+        let mut eng = VirtualClockEngine::new(exp);
+        for _ in 0..cfg.rounds {
+            let plan = eng.step();
+            plan.validate_present(eng.net.present_mask()).unwrap_or_else(
+                |e| panic!("{kind:?} trial {trial}: invalid plan: {e}"),
+            );
+            assert_eq!(eng.population(), eng.net.present_count());
+            assert!(eng.population() >= 1);
+        }
+    }
+}
+
+#[test]
+fn hand_scripted_timeline_with_bogus_events_is_guarded() {
+    // double-leaves, arrivals of present workers, leaves of absent ones:
+    // the engine applies only state-changing events and records exactly
+    // those, so the log still accounts for the population
+    let script = Scenario::from_events(vec![
+        (2, ScenarioEvent::Leave { worker: 3 }),
+        (3, ScenarioEvent::Leave { worker: 3 }),  // already gone: no-op
+        (3, ScenarioEvent::Rejoin { worker: 5 }), // present: no-op
+        (4, ScenarioEvent::Crash { worker: 0 }),
+        (6, ScenarioEvent::Rejoin { worker: 3 }),
+        (7, ScenarioEvent::Join { worker: 0 }),
+        (8, ScenarioEvent::BandwidthShift { factor: 0.5 }),
+    ]);
+    let cfg = tiny_cfg(SchedulerKind::DySTop);
+    let res = Experiment::builder(cfg)
+        .scenario(script)
+        .backend(BackendKind::Sim)
+        .run()
+        .unwrap();
+    // 5 state-changing events survive (2 population no-ops dropped)
+    assert_eq!(res.events.len(), 5);
+    let kinds: Vec<&str> = res.events.iter().map(|e| e.kind).collect();
+    assert_eq!(
+        kinds,
+        vec!["leave", "crash", "rejoin", "join", "bandwidth-shift"]
+    );
+    assert_event_log_accounts_for_population(&res, 12);
+}
+
+#[test]
+fn rejoin_resumes_stale_params_with_advanced_staleness() {
+    let script = Scenario::from_events(vec![
+        (2, ScenarioEvent::Leave { worker: 4 }),
+        (6, ScenarioEvent::Rejoin { worker: 4 }),
+    ]);
+    let cfg = tiny_cfg(SchedulerKind::DySTop);
+    let exp = Experiment::builder(cfg).scenario(script).build().unwrap();
+    let mut eng = VirtualClockEngine::new(exp);
+    eng.step(); // round 1: everyone present
+    assert!(eng.net.is_present(4));
+    let plan2 = eng.step(); // round 2: worker 4 departs at the boundary
+    assert!(!eng.net.is_present(4));
+    assert!(!plan2.active.contains(&4));
+    assert_eq!(eng.population(), 11);
+    let params_at_leave = eng.workers[4].params.clone();
+    for _ in 3..=5 {
+        let plan = eng.step();
+        assert!(!plan.active.contains(&4));
+        assert!(plan.pulls_from.iter().all(|l| !l.contains(&4)));
+    }
+    // absent workers never train: parameters frozen, staleness advancing
+    assert_eq!(eng.workers[4].params, params_at_leave);
+    assert!(
+        eng.workers[4].staleness >= 4,
+        "τ {} must include the downtime",
+        eng.workers[4].staleness
+    );
+    eng.step(); // round 6: rejoin
+    assert!(eng.net.is_present(4));
+    assert_eq!(eng.population(), 12);
+}
+
+#[test]
+fn thread_count_never_changes_results_with_scenarios_active() {
+    for preset in [
+        ScenarioPreset::Diurnal,
+        ScenarioPreset::FlashCrowd,
+        ScenarioPreset::Degraded,
+    ] {
+        let run_with = |threads: usize| {
+            let mut cfg = tiny_cfg(SchedulerKind::DySTop);
+            cfg.workers = 14;
+            cfg.rounds = 20;
+            cfg.threads = threads;
+            cfg.scenario = ScenarioConfig::preset(preset);
+            Experiment::builder(cfg)
+                .backend(BackendKind::Sim)
+                .run()
+                .unwrap()
+        };
+        let sequential = run_with(1);
+        assert!(!sequential.events.is_empty(), "{preset:?}: no events");
+        for threads in [2usize, 5, 0] {
+            let parallel = run_with(threads);
+            assert!(
+                sequential.bits_eq(&parallel),
+                "{preset:?}: threads=1 vs threads={threads} diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn threaded_backend_applies_scenarios() {
+    let mut cfg = tiny_cfg(SchedulerKind::DySTop);
+    cfg.workers = 10;
+    cfg.rounds = 20;
+    cfg.compute_mean_s = 0.5;
+    cfg.scenario = ScenarioConfig {
+        preset: ScenarioPreset::Stable,
+        churn_rate: 0.15,
+        mean_downtime_rounds: 4.0,
+        crash_frac: 0.3,
+    };
+    let opts = TestbedOptions { time_scale: 2.0, profile: false };
+    let res = Experiment::builder(cfg)
+        .backend_impl(Box::new(ThreadedBackend::with_options(opts)))
+        .run()
+        .unwrap();
+    assert_eq!(res.rounds.len(), 20);
+    assert!(!res.events.is_empty(), "churn must reach the testbed");
+    assert_event_log_accounts_for_population(&res, 10);
+    let (lo, hi) = res.population_range();
+    assert!(lo < hi, "population never varied");
+    assert!(res.evals.iter().all(|e| e.avg_loss.is_finite()));
+}
+
+#[test]
+fn event_logs_identical_across_backends() {
+    // the applied-event log is a function of the timeline and the
+    // membership guards alone, so both backends must record the exact
+    // same sequence for the same config
+    let mk = || {
+        let mut cfg = tiny_cfg(SchedulerKind::DySTop);
+        cfg.workers = 10;
+        cfg.rounds = 15;
+        cfg.compute_mean_s = 0.3;
+        cfg.scenario = ScenarioConfig {
+            preset: ScenarioPreset::Stable,
+            churn_rate: 0.12,
+            mean_downtime_rounds: 4.0,
+            crash_frac: 0.5,
+        };
+        cfg
+    };
+    let sim = Experiment::builder(mk())
+        .backend(BackendKind::Sim)
+        .run()
+        .unwrap();
+    let opts = TestbedOptions { time_scale: 2.0, profile: false };
+    let testbed = Experiment::builder(mk())
+        .backend_impl(Box::new(ThreadedBackend::with_options(opts)))
+        .run()
+        .unwrap();
+    assert!(!sim.events.is_empty());
+    assert_eq!(sim.events, testbed.events);
+}
+
+#[test]
+fn scripted_timeline_with_out_of_range_worker_is_rejected() {
+    let script = Scenario::from_events(vec![(
+        1,
+        ScenarioEvent::Leave { worker: 99 },
+    )]);
+    let err = Experiment::builder(tiny_cfg(SchedulerKind::DySTop))
+        .scenario(script)
+        .build()
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("worker 99"), "{msg}");
+}
+
+#[test]
+fn degraded_environment_still_learns() {
+    let mut cfg = tiny_cfg(SchedulerKind::DySTop);
+    cfg.workers = 15;
+    cfg.rounds = 60;
+    cfg.eval_every = 10;
+    cfg.scenario = ScenarioConfig::preset(ScenarioPreset::Degraded);
+    let res = Experiment::builder(cfg)
+        .backend(BackendKind::Sim)
+        .run()
+        .unwrap();
+    assert_eq!(res.rounds.len(), 60);
+    let first = res.evals.first().unwrap().avg_accuracy;
+    assert!(
+        res.best_accuracy() > first,
+        "no learning under degraded scenario: {first} → {}",
+        res.best_accuracy()
+    );
+}

@@ -2,7 +2,16 @@
 //! real concurrency, real message passing, compressed wall-clock delays.
 
 use dystop::config::{ExperimentConfig, SchedulerKind};
-use dystop::testbed::{run_testbed, TestbedOptions};
+use dystop::experiment::{Experiment, TestbedOptions, ThreadedBackend};
+use dystop::metrics::RunResult;
+
+/// Run the threaded backend through the builder (ex `run_testbed`).
+fn run_testbed(cfg: ExperimentConfig, opts: TestbedOptions) -> RunResult {
+    Experiment::builder(cfg)
+        .backend_impl(Box::new(ThreadedBackend::with_options(opts)))
+        .run()
+        .expect("testbed run failed")
+}
 
 fn cfg(scheduler: SchedulerKind) -> ExperimentConfig {
     ExperimentConfig {

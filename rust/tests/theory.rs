@@ -197,7 +197,7 @@ fn end_to_end_staleness_tracks_tau_bound_in_simulation() {
     // Fig. 14's mechanism at test scale: the realised average staleness
     // under DySTop grows with τ_bound and stays within a small factor.
     use dystop::config::ExperimentConfig;
-    use dystop::sim::SimEngine;
+    use dystop::experiment::{Experiment, VirtualClockBackend};
     let run = |tau_bound: u64| -> f64 {
         let cfg = ExperimentConfig {
             workers: 15,
@@ -208,7 +208,11 @@ fn end_to_end_staleness_tracks_tau_bound_in_simulation() {
             target_accuracy: 2.0,
             ..Default::default()
         };
-        SimEngine::new(cfg).run_full().mean_staleness()
+        Experiment::builder(cfg)
+            .backend_impl(Box::new(VirtualClockBackend::full_curves()))
+            .run()
+            .expect("experiment failed")
+            .mean_staleness()
     };
     let s2 = run(2);
     let s8 = run(8);
