@@ -19,11 +19,21 @@ use std::path::PathBuf;
 fn main() {
     let dir = PathBuf::from("artifacts");
     if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts/manifest.json missing — run `make artifacts` first");
-        std::process::exit(1);
+        // a skip is not a failure: CI builds and runs every example, and
+        // artifact generation (python + jax) isn't part of that job
+        println!(
+            "skipping e2e_train: artifacts/manifest.json missing — run \
+             `make artifacts` first"
+        );
+        return;
     }
-    let trainer = PjrtTrainer::new(&dir, ModelKind::Mlp)
-        .expect("load + compile HLO artifacts");
+    let trainer = match PjrtTrainer::new(&dir, ModelKind::Mlp) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: load + compile HLO artifacts: {e}");
+            std::process::exit(1);
+        }
+    };
     println!(
         "loaded {}: P={} params, train batch {}, K_max {}",
         trainer.manifest().name,

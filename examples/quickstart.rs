@@ -41,7 +41,7 @@ fn main() {
             e.time_s,
             e.avg_accuracy,
             e.avg_loss,
-            e.cum_transfers as f64 * res.model_bits / 8.0 / 1e9
+            e.cum_bytes / 1e9
         );
     }
     println!(

@@ -12,19 +12,25 @@
 //!   core invariant), recorded in the report.
 //!
 //! `DYSTOP_BENCH_QUICK=1` shrinks warmup/measure budgets for CI smoke
-//! runs; the report schema is identical.
+//! runs; the report schema is identical. `DYSTOP_BENCH_OUT=path.json`
+//! redirects the report (default `BENCH_sim.json` in the CWD) so CI
+//! artifact uploads can't silently grab a stale file; the CI
+//! `bench-regression` job diffs it against the checked-in
+//! `BENCH_baseline.json` via `dystop bench-diff`.
 
 use dystop::bench::{bench_with, write_json_report, BenchResult};
 use dystop::config::{
-    ExperimentConfig, ModelKind, ScenarioConfig, ScenarioPreset,
-    SchedulerKind,
+    CodecKind, ExperimentConfig, ScenarioConfig, ScenarioPreset,
+    SchedulerKind, TransportConfig,
 };
 use dystop::data::{make_corpus, SyntheticSpec};
 use dystop::experiment::{Experiment, VirtualClockEngine};
 use dystop::util::json::Json;
 use dystop::util::rng::Pcg;
 use dystop::worker::{NativeTrainer, Params, Trainer};
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
 fn sim_engine(n: usize, threads: usize, kind: SchedulerKind) -> VirtualClockEngine {
     scenario_sim_engine(n, threads, kind, ScenarioConfig::default())
@@ -45,6 +51,20 @@ fn scenario_sim_engine(
         scheduler: kind,
         threads,
         scenario,
+        ..Default::default()
+    };
+    let exp = Experiment::builder(cfg).build().expect("valid bench config");
+    VirtualClockEngine::new(exp)
+}
+
+fn codec_sim_engine(n: usize, codec: CodecKind) -> VirtualClockEngine {
+    let cfg = ExperimentConfig {
+        workers: n,
+        rounds: 10_000,
+        train_per_worker: 64,
+        eval_every: usize::MAX,
+        target_accuracy: 2.0,
+        transport: TransportConfig { codec, ..Default::default() },
         ..Default::default()
     };
     let exp = Experiment::builder(cfg).build().expect("valid bench config");
@@ -116,6 +136,22 @@ fn sim_round_benches(
         },
     ));
     println!("  (population after benched rounds: {})", churn.population());
+
+    // transport codecs: encode/decode overhead (topk selection, int8
+    // quantization) and the wire-size effect on realised transfer math —
+    // `codec=dense` is the control row on the identity transport
+    println!("\n== sim_round under transport codecs (N=200, dystop) ==");
+    for codec in [CodecKind::Dense, CodecKind::TopK, CodecKind::Int8] {
+        let mut eng = codec_sim_engine(200, codec);
+        results.push(bench_with(
+            &format!("sim_round N=200 dystop codec={}", codec.name()),
+            warm,
+            budget,
+            &mut || {
+                std::hint::black_box(eng.step());
+            },
+        ));
+    }
 }
 
 fn native_trainer_benches(
@@ -160,7 +196,14 @@ fn native_trainer_benches(
     ));
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_benches(_results: &mut Vec<BenchResult>) {
+    println!("\n(built without the `pjrt` feature — skipping PJRT hot-path benches)");
+}
+
+#[cfg(feature = "pjrt")]
 fn pjrt_benches(results: &mut Vec<BenchResult>) {
+    use dystop::config::ModelKind;
     println!("\n== PJRT hot path (L1/L2 via HLO artifacts) ==");
     let dir = PathBuf::from("artifacts");
     if !dir.join("manifest.json").exists() {
@@ -202,10 +245,13 @@ fn pjrt_benches(results: &mut Vec<BenchResult>) {
 }
 
 /// The parallel engine's core invariant: a seeded run is bit-identical
-/// for any `run.threads` setting — with or without an active scenario.
-/// Checked here so the recorded perf numbers always come with a
-/// correctness witness.
-fn determinism_check(scenario: ScenarioConfig) -> bool {
+/// for any `run.threads` setting — with or without an active scenario
+/// or a stateful transport codec. Checked here so the recorded perf
+/// numbers always come with a correctness witness.
+fn determinism_check(
+    scenario: ScenarioConfig,
+    transport: TransportConfig,
+) -> bool {
     let run_with = |threads: usize| {
         let cfg = ExperimentConfig {
             workers: 20,
@@ -216,6 +262,7 @@ fn determinism_check(scenario: ScenarioConfig) -> bool {
             target_accuracy: 2.0,
             threads,
             scenario,
+            transport,
             ..Default::default()
         };
         Experiment::builder(cfg).run().expect("determinism run")
@@ -240,16 +287,30 @@ fn main() {
     native_trainer_benches(&mut results, warm, budget.min(0.3));
     pjrt_benches(&mut results);
 
-    let det_ok = determinism_check(ScenarioConfig::default());
+    let det_ok = determinism_check(
+        ScenarioConfig::default(),
+        TransportConfig::default(),
+    );
     println!(
         "\ndeterminism threads=1 vs threads=4: {}",
         if det_ok { "bit-identical" } else { "MISMATCH" }
     );
-    let det_churn_ok =
-        determinism_check(ScenarioConfig::preset(ScenarioPreset::Diurnal));
+    let det_churn_ok = determinism_check(
+        ScenarioConfig::preset(ScenarioPreset::Diurnal),
+        TransportConfig::default(),
+    );
     println!(
         "determinism threads=1 vs threads=4 (scenario=diurnal): {}",
         if det_churn_ok { "bit-identical" } else { "MISMATCH" }
+    );
+    // stateful codec active: encode order must stay coordinator-fixed
+    let det_topk_ok = determinism_check(
+        ScenarioConfig::default(),
+        TransportConfig { codec: CodecKind::TopK, ..Default::default() },
+    );
+    println!(
+        "determinism threads=1 vs threads=4 (transport.codec=topk): {}",
+        if det_topk_ok { "bit-identical" } else { "MISMATCH" }
     );
 
     let meta = vec![
@@ -267,13 +328,29 @@ fn main() {
             "determinism_diurnal_threads_1_vs_4".to_string(),
             Json::Bool(det_churn_ok),
         ),
+        (
+            "determinism_topk_threads_1_vs_4".to_string(),
+            Json::Bool(det_topk_ok),
+        ),
     ];
-    write_json_report(Path::new("BENCH_sim.json"), meta, &results)
-        .expect("write BENCH_sim.json");
-    println!("wrote BENCH_sim.json ({} cases)", results.len());
+    // explicit output path so CI artifact steps can't pick up a stale
+    // file from an unexpected working directory
+    let out = std::env::var("DYSTOP_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_sim.json".to_string());
+    let out = Path::new(&out);
+    let parent = out.parent().filter(|d| !d.as_os_str().is_empty());
+    if let Some(dir) = parent {
+        std::fs::create_dir_all(dir).expect("create bench output dir");
+    }
+    write_json_report(out, meta, &results).expect("write bench report");
+    println!("wrote {} ({} cases)", out.display(), results.len());
     assert!(det_ok, "threads=1 vs threads=4 results diverged");
     assert!(
         det_churn_ok,
         "threads=1 vs threads=4 diverged under scenario=diurnal"
+    );
+    assert!(
+        det_topk_ok,
+        "threads=1 vs threads=4 diverged under transport.codec=topk"
     );
 }

@@ -80,6 +80,131 @@ pub fn write_json_report(
     writeln!(f, "{}", Json::Obj(root))
 }
 
+/// Outcome of diffing a fresh bench report against a checked-in
+/// baseline (the CI `bench-regression` gate).
+#[derive(Debug)]
+pub struct BenchDiff {
+    /// Relative p50 slowdown allowed before a row counts as regressed.
+    pub tolerance: f64,
+    /// Human-readable per-row report lines, baseline order.
+    pub lines: Vec<String>,
+    /// Rows whose fresh p50 exceeds `baseline × (1 + tolerance)`.
+    pub regressions: Vec<String>,
+    /// Baseline rows absent from the fresh report (coverage rot).
+    pub missing: Vec<String>,
+    /// Baseline rows with `p50_ns ≤ 0` — placeholders that gate nothing
+    /// until the baseline is refreshed from a real run.
+    pub unpinned: usize,
+    /// Rows actually compared against a pinned baseline value.
+    pub compared: usize,
+}
+
+impl BenchDiff {
+    /// The CI gate: fail on any regression or missing row. Unpinned
+    /// baseline rows pass (with a notice) so a placeholder baseline
+    /// doesn't block PRs before the first refresh.
+    pub fn gate(&self) -> Result<(), String> {
+        if self.regressions.is_empty() && self.missing.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "bench regression gate failed (tolerance {:.0}%): {} regressed [{}], {} missing [{}]",
+                self.tolerance * 100.0,
+                self.regressions.len(),
+                self.regressions.join(", "),
+                self.missing.len(),
+                self.missing.join(", "),
+            ))
+        }
+    }
+}
+
+/// `(name, p50_ns)` per row of a bench report's `results[]`.
+fn report_rows(j: &Json) -> Result<Vec<(String, f64)>, String> {
+    let arr = j
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .ok_or("bench report missing a results[] array")?;
+    let mut out = Vec::new();
+    for row in arr {
+        let name = row
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or("bench result row missing a name")?;
+        let p50 = row
+            .get("p50_ns")
+            .and_then(|p| p.as_f64())
+            .ok_or_else(|| format!("bench row {name:?} missing p50_ns"))?;
+        out.push((name.to_string(), p50));
+    }
+    Ok(out)
+}
+
+/// Diff two bench reports row by row on median latency: a fresh row more
+/// than `tolerance` slower than its baseline is a regression; a baseline
+/// row missing from the fresh report is coverage rot. Baseline rows with
+/// `p50_ns ≤ 0` are placeholders — reported but never gating. Fresh-only
+/// rows are new coverage, reported as a notice.
+pub fn diff_reports(
+    baseline: &Json,
+    fresh: &Json,
+    tolerance: f64,
+) -> Result<BenchDiff, String> {
+    let base = report_rows(baseline)?;
+    let fresh_rows: BTreeMap<String, f64> =
+        report_rows(fresh)?.into_iter().collect();
+    let mut d = BenchDiff {
+        tolerance,
+        lines: Vec::new(),
+        regressions: Vec::new(),
+        missing: Vec::new(),
+        unpinned: 0,
+        compared: 0,
+    };
+    for (name, bp50) in &base {
+        match fresh_rows.get(name) {
+            // coverage rot fails the gate whether or not the baseline
+            // value is pinned — the row set is part of the contract
+            None => {
+                d.lines.push(format!("  MISSING   {name}"));
+                d.missing.push(name.clone());
+            }
+            Some(_) if *bp50 <= 0.0 => {
+                d.unpinned += 1;
+                d.lines.push(format!(
+                    "  unpinned  {name} (baseline p50=0 — refresh BENCH_baseline.json from a real run)"
+                ));
+            }
+            Some(&fp50) => {
+                d.compared += 1;
+                let pct = (fp50 / bp50 - 1.0) * 100.0;
+                if fp50 > bp50 * (1.0 + tolerance) {
+                    d.lines.push(format!(
+                        "  REGRESSED {name}: p50 {} → {} ({pct:+.1}%)",
+                        fmt_ns(*bp50),
+                        fmt_ns(fp50)
+                    ));
+                    d.regressions.push(format!("{name} ({pct:+.1}%)"));
+                } else {
+                    d.lines.push(format!(
+                        "  ok        {name}: p50 {} → {} ({pct:+.1}%)",
+                        fmt_ns(*bp50),
+                        fmt_ns(fp50)
+                    ));
+                }
+            }
+        }
+    }
+    for name in fresh_rows.keys() {
+        if !base.iter().any(|(b, _)| b == name) {
+            d.lines.push(format!(
+                "  new       {name} (not in baseline yet)"
+            ));
+        }
+    }
+    Ok(d)
+}
+
 /// Benchmark `f`, auto-scaling iteration count to the target duration.
 pub fn bench(name: &str, mut f: impl FnMut()) -> BenchResult {
     bench_with(name, 3, 0.5, &mut f)
@@ -140,6 +265,81 @@ mod tests {
         assert!(fmt_ns(5e4).contains("µs"));
         assert!(fmt_ns(5e7).contains("ms"));
         assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    fn report(rows: &[(&str, f64)]) -> Json {
+        let text = format!(
+            "{{\"results\":[{}]}}",
+            rows.iter()
+                .map(|(n, p)| format!(
+                    "{{\"name\":\"{n}\",\"iters\":10,\"mean_ns\":{p},\"stddev_ns\":1,\"p50_ns\":{p},\"p99_ns\":{p}}}"
+                ))
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        Json::parse(&text).unwrap()
+    }
+
+    #[test]
+    fn diff_passes_within_tolerance() {
+        let base = report(&[("a", 1000.0), ("b", 2000.0)]);
+        let fresh = report(&[("a", 1100.0), ("b", 1900.0)]);
+        let d = diff_reports(&base, &fresh, 0.15).unwrap();
+        assert_eq!(d.compared, 2);
+        assert!(d.regressions.is_empty() && d.missing.is_empty());
+        d.gate().unwrap();
+    }
+
+    #[test]
+    fn diff_fails_on_injected_slowdown() {
+        // the acceptance check: a >15% p50 slowdown must fail the gate
+        let base = report(&[("sim_round N=200 dystop", 1000.0)]);
+        let fresh = report(&[("sim_round N=200 dystop", 1200.0)]); // +20%
+        let d = diff_reports(&base, &fresh, 0.15).unwrap();
+        assert_eq!(d.regressions.len(), 1);
+        let err = d.gate().unwrap_err();
+        assert!(err.contains("sim_round N=200 dystop"), "{err}");
+        assert!(err.contains("+20.0%"), "{err}");
+        // just inside the tolerance band: not a regression
+        let at = report(&[("sim_round N=200 dystop", 1140.0)]);
+        diff_reports(&base, &at, 0.15).unwrap().gate().unwrap();
+    }
+
+    #[test]
+    fn diff_fails_on_missing_row() {
+        let base = report(&[("a", 1000.0), ("b", 2000.0)]);
+        let fresh = report(&[("a", 1000.0)]);
+        let d = diff_reports(&base, &fresh, 0.15).unwrap();
+        assert_eq!(d.missing, vec!["b".to_string()]);
+        assert!(d.gate().is_err());
+    }
+
+    #[test]
+    fn diff_placeholder_baseline_rows_never_gate() {
+        // a zeroed baseline (pre-refresh placeholder) must not block PRs
+        let base = report(&[("a", 0.0), ("b", 0.0)]);
+        let fresh = report(&[("a", 99999.0), ("b", 1.0), ("c", 1.0)]);
+        let d = diff_reports(&base, &fresh, 0.15).unwrap();
+        assert_eq!(d.unpinned, 2);
+        assert_eq!(d.compared, 0);
+        d.gate().unwrap();
+        // fresh-only rows are reported as new coverage
+        assert!(d.lines.iter().any(|l| l.contains("new") && l.contains('c')));
+        // but row coverage is enforced even for placeholder rows
+        let gone = report(&[("a", 99999.0)]);
+        assert!(diff_reports(&base, &gone, 0.15).unwrap().gate().is_err());
+    }
+
+    #[test]
+    fn diff_rejects_malformed_reports() {
+        let good = report(&[("a", 1.0)]);
+        let bad = Json::parse("{\"results\": 3}").unwrap();
+        assert!(diff_reports(&bad, &good, 0.15).is_err());
+        let noname =
+            Json::parse("{\"results\":[{\"p50_ns\": 1}]}").unwrap();
+        assert!(diff_reports(&noname, &good, 0.15).is_err());
+        let nop50 = Json::parse("{\"results\":[{\"name\":\"x\"}]}").unwrap();
+        assert!(diff_reports(&good, &nop50, 0.15).is_err());
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::config::{BackendKind, Config, ExperimentConfig};
 use crate::experiment::Experiment;
 use crate::figures::{self, FigScale};
 use crate::metrics::RunResult;
+use crate::util::json::Json;
 use std::path::PathBuf;
 
 /// Parsed flag map: `--key value` pairs + repeated `--set k=v`.
@@ -58,6 +59,12 @@ impl Flags {
     pub fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
         self.get(key)
             .map(|v| v.parse().map_err(|_| format!("--{key}: bad integer {v:?}")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|_| format!("--{key}: bad float {v:?}")))
             .transpose()
     }
 }
@@ -178,6 +185,42 @@ pub fn main_with_args(args: &[String]) -> Result<(), String> {
             }
             Ok(())
         }
+        "bench-diff" => {
+            // the CI bench-regression gate: diff a fresh BENCH_sim.json
+            // against the checked-in baseline on per-row median latency
+            let baseline_p =
+                flags.get("baseline").unwrap_or("BENCH_baseline.json");
+            let fresh_p = flags.get("fresh").unwrap_or("BENCH_sim.json");
+            let tol = flags.get_f64("tolerance")?.unwrap_or(0.15);
+            if !(0.0..10.0).contains(&tol) {
+                return Err(format!("--tolerance {tol} out of range [0,10)"));
+            }
+            let load = |p: &str| -> Result<Json, String> {
+                let text = std::fs::read_to_string(p)
+                    .map_err(|e| format!("read {p}: {e}"))?;
+                Json::parse(&text).map_err(|e| format!("{p}: {e}"))
+            };
+            let diff = crate::bench::diff_reports(
+                &load(baseline_p)?,
+                &load(fresh_p)?,
+                tol,
+            )?;
+            println!(
+                "bench-diff: {fresh_p} vs baseline {baseline_p} (p50 tolerance {:.0}%)",
+                tol * 100.0
+            );
+            for l in &diff.lines {
+                println!("{l}");
+            }
+            println!(
+                "{} compared, {} unpinned, {} regressed, {} missing",
+                diff.compared,
+                diff.unpinned,
+                diff.regressions.len(),
+                diff.missing.len()
+            );
+            diff.gate()
+        }
         "inspect" => {
             let dir = PathBuf::from(flags.get("artifacts").unwrap_or("artifacts"));
             let m = crate::runtime::Manifest::load(&dir)?;
@@ -206,16 +249,19 @@ pub fn main_with_args(args: &[String]) -> Result<(), String> {
 }
 
 fn usage() -> String {
-    "usage: dystop <train|figures|testbed|sweep|inspect|help> [flags]\n\
+    "usage: dystop <train|figures|testbed|sweep|bench-diff|inspect|help> [flags]\n\
      \n\
      train   --config FILE --set sim.workers=40 --set run.backend=sim|testbed --out results/\n\
      \x20       --set run.threads=N  round-execution threads (0 = all cores; bit-identical)\n\
      \x20       --set scenario.preset=stable|diurnal|flash-crowd|degraded  population dynamics\n\
      \x20       --set scenario.churn_rate=0.05 --set scenario.mean_downtime_rounds=6\n\
      \x20       --set scenario.crash_frac=0.5  individual churn knobs (override preset)\n\
-     figures --fig <3|4..18|20..25|26|churn|all> --out results/ [--workers N --rounds R]\n\
+     \x20       --set transport.codec=dense|topk|int8  model-exchange compression\n\
+     \x20       --set transport.topk_frac=0.1 --set transport.int8_clip=1.0  codec knobs\n\
+     figures --fig <3|4..18|20..25|26|churn|27|codec|all> --out results/ [--workers N --rounds R]\n\
      testbed --set sim.workers=15 --out results/\n\
      sweep   --key dystop.tau_bound --values 2,5,8 --out results/\n\
+     bench-diff --baseline BENCH_baseline.json --fresh BENCH_sim.json --tolerance 0.15\n\
      inspect --artifacts artifacts/"
         .to_string()
 }
@@ -304,6 +350,56 @@ mod tests {
         ]))
         .unwrap_err();
         assert!(err.contains("unknown scenario preset"), "{err}");
+    }
+
+    #[test]
+    fn bench_diff_gates_on_files() {
+        let dir = std::env::temp_dir()
+            .join(format!("dystop_cli_benchdiff_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("base.json");
+        let fresh = dir.join("fresh.json");
+        let row = |p50: f64| {
+            format!(
+                "{{\"results\":[{{\"name\":\"sim_round N=60 dystop\",\"iters\":9,\"mean_ns\":{p50},\"stddev_ns\":1,\"p50_ns\":{p50},\"p99_ns\":{p50}}}]}}"
+            )
+        };
+        std::fs::write(&base, row(1000.0)).unwrap();
+        // within tolerance: passes
+        std::fs::write(&fresh, row(1100.0)).unwrap();
+        main_with_args(&s(&[
+            "bench-diff",
+            "--baseline", base.to_str().unwrap(),
+            "--fresh", fresh.to_str().unwrap(),
+        ]))
+        .unwrap();
+        // injected >15% slowdown: the gate must fail
+        std::fs::write(&fresh, row(1300.0)).unwrap();
+        let err = main_with_args(&s(&[
+            "bench-diff",
+            "--baseline", base.to_str().unwrap(),
+            "--fresh", fresh.to_str().unwrap(),
+        ]))
+        .unwrap_err();
+        assert!(err.contains("regression gate failed"), "{err}");
+        // a looser explicit tolerance admits the same slowdown
+        main_with_args(&s(&[
+            "bench-diff",
+            "--baseline", base.to_str().unwrap(),
+            "--fresh", fresh.to_str().unwrap(),
+            "--tolerance", "0.5",
+        ]))
+        .unwrap();
+        // missing files are clean errors
+        let err = main_with_args(&s(&[
+            "bench-diff",
+            "--baseline", dir.join("nope.json").to_str().unwrap(),
+            "--fresh", fresh.to_str().unwrap(),
+        ]))
+        .unwrap_err();
+        assert!(err.contains("read"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -219,6 +219,79 @@ impl ScenarioConfig {
     }
 }
 
+/// Which compression codec the model transport layer applies to every
+/// model exchange (`transport.codec` knob — see [`crate::transport`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum CodecKind {
+    /// Identity transport: full dense f32 payload. The default —
+    /// bit-identical semantics and byte accounting to the pre-transport
+    /// engine.
+    #[default]
+    Dense,
+    /// Top-k delta sparsification with per-worker error-feedback
+    /// residuals (`transport.topk_frac` of entries kept).
+    TopK,
+    /// Uniform 8-bit quantization over `[-clip, clip]`
+    /// (`transport.int8_clip`).
+    Int8,
+}
+
+impl CodecKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" => Ok(Self::Dense),
+            "topk" | "top-k" => Ok(Self::TopK),
+            "int8" | "q8" => Ok(Self::Int8),
+            other => Err(format!(
+                "unknown transport codec {other:?} (dense|topk|int8)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Dense => "dense",
+            Self::TopK => "topk",
+            Self::Int8 => "int8",
+        }
+    }
+}
+
+/// Model-transport knobs (`transport.*` keys): which codec compresses
+/// model exchanges and its parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransportConfig {
+    pub codec: CodecKind,
+    /// Fraction of parameter entries the `topk` codec transmits per
+    /// message (`transport.topk_frac`).
+    pub topk_frac: f64,
+    /// Clipping range of the `int8` codec (`transport.int8_clip`):
+    /// values quantize uniformly over `[-clip, clip]`.
+    pub int8_clip: f64,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            codec: CodecKind::Dense,
+            topk_frac: 0.1,
+            int8_clip: 1.0,
+        }
+    }
+}
+
+impl TransportConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.topk_frac > 0.0 && self.topk_frac <= 1.0) {
+            return Err("transport.topk_frac must be in (0,1]".into());
+        }
+        if self.int8_clip <= 0.0 {
+            return Err("transport.int8_clip must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
 /// Wireless edge-network model constants (paper §VI-A1).
 #[derive(Clone, Debug)]
 pub struct NetworkConfig {
@@ -341,6 +414,11 @@ pub struct ExperimentConfig {
     /// (`preset=stable`) is the empty timeline: bit-identical to the
     /// pre-scenario engine.
     pub scenario: ScenarioConfig,
+
+    /// Model-transport codec (`transport.*` knobs). The default
+    /// (`codec=dense`) is the identity transport: bit-identical to the
+    /// pre-transport engine.
+    pub transport: TransportConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -374,6 +452,7 @@ impl Default for ExperimentConfig {
             target_accuracy: 0.8,
             network: NetworkConfig::default(),
             scenario: ScenarioConfig::default(),
+            transport: TransportConfig::default(),
         }
     }
 }
@@ -448,6 +527,11 @@ impl ExperimentConfig {
             "scenario.mean_downtime_rounds"
         );
         opt!(e.scenario.crash_frac, get_f64, "scenario.crash_frac");
+        if let Some(s) = cfg.get("transport.codec") {
+            e.transport.codec = CodecKind::parse(s)?;
+        }
+        opt!(e.transport.topk_frac, get_f64, "transport.topk_frac");
+        opt!(e.transport.int8_clip, get_f64, "transport.int8_clip");
         e.validate()?;
         Ok(e)
     }
@@ -475,6 +559,7 @@ impl ExperimentConfig {
             return Err("net.comm_range_m must be > 0".into());
         }
         self.scenario.validate()?;
+        self.transport.validate()?;
         Ok(())
     }
 }
@@ -574,6 +659,41 @@ mod tests {
         ] {
             assert_eq!(ScenarioPreset::parse(p.name()).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn transport_knobs_parse_with_defaults_and_overrides() {
+        // default is the dense identity transport
+        let d = ExperimentConfig::default();
+        assert_eq!(d.transport.codec, CodecKind::Dense);
+        assert_eq!(d.transport.topk_frac, 0.1);
+        assert_eq!(d.transport.int8_clip, 1.0);
+        // knobs parse
+        let cfg = Config::parse(
+            "[transport]\ncodec = topk\ntopk_frac = 0.05\nint8_clip = 2.5\n",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.transport.codec, CodecKind::TopK);
+        assert_eq!(e.transport.topk_frac, 0.05);
+        assert_eq!(e.transport.int8_clip, 2.5);
+        // invalid values rejected
+        let cfg = Config::parse("[transport]\ncodec = gzip\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[transport]\ntopk_frac = 0\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[transport]\ntopk_frac = 1.5\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[transport]\nint8_clip = -1\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn codec_names_roundtrip() {
+        for c in [CodecKind::Dense, CodecKind::TopK, CodecKind::Int8] {
+            assert_eq!(CodecKind::parse(c.name()).unwrap(), c);
+        }
+        assert!(CodecKind::parse("bogus").is_err());
     }
 
     #[test]

@@ -18,8 +18,9 @@
 mod experiment;
 
 pub use experiment::{
-    BackendKind, ExperimentConfig, ModelKind, NetworkConfig, ScenarioConfig,
-    ScenarioPreset, SchedulerKind, TrainerKind,
+    BackendKind, CodecKind, ExperimentConfig, ModelKind, NetworkConfig,
+    ScenarioConfig, ScenarioPreset, SchedulerKind, TrainerKind,
+    TransportConfig,
 };
 
 use std::collections::BTreeMap;

@@ -56,6 +56,7 @@ use crate::data::{dirichlet_partition, make_corpus, Dataset, SyntheticSpec};
 use crate::metrics::RunResult;
 use crate::network::EdgeNetwork;
 use crate::scenario::Scenario;
+use crate::transport::Transport;
 use crate::util::rng::Pcg;
 use crate::worker::{default_trainer, Trainer, WorkerState};
 use std::fmt;
@@ -126,6 +127,10 @@ pub struct Experiment {
     /// The population/environment event timeline both backends apply at
     /// round boundaries (empty under `scenario.preset=stable`).
     pub scenario: Scenario,
+    /// The model-transport layer (`transport.*` knobs): every model
+    /// exchange in both backends is encoded/decoded through it and
+    /// charged its measured wire bytes.
+    pub transport: Transport,
     pub(crate) trainer: Box<dyn Trainer>,
     pub(crate) scheduler: Box<dyn Scheduler>,
     pub(crate) rng: Pcg,
@@ -287,6 +292,16 @@ impl ExperimentBuilder {
             }
         }
 
+        // the transport layer compresses what crosses the wire: the
+        // semantic transform runs on the real parameter vector, the byte
+        // accounting on the simulated payload (model_bits)
+        let transport = Transport::new(
+            cfg.transport,
+            cfg.workers,
+            trainer.param_count(),
+            model_bits,
+        );
+
         Ok(Experiment {
             cfg,
             net,
@@ -295,6 +310,7 @@ impl ExperimentBuilder {
             label_dist,
             model_bits,
             scenario,
+            transport,
             trainer,
             scheduler,
             rng,
@@ -343,6 +359,13 @@ mod tests {
         assert!(exp.model_bits > 0.0);
         assert_eq!(exp.scheduler_name(), "dystop");
         assert!(!exp.test.is_empty());
+        // default transport: the dense identity codec, whose message
+        // size on the wire IS the dense payload, bit for bit
+        assert!(exp.transport.is_dense());
+        assert_eq!(
+            exp.transport.message_bits().to_bits(),
+            exp.model_bits.to_bits()
+        );
     }
 
     #[test]

@@ -131,6 +131,7 @@ mod tests {
             active: 2,
             population: 4,
             transfers: 3,
+            bytes_sent: 24.0,
             avg_staleness: 0.5,
             max_staleness: 1,
             train_loss: 0.9,
@@ -186,6 +187,7 @@ mod tests {
             avg_accuracy: 0.5,
             avg_loss: 1.0,
             cum_transfers: 3,
+            cum_bytes: 24.0,
         });
         let res = chain.into_result();
         assert_eq!(res.label, "test");

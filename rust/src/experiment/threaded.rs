@@ -34,6 +34,16 @@
 //! round completes before the round boundary, so there are never
 //! in-flight models for a `Crash` to drop — `Crash` and `Leave` are
 //! mechanically identical here and differ only in the event log.
+//!
+//! # Transport
+//!
+//! Every pull crosses the wire through the transport layer
+//! ([`crate::transport`]): the coordinator encodes each pull source's
+//! published model once per round, the EXECUTE message carries the
+//! *decoded* reconstruction to the receiver, and the emulated channel
+//! delays and the byte ledger both consume the codec's encoded message
+//! size. Under the default `dense` codec the layer vanishes: workers
+//! read published snapshots directly, exactly as before.
 
 use super::observer::{ObserverChain, RunRecorder};
 use super::{Backend, Experiment, ExperimentError};
@@ -57,7 +67,15 @@ struct Published {
 /// Coordinator → worker message.
 enum Execute {
     /// Pull from these neighbors, then aggregate + train.
-    Round { neighbors: Vec<usize>, pull_delays_ms: Vec<u64> },
+    Round {
+        neighbors: Vec<usize>,
+        pull_delays_ms: Vec<u64>,
+        /// Decoded neighbor models (transport layer), aligned with
+        /// `neighbors`. `None` under the dense codec — the worker reads
+        /// the published snapshots directly, exactly as before the
+        /// transport layer existed.
+        models: Option<Vec<Vec<f32>>>,
+    },
     Shutdown,
 }
 
@@ -123,11 +141,16 @@ fn run_threaded(
         label_dist,
         model_bits,
         scenario,
+        mut transport,
         mut trainer,
         mut scheduler,
         mut rng,
         observers,
     } = exp;
+    // every pull crosses the wire encoded: channel costs (the emulated
+    // delays) consume the codec's message size, and the byte ledger
+    // records it
+    let wire_bits = transport.message_bits();
     if cfg.trainer != TrainerKind::Native {
         return Err(ExperimentError::Unsupported(
             "the threaded backend trains with one NativeTrainer per worker \
@@ -188,6 +211,8 @@ fn run_threaded(
     let mut pulls = vec![vec![0u64; n]; n];
     let start = Instant::now();
     let mut cum_transfers = 0usize;
+    let mut cum_bytes = 0.0f64;
+    let mut pull_srcs: Vec<usize> = Vec::new();
     // dense↔global maps over present workers, rebuilt each round
     let mut ids: Vec<usize> = (0..n).collect();
     let mut gdx: Vec<usize> = (0..n).collect();
@@ -215,6 +240,8 @@ fn run_threaded(
                         row[worker] = 0;
                     }
                     pulls[worker].fill(0);
+                    // fresh device: receivers hold no codec history
+                    transport.reset_worker(worker);
                 }
                 ScenarioEvent::Rejoin { worker } => {
                     // stale published model and accumulated τ kept
@@ -255,7 +282,7 @@ fn run_threaded(
                     .iter()
                     .take(cfg.neighbor_cap)
                     .map(|&j| {
-                        net.expected_transfer_time_s(ids[j], gi, model_bits)
+                        net.expected_transfer_time_s(ids[j], gi, wire_bits)
                     })
                     .fold(0.0f64, f64::max);
                 residual[gi] + worst
@@ -289,23 +316,54 @@ fn run_threaded(
         debug_assert!(plan.validate_present(net.present_mask()).is_ok());
         chain.plan(round, &plan);
 
+        // transport: encode each pull source's published model once (a
+        // broadcast), ascending sender order — the decoded
+        // reconstruction is what receivers aggregate. Dense skips all
+        // of it and workers read the published snapshots directly.
+        if !transport.is_dense() {
+            crate::transport::unique_pull_sources(
+                &plan.pulls_from,
+                &mut pull_srcs,
+            );
+            for &j in &pull_srcs {
+                let published_j = published[j].lock().unwrap();
+                transport.encode(j, &published_j.params);
+            }
+        }
+
         // dispatch EXECUTE to the active workers with realised delays
         let round_t0 = Instant::now();
         for (k, &i) in plan.active.iter().enumerate() {
             let delays: Vec<u64> = plan.pulls_from[k]
                 .iter()
                 .map(|&j| {
-                    let t = net.transfer_time_s(j, i, model_bits, &mut rng);
+                    let t = net.transfer_time_s(j, i, wire_bits, &mut rng);
                     (t * opts.time_scale) as u64
                 })
                 .collect();
             for &j in &plan.pulls_from[k] {
                 pulls[i][j] += 1;
             }
+            let models = if transport.is_dense() {
+                None
+            } else {
+                Some(
+                    plan.pulls_from[k]
+                        .iter()
+                        .map(|&j| {
+                            transport
+                                .decoded(j)
+                                .expect("non-dense codec keeps reconstructions")
+                                .to_vec()
+                        })
+                        .collect(),
+                )
+            };
             exec_txs[i]
                 .send(Execute::Round {
                     neighbors: plan.pulls_from[k].clone(),
                     pull_delays_ms: delays,
+                    models,
                 })
                 .map_err(|_| {
                     ExperimentError::Backend(format!(
@@ -353,6 +411,8 @@ fn run_threaded(
 
         let transfers = plan.transfers();
         cum_transfers += transfers;
+        let bytes_sent = transfers as f64 * transport.message_bytes();
+        cum_bytes += bytes_sent;
         let mut tau_sum = 0u64;
         let mut max_tau = 0u64;
         for &i in &ids {
@@ -366,6 +426,7 @@ fn run_threaded(
             active: plan.active.len(),
             population: p,
             transfers,
+            bytes_sent,
             avg_staleness: tau_sum as f64 / p as f64,
             max_staleness: max_tau,
             train_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
@@ -387,6 +448,7 @@ fn run_threaded(
                 avg_accuracy: acc_sum / p as f64,
                 avg_loss: loss_sum / p as f64,
                 cum_transfers,
+                cum_bytes,
             });
         }
     }
@@ -417,9 +479,12 @@ fn worker_loop(
     while let Ok(msg) = rx.recv() {
         match msg {
             Execute::Shutdown => break,
-            Execute::Round { neighbors, pull_delays_ms } => {
+            Execute::Round { neighbors, pull_delays_ms, models: decoded } => {
                 // PULL: read each neighbor's published snapshot (the
-                // "pushing thread" contract), paying the channel delay
+                // "pushing thread" contract), paying the channel delay.
+                // Under a non-dense codec the coordinator already
+                // encoded each sender; the message carries the decoded
+                // reconstruction instead.
                 let mut models: Vec<Vec<f32>> =
                     Vec::with_capacity(neighbors.len() + 1);
                 let mut sizes: Vec<usize> =
@@ -431,10 +496,23 @@ fn worker_loop(
                 }
                 let worst_delay =
                     pull_delays_ms.iter().copied().max().unwrap_or(0);
-                for &j in &neighbors {
-                    let p = published[j].lock().unwrap();
-                    models.push(p.params.clone());
-                    sizes.push(p.data_size);
+                match decoded {
+                    Some(dec) => {
+                        debug_assert_eq!(dec.len(), neighbors.len());
+                        for (&j, m) in neighbors.iter().zip(dec) {
+                            // data sizes are cheap metadata, not part of
+                            // the compressed model payload
+                            sizes.push(published[j].lock().unwrap().data_size);
+                            models.push(m);
+                        }
+                    }
+                    None => {
+                        for &j in &neighbors {
+                            let p = published[j].lock().unwrap();
+                            models.push(p.params.clone());
+                            sizes.push(p.data_size);
+                        }
+                    }
                 }
                 // pulls happen in parallel → pay only the slowest link
                 thread::sleep(Duration::from_millis(worst_delay));

@@ -38,9 +38,21 @@
 //! * scenario events apply on the coordinator, never inside tasks.
 //!
 //! A run is therefore **bit-identical for every `run.threads` setting**
-//! — with or without an active scenario — including the sequential
-//! fallback used when the trainer cannot be cloned across threads (PJRT
-//! executables).
+//! — with or without an active scenario or a stateful transport codec —
+//! including the sequential fallback used when the trainer cannot be
+//! cloned across threads (PJRT executables).
+//!
+//! # Transport
+//!
+//! Every model exchange routes through [`crate::transport`]: pull
+//! sources are encoded on the coordinator (ascending id) before the
+//! round's tasks spawn, push sources after training in plan order, and
+//! receivers aggregate the decoded reconstructions. Realised transfer
+//! times and the byte ledger (`RoundRecord::bytes_sent`) consume the
+//! codec's *encoded* message size, so compression composes with
+//! `BandwidthShift`/`MobilityBurst` channel dynamics. The default
+//! `dense` codec is the stateless identity — bit-identical semantics
+//! and byte accounting to the pre-transport engine.
 
 use super::observer::{ObserverChain, RunRecorder};
 use super::{Backend, Experiment, ExperimentError};
@@ -50,6 +62,7 @@ use crate::data::Dataset;
 use crate::metrics::{EvalRecord, RoundRecord, RunResult};
 use crate::network::EdgeNetwork;
 use crate::scenario::{Scenario, ScenarioEvent};
+use crate::transport::Transport;
 use crate::util::rng::Pcg;
 use crate::worker::{data_size_weights_into, Params, Trainer, WorkerState};
 use std::thread;
@@ -116,7 +129,13 @@ struct RoundCtx<'a> {
     workers: &'a [WorkerState],
     inbox: &'a [Vec<(usize, Params)>],
     plan: &'a RoundPlan,
-    model_bits: f64,
+    /// Transport layer (read-only here): pulled models are read through
+    /// its per-sender reconstruction; encode happened on the
+    /// coordinator before the tasks were spawned.
+    transport: &'a Transport,
+    /// Wire size of one encoded message, bits — what every realized
+    /// transfer time consumes. Equals `model_bits` under `dense`.
+    wire_bits: f64,
     round: usize,
 }
 
@@ -149,7 +168,7 @@ fn run_activation(
     let channels = ctx.cfg.network.channels.max(1);
     let worst_pull = ctx.plan.pulls_from[k]
         .iter()
-        .map(|&j| ctx.net.transfer_time_s(j, i, ctx.model_bits, &mut rng))
+        .map(|&j| ctx.net.transfer_time_s(j, i, ctx.wire_bits, &mut rng))
         .fold(0.0f64, f64::max);
     let pull_slots = ctx.plan.pulls_from[k].len().div_ceil(channels);
     // pushes originating at i (SA-ADFL's send-to-all) also occupy its
@@ -159,7 +178,7 @@ fn run_activation(
     for &(from, to) in &ctx.plan.pushes {
         if from == i {
             worst_push = worst_push
-                .max(ctx.net.transfer_time_s(i, to, ctx.model_bits, &mut rng));
+                .max(ctx.net.transfer_time_s(i, to, ctx.wire_bits, &mut rng));
             n_push += 1;
         }
     }
@@ -172,11 +191,16 @@ fn run_activation(
     scr.srcs.clear();
     scr.srcs.push(i);
     scr.srcs.extend(ctx.plan.pulls_from[k].iter().copied());
-    let mut models: Vec<&[f32]> = scr
-        .srcs
-        .iter()
-        .map(|&j| ctx.workers[j].params.as_slice())
-        .collect();
+    // own model is local (never transmitted); pulled neighbors arrive
+    // through the transport layer — the receiver aggregates the codec
+    // reconstruction, which under `dense` is the sender's exact params
+    let mut models: Vec<&[f32]> = Vec::with_capacity(scr.srcs.len());
+    models.push(ctx.workers[i].params.as_slice());
+    models.extend(
+        ctx.plan.pulls_from[k]
+            .iter()
+            .map(|&j| ctx.transport.view(j, &ctx.workers[j].params)),
+    );
     scr.sizes.clear();
     scr.sizes
         .extend(scr.srcs.iter().map(|&j| ctx.workers[j].data_size()));
@@ -212,7 +236,7 @@ fn estimate_h(
     workers: &[WorkerState],
     ids: &[usize],
     candidates: &[Vec<usize>],
-    model_bits: f64,
+    wire_bits: f64,
     s: usize,
     near: &mut Vec<usize>,
 ) -> Vec<f64> {
@@ -238,7 +262,7 @@ fn estimate_h(
             };
             let worst = nearest
                 .iter()
-                .map(|&j| net.expected_transfer_time_s(ids[j], gi, model_bits))
+                .map(|&j| net.expected_transfer_time_s(ids[j], gi, wire_bits))
                 .fold(0.0f64, f64::max);
             workers[gi].residual_s + worst
         })
@@ -275,6 +299,17 @@ pub struct VirtualClockEngine {
     /// Precomputed label distributions per worker (static shards).
     label_dist: Vec<Vec<f64>>,
     model_bits: f64,
+    /// Model-transport layer: every pull/push is encoded through it and
+    /// realized transfer times consume its encoded message size.
+    transport: Transport,
+    /// Cached `transport.message_bits()` (== `model_bits` under dense).
+    wire_bits: f64,
+    /// Cumulative measured wire bytes (transport layer).
+    cum_bytes: f64,
+    /// Scratch: unique pull sources of the current plan (ascending).
+    pull_srcs: Vec<usize>,
+    /// Scratch: push sources already encoded this round (plan order).
+    push_enc: Vec<usize>,
     /// Worker pool for parallel round execution; empty ⇒ sequential
     /// (run.threads=1, or the trainer cannot be cloned across threads).
     slots: Vec<WorkerSlot>,
@@ -325,6 +360,7 @@ impl VirtualClockEngine {
                 }
             }
         }
+        let wire_bits = exp.transport.message_bits();
         VirtualClockEngine {
             observers: ObserverChain::new(recorder, exp.observers),
             cfg: exp.cfg,
@@ -334,6 +370,11 @@ impl VirtualClockEngine {
             trainer: exp.trainer,
             scheduler: exp.scheduler,
             scenario: exp.scenario,
+            transport: exp.transport,
+            wire_bits,
+            cum_bytes: 0.0,
+            pull_srcs: Vec::new(),
+            push_enc: Vec::new(),
             pulls: vec![vec![0; n]; n],
             inbox: vec![Vec::new(); n],
             inbox_free: Vec::new(),
@@ -388,6 +429,7 @@ impl VirtualClockEngine {
         let inbox_free = &mut self.inbox_free;
         let pulls = &mut self.pulls;
         let trainer = &self.trainer;
+        let transport = &mut self.transport;
         let seed = self.cfg.seed;
         let observers = &mut self.observers;
         crate::scenario::apply_round_events(
@@ -430,6 +472,9 @@ impl VirtualClockEngine {
                         row[worker] = 0;
                     }
                     pulls[worker].fill(0);
+                    // receivers hold no transmission history for the
+                    // fresh device — codec reconstruction restarts
+                    transport.reset_worker(worker);
                 }
                 ScenarioEvent::Rejoin { worker } => {
                     // stale params and accumulated τ kept; the device
@@ -469,7 +514,7 @@ impl VirtualClockEngine {
             &self.workers,
             &self.ids,
             &self.cand_buf[..p],
-            self.model_bits,
+            self.wire_bits,
             self.cfg.neighbor_cap,
             &mut self.near,
         );
@@ -524,7 +569,8 @@ impl VirtualClockEngine {
             workers: &self.workers,
             inbox: &self.inbox,
             plan,
-            model_bits: self.model_bits,
+            transport: &self.transport,
+            wire_bits: self.wire_bits,
             round: self.round,
         };
         let mut outs: Vec<ActOut> = Vec::with_capacity(n_act);
@@ -579,6 +625,23 @@ impl VirtualClockEngine {
     /// advance the clock, update staleness/queues/ledgers.
     fn execute(&mut self, plan: &RoundPlan) {
         let n = self.workers.len();
+
+        // --- transport: encode this round's pull transmissions ---
+        // each pull source broadcasts one encoded message of its
+        // pre-round model; encoding mutates codec state, so it happens
+        // here on the coordinator in a fixed order (ascending sender id)
+        // before any task reads the reconstructions. Dense is stateless
+        // — the hot path is untouched.
+        if !self.transport.is_dense() {
+            crate::transport::unique_pull_sources(
+                &plan.pulls_from,
+                &mut self.pull_srcs,
+            );
+            for &j in &self.pull_srcs {
+                self.transport.encode(j, &self.workers[j].params);
+            }
+        }
+
         let outs = self.run_activations(plan);
 
         // --- apply results in plan order (fixed reduction order) ---
@@ -606,11 +669,21 @@ impl VirtualClockEngine {
         }
 
         // --- pushes (SA-ADFL): the updated model lands in each
-        // receiver's inbox for *their* next aggregation (latest wins)
+        // receiver's inbox for *their* next aggregation (latest wins).
+        // Non-dense codecs encode the post-training model once per
+        // sender (plan order) and deliver the *decoded* reconstruction,
+        // so inbox contents are exactly what crossed the wire.
+        self.push_enc.clear();
         for &(from, to) in &plan.pushes {
+            if !self.transport.is_dense() && !self.push_enc.contains(&from) {
+                self.transport.encode(from, &self.workers[from].params);
+                self.push_enc.push(from);
+            }
             let mut buf = self.inbox_free.pop().unwrap_or_default();
             buf.clear();
-            buf.extend_from_slice(&self.workers[from].params);
+            buf.extend_from_slice(
+                self.transport.view(from, &self.workers[from].params),
+            );
             if let Some(pos) =
                 self.inbox[to].iter().position(|(f, _)| *f == from)
             {
@@ -650,6 +723,10 @@ impl VirtualClockEngine {
         let pop = self.ids.len();
         let transfers = plan.transfers();
         self.cum_transfers += transfers;
+        // unicast byte ledger: one encoded message per transfer edge
+        // (dense: exactly transfers × model_bits / 8, the old ledger)
+        let bytes_sent = transfers as f64 * self.transport.message_bytes();
+        self.cum_bytes += bytes_sent;
         let mut tau_sum = 0.0f64;
         let mut max_tau = 0u64;
         for &i in &self.ids {
@@ -670,6 +747,7 @@ impl VirtualClockEngine {
             active: plan.active.len(),
             population: pop,
             transfers,
+            bytes_sent,
             avg_staleness: avg_tau,
             max_staleness: max_tau,
             train_loss,
@@ -753,6 +831,7 @@ impl VirtualClockEngine {
             avg_accuracy: acc_sum / eval_ids.len() as f64,
             avg_loss: loss_sum / eval_ids.len() as f64,
             cum_transfers: self.cum_transfers,
+            cum_bytes: self.cum_bytes,
         };
         self.observers.eval(&rec);
         rec

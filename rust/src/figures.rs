@@ -7,7 +7,8 @@
 //! reproduction claim. All series land as CSV under `--out`.
 
 use crate::config::{
-    ExperimentConfig, ScenarioConfig, ScenarioPreset, SchedulerKind,
+    CodecKind, ExperimentConfig, ScenarioConfig, ScenarioPreset,
+    SchedulerKind,
 };
 use crate::experiment::{Backend, Experiment, VirtualClockBackend};
 use crate::metrics::RunResult;
@@ -327,6 +328,46 @@ pub fn fig_churn(out: &Path, scale: FigScale) -> std::io::Result<()> {
     )
 }
 
+/// Fig. 27 (beyond the paper) — transport codecs: accuracy vs measured
+/// communication (GB) for DySTop under `dense`, `topk` and `int8`
+/// model-exchange compression. The per-codec eval curves (whose
+/// `comm_gb` column is measured wire bytes) are the accuracy-vs-GB
+/// series; the summary CSV lands best accuracy, total GB, and
+/// comm-to-target per codec.
+pub fn fig_codec(out: &Path, scale: FigScale) -> std::io::Result<()> {
+    let mut lines = Vec::new();
+    for codec in [CodecKind::Dense, CodecKind::TopK, CodecKind::Int8] {
+        let mut cfg = base_cfg(scale);
+        cfg.transport.codec = codec;
+        let name = format!("fig27_codec_{}", codec.name());
+        let res = run_cached(out, &name, &cfg, None)?;
+        let tgt = completion_target(&res);
+        println!(
+            "fig27 codec {:>5}: best {:.3} | total {:.4} GB | comm@{tgt:.2} {:>9}",
+            codec.name(),
+            res.best_accuracy(),
+            res.total_comm_gb(),
+            res.comm_to_accuracy(tgt)
+                .map(|x| format!("{x:.4}GB"))
+                .unwrap_or("—".into()),
+        );
+        lines.push(format!(
+            "{},{},{},{}",
+            codec.name(),
+            res.best_accuracy(),
+            res.total_comm_gb(),
+            res.comm_to_accuracy(tgt)
+                .map(|x| x.to_string())
+                .unwrap_or_default()
+        ));
+    }
+    write_lines(
+        &out.join("fig27_codec.csv"),
+        "codec,best_accuracy,total_comm_gb,comm_to_target_gb",
+        &lines,
+    )
+}
+
 /// Dispatch by figure id.
 pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> {
     let go = |r: std::io::Result<()>| r.map_err(|e| e.to_string());
@@ -341,6 +382,7 @@ pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> 
         "17" | "18" => go(fig17_18(out, scale)),
         "20" | "21" | "22" | "23" | "24" | "25" => go(fig_testbed(out, scale)),
         "26" | "churn" => go(fig_churn(out, scale)),
+        "27" | "codec" => go(fig_codec(out, scale)),
         "all" => {
             go(fig3(out, scale))?;
             go(fig_main(out, scale, &[1.0, 0.7, 0.4]))?;
@@ -349,10 +391,11 @@ pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> 
             go(fig16(out, scale))?;
             go(fig17_18(out, scale))?;
             go(fig_testbed(out, scale))?;
-            go(fig_churn(out, scale))
+            go(fig_churn(out, scale))?;
+            go(fig_codec(out, scale))
         }
         other => Err(format!(
-            "unknown figure {other:?} (3,4..18,20..25,26|churn,all)"
+            "unknown figure {other:?} (3,4..18,20..25,26|churn,27|codec,all)"
         )),
     }
 }
@@ -407,6 +450,33 @@ mod tests {
         assert_eq!(text.lines().count(), 5); // header + 4 mechanisms
         // each mechanism's churn event log landed next to its curve
         assert!(dir.join("fig26_churn_dystop_events.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fig27_codec_tiny_runs() {
+        let dir = std::env::temp_dir().join("dystop_figtest_codec");
+        let _ = std::fs::remove_dir_all(&dir);
+        let scale = FigScale { workers: 8, rounds: 16, seed: 5 };
+        fig_codec(&dir, scale).unwrap();
+        let text =
+            std::fs::read_to_string(dir.join("fig27_codec.csv")).unwrap();
+        assert_eq!(text.lines().count(), 4); // header + 3 codecs
+        // measured bytes: compressed codecs must land well under dense
+        // (the exact ≥4× per-transfer bound is pinned in
+        // tests/transport.rs — totals also move with plan drift)
+        let gb: Vec<f64> = text
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(2).unwrap().parse().unwrap())
+            .collect();
+        assert!(
+            gb[1] < gb[0] / 2.0,
+            "topk {} GB not well under dense {} GB",
+            gb[1],
+            gb[0]
+        );
+        assert!(gb[2] < gb[0], "int8 {} GB not under dense {}", gb[2], gb[0]);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

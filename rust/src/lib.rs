@@ -20,5 +20,6 @@ pub mod network;
 pub mod runtime;
 pub mod scenario;
 pub mod topology;
+pub mod transport;
 pub mod util;
 pub mod worker;

@@ -19,6 +19,11 @@ pub struct RoundRecord {
     pub population: usize,
     /// Model transfers this round (pulls + pushes), in models.
     pub transfers: usize,
+    /// Bytes actually put on the wire this round: one *encoded* message
+    /// per transfer edge (transport layer). Under the dense codec this
+    /// is exactly `transfers × model_bits / 8` — the pre-transport
+    /// ledger.
+    pub bytes_sent: f64,
     /// Mean staleness over *present* workers after the round.
     pub avg_staleness: f64,
     pub max_staleness: u64,
@@ -52,6 +57,10 @@ pub struct EvalRecord {
     pub avg_loss: f64,
     /// Cumulative communication in model transfers at snapshot time.
     pub cum_transfers: usize,
+    /// Cumulative measured wire bytes at snapshot time (transport
+    /// layer). Equals `cum_transfers × model_bits / 8` bit-exactly under
+    /// the dense codec.
+    pub cum_bytes: f64,
 }
 
 /// Full run output.
@@ -77,9 +86,17 @@ impl RunResult {
         self.rounds.iter().map(|r| r.transfers).sum()
     }
 
-    /// Total communication in GB (paper's communication-overhead metric).
+    /// Total measured wire bytes over the run (transport layer). Under
+    /// the dense codec this reproduces the pre-transport
+    /// `transfers × model_bits / 8` accounting bit-exactly.
+    pub fn cum_bytes(&self) -> f64 {
+        self.rounds.iter().map(|r| r.bytes_sent).sum()
+    }
+
+    /// Total communication in GB (paper's communication-overhead
+    /// metric), from measured wire bytes.
     pub fn total_comm_gb(&self) -> f64 {
-        self.total_transfers() as f64 * self.model_bits / 8.0 / 1e9
+        self.cum_bytes() / 1e9
     }
 
     pub fn final_time_s(&self) -> f64 {
@@ -98,12 +115,15 @@ impl RunResult {
             .map(|e| e.time_s)
     }
 
-    /// Communication (GB) consumed to first reach the target accuracy.
+    /// Communication (GB) consumed to first reach the target accuracy,
+    /// from measured wire bytes. The old `model_bits` accounting is the
+    /// dense-codec special case: there `cum_bytes` *is*
+    /// `cum_transfers × model_bits / 8`, bit-exactly.
     pub fn comm_to_accuracy(&self, target: f64) -> Option<f64> {
         self.evals
             .iter()
             .find(|e| e.avg_accuracy >= target)
-            .map(|e| e.cum_transfers as f64 * self.model_bits / 8.0 / 1e9)
+            .map(|e| e.cum_bytes / 1e9)
     }
 
     /// Bit-exact equality over every recorded field (floats compared by
@@ -124,6 +144,7 @@ impl RunResult {
                     && x.active == y.active
                     && x.population == y.population
                     && x.transfers == y.transfers
+                    && x.bytes_sent.to_bits() == y.bytes_sent.to_bits()
                     && x.avg_staleness.to_bits() == y.avg_staleness.to_bits()
                     && x.max_staleness == y.max_staleness
                     && x.train_loss.to_bits() == y.train_loss.to_bits()
@@ -134,6 +155,7 @@ impl RunResult {
                     && x.avg_accuracy.to_bits() == y.avg_accuracy.to_bits()
                     && x.avg_loss.to_bits() == y.avg_loss.to_bits()
                     && x.cum_transfers == y.cum_transfers
+                    && x.cum_bytes.to_bits() == y.cum_bytes.to_bits()
             })
     }
 
@@ -177,7 +199,7 @@ impl RunResult {
                 e.time_s,
                 e.avg_accuracy,
                 e.avg_loss,
-                e.cum_transfers as f64 * self.model_bits / 8.0 / 1e9,
+                e.cum_bytes / 1e9,
             )?;
         }
         Ok(())
@@ -191,18 +213,19 @@ impl RunResult {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,time_s,duration_s,active,population,transfers,avg_staleness,max_staleness,train_loss"
+            "round,time_s,duration_s,active,population,transfers,bytes_sent,avg_staleness,max_staleness,train_loss"
         )?;
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{:.4},{:.4},{},{},{},{:.4},{},{:.6}",
+                "{},{:.4},{:.4},{},{},{},{:.0},{:.4},{},{:.6}",
                 r.round,
                 r.time_s,
                 r.duration_s,
                 r.active,
                 r.population,
                 r.transfers,
+                r.bytes_sent,
                 r.avg_staleness,
                 r.max_staleness,
                 r.train_loss,
@@ -249,14 +272,16 @@ mod tests {
                     active: 1,
                     population: 8 - t,
                     transfers: 10,
+                    // dense accounting: transfers × model_bits / 8
+                    bytes_sent: 10.0 * 32.0 * 1000.0 / 8.0,
                     avg_staleness: t as f64,
                     max_staleness: t as u64,
                     train_loss: 1.0 / (t + 1) as f64,
                 })
                 .collect(),
             evals: vec![
-                EvalRecord { round: 1, time_s: 2.0, avg_accuracy: 0.5, avg_loss: 1.0, cum_transfers: 20 },
-                EvalRecord { round: 3, time_s: 4.0, avg_accuracy: 0.85, avg_loss: 0.4, cum_transfers: 40 },
+                EvalRecord { round: 1, time_s: 2.0, avg_accuracy: 0.5, avg_loss: 1.0, cum_transfers: 20, cum_bytes: 20.0 * 32.0 * 1000.0 / 8.0 },
+                EvalRecord { round: 3, time_s: 4.0, avg_accuracy: 0.85, avg_loss: 0.4, cum_transfers: 40, cum_bytes: 40.0 * 32.0 * 1000.0 / 8.0 },
             ],
             events: vec![EventRecord {
                 round: 2,
@@ -271,6 +296,11 @@ mod tests {
     fn totals() {
         let r = sample();
         assert_eq!(r.total_transfers(), 40);
+        // dense: measured bytes reproduce the model_bits ledger exactly
+        assert_eq!(
+            r.cum_bytes().to_bits(),
+            (40.0 * 32000.0 / 8.0f64).to_bits()
+        );
         assert!((r.total_comm_gb() - 40.0 * 32000.0 / 8.0 / 1e9).abs() < 1e-12);
         assert_eq!(r.final_time_s(), 4.0);
         assert_eq!(r.best_accuracy(), 0.85);
@@ -326,5 +356,12 @@ mod tests {
         let mut c = sample();
         c.events.clear();
         assert!(!a.bits_eq(&c));
+        // byte accounting is part of the bit-identity contract
+        let mut d = sample();
+        d.rounds[0].bytes_sent += 1.0;
+        assert!(!a.bits_eq(&d));
+        let mut e = sample();
+        e.evals[0].cum_bytes += 1.0;
+        assert!(!a.bits_eq(&e));
     }
 }

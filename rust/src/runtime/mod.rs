@@ -1,284 +1,23 @@
 //! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
 //! the request path. This is the only place Rust touches XLA; everything
-//! above it sees the backend-agnostic [`Trainer`] interface.
+//! above it sees the backend-agnostic
+//! [`Trainer`](crate::worker::Trainer) interface.
 //!
-//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. Artifacts are compiled once and cached
-//! per model variant (DESIGN.md: one executable per entry point).
+//! The artifact manifest layer ([`Manifest`]) is pure Rust and always
+//! available (the `dystop inspect` command needs nothing else). The
+//! execution surface ([`PjrtTrainer`], [`PjrtRuntime`]) is gated behind
+//! the `pjrt` cargo feature (on by default): it compiles against
+//! whatever `xla` binding the build provides — here the offline API
+//! stub in [`xla`], whose constructors fail cleanly at runtime — and
+//! `--no-default-features` drops it entirely. CI builds both ways so
+//! the feature gate can't rot.
 
 mod artifact;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub mod xla;
 
 pub use artifact::{LayoutEntry, Manifest, ModelManifest};
-
-use crate::config::ModelKind;
-use crate::data::Dataset;
-use crate::util::rng::Pcg;
-use crate::worker::{aggregate_native, Params, Trainer};
-use std::path::Path;
-
-/// Compiled entry points for one model variant.
-pub struct PjrtModel {
-    pub manifest: ModelManifest,
-    train: xla::PjRtLoadedExecutable,
-    eval: xla::PjRtLoadedExecutable,
-    agg: xla::PjRtLoadedExecutable,
-}
-
-/// Shared PJRT client + compiled models.
-pub struct PjrtRuntime {
-    pub client: xla::PjRtClient,
-}
-
-impl PjrtRuntime {
-    pub fn cpu() -> Result<Self, String> {
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu: {e}"))?;
-        Ok(PjrtRuntime { client })
-    }
-
-    pub fn compile_file(
-        &self,
-        path: &Path,
-    ) -> Result<xla::PjRtLoadedExecutable, String> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| format!("parse {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .map_err(|e| format!("compile {}: {e}", path.display()))
-    }
-
-    /// Load + compile all three entry points of one model.
-    pub fn load_model(
-        &self,
-        manifest: &Manifest,
-        kind: ModelKind,
-    ) -> Result<PjrtModel, String> {
-        let mm = manifest.model(kind.name())?.clone();
-        Ok(PjrtModel {
-            train: self.compile_file(mm.artifact("train")?)?,
-            eval: self.compile_file(mm.artifact("eval")?)?,
-            agg: self.compile_file(mm.artifact("agg")?)?,
-            manifest: mm,
-        })
-    }
-}
-
-fn run1(
-    exe: &xla::PjRtLoadedExecutable,
-    args: &[xla::Literal],
-) -> Result<Vec<xla::Literal>, String> {
-    let out = exe
-        .execute::<xla::Literal>(args)
-        .map_err(|e| format!("execute: {e}"))?;
-    let lit = out[0][0]
-        .to_literal_sync()
-        .map_err(|e| format!("to_literal: {e}"))?;
-    // aot.py lowers with return_tuple=True: single tuple output
-    lit.to_tuple().map_err(|e| format!("to_tuple: {e}"))
-}
-
-fn f32_lit(xs: &[f32], dims: &[i64]) -> Result<xla::Literal, String> {
-    xla::Literal::vec1(xs)
-        .reshape(dims)
-        .map_err(|e| format!("reshape: {e}"))
-}
-
-/// The PJRT-backed [`Trainer`]: real model training through the AOT
-/// artifacts (L2 JAX + L1 Pallas lowered to HLO).
-pub struct PjrtTrainer {
-    model: PjrtModel,
-    /// Scratch for batch assembly.
-    xbuf: Vec<f32>,
-    ybuf: Vec<i32>,
-    /// Reusable [K_max × P] staging buffer for aggregation — rebuilding
-    /// and re-zeroing it per call dominated the agg hot path (§Perf).
-    agg_buf: Vec<f32>,
-}
-
-impl PjrtTrainer {
-    pub fn new(artifact_dir: &Path, kind: ModelKind) -> Result<Self, String> {
-        let rt = PjrtRuntime::cpu()?;
-        let manifest = Manifest::load(artifact_dir)?;
-        let model = rt.load_model(&manifest, kind)?;
-        Ok(PjrtTrainer {
-            model,
-            xbuf: Vec::new(),
-            ybuf: Vec::new(),
-            agg_buf: Vec::new(),
-        })
-    }
-
-    pub fn manifest(&self) -> &ModelManifest {
-        &self.model.manifest
-    }
-
-    /// One train-step execution on an explicit batch: returns
-    /// (new_params, loss). Used directly by benches.
-    pub fn train_batch(
-        &mut self,
-        params: &[f32],
-        x: &[f32],
-        y: &[i32],
-        lr: f32,
-    ) -> Result<(Params, f64), String> {
-        let mm = &self.model.manifest;
-        let b = mm.train_batch as i64;
-        let d = mm.input_dim as i64;
-        let args = [
-            f32_lit(params, &[mm.param_count as i64])?,
-            f32_lit(x, &[b, d])?,
-            xla::Literal::vec1(y),
-            xla::Literal::scalar(lr),
-        ];
-        let mut out = run1(&self.model.train, &args)?;
-        let loss = out
-            .pop()
-            .ok_or("train: missing loss output")?
-            .to_vec::<f32>()
-            .map_err(|e| e.to_string())?[0];
-        let new_params = out
-            .pop()
-            .ok_or("train: missing params output")?
-            .to_vec::<f32>()
-            .map_err(|e| e.to_string())?;
-        Ok((new_params, loss as f64))
-    }
-
-    fn fill_batch(&mut self, shard: &Dataset, idx: &[usize]) {
-        self.xbuf.clear();
-        self.ybuf.clear();
-        for &i in idx {
-            self.xbuf.extend_from_slice(shard.feature_row(i));
-            self.ybuf.push(shard.labels[i] as i32);
-        }
-    }
-}
-
-impl Trainer for PjrtTrainer {
-    fn param_count(&self) -> usize {
-        self.model.manifest.param_count
-    }
-
-    fn init(&self, seed: u64) -> Params {
-        // He init per layout entry (matches python/compile/model.py's
-        // scheme; exact values differ — only the distribution matters).
-        let mm = &self.model.manifest;
-        let mut rng = Pcg::new(seed, 0x1217);
-        let mut out = vec![0.0f32; mm.param_count];
-        for entry in &mm.layout {
-            if entry.shape.len() <= 1 {
-                continue; // biases stay zero
-            }
-            let std = (2.0 / entry.fan_in() as f64).sqrt() * 0.5;
-            let vals = rng.normal_vec(entry.numel(), 0.0, std);
-            out[entry.offset..entry.offset + entry.numel()]
-                .copy_from_slice(&vals);
-        }
-        out
-    }
-
-    fn train(
-        &mut self,
-        params: &[f32],
-        shard: &Dataset,
-        steps: usize,
-        _batch: usize,
-        lr: f32,
-        rng: &mut Pcg,
-    ) -> (Params, f64) {
-        // the artifact's batch size is baked in at lowering time
-        let b = self.model.manifest.train_batch;
-        assert!(!shard.is_empty());
-        let mut p = params.to_vec();
-        let mut loss_acc = 0.0;
-        for _ in 0..steps {
-            // sample with replacement if the shard is smaller than b
-            let idx: Vec<usize> = if shard.len() >= b {
-                rng.sample_indices(shard.len(), b)
-            } else {
-                (0..b).map(|_| rng.below_usize(shard.len())).collect()
-            };
-            self.fill_batch(shard, &idx);
-            let (x, y) = (std::mem::take(&mut self.xbuf), std::mem::take(&mut self.ybuf));
-            let (np, loss) = self
-                .train_batch(&p, &x, &y, lr)
-                .expect("pjrt train_step failed");
-            self.xbuf = x;
-            self.ybuf = y;
-            p = np;
-            loss_acc += loss;
-        }
-        (p, loss_acc / steps.max(1) as f64)
-    }
-
-    fn evaluate(&mut self, params: &[f32], data: &Dataset) -> (f64, f64) {
-        let (be, pc, idim) = {
-            let mm = &self.model.manifest;
-            (mm.eval_batch, mm.param_count as i64, mm.input_dim as i64)
-        };
-        assert!(!data.is_empty());
-        // stream fixed-size chunks; the tail wraps around (duplicated
-        // samples are averaged like any other — small, documented bias
-        // when len % be != 0)
-        let chunks = (data.len() + be - 1) / be;
-        let mut loss_sum = 0.0f64;
-        let mut correct = 0.0f64;
-        for c in 0..chunks {
-            let idx: Vec<usize> =
-                (0..be).map(|k| (c * be + k) % data.len()).collect();
-            self.fill_batch(data, &idx);
-            let args = [
-                f32_lit(params, &[pc]).unwrap(),
-                f32_lit(&self.xbuf, &[be as i64, idim]).unwrap(),
-                xla::Literal::vec1(&self.ybuf),
-            ];
-            let out = run1(&self.model.eval, &args).expect("pjrt eval failed");
-            loss_sum += out[0].to_vec::<f32>().unwrap()[0] as f64;
-            correct += out[1].to_vec::<f32>().unwrap()[0] as f64;
-        }
-        let total = (chunks * be) as f64;
-        (loss_sum / total, correct / total)
-    }
-
-    fn aggregate(&mut self, models: &[&[f32]], weights: &[f32]) -> Params {
-        let mm = &self.model.manifest;
-        let k_max = mm.k_max;
-        if models.len() > k_max {
-            // SA-ADFL can pull more neighbors than the artifact's K_max;
-            // fall back to the native path (numerically identical).
-            return aggregate_native(models, weights);
-        }
-        // zero-pad to K_max (exactness tested in python/tests); the
-        // staging buffer is reused across calls — only rows actually
-        // written need zeroing when the caller count shrinks
-        let p = mm.param_count;
-        self.agg_buf.resize(k_max * p, 0.0);
-        let mut w = vec![0.0f32; k_max];
-        for (k, (m, &wt)) in models.iter().zip(weights).enumerate() {
-            self.agg_buf[k * p..(k + 1) * p].copy_from_slice(m);
-            w[k] = wt;
-        }
-        for row in self.agg_buf[models.len() * p..].chunks_mut(p) {
-            row.fill(0.0);
-        }
-        let args = [
-            f32_lit(&self.agg_buf, &[k_max as i64, p as i64]).unwrap(),
-            xla::Literal::vec1(&w),
-        ];
-        let out = run1(&self.model.agg, &args).expect("pjrt aggregate failed");
-        out[0].to_vec::<f32>().expect("agg output")
-    }
-
-    fn aggregate_into(
-        &mut self,
-        models: &[&[f32]],
-        weights: &[f32],
-        out: &mut Params,
-    ) {
-        // move the kernel result in rather than copying it (the trait
-        // default would memcpy the returned Vec into `out`)
-        *out = self.aggregate(models, weights);
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{PjrtModel, PjrtRuntime, PjrtTrainer};

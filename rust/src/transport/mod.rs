@@ -1,0 +1,431 @@
+//! Model transport layer: what actually crosses the wire when a model
+//! is exchanged, and what it costs in bytes.
+//!
+//! The paper's headline result is a 57.1% cut in communication resource
+//! consumption, but `transfers × model_bits` accounting makes every push
+//! cost the same dense payload regardless of content. This layer makes
+//! the comm-overhead axis a measured quantity: every model exchange in
+//! both execution backends is routed through a codec
+//! (`transport.codec=dense|topk|int8`), realized transfer times scale
+//! with the *encoded* payload size, and the metrics record real bytes
+//! ([`RoundRecord::bytes_sent`](crate::metrics::RoundRecord),
+//! [`RunResult::cum_bytes`](crate::metrics::RunResult)).
+//!
+//! # Codecs
+//!
+//! * **`dense`** (default) — the identity transport: full f32 payload,
+//!   bit-identical semantics *and* byte accounting to the pre-transport
+//!   engine (`bytes = transfers × model_bits / 8`).
+//! * **`topk`** — delta sparsification with per-worker error feedback:
+//!   each sender tracks the reconstruction its receivers hold and
+//!   transmits the k largest-magnitude entries of
+//!   `delta = params − reconstruction`; untransmitted coordinates stay
+//!   in the delta and are retried next time (the classic error-feedback
+//!   residual), so the reconstruction converges to the true model over
+//!   repeated transmissions. Payload: k × (4-byte index + 4-byte value)
+//!   + an 8-byte header.
+//! * **`int8`** — uniform quantization into 255 levels over
+//!   `[-clip, +clip]` (`transport.int8_clip`): decode error is bounded
+//!   by `clip / 255` for in-range values. Payload: 1 byte per parameter
+//!   + a 4-byte scale.
+//!
+//! # Wire size vs. semantic size
+//!
+//! The simulator deliberately decouples the *simulated* wire payload
+//! (`net.payload_bits`, ~a small CNN) from the *actual* trained model
+//! (a tiny softmax regression), so topology efficiency matters at
+//! paper-realistic transfer times while sims stay fast. Codecs preserve
+//! that split: the **semantic** transform (what values receivers
+//! aggregate) runs on the real parameter vector, while the **byte
+//! accounting** applies the codec's compression profile to the simulated
+//! payload. Both backends charge one encoded message per transfer edge
+//! (unicast accounting, matching the pre-transport ledger).
+//!
+//! # Determinism
+//!
+//! Codec state mutates only on the coordinator (encode happens at round
+//! boundaries in a fixed order: pull sources ascending, push sources in
+//! plan order), and pool tasks only *read* reconstructions, so runs stay
+//! bit-identical for every `run.threads` setting with any codec active
+//! — witnessed by `determinism_topk_threads_1_vs_4` in `BENCH_sim.json`
+//! and pinned by `tests/transport.rs`.
+
+use crate::config::{CodecKind, TransportConfig};
+use crate::worker::Params;
+
+/// Collect the unique pull sources of a round plan into `buf`,
+/// **ascending** — the fixed encode order both backends share. The
+/// ordering is load-bearing: stateful codecs mutate per-sender state on
+/// encode, so the cross-backend/cross-thread-count determinism contract
+/// (DESIGN.md §Transport) requires every engine to encode the same
+/// senders in the same sequence.
+pub fn unique_pull_sources(pulls_from: &[Vec<usize>], buf: &mut Vec<usize>) {
+    buf.clear();
+    for pf in pulls_from {
+        buf.extend(pf.iter().copied());
+    }
+    buf.sort_unstable();
+    buf.dedup();
+}
+
+/// Per-run transport state: the codec configuration plus, for stateful
+/// codecs, the per-worker reconstruction every receiver observes.
+///
+/// Mutation (`encode`, `reset_worker`) is coordinator-only; shared
+/// references are handed to pool tasks, which only read (`view`).
+pub struct Transport {
+    cfg: TransportConfig,
+    /// Actual parameter count (dimension of the semantic transform).
+    param_count: usize,
+    /// Simulated dense payload of one message, in bits (the engine's
+    /// `model_bits`: `net.payload_bits`, or `param_count × 32` when 0).
+    dense_bits: f64,
+    /// TopK: entries kept per encode on the real parameter vector.
+    k: usize,
+    /// Wire size of one encoded message, in bytes (data-independent:
+    /// TopK pads to k entries, Int8 is fixed-width).
+    bytes_per_msg: f64,
+    /// Per-worker reconstruction (what receivers observe). Empty for
+    /// the dense codec — the identity transport keeps no state.
+    recon: Vec<Params>,
+    /// Scratch: current delta (TopK), reused across encodes.
+    delta: Vec<f32>,
+    /// Scratch: index buffer for top-k selection.
+    idx: Vec<usize>,
+}
+
+impl Transport {
+    /// Build the transport for `workers` slots over a `param_count`-dim
+    /// model whose simulated dense payload is `dense_bits` bits.
+    pub fn new(
+        cfg: TransportConfig,
+        workers: usize,
+        param_count: usize,
+        dense_bits: f64,
+    ) -> Self {
+        let k = ((cfg.topk_frac * param_count as f64).ceil() as usize)
+            .clamp(1, param_count.max(1));
+        // wire-side entry count: the codec's profile applied to the
+        // simulated payload (dense_bits/32 f32 "wire parameters")
+        let wire_params = dense_bits / 32.0;
+        let bytes_per_msg = match cfg.codec {
+            CodecKind::Dense => dense_bits / 8.0,
+            // k × (4-byte index + 4-byte value) + 8-byte header
+            CodecKind::TopK => {
+                (cfg.topk_frac * wire_params).ceil().max(1.0) * 8.0 + 8.0
+            }
+            // 1 byte per wire parameter + 4-byte scale
+            CodecKind::Int8 => wire_params + 4.0,
+        };
+        let recon = match cfg.codec {
+            CodecKind::Dense => Vec::new(),
+            _ => vec![vec![0.0; param_count]; workers],
+        };
+        Transport {
+            cfg,
+            param_count,
+            dense_bits,
+            k,
+            bytes_per_msg,
+            recon,
+            delta: Vec::new(),
+            idx: Vec::new(),
+        }
+    }
+
+    pub fn codec(&self) -> CodecKind {
+        self.cfg.codec
+    }
+
+    /// Is this the identity transport? Engines skip encode/decode state
+    /// entirely on this path, keeping it bit-identical to the
+    /// pre-transport hot path.
+    pub fn is_dense(&self) -> bool {
+        matches!(self.cfg.codec, CodecKind::Dense)
+    }
+
+    /// Wire size of one encoded message, in bytes.
+    pub fn message_bytes(&self) -> f64 {
+        self.bytes_per_msg
+    }
+
+    /// Wire size of one encoded message, in bits — what realized
+    /// transfer times consume. Dense returns the engine's `model_bits`
+    /// value verbatim (no arithmetic round trip).
+    pub fn message_bits(&self) -> f64 {
+        match self.cfg.codec {
+            CodecKind::Dense => self.dense_bits,
+            _ => self.bytes_per_msg * 8.0,
+        }
+    }
+
+    /// Encode worker `w`'s current model for transmission, advancing the
+    /// codec state receivers mirror; returns the message size in bytes.
+    /// Dense is a stateless no-op. Coordinator-only: call once per
+    /// transmitting worker per round, in a deterministic order.
+    pub fn encode(&mut self, w: usize, params: &[f32]) -> f64 {
+        match self.cfg.codec {
+            CodecKind::Dense => {}
+            CodecKind::TopK => {
+                debug_assert_eq!(params.len(), self.param_count);
+                let recon = &self.recon[w];
+                self.delta.clear();
+                self.delta.extend(
+                    params.iter().zip(recon.iter()).map(|(p, r)| p - r),
+                );
+                self.idx.clear();
+                self.idx.extend(0..params.len());
+                if self.k < params.len() {
+                    let delta = &self.delta;
+                    // descending |delta|: the k largest land in ..k
+                    self.idx.select_nth_unstable_by(self.k - 1, |&a, &b| {
+                        delta[b].abs().total_cmp(&delta[a].abs())
+                    });
+                }
+                let recon = &mut self.recon[w];
+                for &i in &self.idx[..self.k.min(params.len())] {
+                    // the transmitted value is the f32 delta itself;
+                    // receivers apply it to their mirrored reconstruction
+                    recon[i] += self.delta[i];
+                }
+            }
+            CodecKind::Int8 => {
+                let clip = self.cfg.int8_clip as f32;
+                // 255 levels over [-clip, clip]: half-step = clip/255
+                let scale = clip / 127.5;
+                let recon = &mut self.recon[w];
+                for (r, &x) in recon.iter_mut().zip(params) {
+                    let q = (x.clamp(-clip, clip) / scale)
+                        .round()
+                        .clamp(-127.0, 127.0);
+                    *r = q * scale;
+                }
+            }
+        }
+        self.bytes_per_msg
+    }
+
+    /// The model receivers observe for worker `w`: the codec
+    /// reconstruction, or `dense` (the worker's true parameters) for the
+    /// identity transport.
+    pub fn view<'a>(&'a self, w: usize, dense: &'a [f32]) -> &'a [f32] {
+        if self.recon.is_empty() {
+            dense
+        } else {
+            &self.recon[w]
+        }
+    }
+
+    /// The decoded reconstruction for worker `w`, or `None` under the
+    /// dense codec (receivers read the true parameters directly).
+    pub fn decoded(&self, w: usize) -> Option<&[f32]> {
+        if self.recon.is_empty() {
+            None
+        } else {
+            Some(&self.recon[w])
+        }
+    }
+
+    /// Scenario `Join`: a fresh device takes the slot, so receivers
+    /// have no transmission history for it — reset its reconstruction.
+    pub fn reset_worker(&mut self, w: usize) {
+        if let Some(r) = self.recon.get_mut(w) {
+            r.fill(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CodecKind, TransportConfig};
+    use crate::util::rng::Pcg;
+
+    fn cfg(codec: CodecKind) -> TransportConfig {
+        TransportConfig { codec, ..Default::default() }
+    }
+
+    fn random_params(p: usize, seed: u64) -> Vec<f32> {
+        Pcg::seeded(seed).normal_vec(p, 0.0, 0.5)
+    }
+
+    #[test]
+    fn dense_is_stateless_identity() {
+        let mut t = Transport::new(cfg(CodecKind::Dense), 4, 100, 3200.0);
+        let params = random_params(100, 1);
+        assert!(t.is_dense());
+        assert_eq!(t.encode(0, &params), 400.0);
+        // view hands back the exact dense slice — same pointer, same bits
+        let v = t.view(0, &params);
+        assert!(std::ptr::eq(v, params.as_slice()));
+        assert!(t.decoded(0).is_none());
+        // message_bits is the dense payload verbatim, no round trip
+        assert_eq!(t.message_bits().to_bits(), 3200f64.to_bits());
+    }
+
+    #[test]
+    fn topk_error_feedback_converges_on_frozen_params() {
+        // repeated transmissions of the same model must drain the
+        // residual: after ceil(1/frac) encodes every coordinate has been
+        // transmitted at least once, and a couple more passes absorb the
+        // f32 rounding of the += application
+        let mut t = Transport::new(cfg(CodecKind::TopK), 2, 200, 6400.0);
+        let params = random_params(200, 2);
+        for _ in 0..14 {
+            t.encode(0, &params);
+        }
+        let recon = t.decoded(0).unwrap();
+        let err = recon
+            .iter()
+            .zip(&params)
+            .map(|(r, p)| (r - p).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 1e-5, "residual not drained: max err {err}");
+    }
+
+    #[test]
+    fn topk_transmitted_updates_plus_residual_sum_to_true_delta() {
+        // over rounds of a *moving* model: Σ transmitted sparse updates
+        // (telescoping reconstruction diffs) + the current residual must
+        // equal the total model displacement from the zero reference
+        let p = 64;
+        let mut t = Transport::new(cfg(CodecKind::TopK), 1, p, 2048.0);
+        let mut sum_updates = vec![0.0f32; p];
+        let mut params = random_params(p, 3);
+        for round in 0..6 {
+            // the model drifts between transmissions
+            for (i, v) in params.iter_mut().enumerate() {
+                *v += ((round * p + i) % 7) as f32 * 0.01 - 0.03;
+            }
+            let before: Vec<f32> = t.decoded(0).unwrap().to_vec();
+            t.encode(0, &params);
+            for ((s, a), b) in
+                sum_updates.iter_mut().zip(t.decoded(0).unwrap()).zip(&before)
+            {
+                *s += a - b;
+            }
+        }
+        let recon = t.decoded(0).unwrap();
+        for (i, ((s, r), pv)) in
+            sum_updates.iter().zip(recon).zip(&params).enumerate()
+        {
+            // updates telescope exactly to the reconstruction
+            assert!((s - r).abs() < 1e-6, "entry {i}: sum {s} vs recon {r}");
+            // reconstruction + residual = params, by residual definition
+            let residual = pv - r;
+            assert!(
+                (r + residual - pv).abs() < 1e-6,
+                "entry {i}: recon {r} + residual {residual} != {pv}"
+            );
+        }
+    }
+
+    #[test]
+    fn topk_only_k_entries_change_per_encode() {
+        let p = 100;
+        let mut t = Transport::new(
+            TransportConfig {
+                codec: CodecKind::TopK,
+                topk_frac: 0.1,
+                ..Default::default()
+            },
+            1,
+            p,
+            3200.0,
+        );
+        let params = random_params(p, 4);
+        t.encode(0, &params);
+        let changed =
+            t.decoded(0).unwrap().iter().filter(|&&v| v != 0.0).count();
+        assert!(changed <= 10, "k=10 but {changed} entries changed");
+        assert!(changed > 0);
+    }
+
+    #[test]
+    fn int8_decode_error_bounded_by_clip_over_255() {
+        let p = 500;
+        let clip = 0.8f64;
+        let mut t = Transport::new(
+            TransportConfig {
+                codec: CodecKind::Int8,
+                int8_clip: clip,
+                ..Default::default()
+            },
+            1,
+            p,
+            16000.0,
+        );
+        // values spanning the full in-range band, including ±clip
+        let params: Vec<f32> = (0..p)
+            .map(|i| (i as f32 / (p - 1) as f32 * 2.0 - 1.0) * clip as f32)
+            .collect();
+        t.encode(0, &params);
+        let bound = (clip / 255.0) as f32;
+        for (i, (r, x)) in t.decoded(0).unwrap().iter().zip(&params).enumerate()
+        {
+            let err = (r - x).abs();
+            assert!(
+                err <= bound * 1.001 + 1e-7,
+                "entry {i}: |{r} - {x}| = {err} > clip/255 = {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn int8_out_of_range_values_clamp_to_clip() {
+        let mut t = Transport::new(
+            TransportConfig {
+                codec: CodecKind::Int8,
+                int8_clip: 1.0,
+                ..Default::default()
+            },
+            1,
+            2,
+            64.0,
+        );
+        t.encode(0, &[5.0, -5.0]);
+        let r = t.decoded(0).unwrap();
+        let top = 127.0f32 / 127.5;
+        assert!((r[0] - top).abs() < 1e-6);
+        assert!((r[1] + top).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wire_bytes_follow_codec_profiles() {
+        // simulated payload: 2e6 bits = 250 KB dense, 62500 wire params
+        let bits = 2.0e6;
+        let dense = Transport::new(cfg(CodecKind::Dense), 1, 330, bits);
+        let topk = Transport::new(cfg(CodecKind::TopK), 1, 330, bits);
+        let int8 = Transport::new(cfg(CodecKind::Int8), 1, 330, bits);
+        assert_eq!(dense.message_bytes(), 250_000.0);
+        // topk_frac=0.1 → 6250 entries × 8 B + 8 B header = 50008 B: 5×
+        assert_eq!(topk.message_bytes(), 50_008.0);
+        assert!(dense.message_bytes() / topk.message_bytes() > 4.0);
+        // int8 → 62500 B + 4 B scale: ~4×
+        assert_eq!(int8.message_bytes(), 62_504.0);
+        assert!(dense.message_bytes() / int8.message_bytes() > 3.9);
+    }
+
+    #[test]
+    fn unique_pull_sources_is_ascending_and_deduped() {
+        let plan = vec![vec![5, 2], vec![2, 9, 0], vec![], vec![5]];
+        let mut buf = vec![99]; // stale content must be cleared
+        unique_pull_sources(&plan, &mut buf);
+        assert_eq!(buf, vec![0, 2, 5, 9]);
+        unique_pull_sources(&[], &mut buf);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn reset_worker_clears_reconstruction() {
+        let mut t = Transport::new(cfg(CodecKind::TopK), 2, 50, 1600.0);
+        let params = random_params(50, 6);
+        t.encode(1, &params);
+        assert!(t.decoded(1).unwrap().iter().any(|&v| v != 0.0));
+        t.reset_worker(1);
+        assert!(t.decoded(1).unwrap().iter().all(|&v| v == 0.0));
+        // dense: a no-op, never panics
+        let mut d = Transport::new(cfg(CodecKind::Dense), 2, 50, 1600.0);
+        d.reset_worker(1);
+    }
+}

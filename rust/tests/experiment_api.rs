@@ -73,6 +73,7 @@ fn assert_bit_identical(a: &RunResult, b: &RunResult) {
         assert_eq!(x.active, y.active);
         assert_eq!(x.population, y.population);
         assert_eq!(x.transfers, y.transfers);
+        assert_eq!(x.bytes_sent.to_bits(), y.bytes_sent.to_bits());
         assert_eq!(x.avg_staleness.to_bits(), y.avg_staleness.to_bits());
         assert_eq!(x.max_staleness, y.max_staleness);
         assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
@@ -84,6 +85,7 @@ fn assert_bit_identical(a: &RunResult, b: &RunResult) {
         assert_eq!(x.avg_accuracy.to_bits(), y.avg_accuracy.to_bits());
         assert_eq!(x.avg_loss.to_bits(), y.avg_loss.to_bits());
         assert_eq!(x.cum_transfers, y.cum_transfers);
+        assert_eq!(x.cum_bytes.to_bits(), y.cum_bytes.to_bits());
     }
     // the shared predicate must agree with the field-by-field asserts
     assert!(a.bits_eq(b), "bits_eq diverged from field asserts");
@@ -145,6 +147,75 @@ fn thread_count_never_changes_results() {
     }
     // threads=0 (auto = available parallelism) included
     assert_bit_identical(&sequential, &run_with(0));
+}
+
+#[test]
+fn dense_codec_reproduces_the_model_bits_ledger_exactly() {
+    // the transport acceptance pin: `transport.codec=dense` (the
+    // default) is bit-identical to the pre-transport engine for every
+    // `run.threads` and scenario preset — its measured byte ledger IS
+    // the old `transfers × model_bits` accounting, and the trajectories
+    // (times, losses, staleness) are untouched by the layer existing
+    use dystop::config::{ScenarioConfig, ScenarioPreset};
+    for preset in [ScenarioPreset::Stable, ScenarioPreset::Diurnal] {
+        let run_with = |threads: usize| {
+            let mut cfg = small_cfg();
+            cfg.workers = 12;
+            cfg.rounds = 16;
+            cfg.target_accuracy = 2.0;
+            cfg.threads = threads;
+            cfg.scenario = ScenarioConfig::preset(preset);
+            Experiment::builder(cfg)
+                .backend(BackendKind::Sim)
+                .run()
+                .unwrap()
+        };
+        let res = run_with(1);
+        let msg_bytes = res.model_bits / 8.0;
+        for r in &res.rounds {
+            assert_eq!(
+                r.bytes_sent.to_bits(),
+                (r.transfers as f64 * msg_bytes).to_bits(),
+                "round {} under {preset:?}",
+                r.round
+            );
+        }
+        for e in &res.evals {
+            assert_eq!(
+                e.cum_bytes.to_bits(),
+                (e.cum_transfers as f64 * msg_bytes).to_bits(),
+                "eval @ round {} under {preset:?}",
+                e.round
+            );
+        }
+        // the measured-bytes comm_to_accuracy equals the old formula
+        if let Some(gb) = res.comm_to_accuracy(0.0) {
+            let old = res.evals[0].cum_transfers as f64 * res.model_bits
+                / 8.0
+                / 1e9;
+            assert_eq!(gb.to_bits(), old.to_bits());
+        }
+        // and parallel execution doesn't change a single bit of it
+        assert_bit_identical(&res, &run_with(4));
+    }
+}
+
+#[test]
+fn dense_codec_ignores_inactive_codec_knobs() {
+    // topk/int8 knobs must be inert while the codec is dense: the same
+    // run, bit for bit
+    let a = Experiment::builder(small_cfg())
+        .backend(BackendKind::Sim)
+        .run()
+        .unwrap();
+    let mut cfg = small_cfg();
+    cfg.transport.topk_frac = 0.7;
+    cfg.transport.int8_clip = 9.0;
+    let b = Experiment::builder(cfg)
+        .backend(BackendKind::Sim)
+        .run()
+        .unwrap();
+    assert_bit_identical(&a, &b);
 }
 
 #[test]

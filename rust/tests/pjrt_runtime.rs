@@ -2,6 +2,9 @@
 //! and executed from Rust via PJRT, wrapped as a [`Trainer`].
 //!
 //! Requires `make artifacts`; tests skip (with a notice) if absent.
+//! Compiled only with the `pjrt` feature (the default) — the
+//! `--no-default-features` CI leg drops the PJRT surface entirely.
+#![cfg(feature = "pjrt")]
 
 use dystop::config::ModelKind;
 use dystop::data::{make_corpus, SyntheticSpec};

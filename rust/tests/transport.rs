@@ -1,0 +1,195 @@
+//! Transport-layer integration: codec effects on live runs through both
+//! backends — measured byte ledgers, compression factors, accuracy
+//! bounds, and the thread-count determinism witness with stateful
+//! codecs active.
+
+use dystop::config::{
+    BackendKind, CodecKind, ExperimentConfig, ScenarioConfig,
+    ScenarioPreset, TransportConfig,
+};
+use dystop::experiment::{Experiment, TestbedOptions, ThreadedBackend};
+use dystop::metrics::RunResult;
+
+fn codec_cfg(codec: CodecKind) -> ExperimentConfig {
+    ExperimentConfig {
+        workers: 12,
+        rounds: 60,
+        train_per_worker: 64,
+        test_samples: 200,
+        eval_every: 10,
+        target_accuracy: 2.0,
+        transport: TransportConfig { codec, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn run(cfg: ExperimentConfig) -> RunResult {
+    Experiment::builder(cfg)
+        .backend(BackendKind::Sim)
+        .run()
+        .expect("codec run failed")
+}
+
+/// Measured wire bytes per transfer edge.
+fn bytes_per_transfer(res: &RunResult) -> f64 {
+    res.cum_bytes() / res.total_transfers() as f64
+}
+
+#[test]
+fn topk_cuts_measured_bytes_at_least_4x() {
+    let dense = run(codec_cfg(CodecKind::Dense));
+    let topk = run(codec_cfg(CodecKind::TopK));
+    // per-transfer: the codec's compression profile, exactly — at
+    // topk_frac=0.1 each message is ~5× smaller than the dense payload
+    let factor = bytes_per_transfer(&dense) / bytes_per_transfer(&topk);
+    assert!(factor >= 4.0, "per-transfer compression only {factor:.2}×");
+    // same traffic pattern priced dense would cost ≥4× the measured
+    // bytes (the old transfers × model_bits ledger)
+    let dense_priced =
+        topk.total_transfers() as f64 * topk.model_bits / 8.0;
+    assert!(
+        dense_priced >= 4.0 * topk.cum_bytes(),
+        "dense-priced {dense_priced} vs measured {}",
+        topk.cum_bytes()
+    );
+    // cross-run totals move with plan drift, but nowhere near 5×
+    assert!(
+        topk.cum_bytes() < dense.cum_bytes() / 2.0,
+        "topk {} vs dense {}",
+        topk.cum_bytes(),
+        dense.cum_bytes()
+    );
+    // the accuracy trajectory stays within the existing qualitative
+    // bounds (the all-schedulers-learn floor)
+    assert!(
+        topk.best_accuracy() > 0.4,
+        "topk best acc {}",
+        topk.best_accuracy()
+    );
+    assert!(
+        dense.best_accuracy() > 0.5,
+        "dense best acc {}",
+        dense.best_accuracy()
+    );
+}
+
+#[test]
+fn int8_cuts_bytes_and_still_learns() {
+    let dense = run(codec_cfg(CodecKind::Dense));
+    let int8 = run(codec_cfg(CodecKind::Int8));
+    let factor = bytes_per_transfer(&dense) / bytes_per_transfer(&int8);
+    assert!(factor > 3.9, "int8 per-transfer compression only {factor:.2}×");
+    // quantization noise at clip/255 is far below the signal: accuracy
+    // holds the dense-level floor
+    assert!(
+        int8.best_accuracy() > 0.5,
+        "int8 best acc {}",
+        int8.best_accuracy()
+    );
+}
+
+#[test]
+fn byte_ledger_is_internally_consistent() {
+    for codec in [CodecKind::Dense, CodecKind::TopK, CodecKind::Int8] {
+        let res = run(codec_cfg(codec));
+        // rounds carry a constant per-message size: bytes = transfers × m
+        let m = bytes_per_transfer(&res);
+        for r in &res.rounds {
+            assert_eq!(
+                r.bytes_sent.to_bits(),
+                (r.transfers as f64 * m).to_bits(),
+                "round {} of {}",
+                r.round,
+                res.label
+            );
+        }
+        // eval snapshots accumulate the same ledger
+        let last = res.evals.last().unwrap();
+        assert_eq!(last.cum_bytes.to_bits(), res.cum_bytes().to_bits());
+        assert_eq!(last.cum_transfers, res.total_transfers());
+    }
+}
+
+#[test]
+fn codec_runs_are_thread_count_invariant() {
+    // the determinism contract with stateful codecs active: encode
+    // order is coordinator-fixed, so run.threads never changes bits
+    for codec in [CodecKind::TopK, CodecKind::Int8] {
+        let run_with = |threads: usize| {
+            let mut cfg = codec_cfg(codec);
+            cfg.workers = 10;
+            cfg.rounds = 8;
+            cfg.train_per_worker = 48;
+            cfg.test_samples = 120;
+            cfg.eval_every = 2;
+            cfg.threads = threads;
+            run(cfg)
+        };
+        let seq = run_with(1);
+        for threads in [2usize, 4] {
+            assert!(
+                seq.bits_eq(&run_with(threads)),
+                "codec {codec:?} diverged at threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn topk_stays_deterministic_under_churn() {
+    // scenario events (incl. Join's codec-state reset) compose with the
+    // transport layer without breaking thread-count determinism
+    for preset in [ScenarioPreset::Diurnal, ScenarioPreset::FlashCrowd] {
+        let run_with = |threads: usize| {
+            let mut cfg = codec_cfg(CodecKind::TopK);
+            cfg.workers = 20;
+            cfg.rounds = 30;
+            cfg.train_per_worker = 48;
+            cfg.test_samples = 100;
+            cfg.eval_every = 6;
+            cfg.threads = threads;
+            cfg.scenario = ScenarioConfig::preset(preset);
+            run(cfg)
+        };
+        let a = run_with(1);
+        let b = run_with(4);
+        assert!(a.bits_eq(&b), "topk × {preset:?} diverged across threads");
+    }
+}
+
+#[test]
+fn threaded_backend_routes_pulls_through_codec() {
+    let mut cfg = codec_cfg(CodecKind::TopK);
+    cfg.workers = 6;
+    cfg.rounds = 6;
+    cfg.train_per_worker = 48;
+    cfg.test_samples = 120;
+    cfg.eval_every = 2;
+    cfg.compute_mean_s = 0.5;
+    // aggressive compression (1 virtual s = 2 ms) keeps the suite fast
+    let opts = TestbedOptions { time_scale: 2.0, profile: false };
+    let res = Experiment::builder(cfg)
+        .backend_impl(Box::new(ThreadedBackend::with_options(opts)))
+        .run()
+        .expect("threaded codec run failed");
+    assert_eq!(res.rounds.len(), 6);
+    // the channel-cost ledger is the codec's message size, not the
+    // dense payload: topk_frac=0.1 → k = ceil(0.1 × bits/32) entries
+    // at 8 bytes each + 8-byte header
+    let expect =
+        (0.1 * res.model_bits / 32.0).ceil() * 8.0 + 8.0;
+    for r in &res.rounds {
+        assert_eq!(
+            r.bytes_sent.to_bits(),
+            (r.transfers as f64 * expect).to_bits(),
+            "round {}",
+            r.round
+        );
+    }
+    assert!(expect < res.model_bits / 8.0 / 4.0, "not compressed");
+    assert!(res.evals.iter().all(|e| e.avg_loss.is_finite()));
+    assert_eq!(
+        res.evals.last().unwrap().cum_bytes.to_bits(),
+        res.cum_bytes().to_bits()
+    );
+}
