@@ -24,6 +24,11 @@ fn main() {
         "DySTop quickstart: {} workers, {} rounds, φ={}",
         cfg.workers, cfg.rounds, cfg.phi
     );
+    println!(
+        "active workload: model={} dataset={}",
+        cfg.workload.model.name(),
+        cfg.workload.dataset.name(),
+    );
 
     let res = Experiment::builder(cfg)
         .backend(BackendKind::Sim)

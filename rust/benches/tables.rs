@@ -4,12 +4,14 @@
 //! * `sim_round` — whole-round throughput at N ∈ {60, 200, 500} for
 //!   threads=1 vs threads=auto (the cost behind every figure
 //!   regeneration — Figs. 4–18 all run through this loop), plus the
-//!   scheduler variants at N=60;
+//!   scheduler, codec and workload-model variants (the
+//!   `model={linear,mlp,cnn-s}` rows track per-model round cost);
 //! * native-trainer hot-path microbenches (train step / aggregate /
 //!   eval) — the per-activation inner loop;
 //! * PJRT hot-path latencies when artifacts are present;
-//! * a threads=1 vs threads=4 bit-identity check (the parallel engine's
-//!   core invariant), recorded in the report.
+//! * threads=1 vs threads=4 bit-identity checks (the parallel engine's
+//!   core invariant) — base, churn, stateful-codec, and one per
+//!   registered non-default workload model — recorded in the report.
 //!
 //! `DYSTOP_BENCH_QUICK=1` shrinks warmup/measure budgets for CI smoke
 //! runs; the report schema is identical. `DYSTOP_BENCH_OUT=path.json`
@@ -20,8 +22,8 @@
 
 use dystop::bench::{bench_with, write_json_report, BenchResult};
 use dystop::config::{
-    CodecKind, ExperimentConfig, ScenarioConfig, ScenarioPreset,
-    SchedulerKind, TransportConfig,
+    CodecKind, ExperimentConfig, ModelArch, ScenarioConfig, ScenarioPreset,
+    SchedulerKind, TransportConfig, WorkloadConfig,
 };
 use dystop::data::{make_corpus, SyntheticSpec};
 use dystop::experiment::{Experiment, VirtualClockEngine};
@@ -51,6 +53,20 @@ fn scenario_sim_engine(
         scheduler: kind,
         threads,
         scenario,
+        ..Default::default()
+    };
+    let exp = Experiment::builder(cfg).build().expect("valid bench config");
+    VirtualClockEngine::new(exp)
+}
+
+fn model_sim_engine(n: usize, model: ModelArch) -> VirtualClockEngine {
+    let cfg = ExperimentConfig {
+        workers: n,
+        rounds: 10_000,
+        train_per_worker: 64,
+        eval_every: usize::MAX,
+        target_accuracy: 2.0,
+        workload: WorkloadConfig { model, ..Default::default() },
         ..Default::default()
     };
     let exp = Experiment::builder(cfg).build().expect("valid bench config");
@@ -152,6 +168,22 @@ fn sim_round_benches(
             },
         ));
     }
+
+    // workload models: per-model round cost (linear is the historical
+    // control; mlp/cnn-s track the forward/backward of the deeper
+    // architectures — the cnn-s row is the bench job's smoke row)
+    println!("\n== sim_round per workload model (N=200, dystop) ==");
+    for arch in [ModelArch::Linear, ModelArch::Mlp, ModelArch::CnnS] {
+        let mut eng = model_sim_engine(200, arch);
+        results.push(bench_with(
+            &format!("sim_round N=200 dystop model={}", arch.name()),
+            warm,
+            budget,
+            &mut || {
+                std::hint::black_box(eng.step());
+            },
+        ));
+    }
 }
 
 fn native_trainer_benches(
@@ -245,12 +277,13 @@ fn pjrt_benches(results: &mut Vec<BenchResult>) {
 }
 
 /// The parallel engine's core invariant: a seeded run is bit-identical
-/// for any `run.threads` setting — with or without an active scenario
-/// or a stateful transport codec. Checked here so the recorded perf
-/// numbers always come with a correctness witness.
+/// for any `run.threads` setting — with or without an active scenario,
+/// a stateful transport codec, or a deeper workload model. Checked here
+/// so the recorded perf numbers always come with a correctness witness.
 fn determinism_check(
     scenario: ScenarioConfig,
     transport: TransportConfig,
+    model: ModelArch,
 ) -> bool {
     let run_with = |threads: usize| {
         let cfg = ExperimentConfig {
@@ -263,6 +296,7 @@ fn determinism_check(
             threads,
             scenario,
             transport,
+            workload: WorkloadConfig { model, ..Default::default() },
             ..Default::default()
         };
         Experiment::builder(cfg).run().expect("determinism run")
@@ -290,6 +324,7 @@ fn main() {
     let det_ok = determinism_check(
         ScenarioConfig::default(),
         TransportConfig::default(),
+        ModelArch::Linear,
     );
     println!(
         "\ndeterminism threads=1 vs threads=4: {}",
@@ -298,6 +333,7 @@ fn main() {
     let det_churn_ok = determinism_check(
         ScenarioConfig::preset(ScenarioPreset::Diurnal),
         TransportConfig::default(),
+        ModelArch::Linear,
     );
     println!(
         "determinism threads=1 vs threads=4 (scenario=diurnal): {}",
@@ -307,10 +343,31 @@ fn main() {
     let det_topk_ok = determinism_check(
         ScenarioConfig::default(),
         TransportConfig { codec: CodecKind::TopK, ..Default::default() },
+        ModelArch::Linear,
     );
     println!(
         "determinism threads=1 vs threads=4 (transport.codec=topk): {}",
         if det_topk_ok { "bit-identical" } else { "MISMATCH" }
+    );
+    // deeper workload models: the witness runs once per registered
+    // non-default model so pool-cloned scratch can never diverge a run
+    let det_mlp_ok = determinism_check(
+        ScenarioConfig::default(),
+        TransportConfig::default(),
+        ModelArch::Mlp,
+    );
+    println!(
+        "determinism threads=1 vs threads=4 (workload.model=mlp): {}",
+        if det_mlp_ok { "bit-identical" } else { "MISMATCH" }
+    );
+    let det_cnn_ok = determinism_check(
+        ScenarioConfig::default(),
+        TransportConfig::default(),
+        ModelArch::CnnS,
+    );
+    println!(
+        "determinism threads=1 vs threads=4 (workload.model=cnn-s): {}",
+        if det_cnn_ok { "bit-identical" } else { "MISMATCH" }
     );
 
     let meta = vec![
@@ -332,6 +389,14 @@ fn main() {
             "determinism_topk_threads_1_vs_4".to_string(),
             Json::Bool(det_topk_ok),
         ),
+        (
+            "determinism_mlp_threads_1_vs_4".to_string(),
+            Json::Bool(det_mlp_ok),
+        ),
+        (
+            "determinism_cnn_s_threads_1_vs_4".to_string(),
+            Json::Bool(det_cnn_ok),
+        ),
     ];
     // explicit output path so CI artifact steps can't pick up a stale
     // file from an unexpected working directory
@@ -352,5 +417,13 @@ fn main() {
     assert!(
         det_topk_ok,
         "threads=1 vs threads=4 diverged under transport.codec=topk"
+    );
+    assert!(
+        det_mlp_ok,
+        "threads=1 vs threads=4 diverged under workload.model=mlp"
+    );
+    assert!(
+        det_cnn_ok,
+        "threads=1 vs threads=4 diverged under workload.model=cnn-s"
     );
 }

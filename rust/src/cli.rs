@@ -126,14 +126,16 @@ pub fn main_with_args(args: &[String]) -> Result<(), String> {
                 cfg.threads.to_string()
             };
             println!(
-                "train: scheduler={} backend={} threads={} workers={} rounds={} φ={} scenario={}",
+                "train: scheduler={} backend={} threads={} workers={} rounds={} φ={} scenario={} model={} dataset={}",
                 cfg.scheduler.name(),
                 cfg.backend.name(),
                 threads,
                 cfg.workers,
                 cfg.rounds,
                 cfg.phi,
-                cfg.scenario.preset.name()
+                cfg.scenario.preset.name(),
+                cfg.workload.model.name(),
+                cfg.workload.dataset.name()
             );
             let backend = cfg.backend;
             let res = Experiment::builder(cfg).backend(backend).run()?;
@@ -258,7 +260,10 @@ fn usage() -> String {
      \x20       --set scenario.crash_frac=0.5  individual churn knobs (override preset)\n\
      \x20       --set transport.codec=dense|topk|int8  model-exchange compression\n\
      \x20       --set transport.topk_frac=0.1 --set transport.int8_clip=1.0  codec knobs\n\
-     figures --fig <3|4..18|20..25|26|churn|27|codec|all> --out results/ [--workers N --rounds R]\n\
+     \x20       --set workload.model=linear|mlp|cnn-s  native model architecture\n\
+     \x20       --set workload.dataset=synthetic|clusters|drift|file  corpus generator\n\
+     \x20       --set workload.hidden=32 --set workload.path=feat.idx,lab.idx  workload knobs\n\
+     figures --fig <3|4..18|20..25|26|churn|27|codec|28|workload|all> --out results/ [--workers N --rounds R]\n\
      testbed --set sim.workers=15 --out results/\n\
      sweep   --key dystop.tau_bound --values 2,5,8 --out results/\n\
      bench-diff --baseline BENCH_baseline.json --fresh BENCH_sim.json --tolerance 0.15\n\

@@ -70,6 +70,188 @@ impl ModelKind {
     }
 }
 
+/// Which native model architecture the workers train (`workload.model`
+/// knob — the registry in [`crate::workload`]). Distinct from
+/// [`ModelKind`], which names the PJRT *artifact* for the AOT runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ModelArch {
+    /// Softmax regression — bit-compatible with the pre-workload
+    /// trainer; the default.
+    #[default]
+    Linear,
+    /// One ReLU hidden layer (`workload.hidden` units).
+    Mlp,
+    /// Small 1-D conv net via im2col (`workload.conv_*` knobs).
+    CnnS,
+}
+
+impl ModelArch {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "linear" => Ok(Self::Linear),
+            "mlp" => Ok(Self::Mlp),
+            "cnn-s" | "cnns" | "cnn_s" => Ok(Self::CnnS),
+            other => Err(format!(
+                "unknown workload model {other:?} (linear|mlp|cnn-s)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Linear => "linear",
+            Self::Mlp => "mlp",
+            Self::CnnS => "cnn-s",
+        }
+    }
+
+    /// CI matrix hook: `DYSTOP_WORKLOAD_MODEL` (when set and non-empty)
+    /// overrides `default` — workload-parametric tests route their
+    /// model choice through this so one test binary covers the whole
+    /// registry across CI matrix legs.
+    pub fn from_env_or(default: Self) -> Self {
+        match std::env::var("DYSTOP_WORKLOAD_MODEL") {
+            Ok(v) if !v.is_empty() => Self::parse(&v)
+                .expect("DYSTOP_WORKLOAD_MODEL must name a registered model"),
+            _ => default,
+        }
+    }
+}
+
+/// Which corpus generator feeds the workers (`workload.dataset` knob —
+/// the generators in [`crate::workload`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum DatasetKind {
+    /// The base Gaussian-mixture corpus — bit-identical to the
+    /// pre-workload data path; the default.
+    #[default]
+    Synthetic,
+    /// Shifted-cluster label-skew: antipodal cluster pairs per class
+    /// with mixture weights skewed across classes
+    /// (`workload.cluster_skew`) — the workload where the model axis
+    /// separates (Fig. 28).
+    Clusters,
+    /// Rotated/drifting features (`workload.drift_deg`): train rows
+    /// drift progressively, the test set sits at the full angle.
+    Drift,
+    /// On-disk corpus (`workload.path`): an `"features.idx,labels.idx"`
+    /// IDX pair or a `label,f1,…` CSV — real MNIST-class data without a
+    /// new build.
+    File,
+}
+
+impl DatasetKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "synthetic" => Ok(Self::Synthetic),
+            "clusters" | "shifted-clusters" => Ok(Self::Clusters),
+            "drift" | "rotated" => Ok(Self::Drift),
+            "file" | "idx" | "csv" => Ok(Self::File),
+            other => Err(format!(
+                "unknown workload dataset {other:?} \
+                 (synthetic|clusters|drift|file)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Synthetic => "synthetic",
+            Self::Clusters => "clusters",
+            Self::Drift => "drift",
+            Self::File => "file",
+        }
+    }
+}
+
+/// Workload-layer knobs (`workload.*` keys): which model architecture
+/// and corpus generator the experiment runs over, plus their
+/// parameters. The defaults (`linear` × `synthetic`) reproduce
+/// pre-workload runs bit-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadConfig {
+    pub model: ModelArch,
+    pub dataset: DatasetKind,
+    /// Hidden-layer width of the `mlp` model (`workload.hidden`).
+    pub hidden: usize,
+    /// Filter count of the `cnn-s` model (`workload.conv_filters`).
+    pub conv_filters: usize,
+    /// Kernel length of the `cnn-s` model (`workload.conv_kernel`).
+    pub conv_kernel: usize,
+    /// Stride of the `cnn-s` model (`workload.conv_stride`).
+    pub conv_stride: usize,
+    /// Cluster-share skew of the `clusters` dataset
+    /// (`workload.cluster_skew`, in [0,1]).
+    pub cluster_skew: f64,
+    /// Full drift angle of the `drift` dataset in degrees
+    /// (`workload.drift_deg`).
+    pub drift_deg: f64,
+    /// Corpus path for the `file` dataset (`workload.path`):
+    /// `"features.idx,labels.idx"` or `data.csv`.
+    pub path: String,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            model: ModelArch::Linear,
+            dataset: DatasetKind::Synthetic,
+            hidden: 32,
+            // validated on the clusters workload: a wide-ish receptive
+            // field is what lets the shared filters resolve the
+            // antipodal waveform structure a linear separator cannot
+            conv_filters: 16,
+            conv_kernel: 11,
+            conv_stride: 2,
+            cluster_skew: 0.6,
+            drift_deg: 40.0,
+            path: String::new(),
+        }
+    }
+}
+
+impl WorkloadConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.hidden == 0 {
+            return Err("workload.hidden must be > 0".into());
+        }
+        if self.conv_filters == 0 {
+            return Err("workload.conv_filters must be > 0".into());
+        }
+        if self.conv_kernel == 0 {
+            return Err("workload.conv_kernel must be > 0".into());
+        }
+        if self.conv_stride == 0 {
+            return Err("workload.conv_stride must be > 0".into());
+        }
+        if !(0.0..=1.0).contains(&self.cluster_skew) {
+            return Err("workload.cluster_skew must be in [0,1]".into());
+        }
+        if !self.drift_deg.is_finite() {
+            return Err("workload.drift_deg must be finite".into());
+        }
+        if self.dataset == DatasetKind::File && self.path.is_empty() {
+            return Err(
+                "workload.dataset=file requires workload.path".into()
+            );
+        }
+        Ok(())
+    }
+
+    /// Shape constraints between the model and the feature dimension.
+    /// Checked at config validation (against `data.dim`) and re-checked
+    /// by the builder after a `file` corpus defines its own shape.
+    pub fn model_fits(&self, feature_dim: usize) -> Result<(), String> {
+        if self.model == ModelArch::CnnS && self.conv_kernel > feature_dim {
+            return Err(format!(
+                "workload.conv_kernel ({}) exceeds the feature dim ({})",
+                self.conv_kernel, feature_dim
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Which training backend executes local steps.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TrainerKind {
@@ -419,6 +601,11 @@ pub struct ExperimentConfig {
     /// (`codec=dense`) is the identity transport: bit-identical to the
     /// pre-transport engine.
     pub transport: TransportConfig,
+
+    /// Workload selection (`workload.*` knobs): model architecture ×
+    /// dataset generator. The default (`linear` × `synthetic`)
+    /// reproduces pre-workload runs bit-identically.
+    pub workload: WorkloadConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -453,6 +640,7 @@ impl Default for ExperimentConfig {
             network: NetworkConfig::default(),
             scenario: ScenarioConfig::default(),
             transport: TransportConfig::default(),
+            workload: WorkloadConfig::default(),
         }
     }
 }
@@ -532,6 +720,21 @@ impl ExperimentConfig {
         }
         opt!(e.transport.topk_frac, get_f64, "transport.topk_frac");
         opt!(e.transport.int8_clip, get_f64, "transport.int8_clip");
+        if let Some(s) = cfg.get("workload.model") {
+            e.workload.model = ModelArch::parse(s)?;
+        }
+        if let Some(s) = cfg.get("workload.dataset") {
+            e.workload.dataset = DatasetKind::parse(s)?;
+        }
+        opt!(e.workload.hidden, get_usize, "workload.hidden");
+        opt!(e.workload.conv_filters, get_usize, "workload.conv_filters");
+        opt!(e.workload.conv_kernel, get_usize, "workload.conv_kernel");
+        opt!(e.workload.conv_stride, get_usize, "workload.conv_stride");
+        opt!(e.workload.cluster_skew, get_f64, "workload.cluster_skew");
+        opt!(e.workload.drift_deg, get_f64, "workload.drift_deg");
+        if let Some(s) = cfg.get("workload.path") {
+            e.workload.path = s.to_string();
+        }
         e.validate()?;
         Ok(e)
     }
@@ -560,6 +763,13 @@ impl ExperimentConfig {
         }
         self.scenario.validate()?;
         self.transport.validate()?;
+        self.workload.validate()?;
+        // file corpora define their own feature dim at build time — the
+        // builder re-runs model_fits against the adopted shape; checking
+        // the placeholder dim here would spuriously reject valid configs
+        if self.workload.dataset != DatasetKind::File {
+            self.workload.model_fits(self.feature_dim)?;
+        }
         Ok(())
     }
 }
@@ -694,6 +904,82 @@ mod tests {
             assert_eq!(CodecKind::parse(c.name()).unwrap(), c);
         }
         assert!(CodecKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn workload_knobs_parse_with_defaults_and_overrides() {
+        // default is linear × synthetic (the bit-identity pair)
+        let d = ExperimentConfig::default();
+        assert_eq!(d.workload.model, ModelArch::Linear);
+        assert_eq!(d.workload.dataset, DatasetKind::Synthetic);
+        assert_eq!(d.workload.hidden, 32);
+        // knobs parse
+        let cfg = Config::parse(
+            "[workload]\nmodel = mlp\ndataset = clusters\nhidden = 16\n\
+             cluster_skew = 0.3\n",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.workload.model, ModelArch::Mlp);
+        assert_eq!(e.workload.dataset, DatasetKind::Clusters);
+        assert_eq!(e.workload.hidden, 16);
+        assert_eq!(e.workload.cluster_skew, 0.3);
+        // cnn-s spelling variants
+        assert_eq!(ModelArch::parse("CNN-S").unwrap(), ModelArch::CnnS);
+        assert_eq!(ModelArch::parse("cnn_s").unwrap(), ModelArch::CnnS);
+        // invalid values rejected
+        let cfg = Config::parse("[workload]\nmodel = resnet\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[workload]\nhidden = 0\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[workload]\ncluster_skew = 1.5\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        // file dataset needs a path
+        let cfg = Config::parse("[workload]\ndataset = file\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse(
+            "[workload]\ndataset = file\npath = data.csv\n",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.workload.dataset, DatasetKind::File);
+        assert_eq!(e.workload.path, "data.csv");
+        // the cnn kernel must fit the feature dim
+        let cfg = Config::parse(
+            "[workload]\nmodel = cnn-s\nconv_kernel = 64\n",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn workload_names_roundtrip() {
+        for m in [ModelArch::Linear, ModelArch::Mlp, ModelArch::CnnS] {
+            assert_eq!(ModelArch::parse(m.name()).unwrap(), m);
+        }
+        for d in [
+            DatasetKind::Synthetic,
+            DatasetKind::Clusters,
+            DatasetKind::Drift,
+            DatasetKind::File,
+        ] {
+            assert_eq!(DatasetKind::parse(d.name()).unwrap(), d);
+        }
+        assert!(ModelArch::parse("bogus").is_err());
+        assert!(DatasetKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn model_arch_env_default_passthrough() {
+        // without the env knob set, the default passes through (the
+        // set-path is covered by the CI matrix itself — mutating the
+        // process environment in a threaded test harness is unsound)
+        if std::env::var("DYSTOP_WORKLOAD_MODEL").is_err() {
+            assert_eq!(
+                ModelArch::from_env_or(ModelArch::Mlp),
+                ModelArch::Mlp
+            );
+        }
     }
 
     #[test]

@@ -18,9 +18,9 @@
 mod experiment;
 
 pub use experiment::{
-    BackendKind, CodecKind, ExperimentConfig, ModelKind, NetworkConfig,
-    ScenarioConfig, ScenarioPreset, SchedulerKind, TrainerKind,
-    TransportConfig,
+    BackendKind, CodecKind, DatasetKind, ExperimentConfig, ModelArch,
+    ModelKind, NetworkConfig, ScenarioConfig, ScenarioPreset,
+    SchedulerKind, TrainerKind, TransportConfig, WorkloadConfig,
 };
 
 use std::collections::BTreeMap;

@@ -52,13 +52,14 @@ pub use virtual_clock::{VirtualClockBackend, VirtualClockEngine};
 
 use crate::config::{BackendKind, ExperimentConfig};
 use crate::coordinator::{make_scheduler, Scheduler};
-use crate::data::{dirichlet_partition, make_corpus, Dataset, SyntheticSpec};
+use crate::data::{dirichlet_partition, Dataset};
 use crate::metrics::RunResult;
 use crate::network::EdgeNetwork;
 use crate::scenario::Scenario;
 use crate::transport::Transport;
 use crate::util::rng::Pcg;
 use crate::worker::{default_trainer, Trainer, WorkerState};
+use crate::workload::build_workload;
 use std::fmt;
 
 /// Everything that can go wrong constructing or executing an experiment.
@@ -217,8 +218,32 @@ impl ExperimentBuilder {
     /// contract the seeded-parity tests pin down; change it and every
     /// recorded curve shifts.
     pub fn build(self) -> Result<Experiment, ExperimentError> {
-        let cfg = self.cfg;
+        let mut cfg = self.cfg;
         cfg.validate().map_err(ExperimentError::InvalidConfig)?;
+
+        // the workload registry owns corpus construction (and the eval
+        // protocol baked into the test set); it draws from dedicated
+        // RNG streams only, so the default synthetic corpus — and the
+        // builder stream below — are bit-identical to the pre-workload
+        // path
+        let wl =
+            build_workload(&cfg).map_err(ExperimentError::InvalidConfig)?;
+        // file-backed corpora define their own shape: adopt it so the
+        // trainer, transport and metrics all see the real dimensions,
+        // then re-check the model's shape constraints against it
+        // (config validation skips model_fits for file datasets — this
+        // is the authoritative check on that path)
+        if cfg.feature_dim != wl.train.dim
+            || cfg.num_classes != wl.train.num_classes
+        {
+            cfg.feature_dim = wl.train.dim;
+            cfg.num_classes = wl.train.num_classes;
+        }
+        cfg.workload
+            .model_fits(cfg.feature_dim)
+            .map_err(ExperimentError::InvalidConfig)?;
+        let (train, test) = (wl.train, wl.test);
+
         let trainer: Box<dyn Trainer> = match self.trainer {
             Some(t) => t,
             None => default_trainer(&cfg).ok_or_else(|| {
@@ -232,16 +257,21 @@ impl ExperimentBuilder {
         };
 
         let mut rng = Pcg::new(cfg.seed, 0x51B);
-        let spec = SyntheticSpec {
-            dim: cfg.feature_dim,
-            num_classes: cfg.num_classes,
-            train_samples: cfg.train_per_worker * cfg.workers,
-            test_samples: cfg.test_samples,
-            class_sep: cfg.class_sep,
-            seed: cfg.seed,
-        };
-        let (train, test) = make_corpus(&spec);
         let min_per = cfg.batch.max(cfg.train_per_worker / 4);
+        // partition coverage: with at least min_per samples per worker
+        // available, the rebalancer can never terminate with an empty
+        // shard (which would panic at train time). The synthetic path
+        // guarantees this by construction (train_per_worker × workers);
+        // file corpora bring their own size, so check it here.
+        if train.len() < cfg.workers * min_per {
+            return Err(ExperimentError::InvalidConfig(format!(
+                "corpus has {} training samples but {} workers need at \
+                 least {min_per} each (max of train.batch and \
+                 train_per_worker/4); lower sim.workers or train.batch",
+                train.len(),
+                cfg.workers
+            )));
+        }
         let (shards, stats) =
             dirichlet_partition(&train, cfg.workers, cfg.phi, min_per, &mut rng);
 

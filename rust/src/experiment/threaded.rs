@@ -474,7 +474,9 @@ fn worker_loop(
     rx: mpsc::Receiver<Execute>,
     done: mpsc::Sender<Done>,
 ) {
-    let mut trainer = NativeTrainer::new(cfg.feature_dim, cfg.num_classes);
+    // one trainer per worker thread, driving the configured
+    // `workload.model` (the builder already adopted file-corpus dims)
+    let mut trainer = NativeTrainer::from_config(cfg);
     let mut rng = crate::util::rng::Pcg::new(cfg.seed ^ 0xBEEF, id as u64);
     while let Ok(msg) = rx.recv() {
         match msg {

@@ -7,8 +7,8 @@
 //! reproduction claim. All series land as CSV under `--out`.
 
 use crate::config::{
-    CodecKind, ExperimentConfig, ScenarioConfig, ScenarioPreset,
-    SchedulerKind,
+    CodecKind, DatasetKind, ExperimentConfig, ScenarioConfig,
+    ScenarioPreset, SchedulerKind,
 };
 use crate::experiment::{Backend, Experiment, VirtualClockBackend};
 use crate::metrics::RunResult;
@@ -368,6 +368,52 @@ pub fn fig_codec(out: &Path, scale: FigScale) -> std::io::Result<()> {
     )
 }
 
+/// Fig. 28 (beyond the paper) — the workload axis: accuracy vs time for
+/// every registered model (`linear`, `mlp`, `cnn-s`) on the
+/// shifted-cluster workload, DySTop vs the three baselines. The
+/// antipodal cluster pairs cap what a linear separator can reach, so
+/// the nonlinear models land strictly higher accuracy — the per-model
+/// eval curves are the accuracy-vs-time series; the summary CSV pins
+/// best accuracy, completion time and total comm per (model, scheduler).
+pub fn fig_workload(out: &Path, scale: FigScale) -> std::io::Result<()> {
+    let mut lines = Vec::new();
+    for arch in crate::workload::MODELS {
+        for kind in COMPARED {
+            let mut cfg = base_cfg(scale);
+            cfg.scheduler = kind;
+            cfg.workload.model = arch;
+            cfg.workload.dataset = DatasetKind::Clusters;
+            let name = format!("fig28_{}_{}", arch.name(), kind.name());
+            let res = run_cached(out, &name, &cfg, None)?;
+            println!(
+                "fig28 {:>6} {:>8}: best {:.3} | t@0.70 {:>8} | comm {:.4} GB",
+                arch.name(),
+                kind.name(),
+                res.best_accuracy(),
+                res.time_to_accuracy(0.70)
+                    .map(|x| format!("{x:.1}s"))
+                    .unwrap_or("—".into()),
+                res.total_comm_gb(),
+            );
+            lines.push(format!(
+                "{},{},{},{},{}",
+                arch.name(),
+                kind.name(),
+                res.best_accuracy(),
+                res.time_to_accuracy(0.70)
+                    .map(|x| x.to_string())
+                    .unwrap_or_default(),
+                res.total_comm_gb()
+            ));
+        }
+    }
+    write_lines(
+        &out.join("fig28_workload.csv"),
+        "model,scheduler,best_accuracy,time_to_target_s,total_comm_gb",
+        &lines,
+    )
+}
+
 /// Dispatch by figure id.
 pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> {
     let go = |r: std::io::Result<()>| r.map_err(|e| e.to_string());
@@ -383,6 +429,7 @@ pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> 
         "20" | "21" | "22" | "23" | "24" | "25" => go(fig_testbed(out, scale)),
         "26" | "churn" => go(fig_churn(out, scale)),
         "27" | "codec" => go(fig_codec(out, scale)),
+        "28" | "workload" => go(fig_workload(out, scale)),
         "all" => {
             go(fig3(out, scale))?;
             go(fig_main(out, scale, &[1.0, 0.7, 0.4]))?;
@@ -392,10 +439,12 @@ pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> 
             go(fig17_18(out, scale))?;
             go(fig_testbed(out, scale))?;
             go(fig_churn(out, scale))?;
-            go(fig_codec(out, scale))
+            go(fig_codec(out, scale))?;
+            go(fig_workload(out, scale))
         }
         other => Err(format!(
-            "unknown figure {other:?} (3,4..18,20..25,26|churn,27|codec,all)"
+            "unknown figure {other:?} \
+             (3,4..18,20..25,26|churn,27|codec,28|workload,all)"
         )),
     }
 }
@@ -477,6 +526,23 @@ mod tests {
             gb[0]
         );
         assert!(gb[2] < gb[0], "int8 {} GB not under dense {}", gb[2], gb[0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fig28_workload_tiny_runs() {
+        let dir = std::env::temp_dir().join("dystop_figtest_workload");
+        let _ = std::fs::remove_dir_all(&dir);
+        let scale = FigScale { workers: 6, rounds: 10, seed: 5 };
+        fig_workload(&dir, scale).unwrap();
+        let text =
+            std::fs::read_to_string(dir.join("fig28_workload.csv")).unwrap();
+        // header + 3 models × 4 mechanisms
+        assert_eq!(text.lines().count(), 13);
+        // per-run eval curves landed for every (model, scheduler) pair
+        assert!(dir.join("fig28_linear_dystop.csv").exists());
+        assert!(dir.join("fig28_mlp_dystop.csv").exists());
+        assert!(dir.join("fig28_cnn-s_matcha.csv").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -23,3 +23,4 @@ pub mod topology;
 pub mod transport;
 pub mod util;
 pub mod worker;
+pub mod workload;

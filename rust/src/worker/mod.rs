@@ -3,9 +3,11 @@
 //!
 //! Two [`Trainer`] implementations exist:
 //!
-//! * [`NativeTrainer`] — pure-Rust softmax regression. A fast, dependency-
-//!   free substrate used by the large-scale simulations, property tests
-//!   and benches (the paper's mechanisms are model-agnostic).
+//! * [`NativeTrainer`] — pure-Rust SGD over the native model zoo
+//!   ([`crate::workload`]: `workload.model=linear|mlp|cnn-s`). A fast,
+//!   dependency-free substrate used by the large-scale simulations,
+//!   property tests and benches (the paper's mechanisms are
+//!   model-agnostic).
 //! * `PjrtTrainer` (in [`crate::runtime`]) — the real L2/L1 model
 //!   executed from the AOT HLO artifacts, used by the end-to-end examples
 //!   and the testbed.
@@ -22,15 +24,14 @@ use crate::util::rng::Pcg;
 
 /// Default trainer factory for a config: `Some` when the configured
 /// [`TrainerKind`] can be constructed without external inputs (the
-/// native softmax-regression trainer), `None` when the caller must
-/// supply one (PJRT trainers need an artifact directory — pass them via
-/// `ExperimentBuilder::trainer`).
+/// native trainer over the configured `workload.model`), `None` when
+/// the caller must supply one (PJRT trainers need an artifact directory
+/// — pass them via `ExperimentBuilder::trainer`).
 pub fn default_trainer(cfg: &ExperimentConfig) -> Option<Box<dyn Trainer>> {
     match cfg.trainer {
-        TrainerKind::Native => Some(Box::new(NativeTrainer::new(
-            cfg.feature_dim,
-            cfg.num_classes,
-        ))),
+        TrainerKind::Native => {
+            Some(Box::new(NativeTrainer::from_config(cfg)))
+        }
         TrainerKind::Pjrt => None,
     }
 }

@@ -1,90 +1,99 @@
-//! Pure-Rust softmax-regression trainer.
+//! Pure-Rust SGD trainer over the native model zoo.
 //!
-//! Parameter layout: `[W (dim × C) row-major, b (C)]`, matching the
-//! flat-vector contract of the PJRT trainers so all coordinator code is
-//! backend-agnostic.
+//! `NativeTrainer` is the minibatch-SGD *driver*: batch sampling, the
+//! gradient accumulator, the parameter update, and aggregation. The
+//! architecture — parameter layout, initialisation, per-sample
+//! forward/backward — lives behind the [`Model`] contract
+//! ([`crate::workload`]), so init, the gradient buffer and the layout
+//! assertions are all derived from one `Model::layout()` description
+//! and cannot drift apart.
 //!
-//! The train/eval hot path is allocation-free after construction: batch
-//! indices, logits and gradient accumulators live in reusable scratch
-//! owned by the trainer, and the gradient update is one fused
-//! feature-major pass per sample (contiguous `gw` row writes) in f32
-//! arithmetic — only the loss accumulates in f64.
+//! The train/eval hot path is allocation-free after construction: the
+//! batch-index sample and the flat gradient accumulator live in
+//! reusable scratch owned by the trainer, and each model keeps its own
+//! forward/backward scratch (fused feature-major passes, f32
+//! arithmetic with f64 reserved for the loss accumulator).
+//!
+//! `NativeTrainer::new(dim, classes)` builds the historical softmax
+//! regression ([`LinearModel`]) — bit-compatible, op for op and draw
+//! for draw, with the pre-workload trainer.
 
 use super::{aggregate_native_into, Params, Trainer};
+use crate::config::ExperimentConfig;
 use crate::data::Dataset;
 use crate::util::rng::Pcg;
+use crate::workload::{build_model, LinearModel, Model, ParamLayout};
+use std::fmt;
 
-#[derive(Clone, Debug)]
 pub struct NativeTrainer {
-    pub dim: usize,
-    pub num_classes: usize,
-    /// Scratch: per-class logits, softmaxed in place to probabilities.
-    logits: Vec<f32>,
-    /// Scratch: per-class logit gradient δ_k = p_k − 1[k==y].
-    delta: Vec<f32>,
-    /// Scratch: minibatch gradient accumulators for W and b.
-    gw: Vec<f32>,
-    gb: Vec<f32>,
+    model: Box<dyn Model>,
+    /// Scratch: flat minibatch gradient accumulator, sized by
+    /// `Model::layout()`.
+    grad: Vec<f32>,
     /// Scratch: minibatch index sample.
     idx: Vec<usize>,
 }
 
-impl NativeTrainer {
-    pub fn new(dim: usize, num_classes: usize) -> Self {
+impl Clone for NativeTrainer {
+    fn clone(&self) -> Self {
         NativeTrainer {
-            dim,
-            num_classes,
-            logits: vec![0.0; num_classes],
-            delta: vec![0.0; num_classes],
-            gw: vec![0.0; dim * num_classes],
-            gb: vec![0.0; num_classes],
+            model: self.model.clone_model(),
+            grad: vec![0.0; self.grad.len()],
             idx: Vec::new(),
         }
     }
+}
 
-    fn compute_logits(&mut self, params: &[f32], x: &[f32]) {
-        let c = self.num_classes;
-        let d = self.dim;
-        self.logits.copy_from_slice(&params[d * c..]);
-        // W row-major [d][c]: logit_k += x_j * W[j][k]
-        for (j, &xj) in x.iter().enumerate() {
-            if xj == 0.0 {
-                continue;
-            }
-            let row = &params[j * c..(j + 1) * c];
-            for (l, &w) in self.logits.iter_mut().zip(row) {
-                *l += xj * w;
-            }
-        }
+impl fmt::Debug for NativeTrainer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("NativeTrainer")
+            .field("model", &self.model.name())
+            .field("params", &self.model.param_count())
+            .finish()
+    }
+}
+
+impl NativeTrainer {
+    /// The historical default: linear softmax regression over `dim`
+    /// features — bit-compatible with the pre-workload trainer.
+    pub fn new(dim: usize, num_classes: usize) -> Self {
+        Self::with_model(Box::new(LinearModel::new(dim, num_classes)))
     }
 
-    /// In-place softmax over the logits scratch; returns log-sum-exp.
-    fn softmax(&mut self) -> f32 {
-        let m = self.logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
-        let mut sum = 0.0f32;
-        for v in &mut self.logits {
-            *v = (*v - m).exp();
-            sum += *v;
-        }
-        let inv = 1.0 / sum;
-        for v in &mut self.logits {
-            *v *= inv;
-        }
-        m + sum.ln()
+    /// Drive an explicit model instance.
+    pub fn with_model(model: Box<dyn Model>) -> Self {
+        let grad = vec![0.0; model.param_count()];
+        NativeTrainer { model, grad, idx: Vec::new() }
+    }
+
+    /// Build the configured `workload.model` over the config's feature
+    /// dim / class count. Infallible once the config has validated.
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        Self::with_model(build_model(
+            &cfg.workload,
+            cfg.feature_dim,
+            cfg.num_classes,
+        ))
+    }
+
+    /// The driven model's registry name.
+    pub fn model_name(&self) -> &'static str {
+        self.model.name()
+    }
+
+    /// The driven model's parameter layout.
+    pub fn layout(&self) -> &ParamLayout {
+        self.model.layout()
     }
 }
 
 impl Trainer for NativeTrainer {
     fn param_count(&self) -> usize {
-        self.dim * self.num_classes + self.num_classes
+        self.model.param_count()
     }
 
     fn init(&self, seed: u64) -> Params {
-        let mut rng = Pcg::new(seed, 0x1217);
-        let std = (2.0 / self.dim as f64).sqrt() * 0.5;
-        let mut p = rng.normal_vec(self.dim * self.num_classes, 0.0, std);
-        p.extend(std::iter::repeat(0.0f32).take(self.num_classes));
-        p
+        self.model.init(seed)
     }
 
     fn train(
@@ -96,60 +105,33 @@ impl Trainer for NativeTrainer {
         lr: f32,
         rng: &mut Pcg,
     ) -> (Params, f64) {
-        assert_eq!(params.len(), self.param_count());
-        assert_eq!(shard.dim, self.dim);
+        assert_eq!(
+            params.len(),
+            self.model.param_count(),
+            "param vector does not match the {} layout",
+            self.model.name()
+        );
+        assert_eq!(shard.dim, self.model.input_dim());
         assert!(!shard.is_empty(), "training on empty shard");
-        let c = self.num_classes;
-        let d = self.dim;
         let mut p = params.to_vec();
         let mut loss_acc = 0.0;
         let batch = batch.min(shard.len());
         for _ in 0..steps {
             rng.sample_indices_into(shard.len(), batch, &mut self.idx);
-            self.gw.fill(0.0);
-            self.gb.fill(0.0);
+            self.grad.fill(0.0);
             let mut loss = 0.0f64;
             // lift the index buffer out so iterating it doesn't hold a
-            // borrow of self across compute_logits (restored below)
+            // borrow of self across grad_sample (restored below)
             let idx = std::mem::take(&mut self.idx);
             for &i in &idx {
                 let x = shard.feature_row(i);
                 let y = shard.labels[i] as usize;
-                self.compute_logits(&p, x);
-                let gold = self.logits[y];
-                let lse = self.softmax();
-                loss += (lse - gold) as f64;
-                // δ_k = p_k − 1[k==y]
-                for (k, (dv, gv)) in self
-                    .delta
-                    .iter_mut()
-                    .zip(self.gb.iter_mut())
-                    .enumerate()
-                {
-                    let dk =
-                        self.logits[k] - if k == y { 1.0 } else { 0.0 };
-                    *dv = dk;
-                    *gv += dk;
-                }
-                // fused feature-major pass: each nonzero x_j touches one
-                // contiguous gw row, instead of C strided feature sweeps
-                for (j, &xj) in x.iter().enumerate() {
-                    if xj == 0.0 {
-                        continue;
-                    }
-                    let row = &mut self.gw[j * c..(j + 1) * c];
-                    for (g, &dk) in row.iter_mut().zip(&self.delta) {
-                        *g += dk * xj;
-                    }
-                }
+                loss += self.model.grad_sample(&p, x, y, &mut self.grad);
             }
             self.idx = idx;
             let scale = lr / batch as f32;
-            for (w, &g) in p[..d * c].iter_mut().zip(&self.gw) {
+            for (w, &g) in p.iter_mut().zip(&self.grad) {
                 *w -= scale * g;
-            }
-            for (b, &g) in p[d * c..].iter_mut().zip(&self.gb) {
-                *b -= scale * g;
             }
             loss_acc += loss / batch as f64;
         }
@@ -163,20 +145,8 @@ impl Trainer for NativeTrainer {
         for i in 0..data.len() {
             let x = data.feature_row(i);
             let y = data.labels[i] as usize;
-            self.compute_logits(params, x);
-            let gold = self.logits[y];
-            let lse = self.softmax();
-            loss += (lse - gold) as f64;
-            // total-order argmax: NaN probabilities (reachable with a hot
-            // LR blowing up the params) never win and never panic
-            let mut pred = 0usize;
-            let mut best = f32::NEG_INFINITY;
-            for (k, &v) in self.logits.iter().enumerate() {
-                if v > best {
-                    best = v;
-                    pred = k;
-                }
-            }
+            let (l, pred) = self.model.predict(params, x, y);
+            loss += l;
             if pred == y {
                 correct += 1;
             }
@@ -201,7 +171,9 @@ impl Trainer for NativeTrainer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ModelArch;
     use crate::data::{make_corpus, SyntheticSpec};
+    use crate::workload::MODELS;
 
     fn setup() -> (NativeTrainer, Dataset, Dataset) {
         let spec = SyntheticSpec {
@@ -214,11 +186,35 @@ mod tests {
         (NativeTrainer::new(spec.dim, spec.num_classes), train, test)
     }
 
+    fn trainer_for(arch: ModelArch) -> NativeTrainer {
+        let cfg = ExperimentConfig {
+            workload: crate::config::WorkloadConfig {
+                model: arch,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        NativeTrainer::from_config(&cfg)
+    }
+
     #[test]
     fn param_count_layout() {
         let t = NativeTrainer::new(32, 10);
         assert_eq!(t.param_count(), 32 * 10 + 10);
         assert_eq!(t.init(1).len(), t.param_count());
+        assert_eq!(t.model_name(), "linear");
+    }
+
+    #[test]
+    fn every_registered_model_derives_sizes_from_its_layout() {
+        // init length, gradient buffer and param_count all come from
+        // Model::layout() — the three spots the old trainer hardcoded
+        for arch in MODELS {
+            let t = trainer_for(arch);
+            assert_eq!(t.param_count(), t.layout().total(), "{arch:?}");
+            assert_eq!(t.init(2).len(), t.layout().total(), "{arch:?}");
+            assert_eq!(t.grad.len(), t.layout().total(), "{arch:?}");
+        }
     }
 
     #[test]
@@ -235,6 +231,29 @@ mod tests {
     }
 
     #[test]
+    fn every_registered_model_learns() {
+        let spec = SyntheticSpec {
+            train_samples: 600,
+            test_samples: 300,
+            class_sep: 2.5,
+            ..Default::default()
+        };
+        let (train, test) = make_corpus(&spec);
+        for arch in MODELS {
+            let mut t = trainer_for(arch);
+            let mut rng = Pcg::seeded(1);
+            let p0 = t.init(0);
+            let (_, a0) = t.evaluate(&p0, &test);
+            let (p1, _) = t.train(&p0, &train, 80, 32, 0.2, &mut rng);
+            let (_, a1) = t.evaluate(&p1, &test);
+            assert!(
+                a1 > a0 + 0.15 && a1 > 0.5,
+                "{arch:?}: acc {a0} → {a1}"
+            );
+        }
+    }
+
+    #[test]
     fn deterministic_given_seed() {
         let (mut t, train, _) = setup();
         let p0 = t.init(0);
@@ -247,14 +266,24 @@ mod tests {
     #[test]
     fn clone_box_trains_identically_to_the_original() {
         // the parallel engine hands each pool thread a clone — cloned
-        // scratch must not change results
-        let (mut t, train, _) = setup();
-        let p0 = t.init(0);
-        let mut c = t.clone_box().expect("native trainer is cloneable");
-        let (a, la) = t.train(&p0, &train, 3, 16, 0.1, &mut Pcg::seeded(3));
-        let (b, lb) = c.train(&p0, &train, 3, 16, 0.1, &mut Pcg::seeded(3));
-        assert_eq!(a, b);
-        assert_eq!(la, lb);
+        // scratch must not change results, for any registered model
+        let spec = SyntheticSpec {
+            train_samples: 300,
+            test_samples: 50,
+            ..Default::default()
+        };
+        let (train, _) = make_corpus(&spec);
+        for arch in MODELS {
+            let mut t = trainer_for(arch);
+            let p0 = t.init(0);
+            let mut c = t.clone_box().expect("native trainer is cloneable");
+            let (a, la) =
+                t.train(&p0, &train, 3, 16, 0.1, &mut Pcg::seeded(3));
+            let (b, lb) =
+                c.train(&p0, &train, 3, 16, 0.1, &mut Pcg::seeded(3));
+            assert_eq!(a, b, "{arch:?}");
+            assert_eq!(la, lb, "{arch:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! Workload subsystem: the pluggable (model × dataset × partition)
+//! triple every experiment axis runs over.
+//!
+//! The paper demonstrates DySTop's gains across several model/dataset
+//! pairs; this registry makes that axis real in the reproduction. Two
+//! contracts split the responsibility:
+//!
+//! * [`Model`] — architecture: parameter layout
+//!   ([`ParamLayout`] — init, gradients and the trainer's assertions
+//!   are all derived from this single description), initialisation, and
+//!   the per-sample forward/backward the SGD driver iterates. Three
+//!   native, dependency-free models ship: [`LinearModel`] (softmax
+//!   regression, bit-compatible with the pre-workload trainer),
+//!   [`MlpModel`] and [`CnnSModel`].
+//! * [`Workload`] — task: corpus construction (the `workload.dataset`
+//!   generators in [`datasets`]) plus the eval protocol (which test
+//!   distribution accuracy is scored on — e.g. the `drift` workload
+//!   evaluates the *rotated* distribution). Partitioning stays the
+//!   shared Dirichlet splitter (`data::dirichlet_partition`) — the
+//!   non-IID axis composes with every dataset.
+//!
+//! Selection is pure config: `workload.model=linear|mlp|cnn-s` and
+//! `workload.dataset=synthetic|clusters|drift|file` thread through
+//! `ExperimentConfig`, the CLI `--set` surface, sweeps and benches. The
+//! defaults (`linear` × `synthetic`) reproduce pre-workload runs
+//! bit-identically. See DESIGN.md §Workloads for the layout rules and
+//! the recipe for adding a model or dataset.
+
+mod datasets;
+mod models;
+
+pub use datasets::{
+    clusters_corpus, drift_corpus, load_file_corpus, rotate_dataset,
+};
+pub use models::{
+    CnnSModel, LinearModel, MlpModel, Model, ParamLayout, Segment,
+};
+
+use crate::config::{DatasetKind, ExperimentConfig, ModelArch, WorkloadConfig};
+use crate::data::{make_corpus, Dataset, SyntheticSpec};
+
+/// Every registered model architecture, in registry order — tests,
+/// benches and the Fig. 28 harness iterate this so a new model is
+/// picked up everywhere by adding it here (and in [`build_model`]).
+pub const MODELS: [ModelArch; 3] =
+    [ModelArch::Linear, ModelArch::Mlp, ModelArch::CnnS];
+
+/// Every registered dataset generator, in registry order.
+pub const DATASETS: [DatasetKind; 4] = [
+    DatasetKind::Synthetic,
+    DatasetKind::Clusters,
+    DatasetKind::Drift,
+    DatasetKind::File,
+];
+
+/// Instantiate the configured model architecture over a
+/// `dim`-dimensional, `classes`-way task. Infallible once the config
+/// has validated (`WorkloadConfig::model_fits` guards the shape
+/// constraints).
+pub fn build_model(
+    w: &WorkloadConfig,
+    dim: usize,
+    classes: usize,
+) -> Box<dyn Model> {
+    match w.model {
+        ModelArch::Linear => Box::new(LinearModel::new(dim, classes)),
+        ModelArch::Mlp => Box::new(MlpModel::new(dim, w.hidden, classes)),
+        ModelArch::CnnS => Box::new(CnnSModel::new(
+            dim,
+            classes,
+            w.conv_filters,
+            w.conv_kernel,
+            w.conv_stride,
+        )),
+    }
+}
+
+/// One constructed workload: the corpus pair plus its identity labels.
+/// `test` already reflects the workload's eval protocol (e.g. rotated
+/// under `drift`), so engines evaluate it unchanged.
+pub struct Workload {
+    /// `workload.dataset` registry name.
+    pub dataset: &'static str,
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// Build the configured corpus. Deterministic per `cfg.seed`; draws
+/// from dedicated RNG streams only, never from the experiment builder's
+/// stream — `workload.dataset=synthetic` (the default) is byte-for-byte
+/// the pre-workload corpus.
+pub fn build_workload(cfg: &ExperimentConfig) -> Result<Workload, String> {
+    let spec = SyntheticSpec {
+        dim: cfg.feature_dim,
+        num_classes: cfg.num_classes,
+        train_samples: cfg.train_per_worker * cfg.workers,
+        test_samples: cfg.test_samples,
+        class_sep: cfg.class_sep,
+        seed: cfg.seed,
+    };
+    let w = &cfg.workload;
+    let (train, test) = match w.dataset {
+        DatasetKind::Synthetic => make_corpus(&spec),
+        DatasetKind::Clusters => clusters_corpus(&spec, w.cluster_skew),
+        DatasetKind::Drift => drift_corpus(&spec, w.drift_deg),
+        DatasetKind::File => {
+            load_file_corpus(&w.path, cfg.test_samples, cfg.seed)?
+        }
+    };
+    Ok(Workload { dataset: w.dataset.name(), train, test })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_builds_every_model() {
+        for arch in MODELS {
+            let w = WorkloadConfig { model: arch, ..Default::default() };
+            let m = build_model(&w, 32, 10);
+            assert_eq!(m.name(), arch.name());
+            assert_eq!(m.input_dim(), 32);
+            assert_eq!(m.init(1).len(), m.param_count());
+        }
+    }
+
+    #[test]
+    fn registry_names_roundtrip_through_config() {
+        for arch in MODELS {
+            assert_eq!(ModelArch::parse(arch.name()).unwrap(), arch);
+        }
+        for ds in DATASETS {
+            assert_eq!(DatasetKind::parse(ds.name()).unwrap(), ds);
+        }
+    }
+
+    #[test]
+    fn default_workload_is_the_base_synthetic_corpus() {
+        let cfg = ExperimentConfig {
+            workers: 4,
+            train_per_worker: 32,
+            test_samples: 40,
+            ..Default::default()
+        };
+        let wl = build_workload(&cfg).unwrap();
+        let spec = SyntheticSpec {
+            dim: cfg.feature_dim,
+            num_classes: cfg.num_classes,
+            train_samples: 128,
+            test_samples: 40,
+            class_sep: cfg.class_sep,
+            seed: cfg.seed,
+        };
+        let (train, test) = make_corpus(&spec);
+        assert_eq!(wl.dataset, "synthetic");
+        assert_eq!(wl.train.features, train.features);
+        assert_eq!(wl.train.labels, train.labels);
+        assert_eq!(wl.test.features, test.features);
+    }
+
+    #[test]
+    fn every_dataset_generator_builds() {
+        let dir = std::env::temp_dir()
+            .join(format!("dystop_wl_reg_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // a tiny CSV backs the `file` registry entry
+        let p = dir.join("tiny.csv");
+        let mut text = String::new();
+        for i in 0..24 {
+            text.push_str(&format!("{},{}.0,{}.5,1.0\n", i % 3, i, i));
+        }
+        std::fs::write(&p, text).unwrap();
+        for ds in DATASETS {
+            let mut cfg = ExperimentConfig {
+                workers: 4,
+                train_per_worker: 16,
+                test_samples: 8,
+                ..Default::default()
+            };
+            cfg.workload.dataset = ds;
+            if ds == DatasetKind::File {
+                cfg.workload.path = p.to_str().unwrap().to_string();
+            }
+            let wl = build_workload(&cfg).unwrap();
+            assert!(!wl.train.is_empty(), "{}", ds.name());
+            assert!(!wl.test.is_empty(), "{}", ds.name());
+            assert_eq!(wl.train.dim, wl.test.dim);
+            assert_eq!(wl.train.num_classes, wl.test.num_classes);
+        }
+        // file kind without a path is a clean error
+        let cfg = ExperimentConfig {
+            workload: WorkloadConfig {
+                dataset: DatasetKind::File,
+                path: String::new(),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        assert!(build_workload(&cfg).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,796 @@
+//! Native model zoo: the [`Model`] contract behind `NativeTrainer` and
+//! the three dependency-free architectures that implement it.
+//!
+//! Every model describes its own flattened parameter vector through
+//! [`ParamLayout`] — init, the gradient accumulator, and the layout
+//! assertions in the trainer are all derived from that one description,
+//! so they cannot drift apart (the pre-workload `NativeTrainer`
+//! hardcoded `dim·C + C` in three separate places).
+//!
+//! # Architectures
+//!
+//! * [`LinearModel`] — softmax regression, **bit-compatible** with the
+//!   historical trainer: identical op order, identical RNG draws in
+//!   `init`, so `workload.model=linear` (the default) reproduces
+//!   pre-workload runs exactly.
+//! * [`MlpModel`] — one ReLU hidden layer (`workload.hidden` units),
+//!   fused feature-major backward reusing the allocation-free scratch
+//!   discipline of the trainer hot path.
+//! * [`CnnSModel`] — a small 1-D conv net: im2col over the feature-major
+//!   input (each output position's taps land in one contiguous patch
+//!   row, turning the convolution into an `[L,K]×[K,F]` matmul), ReLU,
+//!   then a dense classifier head.
+//!
+//! All scratch lives on the model (one clone per pool slot via
+//! `Trainer::clone_box`), so the per-sample forward/backward allocates
+//! nothing.
+
+use crate::util::rng::Pcg;
+use crate::worker::Params;
+
+/// One contiguous, named segment of the flattened parameter vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Segment {
+    pub name: &'static str,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Model-described parameter layout: named segments covering the flat
+/// vector exactly, in order, with no gaps.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParamLayout {
+    segments: Vec<Segment>,
+}
+
+impl ParamLayout {
+    /// Build from `(name, len)` pairs; offsets are assigned
+    /// contiguously in order.
+    pub fn of(parts: &[(&'static str, usize)]) -> Self {
+        let mut segments = Vec::with_capacity(parts.len());
+        let mut offset = 0;
+        for &(name, len) in parts {
+            segments.push(Segment { name, offset, len });
+            offset += len;
+        }
+        ParamLayout { segments }
+    }
+
+    /// Total flattened length — the one source of truth for
+    /// `param_count`, init length and gradient-buffer size.
+    pub fn total(&self) -> usize {
+        self.segments.last().map(|s| s.offset + s.len).unwrap_or(0)
+    }
+
+    pub fn segments(&self) -> &[Segment] {
+        &self.segments
+    }
+
+    /// Look up a segment by name.
+    pub fn segment(&self, name: &str) -> Option<&Segment> {
+        self.segments.iter().find(|s| s.name == name)
+    }
+}
+
+/// A native model architecture: parameter layout, initialisation, and
+/// the per-sample forward/backward the SGD driver iterates.
+///
+/// The contract the rest of the system relies on:
+///
+/// * `init(seed).len() == layout().total()` — every parameter vector in
+///   the system (worker state, codec reconstructions, aggregation
+///   buffers) has this length;
+/// * `grad_sample` accumulates `∂loss/∂params` into `grad` (same layout
+///   as `params`) and is deterministic — all randomness comes from the
+///   trainer's minibatch sampling, never from the model;
+/// * aggregation stays a flat weighted sum (`aggregate_native_into`):
+///   layouts are position-stable across workers, so Eq. 4 never needs
+///   to know the architecture.
+pub trait Model: Send {
+    /// Registry name (the `workload.model` knob value).
+    fn name(&self) -> &'static str;
+
+    /// Expected feature-vector length.
+    fn input_dim(&self) -> usize;
+
+    /// The flattened parameter layout.
+    fn layout(&self) -> &ParamLayout;
+
+    /// Total flattened parameter count (derived from the layout).
+    fn param_count(&self) -> usize {
+        self.layout().total()
+    }
+
+    /// Fresh initial parameters, deterministic per seed.
+    fn init(&self, seed: u64) -> Params;
+
+    /// One sample's forward + backward: accumulate the gradient into
+    /// `grad` and return the sample's cross-entropy loss.
+    fn grad_sample(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: usize,
+        grad: &mut [f32],
+    ) -> f64;
+
+    /// Forward only: `(sample loss, predicted class)`.
+    fn predict(&mut self, params: &[f32], x: &[f32], y: usize)
+        -> (f64, usize);
+
+    /// Clone for one pool slot (scratch is per-clone).
+    fn clone_model(&self) -> Box<dyn Model>;
+}
+
+/// In-place softmax over the logits scratch; returns log-sum-exp.
+///
+/// Op-for-op identical to the pre-workload trainer's private softmax —
+/// the linear path's bit-compatibility depends on it.
+fn softmax_in_place(logits: &mut [f32]) -> f32 {
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+    let mut sum = 0.0f32;
+    for v in logits.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in logits.iter_mut() {
+        *v *= inv;
+    }
+    m + sum.ln()
+}
+
+/// Total-order argmax over probabilities: NaNs (reachable with a hot LR
+/// blowing up the params) never win and never panic.
+fn argmax(probs: &[f32]) -> usize {
+    let mut pred = 0usize;
+    let mut best = f32::NEG_INFINITY;
+    for (k, &v) in probs.iter().enumerate() {
+        if v > best {
+            best = v;
+            pred = k;
+        }
+    }
+    pred
+}
+
+// ---------------------------------------------------------------------
+// Linear (softmax regression)
+// ---------------------------------------------------------------------
+
+/// Softmax regression over the raw features. Layout:
+/// `[w (dim × C) feature-major, b (C)]` — the historical trainer's
+/// contract, preserved bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct LinearModel {
+    dim: usize,
+    classes: usize,
+    layout: ParamLayout,
+    /// Scratch: per-class logits, softmaxed in place to probabilities.
+    logits: Vec<f32>,
+    /// Scratch: per-class logit gradient δ_k = p_k − 1[k==y].
+    delta: Vec<f32>,
+}
+
+impl LinearModel {
+    pub fn new(dim: usize, classes: usize) -> Self {
+        assert!(dim > 0 && classes > 0);
+        LinearModel {
+            dim,
+            classes,
+            layout: ParamLayout::of(&[("w", dim * classes), ("b", classes)]),
+            logits: vec![0.0; classes],
+            delta: vec![0.0; classes],
+        }
+    }
+
+    fn compute_logits(&mut self, params: &[f32], x: &[f32]) {
+        let c = self.classes;
+        let d = self.dim;
+        self.logits.copy_from_slice(&params[d * c..]);
+        // w feature-major [d][c]: logit_k += x_j * w[j][k]
+        for (j, &xj) in x.iter().enumerate() {
+            if xj == 0.0 {
+                continue;
+            }
+            let row = &params[j * c..(j + 1) * c];
+            for (l, &w) in self.logits.iter_mut().zip(row) {
+                *l += xj * w;
+            }
+        }
+    }
+}
+
+impl Model for LinearModel {
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+
+    fn input_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn layout(&self) -> &ParamLayout {
+        &self.layout
+    }
+
+    fn init(&self, seed: u64) -> Params {
+        let mut rng = Pcg::new(seed, 0x1217);
+        let std = (2.0 / self.dim as f64).sqrt() * 0.5;
+        let mut p = rng.normal_vec(self.dim * self.classes, 0.0, std);
+        p.extend(std::iter::repeat(0.0f32).take(self.classes));
+        p
+    }
+
+    fn grad_sample(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: usize,
+        grad: &mut [f32],
+    ) -> f64 {
+        let c = self.classes;
+        let d = self.dim;
+        self.compute_logits(params, x);
+        let gold = self.logits[y];
+        let lse = softmax_in_place(&mut self.logits);
+        let (gw, gb) = grad.split_at_mut(d * c);
+        // δ_k = p_k − 1[k==y]; the bias gradient accumulates directly
+        for (k, (dv, gv)) in
+            self.delta.iter_mut().zip(gb.iter_mut()).enumerate()
+        {
+            let dk = self.logits[k] - if k == y { 1.0 } else { 0.0 };
+            *dv = dk;
+            *gv += dk;
+        }
+        // fused feature-major pass: each nonzero x_j touches one
+        // contiguous gw row, instead of C strided feature sweeps
+        for (j, &xj) in x.iter().enumerate() {
+            if xj == 0.0 {
+                continue;
+            }
+            let row = &mut gw[j * c..(j + 1) * c];
+            for (g, &dk) in row.iter_mut().zip(&self.delta) {
+                *g += dk * xj;
+            }
+        }
+        (lse - gold) as f64
+    }
+
+    fn predict(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: usize,
+    ) -> (f64, usize) {
+        self.compute_logits(params, x);
+        let gold = self.logits[y];
+        let lse = softmax_in_place(&mut self.logits);
+        ((lse - gold) as f64, argmax(&self.logits))
+    }
+
+    fn clone_model(&self) -> Box<dyn Model> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// MLP (one ReLU hidden layer)
+// ---------------------------------------------------------------------
+
+/// One-hidden-layer ReLU perceptron. Layout:
+/// `[w1 (dim × H) feature-major, b1 (H), w2 (H × C) unit-major, b2 (C)]`.
+#[derive(Clone, Debug)]
+pub struct MlpModel {
+    dim: usize,
+    hidden: usize,
+    classes: usize,
+    layout: ParamLayout,
+    /// Scratch: hidden pre-activations (kept for the ReLU mask).
+    h_pre: Vec<f32>,
+    /// Scratch: hidden activations.
+    h_act: Vec<f32>,
+    /// Scratch: hidden-layer deltas.
+    h_delta: Vec<f32>,
+    logits: Vec<f32>,
+    delta: Vec<f32>,
+}
+
+impl MlpModel {
+    pub fn new(dim: usize, hidden: usize, classes: usize) -> Self {
+        assert!(dim > 0 && hidden > 0 && classes > 0);
+        MlpModel {
+            dim,
+            hidden,
+            classes,
+            layout: ParamLayout::of(&[
+                ("w1", dim * hidden),
+                ("b1", hidden),
+                ("w2", hidden * classes),
+                ("b2", classes),
+            ]),
+            h_pre: vec![0.0; hidden],
+            h_act: vec![0.0; hidden],
+            h_delta: vec![0.0; hidden],
+            logits: vec![0.0; classes],
+            delta: vec![0.0; classes],
+        }
+    }
+
+    /// Forward pass into the scratch buffers (h_pre, h_act, logits).
+    fn forward(&mut self, params: &[f32], x: &[f32]) {
+        let (d, h, c) = (self.dim, self.hidden, self.classes);
+        let w1 = &params[..d * h];
+        let b1 = &params[d * h..d * h + h];
+        let w2 = &params[d * h + h..d * h + h + h * c];
+        let b2 = &params[d * h + h + h * c..];
+        self.h_pre.copy_from_slice(b1);
+        // fused feature-major pass over w1 rows
+        for (j, &xj) in x.iter().enumerate() {
+            if xj == 0.0 {
+                continue;
+            }
+            let row = &w1[j * h..(j + 1) * h];
+            for (hp, &w) in self.h_pre.iter_mut().zip(row) {
+                *hp += xj * w;
+            }
+        }
+        for (a, &pre) in self.h_act.iter_mut().zip(&self.h_pre) {
+            *a = pre.max(0.0);
+        }
+        self.logits.copy_from_slice(b2);
+        for (k, &hk) in self.h_act.iter().enumerate() {
+            if hk == 0.0 {
+                continue;
+            }
+            let row = &w2[k * c..(k + 1) * c];
+            for (l, &w) in self.logits.iter_mut().zip(row) {
+                *l += hk * w;
+            }
+        }
+    }
+}
+
+impl Model for MlpModel {
+    fn name(&self) -> &'static str {
+        "mlp"
+    }
+
+    fn input_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn layout(&self) -> &ParamLayout {
+        &self.layout
+    }
+
+    fn init(&self, seed: u64) -> Params {
+        // He-style init, damped like the linear path; biases zero
+        let mut rng = Pcg::new(seed, 0x1217);
+        let s1 = (2.0 / self.dim as f64).sqrt() * 0.5;
+        let mut p = rng.normal_vec(self.dim * self.hidden, 0.0, s1);
+        p.extend(std::iter::repeat(0.0f32).take(self.hidden));
+        let s2 = (2.0 / self.hidden as f64).sqrt() * 0.5;
+        p.extend(rng.normal_vec(self.hidden * self.classes, 0.0, s2));
+        p.extend(std::iter::repeat(0.0f32).take(self.classes));
+        p
+    }
+
+    fn grad_sample(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: usize,
+        grad: &mut [f32],
+    ) -> f64 {
+        let (d, h, c) = (self.dim, self.hidden, self.classes);
+        self.forward(params, x);
+        let gold = self.logits[y];
+        let lse = softmax_in_place(&mut self.logits);
+        let (gw1, rest) = grad.split_at_mut(d * h);
+        let (gb1, rest) = rest.split_at_mut(h);
+        let (gw2, gb2) = rest.split_at_mut(h * c);
+        // output delta + head gradients
+        for (k, (dv, gv)) in
+            self.delta.iter_mut().zip(gb2.iter_mut()).enumerate()
+        {
+            let dk = self.logits[k] - if k == y { 1.0 } else { 0.0 };
+            *dv = dk;
+            *gv += dk;
+        }
+        for (k, &hk) in self.h_act.iter().enumerate() {
+            if hk == 0.0 {
+                continue;
+            }
+            let row = &mut gw2[k * c..(k + 1) * c];
+            for (g, &dk) in row.iter_mut().zip(&self.delta) {
+                *g += dk * hk;
+            }
+        }
+        // backprop through the ReLU into the hidden deltas
+        let w2 = &params[d * h + h..d * h + h + h * c];
+        for (k, hd) in self.h_delta.iter_mut().enumerate() {
+            *hd = if self.h_pre[k] > 0.0 {
+                let row = &w2[k * c..(k + 1) * c];
+                let mut s = 0.0f32;
+                for (w, &dk) in row.iter().zip(&self.delta) {
+                    s += w * dk;
+                }
+                s
+            } else {
+                0.0
+            };
+        }
+        for (gv, &hd) in gb1.iter_mut().zip(&self.h_delta) {
+            *gv += hd;
+        }
+        // fused feature-major pass over gw1 rows
+        for (j, &xj) in x.iter().enumerate() {
+            if xj == 0.0 {
+                continue;
+            }
+            let row = &mut gw1[j * h..(j + 1) * h];
+            for (g, &hd) in row.iter_mut().zip(&self.h_delta) {
+                *g += hd * xj;
+            }
+        }
+        (lse - gold) as f64
+    }
+
+    fn predict(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: usize,
+    ) -> (f64, usize) {
+        self.forward(params, x);
+        let gold = self.logits[y];
+        let lse = softmax_in_place(&mut self.logits);
+        ((lse - gold) as f64, argmax(&self.logits))
+    }
+
+    fn clone_model(&self) -> Box<dyn Model> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// CNN-S (small 1-D conv net via im2col)
+// ---------------------------------------------------------------------
+
+/// Small 1-D convolutional net: `F` filters of kernel `K` and stride
+/// `S` slide over the feature vector, ReLU, then a dense classifier
+/// over all `L × F` activations. Layout:
+/// `[conv_w (K × F) tap-major, conv_b (F), fc_w (L·F × C), fc_b (C)]`.
+///
+/// The convolution runs as im2col on the feature-major layout: each of
+/// the `L` output positions copies its `K` input taps into one
+/// contiguous patch row, so the conv is a plain `[L,K] × [K,F]` matmul
+/// with the same fused row-major inner loops as the other models.
+#[derive(Clone, Debug)]
+pub struct CnnSModel {
+    dim: usize,
+    classes: usize,
+    filters: usize,
+    kernel: usize,
+    stride: usize,
+    /// Conv output positions L = (dim − K)/S + 1.
+    out_len: usize,
+    layout: ParamLayout,
+    /// Scratch: im2col patch matrix `[L][K]`.
+    im2col: Vec<f32>,
+    /// Scratch: conv pre-activations `[L][F]` (kept for the ReLU mask).
+    a_pre: Vec<f32>,
+    /// Scratch: conv activations `[L][F]`.
+    a_act: Vec<f32>,
+    /// Scratch: conv-layer deltas `[L][F]`.
+    a_delta: Vec<f32>,
+    logits: Vec<f32>,
+    delta: Vec<f32>,
+}
+
+impl CnnSModel {
+    pub fn new(
+        dim: usize,
+        classes: usize,
+        filters: usize,
+        kernel: usize,
+        stride: usize,
+    ) -> Self {
+        assert!(dim > 0 && classes > 0 && filters > 0 && stride > 0);
+        assert!(
+            kernel >= 1 && kernel <= dim,
+            "cnn-s kernel {kernel} must be in [1, dim={dim}]"
+        );
+        let out_len = (dim - kernel) / stride + 1;
+        let units = out_len * filters;
+        CnnSModel {
+            dim,
+            classes,
+            filters,
+            kernel,
+            stride,
+            out_len,
+            layout: ParamLayout::of(&[
+                ("conv_w", kernel * filters),
+                ("conv_b", filters),
+                ("fc_w", units * classes),
+                ("fc_b", classes),
+            ]),
+            im2col: vec![0.0; out_len * kernel],
+            a_pre: vec![0.0; units],
+            a_act: vec![0.0; units],
+            a_delta: vec![0.0; units],
+            logits: vec![0.0; classes],
+            delta: vec![0.0; classes],
+        }
+    }
+
+    /// Forward pass into the scratch buffers (im2col, a_pre, a_act,
+    /// logits).
+    fn forward(&mut self, params: &[f32], x: &[f32]) {
+        let (kk, f, c) = (self.kernel, self.filters, self.classes);
+        let l_out = self.out_len;
+        let cw = &params[..kk * f];
+        let cb = &params[kk * f..kk * f + f];
+        // im2col: one contiguous K-tap patch row per output position
+        for l in 0..l_out {
+            let start = l * self.stride;
+            self.im2col[l * kk..(l + 1) * kk]
+                .copy_from_slice(&x[start..start + kk]);
+        }
+        // conv as [L,K]×[K,F]: fused tap-major rows over cw
+        for l in 0..l_out {
+            let pre = &mut self.a_pre[l * f..(l + 1) * f];
+            pre.copy_from_slice(cb);
+            let patch = &self.im2col[l * kk..(l + 1) * kk];
+            for (k, &xv) in patch.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let row = &cw[k * f..(k + 1) * f];
+                for (pv, &w) in pre.iter_mut().zip(row) {
+                    *pv += xv * w;
+                }
+            }
+        }
+        for (a, &pre) in self.a_act.iter_mut().zip(&self.a_pre) {
+            *a = pre.max(0.0);
+        }
+        // dense head over all L×F activations
+        let fc_off = kk * f + f;
+        let units = l_out * f;
+        let fw = &params[fc_off..fc_off + units * c];
+        let fb = &params[fc_off + units * c..];
+        self.logits.copy_from_slice(fb);
+        for (u, &au) in self.a_act.iter().enumerate() {
+            if au == 0.0 {
+                continue;
+            }
+            let row = &fw[u * c..(u + 1) * c];
+            for (lv, &w) in self.logits.iter_mut().zip(row) {
+                *lv += au * w;
+            }
+        }
+    }
+}
+
+impl Model for CnnSModel {
+    fn name(&self) -> &'static str {
+        "cnn-s"
+    }
+
+    fn input_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn layout(&self) -> &ParamLayout {
+        &self.layout
+    }
+
+    fn init(&self, seed: u64) -> Params {
+        let mut rng = Pcg::new(seed, 0x1217);
+        let sc = (2.0 / self.kernel as f64).sqrt() * 0.5;
+        let mut p = rng.normal_vec(self.kernel * self.filters, 0.0, sc);
+        p.extend(std::iter::repeat(0.0f32).take(self.filters));
+        let units = self.out_len * self.filters;
+        let sf = (2.0 / units as f64).sqrt() * 0.5;
+        p.extend(rng.normal_vec(units * self.classes, 0.0, sf));
+        p.extend(std::iter::repeat(0.0f32).take(self.classes));
+        p
+    }
+
+    fn grad_sample(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: usize,
+        grad: &mut [f32],
+    ) -> f64 {
+        let (kk, f, c) = (self.kernel, self.filters, self.classes);
+        let l_out = self.out_len;
+        let units = l_out * f;
+        self.forward(params, x);
+        let gold = self.logits[y];
+        let lse = softmax_in_place(&mut self.logits);
+        let (gcw, rest) = grad.split_at_mut(kk * f);
+        let (gcb, rest) = rest.split_at_mut(f);
+        let (gfw, gfb) = rest.split_at_mut(units * c);
+        // output delta + head gradients
+        for (k, (dv, gv)) in
+            self.delta.iter_mut().zip(gfb.iter_mut()).enumerate()
+        {
+            let dk = self.logits[k] - if k == y { 1.0 } else { 0.0 };
+            *dv = dk;
+            *gv += dk;
+        }
+        for (u, &au) in self.a_act.iter().enumerate() {
+            if au == 0.0 {
+                continue;
+            }
+            let row = &mut gfw[u * c..(u + 1) * c];
+            for (g, &dk) in row.iter_mut().zip(&self.delta) {
+                *g += dk * au;
+            }
+        }
+        // backprop through the ReLU into the conv deltas
+        let fc_off = kk * f + f;
+        let fw = &params[fc_off..fc_off + units * c];
+        for (u, ad) in self.a_delta.iter_mut().enumerate() {
+            *ad = if self.a_pre[u] > 0.0 {
+                let row = &fw[u * c..(u + 1) * c];
+                let mut s = 0.0f32;
+                for (w, &dk) in row.iter().zip(&self.delta) {
+                    s += w * dk;
+                }
+                s
+            } else {
+                0.0
+            };
+        }
+        // conv gradients off the im2col patches (the [K,F] matmul
+        // transpose, fused over contiguous gcw rows)
+        for l in 0..l_out {
+            let ad = &self.a_delta[l * f..(l + 1) * f];
+            for (gv, &dv) in gcb.iter_mut().zip(ad) {
+                *gv += dv;
+            }
+            let patch = &self.im2col[l * kk..(l + 1) * kk];
+            for (k, &xv) in patch.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let row = &mut gcw[k * f..(k + 1) * f];
+                for (g, &dv) in row.iter_mut().zip(ad) {
+                    *g += dv * xv;
+                }
+            }
+        }
+        (lse - gold) as f64
+    }
+
+    fn predict(
+        &mut self,
+        params: &[f32],
+        x: &[f32],
+        y: usize,
+    ) -> (f64, usize) {
+        self.forward(params, x);
+        let gold = self.logits[y];
+        let lse = softmax_in_place(&mut self.logits);
+        ((lse - gold) as f64, argmax(&self.logits))
+    }
+
+    fn clone_model(&self) -> Box<dyn Model> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn models() -> Vec<Box<dyn Model>> {
+        vec![
+            Box::new(LinearModel::new(32, 10)),
+            Box::new(MlpModel::new(32, 16, 10)),
+            Box::new(CnnSModel::new(32, 10, 8, 5, 2)),
+        ]
+    }
+
+    #[test]
+    fn layouts_are_contiguous_and_cover_init() {
+        for m in models() {
+            let layout = m.layout().clone();
+            let mut expect = 0usize;
+            for s in layout.segments() {
+                assert_eq!(s.offset, expect, "{}: segment {}", m.name(), s.name);
+                assert!(s.len > 0);
+                expect += s.len;
+            }
+            assert_eq!(layout.total(), expect);
+            assert_eq!(m.param_count(), layout.total());
+            assert_eq!(m.init(3).len(), layout.total(), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn linear_layout_matches_historical_contract() {
+        let m = LinearModel::new(32, 10);
+        assert_eq!(m.param_count(), 32 * 10 + 10);
+        let w = m.layout().segment("w").unwrap();
+        let b = m.layout().segment("b").unwrap();
+        assert_eq!((w.offset, w.len), (0, 320));
+        assert_eq!((b.offset, b.len), (320, 10));
+    }
+
+    #[test]
+    fn init_is_deterministic_per_seed_and_differs_across_seeds() {
+        for m in models() {
+            assert_eq!(m.init(7), m.init(7), "{}", m.name());
+            assert_ne!(m.init(7), m.init(8), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        // spot-check the analytic gradient of every architecture against
+        // central differences on a handful of coordinates
+        let x: Vec<f32> = (0..32).map(|i| ((i % 5) as f32 - 2.0) * 0.3).collect();
+        let y = 3usize;
+        for mut m in models() {
+            let p = m.init(11);
+            let mut g = vec![0.0f32; p.len()];
+            m.grad_sample(&p, &x, y, &mut g);
+            let eps = 1e-3f32;
+            // probe a spread of coordinates incl. first/last segment
+            let n = p.len();
+            for &i in &[0usize, 1, n / 2, n - 2, n - 1] {
+                let mut pp = p.clone();
+                pp[i] += eps;
+                let (lp, _) = m.predict(&pp, &x, y);
+                pp[i] = p[i] - eps;
+                let (lm, _) = m.predict(&pp, &x, y);
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                assert!(
+                    (g[i] - fd).abs() < 2e-2,
+                    "{} coord {i}: analytic {} vs fd {fd}",
+                    m.name(),
+                    g[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn predict_handles_nan_params() {
+        for mut m in models() {
+            let p = vec![f32::NAN; m.param_count()];
+            let x = vec![0.5f32; 32];
+            let (loss, pred) = m.predict(&p, &x, 0);
+            assert!(loss.is_nan(), "{}", m.name());
+            assert!(pred < 10);
+        }
+    }
+
+    #[test]
+    fn clone_model_is_independent_and_identical() {
+        for mut m in models() {
+            let mut c = m.clone_model();
+            let p = m.init(5);
+            let x = vec![0.25f32; 32];
+            let mut ga = vec![0.0f32; p.len()];
+            let mut gb = vec![0.0f32; p.len()];
+            let la = m.grad_sample(&p, &x, 2, &mut ga);
+            let lb = c.grad_sample(&p, &x, 2, &mut gb);
+            assert_eq!(la.to_bits(), lb.to_bits(), "{}", m.name());
+            assert_eq!(ga, gb);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "kernel")]
+    fn cnn_kernel_larger_than_dim_panics() {
+        CnnSModel::new(4, 10, 8, 5, 2);
+    }
+}
