@@ -4,14 +4,17 @@
 //! * `sim_round` — whole-round throughput at N ∈ {60, 200, 500} for
 //!   threads=1 vs threads=auto (the cost behind every figure
 //!   regeneration — Figs. 4–18 all run through this loop), plus the
-//!   scheduler, codec and workload-model variants (the
-//!   `model={linear,mlp,cnn-s}` rows track per-model round cost);
+//!   scheduler, codec, workload-model and adversary variants (the
+//!   `model={linear,mlp,cnn-s}` rows track per-model round cost; the
+//!   `attack=…/agg=…` rows track the exchange-boundary rewrite and the
+//!   robust-aggregation rules);
 //! * native-trainer hot-path microbenches (train step / aggregate /
 //!   eval) — the per-activation inner loop;
 //! * PJRT hot-path latencies when artifacts are present;
 //! * threads=1 vs threads=4 bit-identity checks (the parallel engine's
-//!   core invariant) — base, churn, stateful-codec, and one per
-//!   registered non-default workload model — recorded in the report.
+//!   core invariant) — base, churn, stateful-codec, one per registered
+//!   non-default workload model, and a mounted sign-flip cast —
+//!   recorded in the report.
 //!
 //! `DYSTOP_BENCH_QUICK=1` shrinks warmup/measure budgets for CI smoke
 //! runs; the report schema is identical. `DYSTOP_BENCH_OUT=path.json`
@@ -22,7 +25,8 @@
 
 use dystop::bench::{bench_with, write_json_report, BenchResult};
 use dystop::config::{
-    CodecKind, ExperimentConfig, ModelArch, ScenarioConfig, ScenarioPreset,
+    AdversaryConfig, AggregatorKind, AttackKind, CodecKind,
+    ExperimentConfig, ModelArch, ScenarioConfig, ScenarioPreset,
     SchedulerKind, TransportConfig, WorkloadConfig,
 };
 use dystop::data::{make_corpus, SyntheticSpec};
@@ -67,6 +71,30 @@ fn model_sim_engine(n: usize, model: ModelArch) -> VirtualClockEngine {
         eval_every: usize::MAX,
         target_accuracy: 2.0,
         workload: WorkloadConfig { model, ..Default::default() },
+        ..Default::default()
+    };
+    let exp = Experiment::builder(cfg).build().expect("valid bench config");
+    VirtualClockEngine::new(exp)
+}
+
+fn adversary_sim_engine(
+    n: usize,
+    attack: AttackKind,
+    aggregator: AggregatorKind,
+) -> VirtualClockEngine {
+    let frac = if attack == AttackKind::None { 0.0 } else { 0.2 };
+    let cfg = ExperimentConfig {
+        workers: n,
+        rounds: 10_000,
+        train_per_worker: 64,
+        eval_every: usize::MAX,
+        target_accuracy: 2.0,
+        adversary: AdversaryConfig {
+            frac,
+            attack,
+            aggregator,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let exp = Experiment::builder(cfg).build().expect("valid bench config");
@@ -161,6 +189,33 @@ fn sim_round_benches(
         let mut eng = codec_sim_engine(200, codec);
         results.push(bench_with(
             &format!("sim_round N=200 dystop codec={}", codec.name()),
+            warm,
+            budget,
+            &mut || {
+                std::hint::black_box(eng.step());
+            },
+        ));
+    }
+
+    // adversary axis: attack-payload rewrites at the exchange boundary
+    // (attack=none agg=mean is the branch-free control — the is_active
+    // gate must keep it at parity with the plain N=200 row) and the
+    // robust-aggregation rules' per-round cost (krum's pairwise
+    // distances are the worst case)
+    println!("\n== sim_round under adversaries (N=200, dystop) ==");
+    for (attack, agg) in [
+        (AttackKind::None, AggregatorKind::Mean),
+        (AttackKind::None, AggregatorKind::Krum),
+        (AttackKind::SignFlip, AggregatorKind::Mean),
+        (AttackKind::SignFlip, AggregatorKind::Krum),
+    ] {
+        let mut eng = adversary_sim_engine(200, attack, agg);
+        results.push(bench_with(
+            &format!(
+                "sim_round N=200 dystop attack={} agg={}",
+                attack.name(),
+                agg.name()
+            ),
             warm,
             budget,
             &mut || {
@@ -278,12 +333,14 @@ fn pjrt_benches(results: &mut Vec<BenchResult>) {
 
 /// The parallel engine's core invariant: a seeded run is bit-identical
 /// for any `run.threads` setting — with or without an active scenario,
-/// a stateful transport codec, or a deeper workload model. Checked here
-/// so the recorded perf numbers always come with a correctness witness.
+/// a stateful transport codec, a deeper workload model, or a mounted
+/// Byzantine cast. Checked here so the recorded perf numbers always
+/// come with a correctness witness.
 fn determinism_check(
     scenario: ScenarioConfig,
     transport: TransportConfig,
     model: ModelArch,
+    adversary: AdversaryConfig,
 ) -> bool {
     let run_with = |threads: usize| {
         let cfg = ExperimentConfig {
@@ -297,6 +354,7 @@ fn determinism_check(
             scenario,
             transport,
             workload: WorkloadConfig { model, ..Default::default() },
+            adversary,
             ..Default::default()
         };
         Experiment::builder(cfg).run().expect("determinism run")
@@ -325,6 +383,7 @@ fn main() {
         ScenarioConfig::default(),
         TransportConfig::default(),
         ModelArch::Linear,
+        AdversaryConfig::default(),
     );
     println!(
         "\ndeterminism threads=1 vs threads=4: {}",
@@ -334,6 +393,7 @@ fn main() {
         ScenarioConfig::preset(ScenarioPreset::Diurnal),
         TransportConfig::default(),
         ModelArch::Linear,
+        AdversaryConfig::default(),
     );
     println!(
         "determinism threads=1 vs threads=4 (scenario=diurnal): {}",
@@ -344,6 +404,7 @@ fn main() {
         ScenarioConfig::default(),
         TransportConfig { codec: CodecKind::TopK, ..Default::default() },
         ModelArch::Linear,
+        AdversaryConfig::default(),
     );
     println!(
         "determinism threads=1 vs threads=4 (transport.codec=topk): {}",
@@ -355,6 +416,7 @@ fn main() {
         ScenarioConfig::default(),
         TransportConfig::default(),
         ModelArch::Mlp,
+        AdversaryConfig::default(),
     );
     println!(
         "determinism threads=1 vs threads=4 (workload.model=mlp): {}",
@@ -364,10 +426,26 @@ fn main() {
         ScenarioConfig::default(),
         TransportConfig::default(),
         ModelArch::CnnS,
+        AdversaryConfig::default(),
     );
     println!(
         "determinism threads=1 vs threads=4 (workload.model=cnn-s): {}",
         if det_cnn_ok { "bit-identical" } else { "MISMATCH" }
+    );
+    // mounted Byzantine cast: transmit must stay coordinator-ordered
+    let det_signflip_ok = determinism_check(
+        ScenarioConfig::default(),
+        TransportConfig::default(),
+        ModelArch::Linear,
+        AdversaryConfig {
+            frac: 0.2,
+            attack: AttackKind::SignFlip,
+            ..Default::default()
+        },
+    );
+    println!(
+        "determinism threads=1 vs threads=4 (adversary=signflip): {}",
+        if det_signflip_ok { "bit-identical" } else { "MISMATCH" }
     );
 
     let meta = vec![
@@ -397,6 +475,10 @@ fn main() {
             "determinism_cnn_s_threads_1_vs_4".to_string(),
             Json::Bool(det_cnn_ok),
         ),
+        (
+            "determinism_signflip_threads_1_vs_4".to_string(),
+            Json::Bool(det_signflip_ok),
+        ),
     ];
     // explicit output path so CI artifact steps can't pick up a stale
     // file from an unexpected working directory
@@ -425,5 +507,9 @@ fn main() {
     assert!(
         det_cnn_ok,
         "threads=1 vs threads=4 diverged under workload.model=cnn-s"
+    );
+    assert!(
+        det_signflip_ok,
+        "threads=1 vs threads=4 diverged under adversary attack=signflip"
     );
 }

@@ -1,0 +1,687 @@
+//! Adversary subsystem: Byzantine worker policies + robust aggregation.
+//!
+//! DySTop's convergence story assumes every neighbor serves an honest
+//! model; ADFL's peer-to-peer aggregation is exactly where poisoned or
+//! stale-bombed models do the most damage. This module supplies the two
+//! halves of the robustness axis:
+//!
+//! * **Attack policies** ([`AdversaryPolicy`]) — a per-worker behavior
+//!   assigned deterministically from the `adversary.*` knobs (a
+//!   `⌊frac·n⌋`-sized cast drawn on a dedicated RNG stream, so the
+//!   assignment never perturbs substrate construction) or scripted via
+//!   `ExperimentBuilder::adversary`. Attacks apply at the
+//!   **model-exchange boundary**: the coordinator routes every outgoing
+//!   payload through [`Adversary::transmit`] before it is encoded by the
+//!   transport codec, so schedulers, codecs, byte accounting and
+//!   scenario events all see poisoned payloads with no special-casing.
+//!   The one exception is `labelflip`, which poisons the attacker's
+//!   *shard* at build time and then trains honestly — the poison flows
+//!   through the ordinary training path in both backends.
+//! * **Robust aggregators** ([`Aggregator`]) — the coordinator-side
+//!   aggregation rule (`adversary.aggregator`): `mean` is the current
+//!   bit-identical `Trainer::aggregate` path; `trimmed-mean`,
+//!   `median` and `krum` are the classic Byzantine-robust rules,
+//!   composable with every codec's per-sender reconstruction slices and
+//!   every `workload.model` (they operate on flattened parameter
+//!   vectors only).
+//!
+//! The default (`adversary.frac=0` × `aggregator=mean`) is inert:
+//! [`Adversary::is_active`] is `false`, both engines skip every
+//! adversary branch, and runs stay bit-identical to the pre-adversary
+//! engine.
+
+use crate::config::{AdversaryConfig, AggregatorKind, AttackKind};
+use crate::util::rng::Pcg;
+use crate::worker::{Params, Trainer};
+use std::collections::VecDeque;
+
+/// Per-worker adversary behavior. `Honest` is the overwhelming default;
+/// the attack variants mirror [`AttackKind`] one-to-one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AdversaryPolicy {
+    /// Follows the protocol faithfully.
+    #[default]
+    Honest,
+    /// Transmits `-θ` instead of `θ` (gradient poisoning).
+    SignFlip,
+    /// Transmits `scale·θ` (gradient poisoning, `adversary.scale`).
+    Scale,
+    /// Trains on a label-flipped shard (`y → C-1-y`); transmits its
+    /// honestly-trained-on-poison model unchanged.
+    LabelFlip,
+    /// Replays its own parameters from `adversary.stale_tau` rounds ago.
+    StaleBomb,
+    /// Transmits its frozen initial parameters forever (never
+    /// contributes training work).
+    FreeRide,
+}
+
+impl AdversaryPolicy {
+    /// The policy a worker assigned `attack` mounts.
+    pub fn from_attack(attack: AttackKind) -> Self {
+        match attack {
+            AttackKind::None => Self::Honest,
+            AttackKind::SignFlip => Self::SignFlip,
+            AttackKind::Scale => Self::Scale,
+            AttackKind::LabelFlip => Self::LabelFlip,
+            AttackKind::StaleBomb => Self::StaleBomb,
+            AttackKind::FreeRide => Self::FreeRide,
+        }
+    }
+
+    pub fn is_honest(self) -> bool {
+        self == Self::Honest
+    }
+
+    /// Whether the policy rewrites the payload at the exchange boundary
+    /// (`labelflip` poisons training data instead, so its wire payload
+    /// is its own — honestly computed — model).
+    pub fn mutates_exchange(self) -> bool {
+        matches!(
+            self,
+            Self::SignFlip | Self::Scale | Self::StaleBomb | Self::FreeRide
+        )
+    }
+
+    /// The [`crate::metrics::EventRecord`] kind logged on the policy's
+    /// first transmission.
+    pub fn event_kind(self) -> &'static str {
+        match self {
+            Self::Honest => "honest",
+            Self::SignFlip => "attack-signflip",
+            Self::Scale => "attack-scale",
+            Self::LabelFlip => "attack-labelflip",
+            Self::StaleBomb => "attack-stalebomb",
+            Self::FreeRide => "attack-freeride",
+        }
+    }
+}
+
+/// The per-run adversary state: one policy per worker plus the buffers
+/// the stateful attacks need (frozen init params, τ-deep parameter
+/// history) and the per-worker wire buffers holding this round's
+/// poisoned payloads.
+///
+/// All mutation ([`transmit`](Self::transmit),
+/// [`record_round_end`](Self::record_round_end)) happens on the
+/// coordinator in a fixed order; round tasks only read
+/// ([`exchange_view`](Self::exchange_view)), so thread count never
+/// changes results.
+pub struct Adversary {
+    policies: Vec<AdversaryPolicy>,
+    scale: f32,
+    stale_tau: usize,
+    /// Frozen initial parameters (filled for `FreeRide` workers only).
+    init: Vec<Params>,
+    /// Own-parameter history, oldest first (filled for `StaleBomb`
+    /// workers only; capped at `stale_tau` entries).
+    hist: Vec<VecDeque<Params>>,
+    /// This round's outgoing payloads (exchange-mutating workers only).
+    wire: Vec<Params>,
+    /// First-transmission latch per worker (attack-activation events).
+    fired: Vec<bool>,
+    /// (worker, kind) pairs fired since the last drain, transmit order.
+    newly_fired: Vec<(usize, &'static str)>,
+    active: bool,
+    stale_bombers: bool,
+}
+
+impl Adversary {
+    /// Assign policies from the config knobs: `⌊frac·workers⌋` workers
+    /// drawn on a dedicated RNG stream (never perturbs the substrate
+    /// streams) mount `cfg.attack`; everyone else is honest.
+    pub fn from_config(
+        cfg: &AdversaryConfig,
+        workers: usize,
+        seed: u64,
+    ) -> Self {
+        let mut policies = vec![AdversaryPolicy::Honest; workers];
+        let k = (cfg.frac * workers as f64).floor() as usize;
+        if k > 0 && cfg.attack != AttackKind::None {
+            let mut rng = Pcg::new(seed ^ 0xADF1_B52A_17AC_0002, 0xADF);
+            for w in rng.sample_indices(workers, k) {
+                policies[w] = AdversaryPolicy::from_attack(cfg.attack);
+            }
+        }
+        Self::assemble(policies, cfg)
+    }
+
+    /// Hand-scripted per-worker policies (one entry per worker slot),
+    /// for targeted tests and the `ExperimentBuilder::adversary` hook.
+    pub fn scripted(
+        policies: Vec<AdversaryPolicy>,
+        cfg: &AdversaryConfig,
+    ) -> Self {
+        Self::assemble(policies, cfg)
+    }
+
+    /// The benign no-op adversary (every worker honest).
+    pub fn inactive(workers: usize) -> Self {
+        Self::assemble(
+            vec![AdversaryPolicy::Honest; workers],
+            &AdversaryConfig::default(),
+        )
+    }
+
+    fn assemble(
+        policies: Vec<AdversaryPolicy>,
+        cfg: &AdversaryConfig,
+    ) -> Self {
+        let n = policies.len();
+        let active = policies.iter().any(|p| !p.is_honest());
+        let stale_bombers =
+            policies.iter().any(|&p| p == AdversaryPolicy::StaleBomb);
+        Adversary {
+            policies,
+            scale: cfg.scale as f32,
+            stale_tau: cfg.stale_tau.max(1),
+            init: vec![Params::new(); n],
+            hist: vec![VecDeque::new(); n],
+            wire: vec![Params::new(); n],
+            fired: vec![false; n],
+            newly_fired: Vec::new(),
+            active,
+            stale_bombers,
+        }
+    }
+
+    /// `true` when any worker is non-honest. Both engines gate every
+    /// adversary branch on this, so the benign default costs nothing.
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// `true` when any worker replays stale parameters (gates the
+    /// per-round history recording).
+    pub fn has_stale_bombers(&self) -> bool {
+        self.stale_bombers
+    }
+
+    pub fn policy(&self, w: usize) -> AdversaryPolicy {
+        self.policies[w]
+    }
+
+    pub fn is_attacker(&self, w: usize) -> bool {
+        !self.policies[w].is_honest()
+    }
+
+    /// Total assigned attackers (present or not).
+    pub fn attacker_count(&self) -> usize {
+        self.policies.iter().filter(|p| !p.is_honest()).count()
+    }
+
+    /// Attackers among the given (present) worker ids — the per-round
+    /// `RoundRecord::adversaries` count.
+    pub fn count_present(&self, ids: &[usize]) -> usize {
+        ids.iter().filter(|&&i| self.is_attacker(i)).count()
+    }
+
+    /// Builder hook: snapshot worker `w`'s initial parameters (seeds
+    /// the `FreeRide` frozen payload and the `StaleBomb` history).
+    pub fn observe_init(&mut self, w: usize, params: &[f32]) {
+        match self.policies[w] {
+            AdversaryPolicy::FreeRide => {
+                self.init[w].clear();
+                self.init[w].extend_from_slice(params);
+            }
+            AdversaryPolicy::StaleBomb => {
+                self.hist[w].push_back(params.to_vec());
+            }
+            _ => {}
+        }
+    }
+
+    /// Coordinator-side exchange boundary: worker `w` is about to
+    /// transmit `params`. Returns the payload that actually crosses the
+    /// wire — the codec encodes *this*, so byte accounting and TopK/Int8
+    /// reconstruction operate on the attacked parameters. Also latches
+    /// the policy's first activation for the event log.
+    ///
+    /// Must be called in a fixed order (ascending pull sources, then
+    /// plan-order push sources) on the coordinator only.
+    pub fn transmit<'a>(
+        &'a mut self,
+        w: usize,
+        params: &'a [f32],
+    ) -> &'a [f32] {
+        let pol = self.policies[w];
+        if !pol.is_honest() && !self.fired[w] {
+            self.fired[w] = true;
+            self.newly_fired.push((w, pol.event_kind()));
+        }
+        let wire = &mut self.wire[w];
+        match pol {
+            AdversaryPolicy::Honest | AdversaryPolicy::LabelFlip => {
+                return params;
+            }
+            AdversaryPolicy::SignFlip => {
+                wire.clear();
+                wire.extend(params.iter().map(|&x| -x));
+            }
+            AdversaryPolicy::Scale => {
+                let s = self.scale;
+                wire.clear();
+                wire.extend(params.iter().map(|&x| s * x));
+            }
+            AdversaryPolicy::StaleBomb => {
+                wire.clear();
+                // oldest retained snapshot: the worker's params from (up
+                // to) stale_tau rounds ago; init before the history warms
+                match self.hist[w].front() {
+                    Some(old) => wire.extend_from_slice(old),
+                    None => wire.extend_from_slice(params),
+                }
+            }
+            AdversaryPolicy::FreeRide => {
+                wire.clear();
+                wire.extend_from_slice(&self.init[w]);
+            }
+        }
+        &self.wire[w]
+    }
+
+    /// Read-only view of sender `w`'s exchange payload for round tasks.
+    /// `codec_view` is what the transport layer reconstructs: under a
+    /// non-dense codec it is already the (lossy) decode of the attacked
+    /// payload, so it passes through; under the dense codec it is the
+    /// sender's raw parameters, so exchange-mutating policies substitute
+    /// the wire buffer populated by [`transmit`](Self::transmit).
+    pub fn exchange_view<'a>(
+        &'a self,
+        w: usize,
+        codec_view: &'a [f32],
+        dense: bool,
+    ) -> &'a [f32] {
+        if dense && self.policies[w].mutates_exchange() {
+            debug_assert_eq!(
+                self.wire[w].len(),
+                codec_view.len(),
+                "transmit({w}) must run before exchange_view"
+            );
+            &self.wire[w]
+        } else {
+            codec_view
+        }
+    }
+
+    /// End-of-round hook: append worker `w`'s current parameters to its
+    /// replay history (no-op for non-`StaleBomb` workers). Coordinator
+    /// only, after the round's exchanges complete.
+    pub fn record_round_end(&mut self, w: usize, params: &[f32]) {
+        if self.policies[w] != AdversaryPolicy::StaleBomb {
+            return;
+        }
+        let h = &mut self.hist[w];
+        let mut buf = if h.len() >= self.stale_tau {
+            h.pop_front().unwrap()
+        } else {
+            Params::new()
+        };
+        buf.clear();
+        buf.extend_from_slice(params);
+        h.push_back(buf);
+    }
+
+    /// Drain the attack activations latched since the last call, in
+    /// transmit order — the engines turn these into `EventRecord`s.
+    pub fn drain_activations(&mut self) -> Vec<(usize, &'static str)> {
+        std::mem::take(&mut self.newly_fired)
+    }
+}
+
+/// Coordinator-side aggregation rule (`adversary.aggregator`): replaces
+/// the single `Trainer::aggregate` call site in both engines. `Mean`
+/// delegates to the trainer (bit-identical to the pre-adversary path,
+/// preserving trainer-specific fast paths like the Pallas PJRT kernel);
+/// the robust rules are standard Byzantine-resilient estimators over
+/// the flattened parameter vectors.
+///
+/// The robust rules are **unweighted** — data-size weights are
+/// self-reported and therefore attacker-controlled, so robust
+/// aggregation deliberately ignores them (the classic formulations are
+/// unweighted for the same reason).
+#[derive(Clone, Debug)]
+pub struct Aggregator {
+    kind: AggregatorKind,
+    trim_frac: f64,
+    krum_f: usize,
+    /// Per-coordinate scratch column (trimmed-mean / median).
+    col: Vec<f32>,
+    /// Pairwise squared-distance matrix scratch (krum).
+    d2: Vec<f64>,
+    /// Row scratch for the k-nearest sum (krum).
+    row: Vec<f64>,
+}
+
+impl Aggregator {
+    pub fn from_config(cfg: &AdversaryConfig) -> Self {
+        Aggregator {
+            kind: cfg.aggregator,
+            trim_frac: cfg.trim_frac,
+            krum_f: cfg.krum_f,
+            col: Vec::new(),
+            d2: Vec::new(),
+            row: Vec::new(),
+        }
+    }
+
+    pub fn kind(&self) -> AggregatorKind {
+        self.kind
+    }
+
+    /// Aggregate `models` (aligned with `weights`) into `out`.
+    pub fn aggregate_into(
+        &mut self,
+        trainer: &mut dyn Trainer,
+        models: &[&[f32]],
+        weights: &[f32],
+        out: &mut Params,
+    ) {
+        assert!(!models.is_empty(), "aggregate of zero models");
+        match self.kind {
+            AggregatorKind::Mean => {
+                trainer.aggregate_into(models, weights, out);
+            }
+            AggregatorKind::TrimmedMean => self.trimmed_into(models, out),
+            AggregatorKind::CoordinateMedian => self.median_into(models, out),
+            AggregatorKind::Krum => {
+                self.krum_into(trainer, models, weights, out)
+            }
+        }
+    }
+
+    /// Coordinate-wise trimmed mean: drop `t = ⌊trim_frac·n⌋` extremes
+    /// on each side (clamped so something survives), average the rest.
+    fn trimmed_into(&mut self, models: &[&[f32]], out: &mut Params) {
+        let n = models.len();
+        let t = ((self.trim_frac * n as f64).floor() as usize)
+            .min((n - 1) / 2);
+        self.sorted_columns_into(models, out, |col| {
+            let kept = &col[t..col.len() - t];
+            kept.iter().sum::<f32>() / kept.len() as f32
+        });
+    }
+
+    /// Coordinate-wise median (even counts average the middle two).
+    fn median_into(&mut self, models: &[&[f32]], out: &mut Params) {
+        self.sorted_columns_into(models, out, |col| {
+            let n = col.len();
+            if n % 2 == 1 {
+                col[n / 2]
+            } else {
+                (col[n / 2 - 1] + col[n / 2]) / 2.0
+            }
+        });
+    }
+
+    fn sorted_columns_into(
+        &mut self,
+        models: &[&[f32]],
+        out: &mut Params,
+        reduce: impl Fn(&[f32]) -> f32,
+    ) {
+        let p = models[0].len();
+        for m in models {
+            assert_eq!(m.len(), p, "model length mismatch");
+        }
+        out.clear();
+        out.reserve(p);
+        for c in 0..p {
+            self.col.clear();
+            self.col.extend(models.iter().map(|m| m[c]));
+            self.col.sort_unstable_by(f32::total_cmp);
+            out.push(reduce(&self.col));
+        }
+    }
+
+    /// Krum (Blanchard et al. 2017): return the single model minimizing
+    /// the summed squared distance to its `n - f - 2` nearest peers.
+    /// `f` clamps to `n-3` (the score needs ≥ 1 neighbor); with fewer
+    /// than 3 models the score is undefined and the rule falls back to
+    /// the weighted mean.
+    fn krum_into(
+        &mut self,
+        trainer: &mut dyn Trainer,
+        models: &[&[f32]],
+        weights: &[f32],
+        out: &mut Params,
+    ) {
+        let n = models.len();
+        if n < 3 {
+            trainer.aggregate_into(models, weights, out);
+            return;
+        }
+        let f = self.krum_f.min(n - 3);
+        let k = n - f - 2;
+        self.d2.clear();
+        self.d2.resize(n * n, 0.0);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let d: f64 = models[i]
+                    .iter()
+                    .zip(models[j])
+                    .map(|(&a, &b)| {
+                        let e = (a - b) as f64;
+                        e * e
+                    })
+                    .sum();
+                self.d2[i * n + j] = d;
+                self.d2[j * n + i] = d;
+            }
+        }
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        for i in 0..n {
+            self.row.clear();
+            self.row.extend(
+                (0..n).filter(|&j| j != i).map(|j| self.d2[i * n + j]),
+            );
+            self.row.sort_unstable_by(f64::total_cmp);
+            let score: f64 = self.row[..k].iter().sum();
+            // strict < keeps the lowest index on ties: deterministic
+            if score < best_score {
+                best = i;
+                best_score = score;
+            }
+        }
+        out.clear();
+        out.extend_from_slice(models[best]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::worker::NativeTrainer;
+
+    fn cfg() -> AdversaryConfig {
+        AdversaryConfig::default()
+    }
+
+    fn trainer() -> NativeTrainer {
+        NativeTrainer::new(2, 2)
+    }
+
+    #[test]
+    fn assignment_is_deterministic_and_sized() {
+        let c = AdversaryConfig {
+            frac: 0.3,
+            attack: AttackKind::SignFlip,
+            ..cfg()
+        };
+        let a = Adversary::from_config(&c, 20, 7);
+        let b = Adversary::from_config(&c, 20, 7);
+        assert_eq!(a.attacker_count(), 6); // ⌊0.3·20⌋
+        assert!(a.is_active());
+        for w in 0..20 {
+            assert_eq!(a.policy(w), b.policy(w));
+        }
+        // different seed → (almost surely) different cast
+        let d = Adversary::from_config(&c, 20, 8);
+        assert_eq!(d.attacker_count(), 6);
+        assert!(
+            (0..20).any(|w| a.policy(w) != d.policy(w)),
+            "seed must select the cast"
+        );
+    }
+
+    #[test]
+    fn default_knobs_are_inert() {
+        let a = Adversary::from_config(&cfg(), 10, 1);
+        assert!(!a.is_active());
+        assert_eq!(a.attacker_count(), 0);
+        // frac without an attack is also inert
+        let c = AdversaryConfig { frac: 0.5, ..cfg() };
+        assert!(!Adversary::from_config(&c, 10, 1).is_active());
+    }
+
+    #[test]
+    fn signflip_and_scale_rewrite_payloads() {
+        let c = AdversaryConfig { scale: 3.0, ..cfg() };
+        let mut a = Adversary::scripted(
+            vec![
+                AdversaryPolicy::Honest,
+                AdversaryPolicy::SignFlip,
+                AdversaryPolicy::Scale,
+            ],
+            &c,
+        );
+        let p = vec![1.0f32, -2.0];
+        assert_eq!(a.transmit(0, &p), &[1.0, -2.0]);
+        assert_eq!(a.transmit(1, &p), &[-1.0, 2.0]);
+        assert_eq!(a.transmit(2, &p), &[3.0, -6.0]);
+        // dense exchange views read the wire buffers
+        assert_eq!(a.exchange_view(1, &p, true), &[-1.0, 2.0]);
+        assert_eq!(a.exchange_view(0, &p, true), &[1.0, -2.0]);
+        // codec views pass through (already attacked at encode)
+        assert_eq!(a.exchange_view(1, &p, false), &[1.0, -2.0]);
+    }
+
+    #[test]
+    fn stalebomb_replays_and_freeride_freezes() {
+        let c = AdversaryConfig { stale_tau: 2, ..cfg() };
+        let mut a = Adversary::scripted(
+            vec![AdversaryPolicy::StaleBomb, AdversaryPolicy::FreeRide],
+            &c,
+        );
+        a.observe_init(0, &[0.0]);
+        a.observe_init(1, &[9.0]);
+        // round 1: both replay their init-era state
+        assert_eq!(a.transmit(0, &[1.0]), &[0.0]);
+        assert_eq!(a.transmit(1, &[1.0]), &[9.0]);
+        a.record_round_end(0, &[1.0]);
+        a.record_round_end(1, &[1.0]); // no-op: not a bomber
+        // round 2: history holds [init, r1] — front is still init
+        assert_eq!(a.transmit(0, &[2.0]), &[0.0]);
+        a.record_round_end(0, &[2.0]);
+        // round 3: τ=2 window slid — front is now round 1's params
+        assert_eq!(a.transmit(0, &[3.0]), &[1.0]);
+        // free-rider never moves
+        assert_eq!(a.transmit(1, &[55.0]), &[9.0]);
+    }
+
+    #[test]
+    fn first_transmit_latches_one_activation_event() {
+        let mut a = Adversary::scripted(
+            vec![AdversaryPolicy::SignFlip, AdversaryPolicy::Honest],
+            &cfg(),
+        );
+        a.transmit(1, &[1.0]);
+        assert!(a.drain_activations().is_empty(), "honest never fires");
+        a.transmit(0, &[1.0]);
+        a.transmit(0, &[2.0]);
+        assert_eq!(a.drain_activations(), vec![(0, "attack-signflip")]);
+        a.transmit(0, &[3.0]);
+        assert!(a.drain_activations().is_empty(), "fires exactly once");
+    }
+
+    #[test]
+    fn mean_aggregator_matches_trainer_bitwise() {
+        let mut t = trainer();
+        let mut g = Aggregator::from_config(&cfg());
+        let a = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = vec![0.5f32, -1.0, 2.5, 0.0, 1.0, -3.0];
+        let w = [0.25f32, 0.75];
+        let models: Vec<&[f32]> = vec![&a, &b];
+        let mut out = Params::new();
+        g.aggregate_into(&mut t, &models, &w, &mut out);
+        let expect = crate::worker::aggregate_native(&models, &w);
+        assert_eq!(
+            out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            expect.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn trimmed_mean_drops_the_outlier() {
+        let c = AdversaryConfig {
+            aggregator: AggregatorKind::TrimmedMean,
+            trim_frac: 0.34,
+            ..cfg()
+        };
+        let mut g = Aggregator::from_config(&c);
+        let honest1 = vec![1.0f32, 1.0];
+        let honest2 = vec![2.0f32, 2.0];
+        let outlier = vec![1000.0f32, -1000.0];
+        let mut out = Params::new();
+        // t = ⌊0.34·3⌋ = 1: extremes trimmed on both sides per coordinate
+        g.aggregate_into(
+            &mut trainer(),
+            &[&honest1, &honest2, &outlier],
+            &[1.0 / 3.0; 3],
+            &mut out,
+        );
+        assert_eq!(out, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn median_handles_even_and_odd_counts() {
+        let c = AdversaryConfig {
+            aggregator: AggregatorKind::CoordinateMedian,
+            ..cfg()
+        };
+        let mut g = Aggregator::from_config(&c);
+        let mut out = Params::new();
+        let (a, b, z) =
+            (vec![1.0f32], vec![3.0f32], vec![100.0f32]);
+        g.aggregate_into(
+            &mut trainer(),
+            &[&a, &b, &z],
+            &[1.0 / 3.0; 3],
+            &mut out,
+        );
+        assert_eq!(out, vec![3.0]);
+        g.aggregate_into(&mut trainer(), &[&a, &b], &[0.5; 2], &mut out);
+        assert_eq!(out, vec![2.0]);
+    }
+
+    #[test]
+    fn krum_selects_a_cluster_member_and_falls_back_when_tiny() {
+        let c = AdversaryConfig {
+            aggregator: AggregatorKind::Krum,
+            krum_f: 1,
+            ..cfg()
+        };
+        let mut g = Aggregator::from_config(&c);
+        // 4 clustered honest models + 1 gross outlier (n=5 ≥ 2f+3)
+        let ms: Vec<Vec<f32>> = vec![
+            vec![1.0, 1.0],
+            vec![1.1, 0.9],
+            vec![0.9, 1.1],
+            vec![1.05, 1.0],
+            vec![-500.0, 500.0],
+        ];
+        let refs: Vec<&[f32]> = ms.iter().map(|m| m.as_slice()).collect();
+        let mut out = Params::new();
+        g.aggregate_into(&mut trainer(), &refs, &[0.2f32; 5], &mut out);
+        assert!(
+            ms[..4].iter().any(|m| m == &out),
+            "krum must return an honest member verbatim, got {out:?}"
+        );
+        // n < 3: weighted-mean fallback (bit-identical to the trainer)
+        let a = vec![2.0f32, 4.0];
+        let b = vec![4.0f32, 8.0];
+        g.aggregate_into(&mut trainer(), &[&a, &b], &[0.5; 2], &mut out);
+        assert_eq!(out, vec![3.0, 6.0]);
+    }
+}

@@ -117,6 +117,13 @@ impl BenchDiff {
             ))
         }
     }
+
+    /// True when the baseline is still the zeroed placeholder shipped
+    /// with the repo: every matched row is unpinned, so the diff gated
+    /// nothing beyond row coverage.
+    pub fn baseline_is_placeholder(&self) -> bool {
+        self.unpinned > 0 && self.compared == 0
+    }
 }
 
 /// `(name, p50_ns)` per row of a bench report's `results[]`.
@@ -328,6 +335,26 @@ mod tests {
         // but row coverage is enforced even for placeholder rows
         let gone = report(&[("a", 99999.0)]);
         assert!(diff_reports(&base, &gone, 0.15).unwrap().gate().is_err());
+    }
+
+    #[test]
+    fn placeholder_detection_requires_every_row_unpinned() {
+        // all-zero baseline → placeholder (bench-diff warns)
+        let base = report(&[("a", 0.0), ("b", 0.0)]);
+        let fresh = report(&[("a", 1.0), ("b", 1.0)]);
+        assert!(diff_reports(&base, &fresh, 0.15)
+            .unwrap()
+            .baseline_is_placeholder());
+        // one pinned row → a real (if partial) baseline, no warning
+        let partial = report(&[("a", 0.0), ("b", 1000.0)]);
+        assert!(!diff_reports(&partial, &fresh, 0.15)
+            .unwrap()
+            .baseline_is_placeholder());
+        // fully pinned → no warning
+        let pinned = report(&[("a", 1000.0), ("b", 1000.0)]);
+        assert!(!diff_reports(&pinned, &fresh, 0.15)
+            .unwrap()
+            .baseline_is_placeholder());
     }
 
     #[test]

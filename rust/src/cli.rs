@@ -221,6 +221,11 @@ pub fn main_with_args(args: &[String]) -> Result<(), String> {
                 diff.regressions.len(),
                 diff.missing.len()
             );
+            if diff.baseline_is_placeholder() {
+                println!(
+                    "warning: {baseline_p} is the zeroed placeholder (all p50=0) — latency gated nothing; refresh it from a real run and commit"
+                );
+            }
             diff.gate()
         }
         "inspect" => {
@@ -263,7 +268,11 @@ fn usage() -> String {
      \x20       --set workload.model=linear|mlp|cnn-s  native model architecture\n\
      \x20       --set workload.dataset=synthetic|clusters|drift|file  corpus generator\n\
      \x20       --set workload.hidden=32 --set workload.path=feat.idx,lab.idx  workload knobs\n\
-     figures --fig <3|4..18|20..25|26|churn|27|codec|28|workload|all> --out results/ [--workers N --rounds R]\n\
+     \x20       --set adversary.frac=0.2 --set adversary.attack=none|signflip|scale|labelflip|stalebomb|freeride\n\
+     \x20       --set adversary.aggregator=mean|trimmed-mean|median|krum  coordinator aggregation rule\n\
+     \x20       --set adversary.scale=10 --set adversary.stale_tau=5 --set adversary.trim_frac=0.2\n\
+     \x20       --set adversary.krum_f=1  Byzantine worker + robust-aggregation knobs\n\
+     figures --fig <3|4..18|20..25|26|churn|27|codec|28|workload|29|adversary|all> --out results/ [--workers N --rounds R]\n\
      testbed --set sim.workers=15 --out results/\n\
      sweep   --key dystop.tau_bound --values 2,5,8 --out results/\n\
      bench-diff --baseline BENCH_baseline.json --fresh BENCH_sim.json --tolerance 0.15\n\

@@ -18,9 +18,10 @@
 mod experiment;
 
 pub use experiment::{
-    BackendKind, CodecKind, DatasetKind, ExperimentConfig, ModelArch,
-    ModelKind, NetworkConfig, ScenarioConfig, ScenarioPreset,
-    SchedulerKind, TrainerKind, TransportConfig, WorkloadConfig,
+    AdversaryConfig, AggregatorKind, AttackKind, BackendKind, CodecKind,
+    DatasetKind, ExperimentConfig, ModelArch, ModelKind, NetworkConfig,
+    ScenarioConfig, ScenarioPreset, SchedulerKind, TrainerKind,
+    TransportConfig, WorkloadConfig,
 };
 
 use std::collections::BTreeMap;

@@ -50,6 +50,7 @@ pub use observer::{ObserverChain, RoundObserver, RunRecorder};
 pub use threaded::{TestbedOptions, ThreadedBackend};
 pub use virtual_clock::{VirtualClockBackend, VirtualClockEngine};
 
+use crate::adversary::{Adversary, AdversaryPolicy};
 use crate::config::{BackendKind, ExperimentConfig};
 use crate::coordinator::{make_scheduler, Scheduler};
 use crate::data::{dirichlet_partition, Dataset};
@@ -132,6 +133,10 @@ pub struct Experiment {
     /// exchange in both backends is encoded/decoded through it and
     /// charged its measured wire bytes.
     pub transport: Transport,
+    /// The adversary layer (`adversary.*` knobs): per-worker Byzantine
+    /// policies applied at the model-exchange boundary in both backends
+    /// (inactive — and branch-free on the hot path — by default).
+    pub adversary: Adversary,
     pub(crate) trainer: Box<dyn Trainer>,
     pub(crate) scheduler: Box<dyn Scheduler>,
     pub(crate) rng: Pcg,
@@ -147,6 +152,7 @@ impl Experiment {
             backend: None,
             observers: Vec::new(),
             scenario: None,
+            adversary: None,
         }
     }
 
@@ -165,6 +171,7 @@ pub struct ExperimentBuilder {
     backend: Option<Box<dyn Backend>>,
     observers: Vec<Box<dyn RoundObserver>>,
     scenario: Option<Scenario>,
+    adversary: Option<Vec<AdversaryPolicy>>,
 }
 
 impl ExperimentBuilder {
@@ -208,6 +215,14 @@ impl ExperimentBuilder {
     /// generated from `cfg.scenario` (fault-injection tests, replays).
     pub fn scenario(mut self, scenario: Scenario) -> Self {
         self.scenario = Some(scenario);
+        self
+    }
+
+    /// Script per-worker adversary policies (one entry per worker slot)
+    /// instead of the seeded `⌊adversary.frac·n⌋` assignment generated
+    /// from `cfg.adversary` (targeted Byzantine tests, replays).
+    pub fn adversary(mut self, policies: Vec<AdversaryPolicy>) -> Self {
+        self.adversary = Some(policies);
         self
     }
 
@@ -281,7 +296,7 @@ impl ExperimentBuilder {
         // Edge-device speeds are heavy-tailed (the paper's Table II spans
         // ~10× between Jetson Nano and Orin) — the lognormal gives the
         // straggler regime the synchronous baselines suffer in (§VI-B1).
-        let workers: Vec<WorkerState> = shards
+        let mut workers: Vec<WorkerState> = shards
             .into_iter()
             .enumerate()
             .map(|(i, shard)| {
@@ -332,6 +347,42 @@ impl ExperimentBuilder {
             model_bits,
         );
 
+        // the adversary cast draws from its own dedicated RNG stream
+        // (like the scenario timeline), so assignment never perturbs the
+        // substrate construction above (frac=0 ⇒ all honest ⇒
+        // pre-adversary bits)
+        let mut adversary = match self.adversary {
+            Some(policies) => {
+                if policies.len() != cfg.workers {
+                    return Err(ExperimentError::InvalidConfig(format!(
+                        "scripted adversary has {} policies but \
+                         sim.workers = {}",
+                        policies.len(),
+                        cfg.workers
+                    )));
+                }
+                Adversary::scripted(policies, &cfg.adversary)
+            }
+            None => {
+                Adversary::from_config(&cfg.adversary, cfg.workers, cfg.seed)
+            }
+        };
+        for (i, w) in workers.iter_mut().enumerate() {
+            // label-flip poisons the attacker's *data* once, at build
+            // time: its honest-looking training then pushes
+            // anti-gradients through the ordinary exchange path in both
+            // backends, with zero hot-path special-casing
+            if adversary.policy(i) == AdversaryPolicy::LabelFlip {
+                let c = w.shard.num_classes as u32;
+                for y in &mut w.shard.labels {
+                    *y = c - 1 - *y;
+                }
+            }
+            // stateful attacks snapshot the initial parameters (the
+            // free-rider's frozen payload, the stale-bomber's history)
+            adversary.observe_init(i, &w.params);
+        }
+
         Ok(Experiment {
             cfg,
             net,
@@ -341,6 +392,7 @@ impl ExperimentBuilder {
             model_bits,
             scenario,
             transport,
+            adversary,
             trainer,
             scheduler,
             rng,

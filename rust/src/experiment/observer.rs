@@ -130,6 +130,7 @@ mod tests {
             duration_s: 1.0,
             active: 2,
             population: 4,
+            adversaries: 0,
             transfers: 3,
             bytes_sent: 24.0,
             avg_staleness: 0.5,

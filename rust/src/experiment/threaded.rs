@@ -47,10 +47,11 @@
 
 use super::observer::{ObserverChain, RunRecorder};
 use super::{Backend, Experiment, ExperimentError};
+use crate::adversary::Aggregator;
 use crate::config::{ExperimentConfig, TrainerKind};
 use crate::coordinator::{SchedView, SchedulerParams};
 use crate::data::Dataset;
-use crate::metrics::{EvalRecord, RoundRecord, RunResult};
+use crate::metrics::{EvalRecord, EventRecord, RoundRecord, RunResult};
 use crate::scenario::ScenarioEvent;
 use crate::worker::{data_size_weights, NativeTrainer, Trainer};
 use std::sync::mpsc;
@@ -142,6 +143,7 @@ fn run_threaded(
         model_bits,
         scenario,
         mut transport,
+        mut adversary,
         mut trainer,
         mut scheduler,
         mut rng,
@@ -319,15 +321,26 @@ fn run_threaded(
         // transport: encode each pull source's published model once (a
         // broadcast), ascending sender order — the decoded
         // reconstruction is what receivers aggregate. Dense skips all
-        // of it and workers read the published snapshots directly.
-        if !transport.is_dense() {
+        // of it and workers read the published snapshots directly. With
+        // an active adversary every outgoing payload first routes
+        // through `transmit` (same fixed order, coordinator-side), so
+        // codecs encode the *attacked* parameters.
+        let adv_active = adversary.is_active();
+        if !transport.is_dense() || adv_active {
             crate::transport::unique_pull_sources(
                 &plan.pulls_from,
                 &mut pull_srcs,
             );
             for &j in &pull_srcs {
                 let published_j = published[j].lock().unwrap();
-                transport.encode(j, &published_j.params);
+                let payload: &[f32] = if adv_active {
+                    adversary.transmit(j, &published_j.params)
+                } else {
+                    &published_j.params
+                };
+                if !transport.is_dense() {
+                    transport.encode(j, payload);
+                }
             }
         }
 
@@ -345,7 +358,25 @@ fn run_threaded(
                 pulls[i][j] += 1;
             }
             let models = if transport.is_dense() {
-                None
+                if adv_active {
+                    // dense codec normally skips the wire entirely, but
+                    // an exchange-mutating attacker must still be
+                    // observed: ship the adversary's wire copies instead
+                    // of letting receivers read published snapshots.
+                    Some(
+                        plan.pulls_from[k]
+                            .iter()
+                            .map(|&j| {
+                                let p = published[j].lock().unwrap();
+                                adversary
+                                    .exchange_view(j, &p.params, true)
+                                    .to_vec()
+                            })
+                            .collect(),
+                    )
+                } else {
+                    None
+                }
             } else {
                 Some(
                     plan.pulls_from[k]
@@ -386,6 +417,26 @@ fn run_threaded(
         }
         let h_round = round_t0.elapsed().as_secs_f64();
 
+        // adversary bookkeeping: stale-bomb history feeds on the
+        // *post-round* published models (every slot, fixed order), and
+        // first-activation latches become auditable events
+        if adversary.has_stale_bombers() {
+            for (i, pub_i) in published.iter().enumerate() {
+                let p = pub_i.lock().unwrap();
+                adversary.record_round_end(i, &p.params);
+            }
+        }
+        if adv_active {
+            for (w, kind) in adversary.drain_activations() {
+                chain.scenario_event(&EventRecord {
+                    round,
+                    kind,
+                    worker: Some(w),
+                    population: p,
+                });
+            }
+        }
+
         // staleness + queues + residual bookkeeping (Eqs. 6/33/7);
         // absent workers keep aging (τ) but queues/residual freeze
         let mut active_mask = vec![false; n];
@@ -425,6 +476,7 @@ fn run_threaded(
             duration_s: h_round,
             active: plan.active.len(),
             population: p,
+            adversaries: adversary.count_present(&ids),
             transfers,
             bytes_sent,
             avg_staleness: tau_sum as f64 / p as f64,
@@ -478,6 +530,10 @@ fn worker_loop(
     // `workload.model` (the builder already adopted file-corpus dims)
     let mut trainer = NativeTrainer::from_config(cfg);
     let mut rng = crate::util::rng::Pcg::new(cfg.seed ^ 0xBEEF, id as u64);
+    // coordinator-side robust aggregation rule (mean = the historical
+    // trainer path, bit-identical); scratch reused across rounds
+    let mut aggregator = Aggregator::from_config(&cfg.adversary);
+    let mut agg: Vec<f32> = Vec::new();
     while let Ok(msg) = rx.recv() {
         match msg {
             Execute::Shutdown => break,
@@ -523,7 +579,12 @@ fn worker_loop(
                 let refs: Vec<&[f32]> =
                     models.iter().map(|m| m.as_slice()).collect();
                 let weights = data_size_weights(&sizes);
-                let agg = trainer.aggregate(&refs, &weights);
+                aggregator.aggregate_into(
+                    &mut trainer,
+                    &refs,
+                    &weights,
+                    &mut agg,
+                );
                 thread::sleep(Duration::from_millis(
                     (h_train_s * time_scale) as u64,
                 ));

@@ -56,10 +56,11 @@
 
 use super::observer::{ObserverChain, RunRecorder};
 use super::{Backend, Experiment, ExperimentError};
-use crate::config::ExperimentConfig;
+use crate::adversary::{Adversary, Aggregator};
+use crate::config::{AdversaryConfig, ExperimentConfig};
 use crate::coordinator::{RoundPlan, SchedView, Scheduler, SchedulerParams};
 use crate::data::Dataset;
-use crate::metrics::{EvalRecord, RoundRecord, RunResult};
+use crate::metrics::{EvalRecord, EventRecord, RoundRecord, RunResult};
 use crate::network::EdgeNetwork;
 use crate::scenario::{Scenario, ScenarioEvent};
 use crate::transport::Transport;
@@ -106,12 +107,26 @@ impl Backend for VirtualClockBackend {
 /// one for the sequential path) so the aggregation path stops allocating
 /// (the one exception: the short-lived `Vec<&[f32]>` of model refs,
 /// which cannot live in scratch without self-referential lifetimes).
-#[derive(Default)]
 struct ActScratch {
     srcs: Vec<usize>,
     sizes: Vec<usize>,
     weights: Vec<f32>,
     agg: Params,
+    /// The configured aggregation rule (`mean` delegates to the trainer
+    /// — the bit-identical pre-adversary path).
+    aggregator: Aggregator,
+}
+
+impl ActScratch {
+    fn new(cfg: &AdversaryConfig) -> Self {
+        ActScratch {
+            srcs: Vec::new(),
+            sizes: Vec::new(),
+            weights: Vec::new(),
+            agg: Params::new(),
+            aggregator: Aggregator::from_config(cfg),
+        }
+    }
 }
 
 /// One slot of the hand-rolled worker pool: a cloned trainer plus its
@@ -133,6 +148,10 @@ struct RoundCtx<'a> {
     /// its per-sender reconstruction; encode happened on the
     /// coordinator before the tasks were spawned.
     transport: &'a Transport,
+    /// Adversary layer (read-only here): pulled models route through
+    /// its exchange view; `transmit` happened on the coordinator before
+    /// the tasks were spawned.
+    adversary: &'a Adversary,
     /// Wire size of one encoded message, bits — what every realized
     /// transfer time consumes. Equals `model_bits` under `dense`.
     wire_bits: f64,
@@ -194,13 +213,19 @@ fn run_activation(
     // own model is local (never transmitted); pulled neighbors arrive
     // through the transport layer — the receiver aggregates the codec
     // reconstruction, which under `dense` is the sender's exact params
+    // — routed through the adversary's exchange view (under a non-dense
+    // codec the attacked payload was already encoded, so the view
+    // passes the reconstruction through)
+    let dense = ctx.transport.is_dense();
     let mut models: Vec<&[f32]> = Vec::with_capacity(scr.srcs.len());
     models.push(ctx.workers[i].params.as_slice());
-    models.extend(
-        ctx.plan.pulls_from[k]
-            .iter()
-            .map(|&j| ctx.transport.view(j, &ctx.workers[j].params)),
-    );
+    models.extend(ctx.plan.pulls_from[k].iter().map(|&j| {
+        ctx.adversary.exchange_view(
+            j,
+            ctx.transport.view(j, &ctx.workers[j].params),
+            dense,
+        )
+    }));
     scr.sizes.clear();
     scr.sizes
         .extend(scr.srcs.iter().map(|&j| ctx.workers[j].data_size()));
@@ -213,7 +238,8 @@ fn run_activation(
         }
     }
     data_size_weights_into(&scr.sizes, &mut scr.weights);
-    trainer.aggregate_into(&models, &scr.weights, &mut scr.agg);
+    scr.aggregator
+        .aggregate_into(trainer, &models, &scr.weights, &mut scr.agg);
 
     // --- local training (Eq. 5) ---
     let (params, loss) = trainer.train(
@@ -302,6 +328,9 @@ pub struct VirtualClockEngine {
     /// Model-transport layer: every pull/push is encoded through it and
     /// realized transfer times consume its encoded message size.
     transport: Transport,
+    /// Adversary layer: every outgoing payload routes through its
+    /// coordinator-side `transmit` before the codec encodes it.
+    adversary: Adversary,
     /// Cached `transport.message_bits()` (== `model_bits` under dense).
     wire_bits: f64,
     /// Cumulative measured wire bytes (transport layer).
@@ -350,7 +379,7 @@ impl VirtualClockEngine {
                 match exp.trainer.clone_box() {
                     Some(t) => slots.push(WorkerSlot {
                         trainer: t,
-                        scratch: ActScratch::default(),
+                        scratch: ActScratch::new(&exp.cfg.adversary),
                     }),
                     None => {
                         // non-cloneable trainer: stay sequential
@@ -361,6 +390,7 @@ impl VirtualClockEngine {
             }
         }
         let wire_bits = exp.transport.message_bits();
+        let scratch = ActScratch::new(&exp.cfg.adversary);
         VirtualClockEngine {
             observers: ObserverChain::new(recorder, exp.observers),
             cfg: exp.cfg,
@@ -371,6 +401,7 @@ impl VirtualClockEngine {
             scheduler: exp.scheduler,
             scenario: exp.scenario,
             transport: exp.transport,
+            adversary: exp.adversary,
             wire_bits,
             cum_bytes: 0.0,
             pull_srcs: Vec::new(),
@@ -385,7 +416,7 @@ impl VirtualClockEngine {
             label_dist: exp.label_dist,
             model_bits: exp.model_bits,
             slots,
-            scratch: ActScratch::default(),
+            scratch,
             ids: (0..n).collect(),
             gdx: (0..n).collect(),
             cand_buf: Vec::new(),
@@ -570,6 +601,7 @@ impl VirtualClockEngine {
             inbox: &self.inbox,
             plan,
             transport: &self.transport,
+            adversary: &self.adversary,
             wire_bits: self.wire_bits,
             round: self.round,
         };
@@ -631,14 +663,28 @@ impl VirtualClockEngine {
         // pre-round model; encoding mutates codec state, so it happens
         // here on the coordinator in a fixed order (ascending sender id)
         // before any task reads the reconstructions. Dense is stateless
-        // — the hot path is untouched.
-        if !self.transport.is_dense() {
+        // — the hot path is untouched. With an active adversary every
+        // outgoing payload first routes through `transmit` (same fixed
+        // order), so codecs encode — and byte accounting measures — the
+        // *attacked* parameters.
+        let adv_active = self.adversary.is_active();
+        if !self.transport.is_dense() || adv_active {
             crate::transport::unique_pull_sources(
                 &plan.pulls_from,
                 &mut self.pull_srcs,
             );
+            let transport = &mut self.transport;
+            let adversary = &mut self.adversary;
+            let workers = &self.workers;
             for &j in &self.pull_srcs {
-                self.transport.encode(j, &self.workers[j].params);
+                let payload: &[f32] = if adv_active {
+                    adversary.transmit(j, &workers[j].params)
+                } else {
+                    &workers[j].params
+                };
+                if !transport.is_dense() {
+                    transport.encode(j, payload);
+                }
             }
         }
 
@@ -674,27 +720,68 @@ impl VirtualClockEngine {
         // sender (plan order) and deliver the *decoded* reconstruction,
         // so inbox contents are exactly what crossed the wire.
         self.push_enc.clear();
-        for &(from, to) in &plan.pushes {
-            if !self.transport.is_dense() && !self.push_enc.contains(&from) {
-                self.transport.encode(from, &self.workers[from].params);
-                self.push_enc.push(from);
+        {
+            let transport = &mut self.transport;
+            let adversary = &mut self.adversary;
+            let workers = &self.workers;
+            let inbox = &mut self.inbox;
+            let inbox_free = &mut self.inbox_free;
+            let push_enc = &mut self.push_enc;
+            let dense = transport.is_dense();
+            for &(from, to) in &plan.pushes {
+                // adversary payloads are (re)computed from the
+                // post-training model once per sender, plan order
+                if (!dense || adv_active) && !push_enc.contains(&from) {
+                    let payload: &[f32] = if adv_active {
+                        adversary.transmit(from, &workers[from].params)
+                    } else {
+                        &workers[from].params
+                    };
+                    if !dense {
+                        transport.encode(from, payload);
+                    }
+                    push_enc.push(from);
+                }
+                let mut buf = inbox_free.pop().unwrap_or_default();
+                buf.clear();
+                buf.extend_from_slice(adversary.exchange_view(
+                    from,
+                    transport.view(from, &workers[from].params),
+                    dense,
+                ));
+                if let Some(pos) =
+                    inbox[to].iter().position(|(f, _)| *f == from)
+                {
+                    let (_, old) = inbox[to].swap_remove(pos);
+                    inbox_free.push(old);
+                }
+                inbox[to].push((from, buf));
             }
-            let mut buf = self.inbox_free.pop().unwrap_or_default();
-            buf.clear();
-            buf.extend_from_slice(
-                self.transport.view(from, &self.workers[from].params),
-            );
-            if let Some(pos) =
-                self.inbox[to].iter().position(|(f, _)| *f == from)
-            {
-                let (_, old) = self.inbox[to].swap_remove(pos);
-                self.inbox_free.push(old);
-            }
-            self.inbox[to].push((from, buf));
         }
         // every activation retires a buffer but only pushes consume them:
         // cap the free list so pull-only schedulers don't grow it forever
         self.inbox_free.truncate(n);
+
+        // --- adversary bookkeeping (coordinator-side, fixed order) ---
+        if self.adversary.has_stale_bombers() {
+            // post-round snapshot feeds the stale-bomb replay window
+            for i in 0..n {
+                self.adversary
+                    .record_round_end(i, &self.workers[i].params);
+            }
+        }
+        if adv_active {
+            // first transmissions of each attack become log events
+            let pop = self.ids.len();
+            for (w, kind) in self.adversary.drain_activations() {
+                self.observers.scenario_event(&EventRecord {
+                    round: self.round,
+                    kind,
+                    worker: Some(w),
+                    population: pop,
+                });
+            }
+        }
 
         // --- clock + staleness + queues (Eqs. 6, 33) ---
         self.clock_s += h_round;
@@ -746,6 +833,7 @@ impl VirtualClockEngine {
             duration_s: h_round,
             active: plan.active.len(),
             population: pop,
+            adversaries: self.adversary.count_present(&self.ids),
             transfers,
             bytes_sent,
             avg_staleness: avg_tau,

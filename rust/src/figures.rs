@@ -7,8 +7,8 @@
 //! reproduction claim. All series land as CSV under `--out`.
 
 use crate::config::{
-    CodecKind, DatasetKind, ExperimentConfig, ScenarioConfig,
-    ScenarioPreset, SchedulerKind,
+    AggregatorKind, AttackKind, CodecKind, DatasetKind, ExperimentConfig,
+    ModelArch, ScenarioConfig, ScenarioPreset, SchedulerKind,
 };
 use crate::experiment::{Backend, Experiment, VirtualClockBackend};
 use crate::metrics::RunResult;
@@ -414,6 +414,66 @@ pub fn fig_workload(out: &Path, scale: FigScale) -> std::io::Result<()> {
     )
 }
 
+/// Fig. 29 (beyond the paper) — the adversary axis: final accuracy per
+/// robust aggregation rule under a 20% sign-flip Byzantine cast, for the
+/// `linear` and `mlp` workloads. Each model also runs a benign baseline
+/// (no attackers, `mean`) pinning the undamaged ceiling; under attack,
+/// `trimmed-mean`, `median` and `krum` should each recover accuracy that
+/// plain `mean` loses to the poisoned payloads.
+pub fn fig_adversary(out: &Path, scale: FigScale) -> std::io::Result<()> {
+    let aggs = [
+        AggregatorKind::Mean,
+        AggregatorKind::TrimmedMean,
+        AggregatorKind::CoordinateMedian,
+        AggregatorKind::Krum,
+    ];
+    let mut lines = Vec::new();
+    for arch in [ModelArch::Linear, ModelArch::Mlp] {
+        let benign = {
+            let mut cfg = base_cfg(scale);
+            cfg.workload.model = arch;
+            let name = format!("fig29_{}_benign", arch.name());
+            run_cached(out, &name, &cfg, None)?
+        };
+        println!(
+            "fig29 {:>6}       benign: best {:.3}",
+            arch.name(),
+            benign.best_accuracy()
+        );
+        lines.push(format!(
+            "{},benign,mean,{}",
+            arch.name(),
+            benign.best_accuracy()
+        ));
+        for agg in aggs {
+            let mut cfg = base_cfg(scale);
+            cfg.workload.model = arch;
+            cfg.adversary.frac = 0.2;
+            cfg.adversary.attack = AttackKind::SignFlip;
+            cfg.adversary.aggregator = agg;
+            let name = format!("fig29_{}_{}", arch.name(), agg.name());
+            let res = run_cached(out, &name, &cfg, None)?;
+            println!(
+                "fig29 {:>6} {:>12}: best {:.3} (signflip 20%)",
+                arch.name(),
+                agg.name(),
+                res.best_accuracy()
+            );
+            lines.push(format!(
+                "{},signflip-0.2,{},{}",
+                arch.name(),
+                agg.name(),
+                res.best_accuracy()
+            ));
+        }
+    }
+    write_lines(
+        &out.join("fig29_adversary.csv"),
+        "model,attack,aggregator,best_accuracy",
+        &lines,
+    )
+}
+
 /// Dispatch by figure id.
 pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> {
     let go = |r: std::io::Result<()>| r.map_err(|e| e.to_string());
@@ -430,6 +490,7 @@ pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> 
         "26" | "churn" => go(fig_churn(out, scale)),
         "27" | "codec" => go(fig_codec(out, scale)),
         "28" | "workload" => go(fig_workload(out, scale)),
+        "29" | "adversary" => go(fig_adversary(out, scale)),
         "all" => {
             go(fig3(out, scale))?;
             go(fig_main(out, scale, &[1.0, 0.7, 0.4]))?;
@@ -440,11 +501,12 @@ pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> 
             go(fig_testbed(out, scale))?;
             go(fig_churn(out, scale))?;
             go(fig_codec(out, scale))?;
-            go(fig_workload(out, scale))
+            go(fig_workload(out, scale))?;
+            go(fig_adversary(out, scale))
         }
         other => Err(format!(
             "unknown figure {other:?} \
-             (3,4..18,20..25,26|churn,27|codec,28|workload,all)"
+             (3,4..18,20..25,26|churn,27|codec,28|workload,29|adversary,all)"
         )),
     }
 }
@@ -543,6 +605,21 @@ mod tests {
         assert!(dir.join("fig28_linear_dystop.csv").exists());
         assert!(dir.join("fig28_mlp_dystop.csv").exists());
         assert!(dir.join("fig28_cnn-s_matcha.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fig29_adversary_tiny_runs() {
+        let dir = std::env::temp_dir().join("dystop_figtest_adversary");
+        let _ = std::fs::remove_dir_all(&dir);
+        let scale = FigScale { workers: 6, rounds: 10, seed: 5 };
+        fig_adversary(&dir, scale).unwrap();
+        let text =
+            std::fs::read_to_string(dir.join("fig29_adversary.csv")).unwrap();
+        // header + 2 models × (benign + 4 aggregators)
+        assert_eq!(text.lines().count(), 11);
+        assert!(dir.join("fig29_linear_benign.csv").exists());
+        assert!(dir.join("fig29_mlp_krum.csv").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

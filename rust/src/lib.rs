@@ -8,6 +8,7 @@
 //! staleness queues, the edge-network simulator, the baselines and the
 //! PJRT runtime that executes the AOT-compiled JAX/Pallas artifacts.
 
+pub mod adversary;
 pub mod bench;
 pub mod cli;
 pub mod config;

@@ -17,6 +17,9 @@ pub struct RoundRecord {
     /// Present workers this round (scenario layer — constant and equal
     /// to `sim.workers` under `scenario.preset=stable`).
     pub population: usize,
+    /// Present workers currently running a Byzantine attack policy
+    /// (adversary layer — 0 under the default `adversary.frac=0`).
+    pub adversaries: usize,
     /// Model transfers this round (pulls + pushes), in models.
     pub transfers: usize,
     /// Bytes actually put on the wire this round: one *encoded* message
@@ -143,6 +146,7 @@ impl RunResult {
                     && x.duration_s.to_bits() == y.duration_s.to_bits()
                     && x.active == y.active
                     && x.population == y.population
+                    && x.adversaries == y.adversaries
                     && x.transfers == y.transfers
                     && x.bytes_sent.to_bits() == y.bytes_sent.to_bits()
                     && x.avg_staleness.to_bits() == y.avg_staleness.to_bits()
@@ -213,17 +217,18 @@ impl RunResult {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,time_s,duration_s,active,population,transfers,bytes_sent,avg_staleness,max_staleness,train_loss"
+            "round,time_s,duration_s,active,population,adversaries,transfers,bytes_sent,avg_staleness,max_staleness,train_loss"
         )?;
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{:.4},{:.4},{},{},{},{:.0},{:.4},{},{:.6}",
+                "{},{:.4},{:.4},{},{},{},{},{:.0},{:.4},{},{:.6}",
                 r.round,
                 r.time_s,
                 r.duration_s,
                 r.active,
                 r.population,
+                r.adversaries,
                 r.transfers,
                 r.bytes_sent,
                 r.avg_staleness,
@@ -271,6 +276,7 @@ mod tests {
                     duration_s: 1.0,
                     active: 1,
                     population: 8 - t,
+                    adversaries: 0,
                     transfers: 10,
                     // dense accounting: transfers × model_bits / 8
                     bytes_sent: 10.0 * 32.0 * 1000.0 / 8.0,
@@ -363,5 +369,9 @@ mod tests {
         let mut e = sample();
         e.evals[0].cum_bytes += 1.0;
         assert!(!a.bits_eq(&e));
+        // so is the per-round adversary census
+        let mut g = sample();
+        g.rounds[0].adversaries = 1;
+        assert!(!a.bits_eq(&g));
     }
 }

@@ -1,0 +1,297 @@
+//! Adversary subsystem contracts:
+//!
+//! * robust-aggregator properties: trimmed-mean / coordinate-median /
+//!   Krum are permutation-invariant (bitwise — column sorts and score
+//!   sums do not depend on input order); all rules collapse to the
+//!   common vector on identical inputs; Krum picks an honest model
+//!   whenever `n ≥ 2f + 3` and the `f` outliers are gross;
+//! * end-to-end: the seeded `adversary.frac` cast shows up in every
+//!   round's `adversaries` tally on both backends, activation events
+//!   are recorded once per firing attacker, and scripted casts route
+//!   through the builder (wrong-length scripts are `InvalidConfig`).
+//!
+//! The CI adversary matrix re-runs this suite with
+//! `DYSTOP_ADVERSARY_ATTACK` varied; [`AttackKind::from_env_or`] routes
+//! that knob through the end-to-end smoke below.
+
+use dystop::adversary::{AdversaryPolicy, Aggregator};
+use dystop::config::{
+    AdversaryConfig, AggregatorKind, AttackKind, BackendKind,
+    ExperimentConfig,
+};
+use dystop::experiment::{
+    Experiment, ExperimentError, TestbedOptions, ThreadedBackend,
+};
+use dystop::metrics::RunResult;
+use dystop::util::prop::forall_seeded;
+use dystop::util::rng::Pcg;
+use dystop::worker::{NativeTrainer, Params};
+
+const DIM: usize = 7;
+
+fn agg_with(kind: AggregatorKind, krum_f: usize) -> Aggregator {
+    Aggregator::from_config(&AdversaryConfig {
+        aggregator: kind,
+        krum_f,
+        ..Default::default()
+    })
+}
+
+fn trainer() -> NativeTrainer {
+    NativeTrainer::new(2, 2)
+}
+
+fn rand_models(rng: &mut Pcg, n: usize, dim: usize) -> Vec<Params> {
+    (0..n)
+        .map(|_| {
+            (0..dim).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect()
+        })
+        .collect()
+}
+
+fn shuffled(rng: &mut Pcg, n: usize) -> Vec<usize> {
+    let mut perm: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        perm.swap(i, rng.below_usize(i + 1));
+    }
+    perm
+}
+
+fn run_agg(
+    agg: &mut Aggregator,
+    models: &[Params],
+    order: &[usize],
+) -> Params {
+    let refs: Vec<&[f32]> = order.iter().map(|&i| &models[i][..]).collect();
+    // the mean path (and krum's n<3 fallback) routes through the
+    // trainer, whose weights must sum to 1
+    let weights = vec![1.0 / refs.len() as f32; refs.len()];
+    let mut t = trainer();
+    let mut out = Params::new();
+    agg.aggregate_into(&mut t, &refs, &weights, &mut out);
+    out
+}
+
+// --- aggregator properties -------------------------------------------
+
+#[test]
+fn robust_rules_are_permutation_invariant_bitwise() {
+    for kind in [
+        AggregatorKind::TrimmedMean,
+        AggregatorKind::CoordinateMedian,
+        AggregatorKind::Krum,
+    ] {
+        forall_seeded(0xA6 + kind.name().len() as u64, 32, |rng| {
+            let n = 3 + rng.below_usize(8); // 3..=10 models
+            let models = rand_models(rng, n, DIM);
+            let mut agg = agg_with(kind, 1);
+            let identity: Vec<usize> = (0..n).collect();
+            let base = run_agg(&mut agg, &models, &identity);
+            let perm = shuffled(rng, n);
+            let permuted = run_agg(&mut agg, &models, &perm);
+            assert_eq!(
+                base.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                permuted.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "{} not permutation-invariant (n={n}, perm={perm:?})",
+                kind.name()
+            );
+        });
+    }
+}
+
+#[test]
+fn all_rules_collapse_to_the_common_vector_on_identical_inputs() {
+    forall_seeded(0xB3, 32, |rng| {
+        let n = 3 + rng.below_usize(8);
+        let v = rand_models(rng, 1, DIM).remove(0);
+        let models = vec![v.clone(); n];
+        let identity: Vec<usize> = (0..n).collect();
+
+        // the order-statistic rules see n identical order statistics
+        let median = run_agg(
+            &mut agg_with(AggregatorKind::CoordinateMedian, 1),
+            &models,
+            &identity,
+        );
+        assert_eq!(median, v, "median must be exact on identical inputs");
+        // krum copies the winner verbatim
+        let krum = run_agg(
+            &mut agg_with(AggregatorKind::Krum, 1),
+            &models,
+            &identity,
+        );
+        assert_eq!(krum, v, "krum must copy a model verbatim");
+        // trimmed mean and plain mean re-average n copies: allow the
+        // summation rounding, nothing more
+        for kind in [AggregatorKind::TrimmedMean, AggregatorKind::Mean] {
+            let got = run_agg(&mut agg_with(kind, 1), &models, &identity);
+            for (g, want) in got.iter().zip(&v) {
+                assert!(
+                    (g - want).abs() <= 1e-5 * (1.0 + want.abs()),
+                    "{}: {g} != {want} on identical inputs",
+                    kind.name()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn krum_selects_an_honest_model_under_gross_outliers() {
+    // n ≥ 2f + 3 is Krum's admissibility bound: enough honest
+    // neighbours that every honest score ignores all f outliers.
+    forall_seeded(0xC9, 32, |rng| {
+        let f = 1 + rng.below_usize(2); // f ∈ {1, 2}
+        let n = 2 * f + 3 + rng.below_usize(3);
+        let honest: Vec<Params> = (0..n - f)
+            .map(|_| {
+                (0..DIM)
+                    .map(|_| 1.0 + rng.range_f64(-0.01, 0.01) as f32)
+                    .collect()
+            })
+            .collect();
+        let mut models = honest.clone();
+        for _ in 0..f {
+            models.push(
+                (0..DIM)
+                    .map(|_| rng.range_f64(500.0, 1000.0) as f32)
+                    .collect(),
+            );
+        }
+        let order = shuffled(rng, n);
+        let picked =
+            run_agg(&mut agg_with(AggregatorKind::Krum, f), &models, &order);
+        assert!(
+            honest.contains(&picked),
+            "krum picked an outlier: {picked:?} (f={f}, n={n})"
+        );
+    });
+}
+
+// --- end-to-end: cast, tallies, events, both backends ----------------
+
+fn adv_cfg(attack: AttackKind) -> ExperimentConfig {
+    ExperimentConfig {
+        workers: 8,
+        rounds: 6,
+        train_per_worker: 48,
+        test_samples: 80,
+        eval_every: 3,
+        seed: 42,
+        target_accuracy: 2.0,
+        adversary: AdversaryConfig {
+            frac: 0.25,
+            attack,
+            aggregator: AggregatorKind::TrimmedMean,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn assert_adversary_run(res: &RunResult, attack: AttackKind) {
+    assert_eq!(res.rounds.len(), 6);
+    let expected = if attack == AttackKind::None { 0 } else { 2 };
+    for r in &res.rounds {
+        assert_eq!(
+            r.adversaries, expected,
+            "round {} adversary tally",
+            r.round
+        );
+    }
+    let fired = res
+        .events
+        .iter()
+        .filter(|e| e.kind.starts_with("attack-"))
+        .count();
+    if attack == AttackKind::None {
+        assert_eq!(fired, 0, "no activations without a cast");
+    } else {
+        // every non-honest policy latches an activation on its first
+        // transmit (label-flip included — the event marks the cast
+        // even though its poison is applied at build time)
+        assert!(
+            (1..=expected).contains(&fired),
+            "activation events: {fired} of {expected} attackers"
+        );
+        let want = AdversaryPolicy::from_attack(attack).event_kind();
+        for e in res.events.iter().filter(|e| e.kind.starts_with("attack-"))
+        {
+            assert_eq!(e.kind, want);
+            assert!(e.worker.is_some(), "activation must name the worker");
+        }
+    }
+}
+
+/// The CI matrix leg re-runs this with `DYSTOP_ADVERSARY_ATTACK` set;
+/// locally it exercises sign-flip.
+#[test]
+fn seeded_cast_runs_end_to_end_on_the_sim_backend() {
+    let attack = AttackKind::from_env_or(AttackKind::SignFlip);
+    let res = Experiment::builder(adv_cfg(attack))
+        .backend(BackendKind::Sim)
+        .run()
+        .unwrap();
+    assert_adversary_run(&res, attack);
+    assert!(res.evals.iter().all(|e| e.avg_loss.is_finite()));
+}
+
+#[test]
+fn seeded_cast_runs_end_to_end_on_the_threaded_backend() {
+    let attack = AttackKind::from_env_or(AttackKind::SignFlip);
+    let mut cfg = adv_cfg(attack);
+    cfg.compute_mean_s = 0.5;
+    let opts = TestbedOptions { time_scale: 2.0, profile: false };
+    let res = Experiment::builder(cfg)
+        .backend_impl(Box::new(ThreadedBackend::with_options(opts)))
+        .run()
+        .unwrap();
+    assert_adversary_run(&res, attack);
+}
+
+#[test]
+fn scripted_cast_overrides_the_seeded_assignment() {
+    let mut policies = vec![AdversaryPolicy::Honest; 8];
+    policies[1] = AdversaryPolicy::FreeRide;
+    policies[5] = AdversaryPolicy::LabelFlip;
+    policies[6] = AdversaryPolicy::Scale;
+    // cfg knobs say "no adversary" — the script wins
+    let mut cfg = adv_cfg(AttackKind::None);
+    cfg.adversary.frac = 0.0;
+    let res = Experiment::builder(cfg)
+        .backend(BackendKind::Sim)
+        .adversary(policies)
+        .run()
+        .unwrap();
+    for r in &res.rounds {
+        assert_eq!(r.adversaries, 3, "scripted cast tally");
+    }
+}
+
+#[test]
+fn wrong_length_script_is_invalid_config() {
+    let err = Experiment::builder(adv_cfg(AttackKind::None))
+        .backend(BackendKind::Sim)
+        .adversary(vec![AdversaryPolicy::SignFlip; 3]) // workers = 8
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, ExperimentError::InvalidConfig(_)), "{err}");
+}
+
+#[test]
+fn stale_bomb_replays_old_parameters() {
+    let mut policies = vec![AdversaryPolicy::Honest; 6];
+    policies[2] = AdversaryPolicy::StaleBomb;
+    let mut cfg = adv_cfg(AttackKind::None);
+    cfg.workers = 6;
+    cfg.adversary.stale_tau = 2;
+    let res = Experiment::builder(cfg)
+        .backend(BackendKind::Sim)
+        .adversary(policies)
+        .run()
+        .unwrap();
+    assert_eq!(res.rounds.len(), 6);
+    for r in &res.rounds {
+        assert_eq!(r.adversaries, 1);
+    }
+}

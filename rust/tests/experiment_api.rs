@@ -72,6 +72,7 @@ fn assert_bit_identical(a: &RunResult, b: &RunResult) {
         assert_eq!(x.duration_s.to_bits(), y.duration_s.to_bits());
         assert_eq!(x.active, y.active);
         assert_eq!(x.population, y.population);
+        assert_eq!(x.adversaries, y.adversaries);
         assert_eq!(x.transfers, y.transfers);
         assert_eq!(x.bytes_sent.to_bits(), y.bytes_sent.to_bits());
         assert_eq!(x.avg_staleness.to_bits(), y.avg_staleness.to_bits());
@@ -216,6 +217,76 @@ fn dense_codec_ignores_inactive_codec_knobs() {
         .run()
         .unwrap();
     assert_bit_identical(&a, &b);
+}
+
+#[test]
+fn benign_adversary_knobs_are_inert() {
+    // adversary.frac=0 (the default) + aggregator=mean must reproduce
+    // the pre-adversary engine bit for bit — for every thread count,
+    // whatever the other adversary.* knobs say
+    use dystop::config::AttackKind;
+    let run_with = |threads: usize, touch_knobs: bool| {
+        let mut cfg = small_cfg();
+        cfg.workers = 10;
+        cfg.rounds = 8;
+        cfg.target_accuracy = 2.0;
+        cfg.threads = threads;
+        if touch_knobs {
+            // frac=0 ⇒ no cast ⇒ every other attack knob is dead
+            cfg.adversary.attack = AttackKind::SignFlip;
+            cfg.adversary.scale = -50.0;
+            cfg.adversary.stale_tau = 3;
+            cfg.adversary.trim_frac = 0.4;
+            cfg.adversary.krum_f = 2;
+        }
+        Experiment::builder(cfg)
+            .backend(BackendKind::Sim)
+            .run()
+            .unwrap()
+    };
+    let baseline = run_with(1, false);
+    assert!(baseline.rounds.iter().all(|r| r.adversaries == 0));
+    for threads in [1usize, 4] {
+        assert_bit_identical(&baseline, &run_with(threads, true));
+    }
+}
+
+#[test]
+fn active_adversary_stays_thread_count_deterministic() {
+    // with a real cast mounted, runs must still be a pure function of
+    // the config — transmit happens coordinator-side in fixed order
+    use dystop::config::{AggregatorKind, AttackKind};
+    let run_with = |threads: usize| {
+        let mut cfg = small_cfg();
+        cfg.workers = 10;
+        cfg.rounds = 8;
+        cfg.target_accuracy = 2.0;
+        cfg.threads = threads;
+        cfg.adversary.frac = 0.3;
+        cfg.adversary.attack = AttackKind::SignFlip;
+        cfg.adversary.aggregator = AggregatorKind::TrimmedMean;
+        Experiment::builder(cfg)
+            .backend(BackendKind::Sim)
+            .run()
+            .unwrap()
+    };
+    let sequential = run_with(1);
+    assert!(sequential.rounds.iter().all(|r| r.adversaries == 3));
+    // attack activations land in the event log at most once per
+    // attacker (a cast member that never serves a pull/push stays dark)
+    let fired = sequential
+        .events
+        .iter()
+        .filter(|e| e.kind == "attack-signflip")
+        .count();
+    assert!(
+        (1..=3).contains(&fired),
+        "activations {fired}, events: {:?}",
+        sequential.events
+    );
+    for threads in [2usize, 4] {
+        assert_bit_identical(&sequential, &run_with(threads));
+    }
 }
 
 #[test]

@@ -10,13 +10,19 @@
 //! * the recorded event log accounts for every population change;
 //! * `Rejoin` resumes from stale parameters with τ advanced, `Leave`
 //!   freezes a worker out of planning.
+//!
+//! The failure-injection suite (degenerate edge conditions: total link
+//! loss, starved bandwidth, single-worker networks, hyper-mobility)
+//! lives at the bottom of this file — it is the same "simulator stays
+//! correct under hostile populations" surface as the churn tests.
 
 use dystop::config::{
-    BackendKind, ExperimentConfig, ScenarioConfig, ScenarioPreset,
-    SchedulerKind,
+    BackendKind, ExperimentConfig, NetworkConfig, ScenarioConfig,
+    ScenarioPreset, SchedulerKind,
 };
 use dystop::experiment::{
-    Experiment, TestbedOptions, ThreadedBackend, VirtualClockEngine,
+    Experiment, TestbedOptions, ThreadedBackend, VirtualClockBackend,
+    VirtualClockEngine,
 };
 use dystop::metrics::RunResult;
 use dystop::scenario::{Scenario, ScenarioEvent};
@@ -305,6 +311,148 @@ fn scripted_timeline_with_out_of_range_worker_is_rejected() {
         .unwrap_err();
     let msg = err.to_string();
     assert!(msg.contains("worker 99"), "{msg}");
+}
+
+// --- failure injection (folded in from `failure_injection.rs`): the
+// --- simulator must stay correct — not merely not crash — under
+// --- degenerate edge conditions
+
+/// Full-curve run through the builder (ex `SimEngine::run_full`).
+fn run_full(cfg: ExperimentConfig) -> RunResult {
+    Experiment::builder(cfg)
+        .backend_impl(Box::new(VirtualClockBackend::full_curves()))
+        .run()
+        .expect("experiment failed")
+}
+
+fn chaos_base() -> ExperimentConfig {
+    ExperimentConfig {
+        workers: 10,
+        rounds: 40,
+        train_per_worker: 48,
+        test_samples: 128,
+        class_sep: 3.0,
+        eval_every: 10,
+        target_accuracy: 2.0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn survives_total_link_loss() {
+    // every link drops every round: no pulls possible, workers train solo
+    let mut cfg = chaos_base();
+    cfg.network.link_drop_prob = 1.0;
+    let res = run_full(cfg);
+    assert_eq!(res.rounds.len(), 40);
+    assert_eq!(res.total_transfers(), 0, "no transfers over dead links");
+    // local training alone still improves over init
+    let first = res.evals.first().unwrap().avg_accuracy;
+    assert!(res.best_accuracy() > first.max(0.2), "acc {}", res.best_accuracy());
+}
+
+#[test]
+fn survives_zero_bandwidth_budgets() {
+    let mut cfg = chaos_base();
+    cfg.network.budget_models = 0.0;
+    cfg.network.budget_jitter = 0.0;
+    let res = run_full(cfg);
+    // budgets floor at 1.0 transfer/round (EdgeNetwork::refresh_budgets),
+    // so communication is heavily throttled but the run proceeds
+    assert_eq!(res.rounds.len(), 40);
+    assert!(res.evals.iter().all(|e| e.avg_loss.is_finite()));
+}
+
+#[test]
+fn single_worker_network_degenerates_to_local_sgd() {
+    let mut cfg = chaos_base();
+    cfg.workers = 1;
+    cfg.scheduler = SchedulerKind::DySTop;
+    let res = run_full(cfg);
+    assert_eq!(res.total_transfers(), 0);
+    assert!(res.best_accuracy() > 0.3, "acc {}", res.best_accuracy());
+    // the lone worker is always activated ⇒ staleness pinned at 0
+    assert!(res.rounds.iter().all(|r| r.max_staleness == 0));
+}
+
+#[test]
+fn out_of_range_workers_never_communicate() {
+    // region much larger than range: most workers are isolated
+    let mut cfg = chaos_base();
+    cfg.network = NetworkConfig {
+        region_m: 10_000.0,
+        comm_range_m: 10.0,
+        mobility_m: 0.0,
+        ..Default::default()
+    };
+    let res = run_full(cfg);
+    assert_eq!(res.rounds.len(), 40);
+    // isolated workers still train locally; transfers near zero
+    assert!(res.total_transfers() < 40);
+}
+
+#[test]
+fn hyper_mobility_keeps_invariants() {
+    let mut cfg = chaos_base();
+    cfg.network.mobility_m = 50.0; // teleporting workers
+    cfg.network.link_drop_prob = 0.3;
+    let res = run_full(cfg);
+    let mut prev = 0.0;
+    for r in &res.rounds {
+        assert!(r.time_s >= prev && r.duration_s >= 0.0);
+        prev = r.time_s;
+    }
+}
+
+#[test]
+fn all_schedulers_survive_chaos() {
+    for k in ALL_SCHEDULERS {
+        let mut cfg = chaos_base();
+        cfg.rounds = 20;
+        cfg.scheduler = k;
+        cfg.network.link_drop_prob = 0.5;
+        cfg.network.mobility_m = 20.0;
+        cfg.network.budget_jitter = 1.0;
+        // chaos now includes population chaos: heavy crash-y churn on
+        // top of the flaky links and teleporting workers
+        cfg.scenario = ScenarioConfig {
+            preset: ScenarioPreset::Stable,
+            churn_rate: 0.2,
+            mean_downtime_rounds: 3.0,
+            crash_frac: 0.8,
+        };
+        let res = run_full(cfg);
+        assert_eq!(res.rounds.len(), 20, "{}", res.label);
+        assert!(
+            res.evals.iter().all(|e| e.avg_loss.is_finite()),
+            "{}",
+            res.label
+        );
+    }
+}
+
+#[test]
+fn extreme_non_iid_each_worker_one_class() {
+    // φ→0 approximates one-class-per-worker; training must still move
+    let mut cfg = chaos_base();
+    cfg.phi = 0.01;
+    cfg.workers = 10;
+    let res = run_full(cfg);
+    let first = res.evals.first().unwrap().avg_accuracy;
+    assert!(res.best_accuracy() >= first);
+    assert!(res.best_accuracy() > 0.2, "acc {}", res.best_accuracy());
+}
+
+#[test]
+fn tau_bound_zero_forces_frequent_activation() {
+    let mut cfg = chaos_base();
+    cfg.tau_bound = 0;
+    cfg.rounds = 60;
+    let res = run_full(cfg);
+    // queues punish ANY staleness: activation pressure keeps τ tiny
+    let late: Vec<_> = res.rounds.iter().skip(20).collect();
+    let avg = late.iter().map(|r| r.avg_staleness).sum::<f64>() / late.len() as f64;
+    assert!(avg < 2.0, "avg staleness {avg} under τ_bound=0");
 }
 
 #[test]
