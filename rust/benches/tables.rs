@@ -13,8 +13,8 @@
 //! * PJRT hot-path latencies when artifacts are present;
 //! * threads=1 vs threads=4 bit-identity checks (the parallel engine's
 //!   core invariant) — base, churn, stateful-codec, one per registered
-//!   non-default workload model, and a mounted sign-flip cast —
-//!   recorded in the report.
+//!   non-default workload model, a mounted sign-flip cast, and an
+//!   active cellular fault profile — recorded in the report.
 //!
 //! `DYSTOP_BENCH_QUICK=1` shrinks warmup/measure budgets for CI smoke
 //! runs; the report schema is identical. `DYSTOP_BENCH_OUT=path.json`
@@ -26,8 +26,9 @@
 use dystop::bench::{bench_with, write_json_report, BenchResult};
 use dystop::config::{
     AdversaryConfig, AggregatorKind, AttackKind, CodecKind,
-    ExperimentConfig, ModelArch, ScenarioConfig, ScenarioPreset,
-    SchedulerKind, TransportConfig, WorkloadConfig,
+    ExperimentConfig, FaultConfig, FaultProfile, ModelArch,
+    ScenarioConfig, ScenarioPreset, SchedulerKind, TransportConfig,
+    WorkloadConfig,
 };
 use dystop::data::{make_corpus, SyntheticSpec};
 use dystop::experiment::{Experiment, VirtualClockEngine};
@@ -95,6 +96,20 @@ fn adversary_sim_engine(
             aggregator,
             ..Default::default()
         },
+        ..Default::default()
+    };
+    let exp = Experiment::builder(cfg).build().expect("valid bench config");
+    VirtualClockEngine::new(exp)
+}
+
+fn faults_sim_engine(n: usize, profile: FaultProfile) -> VirtualClockEngine {
+    let cfg = ExperimentConfig {
+        workers: n,
+        rounds: 10_000,
+        train_per_worker: 64,
+        eval_every: usize::MAX,
+        target_accuracy: 2.0,
+        faults: FaultConfig::preset(profile),
         ..Default::default()
     };
     let exp = Experiment::builder(cfg).build().expect("valid bench config");
@@ -189,6 +204,24 @@ fn sim_round_benches(
         let mut eng = codec_sim_engine(200, codec);
         results.push(bench_with(
             &format!("sim_round N=200 dystop codec={}", codec.name()),
+            warm,
+            budget,
+            &mut || {
+                std::hint::black_box(eng.step());
+            },
+        ));
+    }
+
+    // delivery faults: per-pull-edge fault resolution + retry/backoff
+    // accounting on the hot path — `faults=clean` is the branch-free
+    // control (the inactive gate must keep it at parity with the plain
+    // N=200 row); `faults=cellular` pays the per-edge RNG stream and
+    // the retransmission ledger
+    println!("\n== sim_round under lossy delivery (N=200, dystop) ==");
+    for profile in [FaultProfile::Clean, FaultProfile::Cellular] {
+        let mut eng = faults_sim_engine(200, profile);
+        results.push(bench_with(
+            &format!("sim_round N=200 dystop faults={}", profile.name()),
             warm,
             budget,
             &mut || {
@@ -333,14 +366,15 @@ fn pjrt_benches(results: &mut Vec<BenchResult>) {
 
 /// The parallel engine's core invariant: a seeded run is bit-identical
 /// for any `run.threads` setting — with or without an active scenario,
-/// a stateful transport codec, a deeper workload model, or a mounted
-/// Byzantine cast. Checked here so the recorded perf numbers always
-/// come with a correctness witness.
+/// a stateful transport codec, a deeper workload model, a mounted
+/// Byzantine cast, or an active lossy-link fault profile. Checked here
+/// so the recorded perf numbers always come with a correctness witness.
 fn determinism_check(
     scenario: ScenarioConfig,
     transport: TransportConfig,
     model: ModelArch,
     adversary: AdversaryConfig,
+    faults: FaultConfig,
 ) -> bool {
     let run_with = |threads: usize| {
         let cfg = ExperimentConfig {
@@ -355,6 +389,7 @@ fn determinism_check(
             transport,
             workload: WorkloadConfig { model, ..Default::default() },
             adversary,
+            faults,
             ..Default::default()
         };
         Experiment::builder(cfg).run().expect("determinism run")
@@ -384,6 +419,7 @@ fn main() {
         TransportConfig::default(),
         ModelArch::Linear,
         AdversaryConfig::default(),
+        FaultConfig::default(),
     );
     println!(
         "\ndeterminism threads=1 vs threads=4: {}",
@@ -394,6 +430,7 @@ fn main() {
         TransportConfig::default(),
         ModelArch::Linear,
         AdversaryConfig::default(),
+        FaultConfig::default(),
     );
     println!(
         "determinism threads=1 vs threads=4 (scenario=diurnal): {}",
@@ -405,6 +442,7 @@ fn main() {
         TransportConfig { codec: CodecKind::TopK, ..Default::default() },
         ModelArch::Linear,
         AdversaryConfig::default(),
+        FaultConfig::default(),
     );
     println!(
         "determinism threads=1 vs threads=4 (transport.codec=topk): {}",
@@ -417,6 +455,7 @@ fn main() {
         TransportConfig::default(),
         ModelArch::Mlp,
         AdversaryConfig::default(),
+        FaultConfig::default(),
     );
     println!(
         "determinism threads=1 vs threads=4 (workload.model=mlp): {}",
@@ -427,6 +466,7 @@ fn main() {
         TransportConfig::default(),
         ModelArch::CnnS,
         AdversaryConfig::default(),
+        FaultConfig::default(),
     );
     println!(
         "determinism threads=1 vs threads=4 (workload.model=cnn-s): {}",
@@ -442,10 +482,24 @@ fn main() {
             attack: AttackKind::SignFlip,
             ..Default::default()
         },
+        FaultConfig::default(),
     );
     println!(
         "determinism threads=1 vs threads=4 (adversary=signflip): {}",
         if det_signflip_ok { "bit-identical" } else { "MISMATCH" }
+    );
+    // active lossy links: per-edge fault draws and retry accounting
+    // must stay keyed on (seed, round, edge), never on worker order
+    let det_lossy_ok = determinism_check(
+        ScenarioConfig::default(),
+        TransportConfig::default(),
+        ModelArch::Linear,
+        AdversaryConfig::default(),
+        FaultConfig::preset(FaultProfile::Cellular),
+    );
+    println!(
+        "determinism threads=1 vs threads=4 (faults=cellular): {}",
+        if det_lossy_ok { "bit-identical" } else { "MISMATCH" }
     );
 
     let meta = vec![
@@ -479,6 +533,10 @@ fn main() {
             "determinism_signflip_threads_1_vs_4".to_string(),
             Json::Bool(det_signflip_ok),
         ),
+        (
+            "determinism_lossy_threads_1_vs_4".to_string(),
+            Json::Bool(det_lossy_ok),
+        ),
     ];
     // explicit output path so CI artifact steps can't pick up a stale
     // file from an unexpected working directory
@@ -511,5 +569,9 @@ fn main() {
     assert!(
         det_signflip_ok,
         "threads=1 vs threads=4 diverged under adversary attack=signflip"
+    );
+    assert!(
+        det_lossy_ok,
+        "threads=1 vs threads=4 diverged under faults=cellular"
     );
 }

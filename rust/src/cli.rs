@@ -272,7 +272,12 @@ fn usage() -> String {
      \x20       --set adversary.aggregator=mean|trimmed-mean|median|krum  coordinator aggregation rule\n\
      \x20       --set adversary.scale=10 --set adversary.stale_tau=5 --set adversary.trim_frac=0.2\n\
      \x20       --set adversary.krum_f=1  Byzantine worker + robust-aggregation knobs\n\
-     figures --fig <3|4..18|20..25|26|churn|27|codec|28|workload|29|adversary|all> --out results/ [--workers N --rounds R]\n\
+     \x20       --set faults.profile=clean|wifi|cellular|hostile  lossy-link fault preset\n\
+     \x20       --set faults.loss=0.1 --set faults.dup=0.02 --set faults.corrupt=0.01\n\
+     \x20       --set faults.delay_spike=0.05 --set faults.delay_spike_factor=4  per-frame fault knobs\n\
+     \x20       --set faults.retries=3 --set faults.backoff_base_s=0.05 --set faults.backoff_cap_s=2\n\
+     \x20       --set faults.jitter=0.5  ack/retry/backoff knobs (retries=0 disables the protocol)\n\
+     figures --fig <3|4..18|20..25|26|churn|27|codec|28|workload|29|adversary|30|lossy|all> --out results/ [--workers N --rounds R]\n\
      testbed --set sim.workers=15 --out results/\n\
      sweep   --key dystop.tau_bound --values 2,5,8 --out results/\n\
      bench-diff --baseline BENCH_baseline.json --fresh BENCH_sim.json --tolerance 0.15\n\

@@ -419,6 +419,185 @@ impl AdversaryConfig {
     }
 }
 
+/// Which link-fault preset the delivery layer injects
+/// (`faults.profile` knob — see [`crate::delivery`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FaultProfile {
+    /// Lossless links: every frame arrives intact on the first attempt.
+    /// The default — bit-identical to the pre-delivery engine.
+    #[default]
+    Clean,
+    /// Light residential-WiFi impairment: occasional loss, rare
+    /// duplication/corruption.
+    Wifi,
+    /// Congested cellular uplink: noticeable loss, duplication from
+    /// handover retries, regular latency spikes.
+    Cellular,
+    /// Hostile/degraded RF environment: heavy loss, frequent corruption
+    /// and latency spikes — the retry budget is routinely exhausted.
+    Hostile,
+}
+
+impl FaultProfile {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "clean" | "none" => Ok(Self::Clean),
+            "wifi" => Ok(Self::Wifi),
+            "cellular" | "lte" => Ok(Self::Cellular),
+            "hostile" => Ok(Self::Hostile),
+            other => Err(format!(
+                "unknown faults profile {other:?} \
+                 (clean|wifi|cellular|hostile)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Clean => "clean",
+            Self::Wifi => "wifi",
+            Self::Cellular => "cellular",
+            Self::Hostile => "hostile",
+        }
+    }
+
+    /// CI matrix hook: `DYSTOP_FAULTS_PROFILE` (when set and non-empty)
+    /// overrides `default` — fault-parametric tests route their profile
+    /// choice through this so one test binary covers every profile
+    /// across CI matrix legs (mirrors `DYSTOP_WORKLOAD_MODEL` /
+    /// `DYSTOP_ADVERSARY_ATTACK`).
+    pub fn from_env_or(default: Self) -> Self {
+        match std::env::var("DYSTOP_FAULTS_PROFILE") {
+            Ok(v) if !v.is_empty() => Self::parse(&v)
+                .expect("DYSTOP_FAULTS_PROFILE must name a fault profile"),
+            _ => default,
+        }
+    }
+
+    /// Preset knob defaults: (loss, dup, corrupt, delay_spike) per-frame
+    /// probabilities. Explicit `faults.*` keys override these.
+    pub fn default_knobs(self) -> (f64, f64, f64, f64) {
+        match self {
+            Self::Clean => (0.0, 0.0, 0.0, 0.0),
+            Self::Wifi => (0.05, 0.01, 0.005, 0.02),
+            Self::Cellular => (0.12, 0.02, 0.01, 0.08),
+            Self::Hostile => (0.35, 0.05, 0.05, 0.20),
+        }
+    }
+}
+
+/// Delivery-layer knobs (`faults.*` keys): the deterministic per-link
+/// fault model plus the reliable-delivery retry protocol on top. The
+/// default (`profile=clean`, all rates zero) is knob-inert:
+/// bit-identical to the pre-delivery engine for every backend × codec ×
+/// model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Fault preset (`faults.profile`); sets the four rate knobs below.
+    pub profile: FaultProfile,
+    /// Per-frame-attempt loss probability (`faults.loss`).
+    pub loss: f64,
+    /// Probability a delivered frame arrives duplicated (`faults.dup`;
+    /// the duplicate is detected by sequencing and never
+    /// double-aggregated).
+    pub dup: f64,
+    /// Per-frame-attempt corruption probability (`faults.corrupt`; a
+    /// corrupted frame fails its CRC32 check and is treated as lost).
+    pub corrupt: f64,
+    /// Per-frame-attempt latency-spike probability
+    /// (`faults.delay_spike`; a spiked attempt costs
+    /// `delay_spike_factor ×` its transfer time).
+    pub delay_spike: f64,
+    /// Transfer-time multiplier of a latency spike
+    /// (`faults.delay_spike_factor`).
+    pub delay_spike_factor: f64,
+    /// Per-edge retransmission budget per round (`faults.retries`);
+    /// attempts = retries + 1, exhaustion dead-letters the edge and the
+    /// receiver aggregates without it.
+    pub retries: usize,
+    /// Initial ack-timeout backoff in seconds (`faults.backoff_base_s`;
+    /// doubles per retry up to the cap).
+    pub backoff_base_s: f64,
+    /// Backoff cap in seconds (`faults.backoff_cap_s`).
+    pub backoff_cap_s: f64,
+    /// Deterministic jitter fraction in [0,1] applied to each backoff
+    /// (`faults.jitter`; drawn from the same per-edge stream as the
+    /// fault outcomes).
+    pub jitter: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig::preset(FaultProfile::Clean)
+    }
+}
+
+impl FaultConfig {
+    /// A fault config carrying the preset's default rate knobs; the
+    /// retry-protocol knobs are profile-independent.
+    pub fn preset(profile: FaultProfile) -> Self {
+        let (loss, dup, corrupt, delay_spike) = profile.default_knobs();
+        FaultConfig {
+            profile,
+            loss,
+            dup,
+            corrupt,
+            delay_spike,
+            delay_spike_factor: 4.0,
+            retries: 3,
+            backoff_base_s: 0.05,
+            backoff_cap_s: 2.0,
+            jitter: 0.5,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (v, k) in [
+            (self.loss, "faults.loss"),
+            (self.dup, "faults.dup"),
+            (self.corrupt, "faults.corrupt"),
+            (self.delay_spike, "faults.delay_spike"),
+            (self.jitter, "faults.jitter"),
+        ] {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("{k} must be in [0,1]"));
+            }
+        }
+        if self.loss + self.corrupt >= 1.0
+            && (self.loss > 0.0 || self.corrupt > 0.0)
+        {
+            return Err(
+                "faults.loss + faults.corrupt must be < 1 (every frame \
+                 failing makes delivery impossible)"
+                    .into(),
+            );
+        }
+        if self.delay_spike_factor < 1.0 {
+            return Err("faults.delay_spike_factor must be >= 1".into());
+        }
+        if self.backoff_base_s < 0.0 {
+            return Err("faults.backoff_base_s must be >= 0".into());
+        }
+        if self.backoff_cap_s < self.backoff_base_s {
+            return Err(
+                "faults.backoff_cap_s must be >= faults.backoff_base_s"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+
+    /// Whether any fault channel can fire. `false` (the `clean`
+    /// default) is the knob-inert contract: the delivery layer draws no
+    /// randomness and changes no behavior.
+    pub fn is_active(&self) -> bool {
+        self.loss > 0.0
+            || self.dup > 0.0
+            || self.corrupt > 0.0
+            || self.delay_spike > 0.0
+    }
+}
+
 /// Which training backend executes local steps.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TrainerKind {
@@ -778,6 +957,11 @@ pub struct ExperimentConfig {
     /// knobs). The default (`frac=0` × `aggregator=mean`) reproduces
     /// pre-adversary runs bit-identically.
     pub adversary: AdversaryConfig,
+
+    /// Lossy-link fault injection + reliable delivery (`faults.*`
+    /// knobs). The default (`profile=clean`) is the lossless identity
+    /// path: bit-identical to the pre-delivery engine.
+    pub faults: FaultConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -814,6 +998,7 @@ impl Default for ExperimentConfig {
             transport: TransportConfig::default(),
             workload: WorkloadConfig::default(),
             adversary: AdversaryConfig::default(),
+            faults: FaultConfig::default(),
         }
     }
 }
@@ -919,6 +1104,22 @@ impl ExperimentConfig {
         }
         opt!(e.adversary.trim_frac, get_f64, "adversary.trim_frac");
         opt!(e.adversary.krum_f, get_usize, "adversary.krum_f");
+        if let Some(s) = cfg.get("faults.profile") {
+            e.faults = FaultConfig::preset(FaultProfile::parse(s)?);
+        }
+        opt!(e.faults.loss, get_f64, "faults.loss");
+        opt!(e.faults.dup, get_f64, "faults.dup");
+        opt!(e.faults.corrupt, get_f64, "faults.corrupt");
+        opt!(e.faults.delay_spike, get_f64, "faults.delay_spike");
+        opt!(
+            e.faults.delay_spike_factor,
+            get_f64,
+            "faults.delay_spike_factor"
+        );
+        opt!(e.faults.retries, get_usize, "faults.retries");
+        opt!(e.faults.backoff_base_s, get_f64, "faults.backoff_base_s");
+        opt!(e.faults.backoff_cap_s, get_f64, "faults.backoff_cap_s");
+        opt!(e.faults.jitter, get_f64, "faults.jitter");
         e.validate()?;
         Ok(e)
     }
@@ -949,6 +1150,7 @@ impl ExperimentConfig {
         self.transport.validate()?;
         self.workload.validate()?;
         self.adversary.validate()?;
+        self.faults.validate()?;
         // file corpora define their own feature dim at build time — the
         // builder re-runs model_fits against the adopted shape; checking
         // the placeholder dim here would spuriously reject valid configs
@@ -1211,6 +1413,79 @@ mod tests {
         }
         assert!(AttackKind::parse("bogus").is_err());
         assert!(AggregatorKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn fault_knobs_parse_with_preset_defaults_and_overrides() {
+        // default is clean: every rate zero, delivery layer inert
+        let d = ExperimentConfig::default();
+        assert_eq!(d.faults.profile, FaultProfile::Clean);
+        assert_eq!(d.faults.loss, 0.0);
+        assert_eq!(d.faults.dup, 0.0);
+        assert_eq!(d.faults.corrupt, 0.0);
+        assert_eq!(d.faults.delay_spike, 0.0);
+        assert!(!d.faults.is_active());
+        // preset sets rate defaults
+        let cfg = Config::parse("[faults]\nprofile = cellular\n").unwrap();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.faults.profile, FaultProfile::Cellular);
+        assert!(e.faults.loss > 0.0);
+        assert!(e.faults.is_active());
+        // explicit knobs override the preset defaults
+        let cfg = Config::parse(
+            "[faults]\nprofile = wifi\nloss = 0.3\nretries = 1\n\
+             jitter = 0.0\n",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.faults.profile, FaultProfile::Wifi);
+        assert_eq!(e.faults.loss, 0.3);
+        assert_eq!(e.faults.retries, 1);
+        assert_eq!(e.faults.jitter, 0.0);
+        // invalid values rejected
+        let cfg = Config::parse("[faults]\nloss = 1.5\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[faults]\nprofile = bogus\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse(
+            "[faults]\nloss = 0.7\ncorrupt = 0.3\n",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse(
+            "[faults]\nbackoff_base_s = 3.0\nbackoff_cap_s = 1.0\n",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[faults]\ndelay_spike_factor = 0.5\n")
+            .unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn fault_profile_names_roundtrip() {
+        for p in [
+            FaultProfile::Clean,
+            FaultProfile::Wifi,
+            FaultProfile::Cellular,
+            FaultProfile::Hostile,
+        ] {
+            assert_eq!(FaultProfile::parse(p.name()).unwrap(), p);
+        }
+        assert!(FaultProfile::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn fault_profile_env_default_passthrough() {
+        // without the env knob set, the default passes through (the
+        // set-path is covered by the CI matrix itself — mutating the
+        // process environment in a threaded test harness is unsound)
+        if std::env::var("DYSTOP_FAULTS_PROFILE").is_err() {
+            assert_eq!(
+                FaultProfile::from_env_or(FaultProfile::Cellular),
+                FaultProfile::Cellular
+            );
+        }
     }
 
     #[test]

@@ -19,9 +19,9 @@ mod experiment;
 
 pub use experiment::{
     AdversaryConfig, AggregatorKind, AttackKind, BackendKind, CodecKind,
-    DatasetKind, ExperimentConfig, ModelArch, ModelKind, NetworkConfig,
-    ScenarioConfig, ScenarioPreset, SchedulerKind, TrainerKind,
-    TransportConfig, WorkloadConfig,
+    DatasetKind, ExperimentConfig, FaultConfig, FaultProfile, ModelArch,
+    ModelKind, NetworkConfig, ScenarioConfig, ScenarioPreset,
+    SchedulerKind, TrainerKind, TransportConfig, WorkloadConfig,
 };
 
 use std::collections::BTreeMap;

@@ -1,0 +1,627 @@
+//! Reliable delivery layer: deterministic lossy-link fault injection +
+//! ack/retry/backoff with graceful per-round degradation.
+//!
+//! Every model exchange shipped so far succeeds atomically — only the
+//! scenario engine's wholesale `Crash` ever drops an in-flight model.
+//! This layer sits between the transport codecs and both execution
+//! backends and makes link failure a first-class, measured quantity:
+//!
+//! * **Fault model** — per-frame loss, duplication, single/multi-bit
+//!   corruption and latency spikes (`faults.loss`, `faults.dup`,
+//!   `faults.corrupt`, `faults.delay_spike`; preset
+//!   `faults.profile=clean|wifi|cellular|hostile`). Outcomes are drawn
+//!   on a dedicated per-edge RNG stream keyed purely by
+//!   `(seed, round, from, to)` ([`Pcg::edge_stream`]) — like the
+//!   scenario and adversary streams, nothing delivery-related touches
+//!   the substrate streams, so seeded runs stay bit-identical across
+//!   thread counts *and* both backends resolve identical outcomes for
+//!   the same edge regardless of dispatch order.
+//! * **Reliable protocol** — every encoded payload travels in a
+//!   [`Frame`] carrying a per-edge sequence number and a CRC32 over the
+//!   encoded bytes. Corruption is detected post-codec by the CRC check;
+//!   lost or corrupt frames are retransmitted after an ack timeout with
+//!   capped exponential backoff plus deterministic jitter, up to a
+//!   per-edge retry budget (`faults.retries`). Duplicated frames are
+//!   discarded by the receiver's sequence check, so they cost wire
+//!   bytes but never double-aggregate.
+//! * **Graceful degradation** — a pull edge that exhausts its budget
+//!   inside the round deadline is **dead-lettered**: the receiver
+//!   aggregates whatever arrived (the paper's staleness semantics
+//!   already tolerate missing neighbors), and the drop is recorded in
+//!   the round metrics
+//!   ([`RoundRecord::dropped_msgs`](crate::metrics::RoundRecord)) and
+//!   the event log (`dead-letter` [`EventRecord`]s).
+//!
+//! # Accounting identities
+//!
+//! Per resolved edge, [`EdgeOutcome`] satisfies
+//! `frames = delivered + duplicates + lost + corrupt` (every frame on
+//! the wire is accepted, discarded as a duplicate, dropped in transit,
+//! or rejected by CRC) and `retransmissions = frames − 1` (the first
+//! transmission is the planned transfer; everything beyond it is
+//! surcharge). Engines charge retransmitted frames real measured bytes
+//! — `bytes_sent = (transfers + retransmissions) × message_bytes` — so
+//! the codec figures show comm overhead growing with loss.
+//!
+//! The default (`faults.profile=clean`) is knob-inert:
+//! [`Delivery::is_active`] is `false`, [`Delivery::resolve`] returns
+//! [`EdgeOutcome::CLEAN`] without constructing an RNG, both engines
+//! skip every delivery branch, and runs stay bit-identical to the
+//! pre-delivery engine for every backend × codec × model.
+//!
+//! [`EventRecord`]: crate::metrics::EventRecord
+
+use crate::config::FaultConfig;
+use crate::util::rng::Pcg;
+
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) lookup table,
+/// built at compile time — the crate carries no dependencies, so the
+/// checksum is hand-rolled.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 (IEEE) of `data` — the frame check every encoded payload
+/// carries. Detects all single-bit flips (and all burst errors up to 32
+/// bits) in the payload.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// One wire frame of the delivery protocol: a per-edge sequence number,
+/// the encoded payload bytes, and a CRC32 over the payload. Receivers
+/// reject frames whose CRC check fails (triggering a retransmission)
+/// and discard frames whose sequence number they have already accepted
+/// (so duplicates never double-aggregate).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    /// Per-edge sequence number (monotone per `(from, to)` link).
+    pub seq: u64,
+    /// Encoded payload bytes (post-codec).
+    pub payload: Vec<u8>,
+    /// CRC32 over `payload`, computed at send time.
+    pub crc: u32,
+}
+
+impl Frame {
+    /// Seal `payload` into a frame, computing its CRC.
+    pub fn new(seq: u64, payload: Vec<u8>) -> Self {
+        let crc = crc32(&payload);
+        Frame { seq, payload, crc }
+    }
+
+    /// Receiver-side integrity check: does the payload still match the
+    /// CRC computed at send time?
+    pub fn check(&self) -> bool {
+        crc32(&self.payload) == self.crc
+    }
+
+    /// Flip one payload bit in place (fault injection: single-bit
+    /// corruption in transit). `bit` indexes the payload bit-string;
+    /// out-of-range is a no-op.
+    pub fn flip_bit(&mut self, bit: usize) {
+        if let Some(byte) = self.payload.get_mut(bit / 8) {
+            *byte ^= 1 << (bit % 8);
+        }
+    }
+}
+
+/// Receiver-side duplicate suppression: tracks the highest sequence
+/// number accepted per link and rejects replays. One instance per
+/// receiver; links are keyed by sender id.
+#[derive(Clone, Debug, Default)]
+pub struct DedupWindow {
+    /// Highest accepted seq per sender, `None` until the first accept.
+    accepted: Vec<Option<u64>>,
+}
+
+impl DedupWindow {
+    pub fn new(senders: usize) -> Self {
+        DedupWindow { accepted: vec![None; senders] }
+    }
+
+    /// Accept `seq` from `sender` if it is fresh; returns `false` for a
+    /// duplicate (already-accepted) frame, which the caller must
+    /// discard without aggregating.
+    pub fn accept(&mut self, sender: usize, seq: u64) -> bool {
+        match self.accepted[sender] {
+            Some(last) if seq <= last => false,
+            _ => {
+                self.accepted[sender] = Some(seq);
+                true
+            }
+        }
+    }
+}
+
+/// The resolved fate of one directed pull edge in one round: how many
+/// frames crossed the wire, what happened to each, and what the retry
+/// protocol cost in time. A pure function of `(seed, round, from, to)`
+/// and the fault knobs — see [`Delivery::resolve`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EdgeOutcome {
+    /// Did the payload get through within the retry budget? `false`
+    /// means the edge was dead-lettered and the receiver aggregates
+    /// without it.
+    pub delivered: bool,
+    /// Total frames on the wire: attempts plus the suppressed
+    /// duplicate, if any. Always ≥ 1.
+    pub frames: u32,
+    /// Frames dropped in transit (never reached the receiver).
+    pub lost: u32,
+    /// Frames that arrived corrupted and were rejected by the CRC
+    /// check (treated as loss: retransmitted).
+    pub corrupt: u32,
+    /// Did the accepted frame also arrive duplicated? The duplicate is
+    /// discarded by the sequence check — charged bytes, never
+    /// aggregated, adds no time.
+    pub duplicate: bool,
+    /// Σ per-attempt transfer-time multipliers (1.0 per clean attempt,
+    /// `faults.delay_spike_factor` per spiked one). The edge's transfer
+    /// time is `base × transfer_mult + backoff_s`.
+    pub transfer_mult: f64,
+    /// Σ ack-timeout backoff seconds accrued between attempts (capped
+    /// exponential with deterministic jitter).
+    pub backoff_s: f64,
+}
+
+impl EdgeOutcome {
+    /// The lossless identity outcome: delivered first try, one frame,
+    /// no surcharge. What [`Delivery::resolve`] returns — without
+    /// touching an RNG — when the fault model is inactive.
+    pub const CLEAN: EdgeOutcome = EdgeOutcome {
+        delivered: true,
+        frames: 1,
+        lost: 0,
+        corrupt: 0,
+        duplicate: false,
+        transfer_mult: 1.0,
+        backoff_s: 0.0,
+    };
+
+    /// Frames beyond the planned first transmission — the byte-ledger
+    /// surcharge this edge incurred.
+    pub fn retransmissions(&self) -> usize {
+        self.frames as usize - 1
+    }
+
+    /// Realized wall time of this edge given the clean one-attempt
+    /// transfer time `base_s`.
+    pub fn time_s(&self, base_s: f64) -> f64 {
+        base_s * self.transfer_mult + self.backoff_s
+    }
+}
+
+/// Per-round delivery ledger: the sums both engines accumulate on the
+/// coordinator and flush into
+/// [`RoundRecord`](crate::metrics::RoundRecord) at round end.
+/// Conservation — `frames = delivered + duplicates + lost + corrupt` —
+/// holds by construction because it holds per [`EdgeOutcome`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeliveryTally {
+    /// Total frames on the wire this round (pull edges).
+    pub frames: usize,
+    /// Frames accepted by receivers (one per delivered edge).
+    pub delivered: usize,
+    /// Duplicate frames discarded by the sequence check.
+    pub duplicates: usize,
+    /// Frames dropped in transit.
+    pub lost: usize,
+    /// Frames rejected by the CRC check.
+    pub corrupt: usize,
+    /// Frames beyond the planned transmissions (the byte surcharge).
+    pub retransmissions: usize,
+    /// Pull edges that exhausted their retry budget this round.
+    pub dead_lettered: usize,
+    /// In-flight models dropped by scenario `Crash` events this round
+    /// (push-path losses, routed through this ledger so every dropped
+    /// message is accounted in one place).
+    pub crash_dropped: usize,
+}
+
+impl DeliveryTally {
+    /// Fold one resolved edge into the round sums.
+    pub fn add(&mut self, out: &EdgeOutcome) {
+        self.frames += out.frames as usize;
+        self.delivered += out.delivered as usize;
+        self.duplicates += out.duplicate as usize;
+        self.lost += out.lost as usize;
+        self.corrupt += out.corrupt as usize;
+        self.retransmissions += out.retransmissions();
+        self.dead_lettered += !out.delivered as usize;
+    }
+
+    /// Fold another tally (one activation's partial sums, folded on the
+    /// coordinator in plan order) into this round's ledger.
+    pub fn merge(&mut self, other: &DeliveryTally) {
+        self.frames += other.frames;
+        self.delivered += other.delivered;
+        self.duplicates += other.duplicates;
+        self.lost += other.lost;
+        self.corrupt += other.corrupt;
+        self.retransmissions += other.retransmissions;
+        self.dead_lettered += other.dead_lettered;
+        self.crash_dropped += other.crash_dropped;
+    }
+
+    /// Messages that never reached an aggregation: transit losses,
+    /// plus in-flight models dropped by crashes — the
+    /// `RoundRecord::dropped_msgs` column. (CRC rejections are reported
+    /// separately as `corrupt_detected`.)
+    pub fn dropped_msgs(&self) -> usize {
+        self.lost + self.crash_dropped
+    }
+
+    /// Reset for the next round.
+    pub fn clear(&mut self) {
+        *self = DeliveryTally::default();
+    }
+}
+
+/// The per-run delivery state: the fault knobs plus the run seed that
+/// keys every per-edge stream. Deliberately stateless beyond
+/// configuration — outcome resolution is a pure function of
+/// `(seed, round, from, to)`, which is what lets both backends (and any
+/// thread count) agree on every ledger entry.
+#[derive(Clone, Debug)]
+pub struct Delivery {
+    cfg: FaultConfig,
+    seed: u64,
+    active: bool,
+}
+
+impl Delivery {
+    /// Build from the `faults.*` knobs and the run seed.
+    pub fn from_config(cfg: &FaultConfig, seed: u64) -> Self {
+        Delivery { cfg: *cfg, seed, active: cfg.is_active() }
+    }
+
+    /// The lossless no-op delivery layer (the `clean` profile).
+    pub fn inactive() -> Self {
+        Self::from_config(&FaultConfig::default(), 0)
+    }
+
+    /// `true` when any fault channel can fire. Both engines gate every
+    /// delivery branch on this, so the clean default costs nothing.
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Resolve the fate of the pull edge `from → to` in `round`: a pure
+    /// function of the key and the knobs, drawn on the edge's dedicated
+    /// stream ([`Pcg::edge_stream`]). Per attempt the draws are, in
+    /// fixed order: latency spike, transit fate (one uniform split into
+    /// loss / corruption / delivery — `validate` guarantees
+    /// `loss + corrupt < 1`), then on delivery the duplication draw, or
+    /// on failure the backoff jitter draw. Retries stop at delivery or
+    /// after `faults.retries` retransmissions, whichever comes first;
+    /// budget exhaustion dead-letters the edge.
+    pub fn resolve(&self, round: u64, from: usize, to: usize) -> EdgeOutcome {
+        if !self.active {
+            return EdgeOutcome::CLEAN;
+        }
+        let mut rng =
+            Pcg::edge_stream(self.seed, round, from as u64, to as u64);
+        let budget = self.cfg.retries + 1;
+        let mut out = EdgeOutcome {
+            delivered: false,
+            frames: 0,
+            lost: 0,
+            corrupt: 0,
+            duplicate: false,
+            transfer_mult: 0.0,
+            backoff_s: 0.0,
+        };
+        for attempt in 0..budget {
+            out.frames += 1;
+            let spiked = rng.f64() < self.cfg.delay_spike;
+            out.transfer_mult += if spiked {
+                self.cfg.delay_spike_factor
+            } else {
+                1.0
+            };
+            let fate = rng.f64();
+            if fate < self.cfg.loss {
+                out.lost += 1;
+            } else if fate < self.cfg.loss + self.cfg.corrupt {
+                out.corrupt += 1;
+            } else {
+                out.delivered = true;
+                if rng.f64() < self.cfg.dup {
+                    // a lost ack made the sender retransmit a frame the
+                    // receiver already accepted: the duplicate costs
+                    // wire bytes, fails the sequence check, and is
+                    // discarded without aggregating
+                    out.duplicate = true;
+                    out.frames += 1;
+                }
+                break;
+            }
+            // failed attempt: ack timeout, then capped exponential
+            // backoff with deterministic jitter before the next try
+            if attempt + 1 < budget {
+                let base = (self.cfg.backoff_base_s
+                    * 2f64.powi(attempt as i32))
+                .min(self.cfg.backoff_cap_s);
+                out.backoff_s += base * (1.0 + self.cfg.jitter * rng.f64());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FaultProfile;
+
+    fn faulty(loss: f64, dup: f64, corrupt: f64) -> FaultConfig {
+        FaultConfig {
+            loss,
+            dup,
+            corrupt,
+            ..FaultConfig::preset(FaultProfile::Clean)
+        }
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        // the standard CRC-32 test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn crc_detects_every_single_bit_flip() {
+        let payload: Vec<u8> = (0..64u32)
+            .flat_map(|i| (i as f32 * 0.37 - 3.0).to_le_bytes())
+            .collect();
+        let frame = Frame::new(0, payload.clone());
+        assert!(frame.check());
+        for bit in 0..payload.len() * 8 {
+            let mut f = frame.clone();
+            f.flip_bit(bit);
+            assert!(!f.check(), "bit {bit} flip went undetected");
+        }
+        // flipping the same bit twice restores integrity
+        let mut f = frame.clone();
+        f.flip_bit(100);
+        f.flip_bit(100);
+        assert!(f.check());
+    }
+
+    #[test]
+    fn dedup_window_discards_replays_but_accepts_fresh_seqs() {
+        let mut w = DedupWindow::new(2);
+        assert!(w.accept(0, 1));
+        assert!(!w.accept(0, 1), "exact replay must be discarded");
+        assert!(!w.accept(0, 0), "stale seq must be discarded");
+        assert!(w.accept(0, 2));
+        // links are independent
+        assert!(w.accept(1, 1));
+    }
+
+    #[test]
+    fn inactive_resolve_is_the_clean_identity() {
+        let d = Delivery::inactive();
+        assert!(!d.is_active());
+        for (r, i, j) in [(0u64, 0usize, 1usize), (5, 3, 2), (99, 7, 0)] {
+            assert_eq!(d.resolve(r, i, j), EdgeOutcome::CLEAN);
+        }
+        let c = EdgeOutcome::CLEAN;
+        assert_eq!(c.retransmissions(), 0);
+        assert_eq!(c.time_s(0.25).to_bits(), 0.25f64.to_bits());
+    }
+
+    #[test]
+    fn resolve_is_deterministic_and_edge_keyed() {
+        let cfg = FaultConfig::preset(FaultProfile::Cellular);
+        let a = Delivery::from_config(&cfg, 7);
+        let b = Delivery::from_config(&cfg, 7);
+        let mut differs = 0;
+        for r in 0..20u64 {
+            for i in 0..6 {
+                for j in 0..6 {
+                    if i == j {
+                        continue;
+                    }
+                    assert_eq!(a.resolve(r, i, j), b.resolve(r, i, j));
+                    if a.resolve(r, i, j) != a.resolve(r, j, i) {
+                        differs += 1;
+                    }
+                }
+            }
+        }
+        // directedness: the reversed edge resolves independently
+        assert!(differs > 0, "edge outcomes must be directed");
+        // a different seed changes outcomes somewhere
+        let c = Delivery::from_config(&cfg, 8);
+        assert!(
+            (0..50u64).any(|r| a.resolve(r, 0, 1) != c.resolve(r, 0, 1)),
+            "seed must enter the edge key"
+        );
+    }
+
+    #[test]
+    fn conservation_holds_for_every_outcome() {
+        let cfg = FaultConfig {
+            retries: 2,
+            ..FaultConfig::preset(FaultProfile::Hostile)
+        };
+        let d = Delivery::from_config(&cfg, 11);
+        let mut tally = DeliveryTally::default();
+        let (mut seen_dead, mut seen_dup, mut seen_retry) =
+            (false, false, false);
+        for r in 0..200u64 {
+            for to in 0..4usize {
+                let out = d.resolve(r, 5, to);
+                // per-edge conservation: every frame is accounted once
+                assert_eq!(
+                    out.frames,
+                    out.delivered as u32
+                        + out.duplicate as u32
+                        + out.lost
+                        + out.corrupt,
+                    "frames must split exactly: {out:?}"
+                );
+                assert!(out.frames >= 1);
+                if !out.delivered {
+                    // dead-letter ⇒ the whole budget burned, no dup
+                    assert_eq!(out.frames, cfg.retries as u32 + 1);
+                    assert!(!out.duplicate);
+                    seen_dead = true;
+                }
+                seen_dup |= out.duplicate;
+                seen_retry |= out.retransmissions() > 0;
+                tally.add(&out);
+            }
+        }
+        assert!(seen_dead && seen_dup && seen_retry);
+        // the round ledger inherits conservation
+        assert_eq!(
+            tally.frames,
+            tally.delivered + tally.duplicates + tally.lost + tally.corrupt
+        );
+        assert_eq!(
+            tally.delivered + tally.dead_lettered,
+            200 * 4,
+            "every edge ends delivered or dead-lettered"
+        );
+        assert_eq!(tally.dropped_msgs(), tally.lost);
+    }
+
+    #[test]
+    fn lossless_active_profile_delivers_first_try_with_dups_charged() {
+        // dup-only faults: every edge delivered on attempt 1; duplicates
+        // cost a frame + a retransmission but change nothing else
+        let d = Delivery::from_config(&faulty(0.0, 1.0, 0.0), 3);
+        assert!(d.is_active());
+        let out = d.resolve(0, 1, 2);
+        assert!(out.delivered && out.duplicate);
+        assert_eq!(out.frames, 2);
+        assert_eq!(out.retransmissions(), 1);
+        assert_eq!(out.lost + out.corrupt, 0);
+        assert_eq!(out.transfer_mult.to_bits(), 1f64.to_bits());
+        assert_eq!(out.backoff_s, 0.0);
+    }
+
+    #[test]
+    fn backoff_is_exponential_capped_and_jitter_free_when_disabled() {
+        let cfg = FaultConfig {
+            loss: 0.9,
+            retries: 5,
+            backoff_base_s: 0.1,
+            backoff_cap_s: 0.3,
+            jitter: 0.0,
+            ..FaultConfig::preset(FaultProfile::Clean)
+        };
+        let d = Delivery::from_config(&cfg, 19);
+        for r in 0..100u64 {
+            let out = d.resolve(r, 0, 1);
+            let fails = (out.lost + out.corrupt) as usize;
+            // backoff accrues after every failed attempt except a
+            // budget-exhausting final one: 0.1, 0.2, then capped at 0.3
+            let waits = if out.delivered { fails } else { fails - 1 };
+            let expect: f64 = (0..waits)
+                .map(|k| (0.1 * 2f64.powi(k as i32)).min(0.3))
+                .sum();
+            assert!(
+                (out.backoff_s - expect).abs() < 1e-12,
+                "round {r}: backoff {} != {expect} ({out:?})",
+                out.backoff_s
+            );
+        }
+    }
+
+    #[test]
+    fn delay_spikes_inflate_transfer_time() {
+        let cfg = FaultConfig {
+            delay_spike: 1.0,
+            delay_spike_factor: 4.0,
+            ..FaultConfig::preset(FaultProfile::Clean)
+        };
+        let d = Delivery::from_config(&cfg, 23);
+        let out = d.resolve(0, 0, 1);
+        assert!(out.delivered);
+        assert_eq!(out.transfer_mult, 4.0);
+        assert_eq!(out.time_s(2.0), 8.0);
+    }
+
+    #[test]
+    fn zero_retries_dead_letters_on_first_loss() {
+        let cfg = FaultConfig {
+            loss: 0.5,
+            retries: 0,
+            ..FaultConfig::preset(FaultProfile::Clean)
+        };
+        let d = Delivery::from_config(&cfg, 29);
+        let outs: Vec<EdgeOutcome> =
+            (0..200u64).map(|r| d.resolve(r, 0, 1)).collect();
+        assert!(outs.iter().any(|o| !o.delivered));
+        for o in &outs {
+            assert_eq!(o.frames, 1 + o.duplicate as u32);
+            assert_eq!(o.backoff_s, 0.0, "no retries ⇒ no backoff");
+        }
+        // without retries every loss is a dead letter
+        let dead = outs.iter().filter(|o| !o.delivered).count();
+        assert!((60..140).contains(&dead), "≈50% expected, got {dead}");
+    }
+
+    #[test]
+    fn presets_order_by_severity() {
+        let seed = 31;
+        let dead_rate = |p: FaultProfile| {
+            let d = Delivery::from_config(&FaultConfig::preset(p), seed);
+            (0..2000u64)
+                .filter(|&r| !d.resolve(r, 1, 2).delivered)
+                .count()
+        };
+        let clean = dead_rate(FaultProfile::Clean);
+        let wifi = dead_rate(FaultProfile::Wifi);
+        let hostile = dead_rate(FaultProfile::Hostile);
+        assert_eq!(clean, 0);
+        assert!(wifi < hostile, "wifi {wifi} vs hostile {hostile}");
+        assert!(hostile > 0);
+    }
+
+    #[test]
+    fn tally_clear_resets_everything() {
+        let d = Delivery::from_config(
+            &FaultConfig::preset(FaultProfile::Hostile),
+            37,
+        );
+        let mut t = DeliveryTally::default();
+        for r in 0..50u64 {
+            t.add(&d.resolve(r, 0, 1));
+        }
+        t.crash_dropped += 3;
+        assert!(t.frames > 0 && t.dropped_msgs() >= 3);
+        // merge doubles every sum
+        let snapshot = t;
+        t.merge(&snapshot);
+        assert_eq!(t.frames, snapshot.frames * 2);
+        assert_eq!(t.crash_dropped, snapshot.crash_dropped * 2);
+        t.clear();
+        assert_eq!(t, DeliveryTally::default());
+    }
+}

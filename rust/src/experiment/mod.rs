@@ -54,6 +54,7 @@ use crate::adversary::{Adversary, AdversaryPolicy};
 use crate::config::{BackendKind, ExperimentConfig};
 use crate::coordinator::{make_scheduler, Scheduler};
 use crate::data::{dirichlet_partition, Dataset};
+use crate::delivery::Delivery;
 use crate::metrics::RunResult;
 use crate::network::EdgeNetwork;
 use crate::scenario::Scenario;
@@ -137,6 +138,11 @@ pub struct Experiment {
     /// policies applied at the model-exchange boundary in both backends
     /// (inactive — and branch-free on the hot path — by default).
     pub adversary: Adversary,
+    /// The reliable delivery layer (`faults.*` knobs): every pull edge
+    /// in both backends is resolved through its deterministic per-link
+    /// fault model and ack/retry protocol (inactive — and branch-free
+    /// on the hot path — under the default `clean` profile).
+    pub delivery: Delivery,
     pub(crate) trainer: Box<dyn Trainer>,
     pub(crate) scheduler: Box<dyn Scheduler>,
     pub(crate) rng: Pcg,
@@ -383,6 +389,12 @@ impl ExperimentBuilder {
             adversary.observe_init(i, &w.params);
         }
 
+        // delivery is stateless (config + seed): each pull edge's fate is
+        // a pure function of (seed, round, from, to) via its own dedicated
+        // RNG stream, so faults never perturb the substrate construction
+        // above (clean profile ⇒ every edge CLEAN ⇒ pre-delivery bits)
+        let delivery = Delivery::from_config(&cfg.faults, cfg.seed);
+
         Ok(Experiment {
             cfg,
             net,
@@ -393,6 +405,7 @@ impl ExperimentBuilder {
             scenario,
             transport,
             adversary,
+            delivery,
             trainer,
             scheduler,
             rng,

@@ -136,6 +136,9 @@ mod tests {
             avg_staleness: 0.5,
             max_staleness: 1,
             train_loss: 0.9,
+            retransmissions: 0,
+            dropped_msgs: 0,
+            corrupt_detected: 0,
         }
     }
 

@@ -44,6 +44,20 @@
 //! delays and the byte ledger both consume the codec's encoded message
 //! size. Under the default `dense` codec the layer vanishes: workers
 //! read published snapshots directly, exactly as before.
+//!
+//! # Delivery
+//!
+//! Faults and ack-timeouts inject on the real channels: the coordinator
+//! resolves every pull edge through the reliable delivery layer
+//! ([`crate::delivery`]) *before* dispatching EXECUTE — the same pure
+//! `(seed, round, from, to)` streams the virtual-clock engine draws, so
+//! both backends' delivery/byte ledgers agree for the same seed. A
+//! delivered edge's emulated delay stretches by its retries/backoff; a
+//! dead-lettered sender is removed from the message (the receiver
+//! aggregates without it, gracefully) but its burned retry window is
+//! still slept out. Because this backend is pull-only with no in-flight
+//! models, the crash-drop ledger entry (`crash_dropped`) is always zero
+//! here — part of the documented Crash≡Leave asymmetry above.
 
 use super::observer::{ObserverChain, RunRecorder};
 use super::{Backend, Experiment, ExperimentError};
@@ -51,6 +65,7 @@ use crate::adversary::Aggregator;
 use crate::config::{ExperimentConfig, TrainerKind};
 use crate::coordinator::{SchedView, SchedulerParams};
 use crate::data::Dataset;
+use crate::delivery::DeliveryTally;
 use crate::metrics::{EvalRecord, EventRecord, RoundRecord, RunResult};
 use crate::scenario::ScenarioEvent;
 use crate::worker::{data_size_weights, NativeTrainer, Trainer};
@@ -69,6 +84,8 @@ struct Published {
 enum Execute {
     /// Pull from these neighbors, then aggregate + train.
     Round {
+        /// Pull sources that actually delivered (dead-lettered senders
+        /// are already removed by the coordinator's delivery pass).
         neighbors: Vec<usize>,
         pull_delays_ms: Vec<u64>,
         /// Decoded neighbor models (transport layer), aligned with
@@ -76,6 +93,10 @@ enum Execute {
         /// the published snapshots directly, exactly as before the
         /// transport layer existed.
         models: Option<Vec<Vec<f32>>>,
+        /// Burned retry window of this round's dead-lettered pull
+        /// edges, if any: the receiver waited out the budget before
+        /// degrading, so the wait is slept even though nothing arrived.
+        dead_wait_ms: u64,
     },
     Shutdown,
 }
@@ -144,6 +165,7 @@ fn run_threaded(
         scenario,
         mut transport,
         mut adversary,
+        delivery,
         mut trainer,
         mut scheduler,
         mut rng,
@@ -344,18 +366,42 @@ fn run_threaded(
             }
         }
 
-        // dispatch EXECUTE to the active workers with realised delays
+        // dispatch EXECUTE to the active workers with realised delays,
+        // resolving each pull edge through the delivery layer first:
+        // the same pure (seed, round, from, to) streams the
+        // virtual-clock engine draws, so both backends produce the same
+        // delivery ledger for the same seed. Dead-lettered senders are
+        // removed from the message; their burned retry window rides
+        // along as dead_wait_ms.
+        let mut tally = DeliveryTally::default();
         let round_t0 = Instant::now();
         for (k, &i) in plan.active.iter().enumerate() {
-            let delays: Vec<u64> = plan.pulls_from[k]
-                .iter()
-                .map(|&j| {
-                    let t = net.transfer_time_s(j, i, wire_bits, &mut rng);
-                    (t * opts.time_scale) as u64
-                })
-                .collect();
+            let mut neighbors: Vec<usize> =
+                Vec::with_capacity(plan.pulls_from[k].len());
+            let mut delays: Vec<u64> =
+                Vec::with_capacity(plan.pulls_from[k].len());
+            let mut dead_wait_ms = 0u64;
             for &j in &plan.pulls_from[k] {
+                let t = net.transfer_time_s(j, i, wire_bits, &mut rng);
+                let out = delivery.resolve(round as u64, j, i);
+                tally.add(&out);
+                // pull history stays plan-level: a dead-lettered edge
+                // was still attempted (and charged) — same as the
+                // virtual-clock engine
                 pulls[i][j] += 1;
+                let d = (out.time_s(t) * opts.time_scale) as u64;
+                if out.delivered {
+                    neighbors.push(j);
+                    delays.push(d);
+                } else {
+                    dead_wait_ms = dead_wait_ms.max(d);
+                    chain.scenario_event(&EventRecord {
+                        round,
+                        kind: "dead-letter",
+                        worker: Some(i),
+                        population: p,
+                    });
+                }
             }
             let models = if transport.is_dense() {
                 if adv_active {
@@ -364,7 +410,7 @@ fn run_threaded(
                     // observed: ship the adversary's wire copies instead
                     // of letting receivers read published snapshots.
                     Some(
-                        plan.pulls_from[k]
+                        neighbors
                             .iter()
                             .map(|&j| {
                                 let p = published[j].lock().unwrap();
@@ -379,7 +425,7 @@ fn run_threaded(
                 }
             } else {
                 Some(
-                    plan.pulls_from[k]
+                    neighbors
                         .iter()
                         .map(|&j| {
                             transport
@@ -392,9 +438,10 @@ fn run_threaded(
             };
             exec_txs[i]
                 .send(Execute::Round {
-                    neighbors: plan.pulls_from[k].clone(),
+                    neighbors,
                     pull_delays_ms: delays,
                     models,
+                    dead_wait_ms,
                 })
                 .map_err(|_| {
                     ExperimentError::Backend(format!(
@@ -462,7 +509,11 @@ fn run_threaded(
 
         let transfers = plan.transfers();
         cum_transfers += transfers;
-        let bytes_sent = transfers as f64 * transport.message_bytes();
+        // byte ledger: planned transfers plus every delivery
+        // retransmission, at the codec's measured wire size (clean
+        // profile: zero retransmissions — the old ledger exactly)
+        let bytes_sent = (transfers + tally.retransmissions) as f64
+            * transport.message_bytes();
         cum_bytes += bytes_sent;
         let mut tau_sum = 0u64;
         let mut max_tau = 0u64;
@@ -482,6 +533,9 @@ fn run_threaded(
             avg_staleness: tau_sum as f64 / p as f64,
             max_staleness: max_tau,
             train_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
+            retransmissions: tally.retransmissions,
+            dropped_msgs: tally.dropped_msgs(),
+            corrupt_detected: tally.corrupt,
         });
 
         if round % cfg.eval_every.max(1) == 0 || round == cfg.rounds {
@@ -537,7 +591,12 @@ fn worker_loop(
     while let Ok(msg) = rx.recv() {
         match msg {
             Execute::Shutdown => break,
-            Execute::Round { neighbors, pull_delays_ms, models: decoded } => {
+            Execute::Round {
+                neighbors,
+                pull_delays_ms,
+                models: decoded,
+                dead_wait_ms,
+            } => {
                 // PULL: read each neighbor's published snapshot (the
                 // "pushing thread" contract), paying the channel delay.
                 // Under a non-dense codec the coordinator already
@@ -552,8 +611,14 @@ fn worker_loop(
                     models.push(own.params.clone());
                     sizes.push(own.data_size);
                 }
-                let worst_delay =
-                    pull_delays_ms.iter().copied().max().unwrap_or(0);
+                // dead-lettered edges deliver nothing but their retry
+                // window was still waited out before degrading
+                let worst_delay = pull_delays_ms
+                    .iter()
+                    .copied()
+                    .max()
+                    .unwrap_or(0)
+                    .max(dead_wait_ms);
                 match decoded {
                     Some(dec) => {
                         debug_assert_eq!(dec.len(), neighbors.len());

@@ -53,6 +53,20 @@
 //! `BandwidthShift`/`MobilityBurst` channel dynamics. The default
 //! `dense` codec is the stateless identity — bit-identical semantics
 //! and byte accounting to the pre-transport engine.
+//!
+//! # Delivery
+//!
+//! Every pull edge additionally resolves through the reliable delivery
+//! layer ([`crate::delivery`]): the per-link fault model decides loss /
+//! duplication / CRC-detected corruption / latency spikes, and the
+//! ack/retry protocol either delivers within the retry budget
+//! (retransmissions charged real measured bytes) or dead-letters the
+//! edge — the receiver degrades gracefully, aggregating whatever
+//! arrived, while the wasted retry window still bounds H_t. Outcomes
+//! are pure functions of `(seed, round, from, to)` on a dedicated RNG
+//! stream, so thread count and dispatch order cannot perturb them, and
+//! the default `faults.profile=clean` is knob-inert (every edge
+//! resolves to the lossless identity without touching an RNG).
 
 use super::observer::{ObserverChain, RunRecorder};
 use super::{Backend, Experiment, ExperimentError};
@@ -60,6 +74,7 @@ use crate::adversary::{Adversary, Aggregator};
 use crate::config::{AdversaryConfig, ExperimentConfig};
 use crate::coordinator::{RoundPlan, SchedView, Scheduler, SchedulerParams};
 use crate::data::Dataset;
+use crate::delivery::{Delivery, DeliveryTally};
 use crate::metrics::{EvalRecord, EventRecord, RoundRecord, RunResult};
 use crate::network::EdgeNetwork;
 use crate::scenario::{Scenario, ScenarioEvent};
@@ -152,6 +167,10 @@ struct RoundCtx<'a> {
     /// its exchange view; `transmit` happened on the coordinator before
     /// the tasks were spawned.
     adversary: &'a Adversary,
+    /// Delivery layer (stateless): each pull edge's fate is a pure
+    /// function of `(seed, round, from, to)`, so tasks resolve without
+    /// coordination and any dispatch order yields the same ledger.
+    delivery: &'a Delivery,
     /// Wire size of one encoded message, bits — what every realized
     /// transfer time consumes. Equals `model_bits` under `dense`.
     wire_bits: f64,
@@ -164,6 +183,12 @@ struct ActOut {
     duration_s: f64,
     params: Params,
     loss: f64,
+    /// This activation's delivery ledger (its pull edges only), folded
+    /// into the round tally on the coordinator in plan order.
+    tally: DeliveryTally,
+    /// Pull senders whose retry budget exhausted: the receiver
+    /// aggregated without them (empty under the clean profile).
+    dead: Vec<usize>,
 }
 
 /// Execute one activation: realised pull/push transfer times (Eqs. 7–9),
@@ -183,12 +208,24 @@ fn run_activation(
     );
     // --- realised round duration (Eqs. 7–9) ---
     // pulls beyond the radio's orthogonal channels serialize: K transfers
-    // take ⌈K/channels⌉ slots of the worst link time
+    // take ⌈K/channels⌉ slots of the worst link time. Each pull edge
+    // also resolves through the delivery layer: retries and backoff
+    // stretch its realised time, and a dead-lettered edge still bounds
+    // the round (the receiver waited out the retry budget) even though
+    // its payload never arrives.
     let channels = ctx.cfg.network.channels.max(1);
-    let worst_pull = ctx.plan.pulls_from[k]
-        .iter()
-        .map(|&j| ctx.net.transfer_time_s(j, i, ctx.wire_bits, &mut rng))
-        .fold(0.0f64, f64::max);
+    let mut tally = DeliveryTally::default();
+    let mut dead: Vec<usize> = Vec::new();
+    let mut worst_pull = 0.0f64;
+    for &j in &ctx.plan.pulls_from[k] {
+        let base = ctx.net.transfer_time_s(j, i, ctx.wire_bits, &mut rng);
+        let out = ctx.delivery.resolve(ctx.round as u64, j, i);
+        tally.add(&out);
+        if !out.delivered {
+            dead.push(j);
+        }
+        worst_pull = worst_pull.max(out.time_s(base));
+    }
     let pull_slots = ctx.plan.pulls_from[k].len().div_ceil(channels);
     // pushes originating at i (SA-ADFL's send-to-all) also occupy its
     // radio, serialized the same way
@@ -207,9 +244,18 @@ fn run_activation(
         + worst_push * push_slots as f64;
 
     // --- aggregate (Eq. 4) over the pre-round snapshot ---
+    // graceful degradation: dead-lettered senders never arrived, so
+    // they are excluded here — but their *older* pushed models already
+    // sitting in the inbox still participate below (the receiver
+    // aggregates whatever it has, exactly the staleness semantics)
     scr.srcs.clear();
     scr.srcs.push(i);
-    scr.srcs.extend(ctx.plan.pulls_from[k].iter().copied());
+    scr.srcs.extend(
+        ctx.plan.pulls_from[k]
+            .iter()
+            .copied()
+            .filter(|j| !dead.contains(j)),
+    );
     // own model is local (never transmitted); pulled neighbors arrive
     // through the transport layer — the receiver aggregates the codec
     // reconstruction, which under `dense` is the sender's exact params
@@ -219,7 +265,7 @@ fn run_activation(
     let dense = ctx.transport.is_dense();
     let mut models: Vec<&[f32]> = Vec::with_capacity(scr.srcs.len());
     models.push(ctx.workers[i].params.as_slice());
-    models.extend(ctx.plan.pulls_from[k].iter().map(|&j| {
+    models.extend(scr.srcs[1..].iter().map(|&j| {
         ctx.adversary.exchange_view(
             j,
             ctx.transport.view(j, &ctx.workers[j].params),
@@ -250,7 +296,7 @@ fn run_activation(
         ctx.cfg.lr,
         &mut rng,
     );
-    ActOut { k, duration_s, params, loss }
+    ActOut { k, duration_s, params, loss, tally, dead }
 }
 
 /// Estimated per-present-worker round cost H_t^i (Eq. 8): residual
@@ -331,6 +377,11 @@ pub struct VirtualClockEngine {
     /// Adversary layer: every outgoing payload routes through its
     /// coordinator-side `transmit` before the codec encodes it.
     adversary: Adversary,
+    /// Reliable delivery layer: stateless per-edge fault resolution.
+    delivery: Delivery,
+    /// Per-round delivery ledger (includes scenario-crash in-flight
+    /// drops), flushed into each [`RoundRecord`] and re-zeroed.
+    tally: DeliveryTally,
     /// Cached `transport.message_bits()` (== `model_bits` under dense).
     wire_bits: f64,
     /// Cumulative measured wire bytes (transport layer).
@@ -402,6 +453,8 @@ impl VirtualClockEngine {
             scenario: exp.scenario,
             transport: exp.transport,
             adversary: exp.adversary,
+            delivery: exp.delivery,
+            tally: DeliveryTally::default(),
             wire_bits,
             cum_bytes: 0.0,
             pull_srcs: Vec::new(),
@@ -461,6 +514,7 @@ impl VirtualClockEngine {
         let pulls = &mut self.pulls;
         let trainer = &self.trainer;
         let transport = &mut self.transport;
+        let tally = &mut self.tally;
         let seed = self.cfg.seed;
         let observers = &mut self.observers;
         crate::scenario::apply_round_events(
@@ -481,12 +535,15 @@ impl VirtualClockEngine {
                     }
                     // crash = no notice: its in-flight models (pushes
                     // already delivered but not merged) drop everywhere
+                    // — routed through the delivery ledger so the loss
+                    // lands in this round's `dropped_msgs`
                     for ib in inbox.iter_mut() {
                         if let Some(pos) =
                             ib.iter().position(|(f, _)| *f == worker)
                         {
                             let (_, buf) = ib.swap_remove(pos);
                             inbox_free.push(buf);
+                            tally.crash_dropped += 1;
                         }
                     }
                 }
@@ -602,6 +659,7 @@ impl VirtualClockEngine {
             plan,
             transport: &self.transport,
             adversary: &self.adversary,
+            delivery: &self.delivery,
             wire_bits: self.wire_bits,
             round: self.round,
         };
@@ -699,12 +757,27 @@ impl VirtualClockEngine {
         self.losses.clear();
         for o in outs {
             let i = plan.active[o.k];
+            // fold the activation's delivery ledger (fixed plan order)
+            // and log each dead-lettered edge as a graceful-degradation
+            // event on its receiver
+            self.tally.merge(&o.tally);
+            for _ in &o.dead {
+                self.observers.scenario_event(&EventRecord {
+                    round: self.round,
+                    kind: "dead-letter",
+                    worker: Some(i),
+                    population: self.ids.len(),
+                });
+            }
             // recycle the replaced parameter buffer for future pushes
             let old =
                 std::mem::replace(&mut self.workers[i].params, o.params);
             self.inbox_free.push(old);
             self.workers[i].last_loss = o.loss;
             self.losses.push(o.loss);
+            // pull history stays plan-level: a dead-lettered edge was
+            // still attempted (and charged), so PTCA's Eq. 47 history
+            // counts it like any other planned pull
             for &j in &plan.pulls_from[o.k] {
                 self.pulls[i][j] += 1;
             }
@@ -811,8 +884,11 @@ impl VirtualClockEngine {
         let transfers = plan.transfers();
         self.cum_transfers += transfers;
         // unicast byte ledger: one encoded message per transfer edge
-        // (dense: exactly transfers × model_bits / 8, the old ledger)
-        let bytes_sent = transfers as f64 * self.transport.message_bytes();
+        // plus every delivery retransmission, all at the codec's
+        // measured wire size (clean profile: zero retransmissions —
+        // exactly transfers × message_bytes, the old ledger)
+        let bytes_sent = (transfers + self.tally.retransmissions) as f64
+            * self.transport.message_bytes();
         self.cum_bytes += bytes_sent;
         let mut tau_sum = 0.0f64;
         let mut max_tau = 0u64;
@@ -839,8 +915,12 @@ impl VirtualClockEngine {
             avg_staleness: avg_tau,
             max_staleness: max_tau,
             train_loss,
+            retransmissions: self.tally.retransmissions,
+            dropped_msgs: self.tally.dropped_msgs(),
+            corrupt_detected: self.tally.corrupt,
         };
         self.observers.round_end(&rec);
+        self.tally.clear();
     }
 
     /// Evaluate the average of all (or a sampled fraction of) *present*

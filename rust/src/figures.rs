@@ -474,6 +474,59 @@ pub fn fig_adversary(out: &Path, scale: FigScale) -> std::io::Result<()> {
     )
 }
 
+/// Fig. 30 (beyond the paper) — the delivery axis: final accuracy and
+/// measured communication (GB) vs link loss rate for DySTop against the
+/// baselines, with the reliable delivery protocol engaged
+/// (`faults.retries=3`) and disabled (`retries=0`: every lost frame
+/// dead-letters its edge). With retries, loss costs wire bytes
+/// (retransmissions) while accuracy holds; without them, loss starves
+/// aggregations instead — the summary CSV pins best accuracy, total GB,
+/// and the retransmission/drop ledgers per (loss, retries, scheduler).
+pub fn fig_lossy(out: &Path, scale: FigScale) -> std::io::Result<()> {
+    let mut lines = Vec::new();
+    for &loss in &[0.0, 0.1, 0.25] {
+        for &retries in &[3usize, 0] {
+            if loss == 0.0 && retries == 0 {
+                continue; // lossless: the retry budget never engages
+            }
+            for kind in COMPARED {
+                let mut cfg = base_cfg(scale);
+                cfg.scheduler = kind;
+                cfg.faults.loss = loss;
+                cfg.faults.retries = retries;
+                let name = format!(
+                    "fig30_loss{loss:.2}_retry{retries}_{}",
+                    kind.name()
+                );
+                let res = run_cached(out, &name, &cfg, None)?;
+                let retrans: usize =
+                    res.rounds.iter().map(|r| r.retransmissions).sum();
+                let dropped: usize =
+                    res.rounds.iter().map(|r| r.dropped_msgs).sum();
+                println!(
+                    "fig30 loss={loss:.2} retries={retries} {:>8}: best \
+                     {:.3} | {:.4} GB | {retrans} retrans | {dropped} dropped",
+                    kind.name(),
+                    res.best_accuracy(),
+                    res.total_comm_gb(),
+                );
+                lines.push(format!(
+                    "{loss},{retries},{},{},{},{retrans},{dropped}",
+                    kind.name(),
+                    res.best_accuracy(),
+                    res.total_comm_gb()
+                ));
+            }
+        }
+    }
+    write_lines(
+        &out.join("fig30_lossy.csv"),
+        "loss,retries,scheduler,best_accuracy,total_comm_gb,\
+         retransmissions,dropped_msgs",
+        &lines,
+    )
+}
+
 /// Dispatch by figure id.
 pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> {
     let go = |r: std::io::Result<()>| r.map_err(|e| e.to_string());
@@ -491,6 +544,7 @@ pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> 
         "27" | "codec" => go(fig_codec(out, scale)),
         "28" | "workload" => go(fig_workload(out, scale)),
         "29" | "adversary" => go(fig_adversary(out, scale)),
+        "30" | "lossy" => go(fig_lossy(out, scale)),
         "all" => {
             go(fig3(out, scale))?;
             go(fig_main(out, scale, &[1.0, 0.7, 0.4]))?;
@@ -502,11 +556,13 @@ pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> 
             go(fig_churn(out, scale))?;
             go(fig_codec(out, scale))?;
             go(fig_workload(out, scale))?;
-            go(fig_adversary(out, scale))
+            go(fig_adversary(out, scale))?;
+            go(fig_lossy(out, scale))
         }
         other => Err(format!(
             "unknown figure {other:?} \
-             (3,4..18,20..25,26|churn,27|codec,28|workload,29|adversary,all)"
+             (3,4..18,20..25,26|churn,27|codec,28|workload,29|adversary,\
+             30|lossy,all)"
         )),
     }
 }
@@ -620,6 +676,41 @@ mod tests {
         assert_eq!(text.lines().count(), 11);
         assert!(dir.join("fig29_linear_benign.csv").exists());
         assert!(dir.join("fig29_mlp_krum.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fig30_lossy_tiny_runs() {
+        let dir = std::env::temp_dir().join("dystop_figtest_lossy");
+        let _ = std::fs::remove_dir_all(&dir);
+        let scale = FigScale { workers: 6, rounds: 10, seed: 5 };
+        fig_lossy(&dir, scale).unwrap();
+        let text =
+            std::fs::read_to_string(dir.join("fig30_lossy.csv")).unwrap();
+        // header + (1 lossless + 2 loss rates × 2 retry modes) × 4
+        assert_eq!(text.lines().count(), 21);
+        assert!(dir.join("fig30_loss0.00_retry3_dystop.csv").exists());
+        assert!(dir.join("fig30_loss0.25_retry0_matcha.csv").exists());
+        // ledgers behave: lossless rows carry zero surcharge; lossy
+        // retrying rows retransmit; retry-less rows drop instead
+        let mut saw_retrans = false;
+        let mut saw_dropped = false;
+        for l in text.lines().skip(1) {
+            let f: Vec<&str> = l.split(',').collect();
+            let (loss, retries) = (f[0], f[1]);
+            let retrans: usize = f[5].parse().unwrap();
+            let dropped: usize = f[6].parse().unwrap();
+            if loss == "0" {
+                assert_eq!(retrans + dropped, 0, "lossless surcharge: {l}");
+            }
+            if retries == "0" {
+                assert_eq!(retrans, 0, "no retries ⇒ no retransmits: {l}");
+            }
+            saw_retrans |= retrans > 0;
+            saw_dropped |= dropped > 0;
+        }
+        assert!(saw_retrans, "lossy retrying runs must retransmit");
+        assert!(saw_dropped, "retry-less lossy runs must drop");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -14,6 +14,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod delivery;
 pub mod experiment;
 pub mod figures;
 pub mod metrics;

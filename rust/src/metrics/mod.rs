@@ -32,6 +32,17 @@ pub struct RoundRecord {
     pub max_staleness: u64,
     /// Mean training loss over the workers that trained this round.
     pub train_loss: f64,
+    /// Frames retransmitted by the delivery layer this round (delivery
+    /// layer — 0 under the default `faults.profile=clean`). Each one is
+    /// charged real measured bytes in `bytes_sent`.
+    pub retransmissions: usize,
+    /// Messages that never reached an aggregation this round: frames
+    /// lost in transit plus in-flight models dropped by scenario
+    /// `Crash` events (routed through the delivery ledger).
+    pub dropped_msgs: usize,
+    /// Frames that arrived corrupted and were rejected by the CRC32
+    /// check this round (then retried like a loss).
+    pub corrupt_detected: usize,
 }
 
 /// One applied scenario event (population or environment change). Only
@@ -42,7 +53,9 @@ pub struct EventRecord {
     /// Round at whose start the event applied (1-based).
     pub round: usize,
     /// Event tag: `leave`, `crash`, `join`, `rejoin`, `bandwidth-shift`,
-    /// `mobility-burst`, `region-partition`.
+    /// `mobility-burst`, `region-partition`, plus the delivery layer's
+    /// `dead-letter` (a pull edge exhausted its retry budget; `worker`
+    /// is the receiver that degraded gracefully).
     pub kind: &'static str,
     /// Affected worker (global id) for population events; `None` for
     /// environment-wide events.
@@ -152,6 +165,9 @@ impl RunResult {
                     && x.avg_staleness.to_bits() == y.avg_staleness.to_bits()
                     && x.max_staleness == y.max_staleness
                     && x.train_loss.to_bits() == y.train_loss.to_bits()
+                    && x.retransmissions == y.retransmissions
+                    && x.dropped_msgs == y.dropped_msgs
+                    && x.corrupt_detected == y.corrupt_detected
             })
             && self.evals.iter().zip(&other.evals).all(|(x, y)| {
                 x.round == y.round
@@ -217,12 +233,12 @@ impl RunResult {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,time_s,duration_s,active,population,adversaries,transfers,bytes_sent,avg_staleness,max_staleness,train_loss"
+            "round,time_s,duration_s,active,population,adversaries,transfers,bytes_sent,avg_staleness,max_staleness,train_loss,retransmissions,dropped_msgs,corrupt_detected"
         )?;
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{:.4},{:.4},{},{},{},{},{:.0},{:.4},{},{:.6}",
+                "{},{:.4},{:.4},{},{},{},{},{:.0},{:.4},{},{:.6},{},{},{}",
                 r.round,
                 r.time_s,
                 r.duration_s,
@@ -234,6 +250,9 @@ impl RunResult {
                 r.avg_staleness,
                 r.max_staleness,
                 r.train_loss,
+                r.retransmissions,
+                r.dropped_msgs,
+                r.corrupt_detected,
             )?;
         }
         Ok(())
@@ -283,6 +302,9 @@ mod tests {
                     avg_staleness: t as f64,
                     max_staleness: t as u64,
                     train_loss: 1.0 / (t + 1) as f64,
+                    retransmissions: 0,
+                    dropped_msgs: 0,
+                    corrupt_detected: 0,
                 })
                 .collect(),
             evals: vec![
@@ -373,5 +395,37 @@ mod tests {
         let mut g = sample();
         g.rounds[0].adversaries = 1;
         assert!(!a.bits_eq(&g));
+        // and the delivery ledger columns
+        let mut h = sample();
+        h.rounds[0].retransmissions = 1;
+        assert!(!a.bits_eq(&h));
+        let mut i = sample();
+        i.rounds[0].dropped_msgs = 1;
+        assert!(!a.bits_eq(&i));
+        let mut j = sample();
+        j.rounds[0].corrupt_detected = 1;
+        assert!(!a.bits_eq(&j));
+    }
+
+    #[test]
+    fn rounds_csv_carries_the_delivery_columns() {
+        let mut r = sample();
+        r.rounds[1].retransmissions = 4;
+        r.rounds[1].dropped_msgs = 2;
+        r.rounds[1].corrupt_detected = 1;
+        let dir = std::env::temp_dir().join("dystop_metrics_delivery_test");
+        let path = dir.join("rounds.csv");
+        r.write_rounds_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text
+            .lines()
+            .next()
+            .unwrap()
+            .ends_with("retransmissions,dropped_msgs,corrupt_detected"));
+        assert!(
+            text.lines().nth(2).unwrap().ends_with(",4,2,1"),
+            "{text}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,384 @@
+//! Delivery-layer contracts:
+//!
+//! * **conservation** — every round's recorded ledger
+//!   (`retransmissions`/`dropped_msgs`/`corrupt_detected`, the byte
+//!   surcharge, the dead-letter events) matches an *independent*
+//!   recomputation from the captured round plans via the pure per-edge
+//!   resolution, and every planned pull edge ends delivered or
+//!   dead-lettered with every frame accounted exactly once;
+//! * **integrity** — the CRC32 frame check catches every injected
+//!   single-bit flip;
+//! * **idempotence** — duplicated frames are charged wire bytes but
+//!   never double-aggregate (the model trajectory is bit-identical to a
+//!   duplicate-free run);
+//! * **knob-inertness** — zero fault rates are bit-identical regardless
+//!   of the protocol knobs, across codecs and models;
+//! * **determinism** — an actively-faulty run is bit-identical across
+//!   thread counts.
+//!
+//! Because both backends charge the ledger through the same pure
+//! function of `(seed, round, plan)` — pinned here against the
+//! recomputation witness for each backend separately — two backends
+//! given the same seed and plans necessarily produce the same
+//! delivery/byte ledger.
+//!
+//! The CI fault matrix re-runs this suite with `DYSTOP_FAULTS_PROFILE`
+//! varied; [`FaultProfile::from_env_or`] routes that knob through the
+//! end-to-end smoke below.
+
+use dystop::config::{
+    BackendKind, CodecKind, ExperimentConfig, FaultConfig, FaultProfile,
+    ModelArch, SchedulerKind,
+};
+use dystop::coordinator::RoundPlan;
+use dystop::delivery::{Delivery, DeliveryTally, Frame};
+use dystop::experiment::{
+    Experiment, RoundObserver, TestbedOptions, ThreadedBackend,
+};
+use dystop::metrics::RunResult;
+use dystop::scenario::{Scenario, ScenarioEvent};
+use dystop::util::prop::forall_seeded;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+fn base_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        workers: 10,
+        rounds: 8,
+        train_per_worker: 48,
+        test_samples: 64,
+        eval_every: 4,
+        seed: 42,
+        target_accuracy: 2.0,
+        ..Default::default()
+    }
+}
+
+/// Observer capturing every validated (global-id) round plan.
+struct PlanTap(Rc<RefCell<Vec<RoundPlan>>>);
+
+impl RoundObserver for PlanTap {
+    fn on_plan(&mut self, _round: usize, plan: &RoundPlan) {
+        self.0.borrow_mut().push(plan.clone());
+    }
+}
+
+fn run_with_plans(
+    cfg: ExperimentConfig,
+    backend: BackendKind,
+) -> (RunResult, Vec<RoundPlan>) {
+    let plans = Rc::new(RefCell::new(Vec::new()));
+    let builder =
+        Experiment::builder(cfg).observer(Box::new(PlanTap(plans.clone())));
+    let res = match backend {
+        BackendKind::Sim => builder.backend(BackendKind::Sim).run().unwrap(),
+        BackendKind::Testbed => builder
+            .backend_impl(Box::new(ThreadedBackend::with_options(
+                TestbedOptions { time_scale: 2.0, profile: false },
+            )))
+            .run()
+            .unwrap(),
+    };
+    let captured = plans.borrow().clone();
+    (res, captured)
+}
+
+/// Recompute the ledger a backend must have charged for `plans` straight
+/// from the pure per-edge resolution — the independent witness that
+/// conservation and cross-backend agreement rest on.
+fn expected_tallies(
+    faults: &FaultConfig,
+    seed: u64,
+    plans: &[RoundPlan],
+) -> Vec<DeliveryTally> {
+    let delivery = Delivery::from_config(faults, seed);
+    plans
+        .iter()
+        .enumerate()
+        .map(|(r, plan)| {
+            let round = (r + 1) as u64;
+            let mut t = DeliveryTally::default();
+            for (k, &i) in plan.active.iter().enumerate() {
+                for &j in &plan.pulls_from[k] {
+                    t.add(&delivery.resolve(round, j, i));
+                }
+            }
+            t
+        })
+        .collect()
+}
+
+fn assert_ledger_matches(
+    res: &RunResult,
+    plans: &[RoundPlan],
+    expect: &[DeliveryTally],
+) {
+    assert_eq!(plans.len(), res.rounds.len());
+    let msg_bytes = res.model_bits / 8.0; // dense codec
+    for (rec, (want, plan)) in
+        res.rounds.iter().zip(expect.iter().zip(plans))
+    {
+        let r = rec.round;
+        assert_eq!(rec.retransmissions, want.retransmissions, "round {r}");
+        assert_eq!(rec.dropped_msgs, want.dropped_msgs(), "round {r}");
+        assert_eq!(rec.corrupt_detected, want.corrupt, "round {r}");
+        // conservation: every planned pull edge ends delivered or
+        // dead-lettered; every frame is accepted, discarded as a
+        // duplicate, dropped in transit, or rejected by CRC
+        let pull_edges: usize =
+            plan.pulls_from.iter().map(|v| v.len()).sum();
+        assert_eq!(want.delivered + want.dead_lettered, pull_edges);
+        assert_eq!(
+            want.frames,
+            want.delivered + want.duplicates + want.lost + want.corrupt
+        );
+        assert_eq!(want.frames, pull_edges + want.retransmissions);
+        // retransmitted frames are charged real measured bytes
+        let expect_bytes =
+            (plan.transfers() + want.retransmissions) as f64 * msg_bytes;
+        assert!(
+            (rec.bytes_sent - expect_bytes).abs()
+                <= 1e-6 * expect_bytes.max(1.0),
+            "round {r}: bytes {} != {expect_bytes}",
+            rec.bytes_sent
+        );
+    }
+    let dead_events =
+        res.events.iter().filter(|e| e.kind == "dead-letter").count();
+    let dead_total: usize = expect.iter().map(|t| t.dead_lettered).sum();
+    assert_eq!(dead_events, dead_total, "dead-letter event ledger");
+}
+
+// --- conservation + ledger agreement, both backends ------------------
+
+#[test]
+fn sim_ledger_matches_independent_edge_resolution() {
+    for profile in [FaultProfile::Wifi, FaultProfile::Hostile] {
+        let mut cfg = base_cfg();
+        cfg.faults = FaultConfig::preset(profile);
+        let (faults, seed) = (cfg.faults, cfg.seed);
+        let (res, plans) = run_with_plans(cfg, BackendKind::Sim);
+        let expect = expected_tallies(&faults, seed, &plans);
+        assert_ledger_matches(&res, &plans, &expect);
+    }
+}
+
+#[test]
+fn threaded_ledger_matches_independent_edge_resolution() {
+    let mut cfg = base_cfg();
+    cfg.rounds = 5;
+    cfg.compute_mean_s = 0.5;
+    cfg.faults = FaultConfig::preset(FaultProfile::Cellular);
+    let (faults, seed) = (cfg.faults, cfg.seed);
+    let (res, plans) = run_with_plans(cfg, BackendKind::Testbed);
+    let expect = expected_tallies(&faults, seed, &plans);
+    assert_ledger_matches(&res, &plans, &expect);
+}
+
+// --- CRC integrity ----------------------------------------------------
+
+#[test]
+fn crc_detects_every_injected_single_bit_flip() {
+    forall_seeded(0xC2C, 16, |rng| {
+        let len = 1 + rng.below_usize(64);
+        let payload: Vec<u8> =
+            (0..len).map(|_| rng.below_usize(256) as u8).collect();
+        let frame = Frame::new(rng.below_usize(1 << 20) as u64, payload);
+        assert!(frame.check());
+        for bit in 0..len * 8 {
+            let mut f = frame.clone();
+            f.flip_bit(bit);
+            assert!(!f.check(), "bit {bit} of {len} bytes went undetected");
+        }
+    });
+}
+
+// --- duplicate suppression --------------------------------------------
+
+#[test]
+fn duplicate_frames_never_double_aggregate() {
+    let clean = Experiment::builder(base_cfg())
+        .backend(BackendKind::Sim)
+        .run()
+        .unwrap();
+    let mut cfg = base_cfg();
+    cfg.faults.dup = 1.0; // every delivery trails a suppressed duplicate
+    let dup = Experiment::builder(cfg)
+        .backend(BackendKind::Sim)
+        .run()
+        .unwrap();
+    // the model trajectory is bit-identical: duplicates are discarded by
+    // the sequence check before aggregation
+    assert_eq!(clean.evals.len(), dup.evals.len());
+    for (a, b) in clean.evals.iter().zip(&dup.evals) {
+        assert_eq!(a.avg_accuracy.to_bits(), b.avg_accuracy.to_bits());
+        assert_eq!(a.avg_loss.to_bits(), b.avg_loss.to_bits());
+    }
+    let mut surcharge = 0usize;
+    for (a, b) in clean.rounds.iter().zip(&dup.rounds) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits());
+        assert_eq!(a.transfers, b.transfers);
+        // ...but every duplicate is charged on the wire
+        assert_eq!(a.retransmissions, 0);
+        assert!(b.bytes_sent >= a.bytes_sent);
+        assert_eq!(b.dropped_msgs, 0);
+        assert_eq!(b.corrupt_detected, 0);
+        surcharge += b.retransmissions;
+    }
+    assert!(surcharge > 0, "dup=1.0 must retransmit on every pull edge");
+}
+
+// --- knob-inertness of the clean profile ------------------------------
+
+#[test]
+fn clean_profile_is_knob_inert_across_codec_and_model() {
+    for (codec, model) in [
+        (CodecKind::Dense, ModelArch::Linear),
+        (CodecKind::TopK, ModelArch::Linear),
+        (CodecKind::Int8, ModelArch::Mlp),
+    ] {
+        let mut cfg = base_cfg();
+        cfg.rounds = 5;
+        cfg.transport.codec = codec;
+        cfg.workload.model = model;
+        let base = Experiment::builder(cfg.clone())
+            .backend(BackendKind::Sim)
+            .run()
+            .unwrap();
+        // zero fault rates ⇒ inactive, whatever the protocol knobs say
+        let mut knobbed = cfg.clone();
+        knobbed.faults = FaultConfig {
+            retries: 9,
+            backoff_base_s: 7.0,
+            backoff_cap_s: 30.0,
+            jitter: 0.9,
+            delay_spike_factor: 16.0,
+            ..FaultConfig::preset(FaultProfile::Clean)
+        };
+        let tweaked = Experiment::builder(knobbed)
+            .backend(BackendKind::Sim)
+            .run()
+            .unwrap();
+        assert!(
+            base.bits_eq(&tweaked),
+            "clean not inert under codec={codec:?} model={model:?}"
+        );
+        assert!(base.rounds.iter().all(|r| r.retransmissions == 0
+            && r.dropped_msgs == 0
+            && r.corrupt_detected == 0));
+        // the pin is meaningful: an active profile must diverge
+        let mut lossy = cfg.clone();
+        lossy.faults = FaultConfig::preset(FaultProfile::Hostile);
+        let hostile = Experiment::builder(lossy)
+            .backend(BackendKind::Sim)
+            .run()
+            .unwrap();
+        assert!(
+            !base.bits_eq(&hostile),
+            "hostile left no trace under codec={codec:?} model={model:?}"
+        );
+    }
+}
+
+// --- determinism under active faults ----------------------------------
+
+#[test]
+fn determinism_lossy_threads_1_vs_4() {
+    let mk = |threads: usize| {
+        let mut cfg = base_cfg();
+        cfg.workers = 12;
+        cfg.rounds = 6;
+        cfg.threads = threads;
+        cfg.faults = FaultConfig::preset(FaultProfile::Cellular);
+        Experiment::builder(cfg)
+            .backend(BackendKind::Sim)
+            .run()
+            .unwrap()
+    };
+    let a = mk(1);
+    let b = mk(4);
+    assert!(a.bits_eq(&b), "lossy run must be thread-count invariant");
+    // the witness is live: faults actually fired
+    assert!(a.rounds.iter().any(|r| r.retransmissions > 0
+        || r.dropped_msgs > 0
+        || r.corrupt_detected > 0));
+}
+
+// --- scenario interplay: crash drops route through the ledger ---------
+
+#[test]
+fn crash_in_flight_models_land_in_the_dropped_ledger() {
+    // SA-ADFL: round 1 activates exactly one worker, which pushes to all
+    // its neighbors; nothing is consumed before the round-2 boundary. A
+    // scripted crash of that worker at round 2 therefore drops exactly
+    // round 1's pushes — the in-flight models that used to vanish
+    // without a trace.
+    let mut cfg = base_cfg();
+    cfg.scheduler = SchedulerKind::SaAdfl;
+    // bench-top geometry: everyone in range, so round 1 has pushes
+    cfg.network.region_m = 20.0;
+    cfg.network.comm_range_m = 30.0;
+    cfg.network.mobility_m = 0.0;
+    let (probe, plans) = run_with_plans(cfg.clone(), BackendKind::Sim);
+    let w = plans[0].active[0];
+    let pushed = plans[0].pushes.len();
+    assert!(pushed > 0, "round 1 pushed nothing; widen the network");
+    assert!(probe.rounds.iter().all(|r| r.dropped_msgs == 0));
+    let script =
+        Scenario::from_events(vec![(2, ScenarioEvent::Crash { worker: w })]);
+    let res = Experiment::builder(cfg)
+        .backend(BackendKind::Sim)
+        .scenario(script)
+        .run()
+        .unwrap();
+    assert_eq!(res.rounds[1].round, 2);
+    assert_eq!(
+        res.rounds[1].dropped_msgs, pushed,
+        "every in-flight model dropped by the crash must be accounted"
+    );
+    // crash-routed, not transit loss: no retransmissions, no corruption
+    assert!(res.rounds.iter().all(|r| r.retransmissions == 0
+        && r.corrupt_detected == 0));
+    assert!(res.events.iter().any(|e| e.kind == "crash"));
+}
+
+// --- graceful degradation under extreme loss --------------------------
+
+#[test]
+fn extreme_loss_degrades_gracefully_without_stalling() {
+    let mut cfg = base_cfg();
+    cfg.rounds = 6;
+    cfg.faults.loss = 0.95;
+    cfg.faults.retries = 0; // nearly every pull edge dead-letters
+    let res = Experiment::builder(cfg)
+        .backend(BackendKind::Sim)
+        .run()
+        .unwrap();
+    assert_eq!(res.rounds.len(), 6);
+    assert!(res
+        .evals
+        .iter()
+        .all(|e| e.avg_accuracy.is_finite() && e.avg_loss.is_finite()));
+    let dropped: usize = res.rounds.iter().map(|r| r.dropped_msgs).sum();
+    assert!(dropped > 0, "95% loss must drop something");
+    assert!(res.events.iter().any(|e| e.kind == "dead-letter"));
+}
+
+// --- CI fault matrix entry point --------------------------------------
+
+/// The CI matrix legs re-run this with `DYSTOP_FAULTS_PROFILE` set to
+/// wifi/cellular/hostile; locally it exercises the cellular preset.
+#[test]
+fn env_routed_profile_runs_end_to_end_with_an_exact_ledger() {
+    let profile = FaultProfile::from_env_or(FaultProfile::Cellular);
+    let mut cfg = base_cfg();
+    cfg.rounds = 6;
+    cfg.faults = FaultConfig::preset(profile);
+    let (faults, seed) = (cfg.faults, cfg.seed);
+    let (res, plans) = run_with_plans(cfg, BackendKind::Sim);
+    assert_eq!(res.rounds.len(), 6);
+    assert!(res.evals.iter().all(|e| e.avg_loss.is_finite()));
+    let expect = expected_tallies(&faults, seed, &plans);
+    assert_ledger_matches(&res, &plans, &expect);
+}
