@@ -8,7 +8,7 @@
 
 use dystop::bench::bench;
 use dystop::config::ExperimentConfig;
-use dystop::coordinator::{Ptca, SchedView, SchedulerParams};
+use dystop::coordinator::{Ptca, PullLedger, SchedView, SchedulerParams};
 use dystop::experiment::Experiment;
 use dystop::network::EdgeNetwork;
 use dystop::util::rng::Pcg;
@@ -24,7 +24,7 @@ struct Fix {
     label_dist: Vec<Vec<f64>>,
     candidates: Vec<Vec<usize>>,
     budgets: Vec<f64>,
-    pulls: Vec<Vec<u64>>,
+    pulls: PullLedger,
 }
 
 fn fixture(n: usize, seed: u64) -> Fix {
@@ -37,8 +37,13 @@ fn fixture(n: usize, seed: u64) -> Fix {
     };
     let exp = Experiment::builder(cfg).build().expect("bench substrate");
     let mut rng = Pcg::new(seed, 7);
-    let candidates: Vec<Vec<usize>> =
-        (0..n).map(|i| exp.net.in_range(i)).collect();
+    let mut buf = Vec::new();
+    let candidates: Vec<Vec<usize>> = (0..n)
+        .map(|i| {
+            exp.net.in_range_into(i, &mut buf);
+            buf.clone()
+        })
+        .collect();
     Fix {
         tau: (0..n).map(|_| rng.below(8)).collect(),
         queues: (0..n).map(|_| rng.f64() * 4.0).collect(),
@@ -49,7 +54,7 @@ fn fixture(n: usize, seed: u64) -> Fix {
         label_dist: exp.label_dist,
         candidates,
         budgets: exp.net.budgets.clone(),
-        pulls: vec![vec![3; n]; n],
+        pulls: PullLedger::Dense(vec![vec![3; n]; n]),
         net: exp.net,
     }
 }

@@ -25,10 +25,10 @@
 
 use dystop::bench::{bench_with, write_json_report, BenchResult};
 use dystop::config::{
-    AdversaryConfig, AggregatorKind, AttackKind, CodecKind,
+    AdversaryConfig, AggregatorKind, AttackKind, CodecKind, EngineKind,
     ExperimentConfig, FaultConfig, FaultProfile, ModelArch,
-    ScenarioConfig, ScenarioPreset, SchedulerKind, TransportConfig,
-    WorkloadConfig,
+    ScenarioConfig, ScenarioPreset, SchedulerKind, SinkKind,
+    TransportConfig, WorkloadConfig,
 };
 use dystop::data::{make_corpus, SyntheticSpec};
 use dystop::experiment::{Experiment, VirtualClockEngine};
@@ -128,6 +128,108 @@ fn codec_sim_engine(n: usize, codec: CodecKind) -> VirtualClockEngine {
     };
     let exp = Experiment::builder(cfg).build().expect("valid bench config");
     VirtualClockEngine::new(exp)
+}
+
+/// Event-engine instance on the constant-density scale profile
+/// ([`dystop::figures::scale_cfg`]): frozen geometry keeps the cached
+/// view legal, the huge τ-bound fixes activations at one per round, so
+/// per-round p50s are comparable across N. `jsonl_out` attaches the
+/// streaming sink (the CI smoke's bounded-memory artifact).
+fn scale_sim_engine(n: usize, jsonl_out: Option<String>) -> VirtualClockEngine {
+    let mut cfg = dystop::figures::scale_cfg(n, 1);
+    cfg.engine = EngineKind::Event;
+    if let Some(out) = jsonl_out {
+        cfg.metrics.sink = SinkKind::Jsonl;
+        cfg.metrics.out = out;
+        // full history streams to disk; keep only a tail in memory
+        cfg.metrics.window = 8;
+    }
+    let exp = Experiment::builder(cfg).build().expect("valid scale config");
+    VirtualClockEngine::new(exp)
+}
+
+fn scale_enabled() -> bool {
+    matches!(
+        std::env::var("DYSTOP_BENCH_SCALE").as_deref(),
+        Ok(v) if !v.is_empty() && v != "0"
+    )
+}
+
+/// Scale rows for the discrete-event core. N=200 and N=10k always run —
+/// their baseline rows pin the O(activations) claim (at a fixed one
+/// activation per round, 50× more workers must not cost 50× more per
+/// round). N=100k and N=1M only run under `DYSTOP_BENCH_SCALE=1` (the
+/// CI `scale-smoke` job) and are deliberately absent from
+/// `BENCH_baseline.json`: a baseline row missing from a fresh report
+/// fails the regression gate, and the default bench job doesn't run
+/// them.
+fn scale_benches(results: &mut Vec<BenchResult>, warm: usize, budget: f64) {
+    println!(
+        "\n== sim_round at scale (engine=event, constant density, \
+         1 activation/round) =="
+    );
+    for &n in &[200usize, 10_000] {
+        let label = if n == 200 { "N=200" } else { "N=10k" };
+        let mut eng = scale_sim_engine(n, None);
+        results.push(bench_with(
+            &format!("sim_round {label} dystop engine=event"),
+            warm,
+            budget,
+            &mut || {
+                std::hint::black_box(eng.step());
+            },
+        ));
+    }
+    if !scale_enabled() {
+        println!("(DYSTOP_BENCH_SCALE unset — skipping N=100k and N=1M rows)");
+        return;
+    }
+    // N=100k streams its rounds to the JSONL artifact the CI smoke
+    // uploads; N=1M is the memory-ceiling witness (sparse ledger +
+    // bounded recorder keep it resident-flat)
+    let jsonl = std::env::var("DYSTOP_BENCH_SCALE_JSONL")
+        .unwrap_or_else(|_| "target/bench/scale_N100k.jsonl".to_string());
+    let mut big = scale_sim_engine(100_000, Some(jsonl.clone()));
+    results.push(bench_with(
+        "sim_round N=100k dystop engine=event",
+        warm,
+        budget,
+        &mut || {
+            std::hint::black_box(big.step());
+        },
+    ));
+    drop(big); // flush the sink before CI grabs the artifact
+    println!("  (streamed N=100k rounds to {jsonl})");
+    let mut huge = scale_sim_engine(1_000_000, None);
+    results.push(bench_with(
+        "sim_round N=1M dystop engine=event",
+        warm,
+        budget,
+        &mut || {
+            std::hint::black_box(huge.step());
+        },
+    ));
+}
+
+/// Peak resident set (VmHWM) in bytes — the scale smoke's memory
+/// ceiling witness. Linux-only; elsewhere the assertion is skipped.
+#[cfg(target_os = "linux")]
+fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line
+        .trim_start_matches("VmHWM:")
+        .trim()
+        .trim_end_matches("kB")
+        .trim()
+        .parse()
+        .ok()?;
+    Some(kb * 1024)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn peak_rss_bytes() -> Option<u64> {
+    None
 }
 
 fn sim_round_benches(
@@ -364,6 +466,27 @@ fn pjrt_benches(results: &mut Vec<BenchResult>) {
     }));
 }
 
+/// Cross-engine witness: the discrete-event core must reproduce the
+/// dense sweep bitwise. The full matrix lives in
+/// `tests/engine_equivalence.rs`; this run records the invariant in the
+/// bench report, next to the perf numbers it licenses.
+fn engine_equivalence_check() -> bool {
+    let run_with = |engine: EngineKind| {
+        let cfg = ExperimentConfig {
+            workers: 60,
+            rounds: 12,
+            train_per_worker: 48,
+            test_samples: 64,
+            eval_every: 5,
+            target_accuracy: 2.0,
+            engine,
+            ..Default::default()
+        };
+        Experiment::builder(cfg).run().expect("equivalence run")
+    };
+    run_with(EngineKind::Dense).bits_eq(&run_with(EngineKind::Event))
+}
+
 /// The parallel engine's core invariant: a seeded run is bit-identical
 /// for any `run.threads` setting — with or without an active scenario,
 /// a stateful transport codec, a deeper workload model, a mounted
@@ -411,8 +534,15 @@ fn main() {
     let mut results: Vec<BenchResult> = Vec::new();
 
     sim_round_benches(&mut results, warm, budget);
+    scale_benches(&mut results, warm, budget);
     native_trainer_benches(&mut results, warm, budget.min(0.3));
     pjrt_benches(&mut results);
+
+    let engine_eq_ok = engine_equivalence_check();
+    println!(
+        "\nengine equivalence dense vs event: {}",
+        if engine_eq_ok { "bit-identical" } else { "MISMATCH" }
+    );
 
     let det_ok = determinism_check(
         ScenarioConfig::default(),
@@ -537,6 +667,18 @@ fn main() {
             "determinism_lossy_threads_1_vs_4".to_string(),
             Json::Bool(det_lossy_ok),
         ),
+        (
+            "engine_equivalence_dense_vs_event".to_string(),
+            Json::Bool(engine_eq_ok),
+        ),
+        ("scale_rows".to_string(), Json::Bool(scale_enabled())),
+        (
+            "peak_rss_gb".to_string(),
+            match peak_rss_bytes() {
+                Some(b) => Json::Num(b as f64 / 1e9),
+                None => Json::Null,
+            },
+        ),
     ];
     // explicit output path so CI artifact steps can't pick up a stale
     // file from an unexpected working directory
@@ -574,4 +716,26 @@ fn main() {
         det_lossy_ok,
         "threads=1 vs threads=4 diverged under faults=cellular"
     );
+    assert!(
+        engine_eq_ok,
+        "run.engine=event diverged from run.engine=dense"
+    );
+    // the scale smoke's memory ceiling: streaming sinks + the sparse
+    // pull ledger must keep even the N=1M row under a bounded RSS
+    // (ceiling overridable via DYSTOP_BENCH_RSS_GB; linux-only probe)
+    if scale_enabled() {
+        let ceiling_gb: f64 = std::env::var("DYSTOP_BENCH_RSS_GB")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(8.0);
+        if let Some(b) = peak_rss_bytes() {
+            let gb = b as f64 / 1e9;
+            println!("peak RSS {gb:.2} GB (ceiling {ceiling_gb} GB)");
+            assert!(
+                gb < ceiling_gb,
+                "scale smoke peak RSS {gb:.2} GB breached the \
+                 {ceiling_gb} GB ceiling"
+            );
+        }
+    }
 }

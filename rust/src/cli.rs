@@ -260,6 +260,11 @@ fn usage() -> String {
      \n\
      train   --config FILE --set sim.workers=40 --set run.backend=sim|testbed --out results/\n\
      \x20       --set run.threads=N  round-execution threads (0 = all cores; bit-identical)\n\
+     \x20       --set run.engine=dense|event  sim round core: dense O(N) sweep or\n\
+     \x20       discrete-event queue with O(activations) rounds (bit-identical results)\n\
+     \x20       --set metrics.sink=memory|csv|jsonl --set metrics.out=results/run  stream\n\
+     \x20       per-round records to disk as they happen (bounded-memory at N=1M)\n\
+     \x20       --set metrics.window=K  keep only the last K in-memory round records (0 = all)\n\
      \x20       --set scenario.preset=stable|diurnal|flash-crowd|degraded  population dynamics\n\
      \x20       --set scenario.churn_rate=0.05 --set scenario.mean_downtime_rounds=6\n\
      \x20       --set scenario.crash_frac=0.5  individual churn knobs (override preset)\n\
@@ -277,7 +282,7 @@ fn usage() -> String {
      \x20       --set faults.delay_spike=0.05 --set faults.delay_spike_factor=4  per-frame fault knobs\n\
      \x20       --set faults.retries=3 --set faults.backoff_base_s=0.05 --set faults.backoff_cap_s=2\n\
      \x20       --set faults.jitter=0.5  ack/retry/backoff knobs (retries=0 disables the protocol)\n\
-     figures --fig <3|4..18|20..25|26|churn|27|codec|28|workload|29|adversary|30|lossy|all> --out results/ [--workers N --rounds R]\n\
+     figures --fig <3|4..18|20..25|26|churn|27|codec|28|workload|29|adversary|30|lossy|31|scale|all> --out results/ [--workers N --rounds R]\n\
      testbed --set sim.workers=15 --out results/\n\
      sweep   --key dystop.tau_bound --values 2,5,8 --out results/\n\
      bench-diff --baseline BENCH_baseline.json --fresh BENCH_sim.json --tolerance 0.15\n\

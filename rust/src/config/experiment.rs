@@ -649,6 +649,109 @@ impl BackendKind {
     }
 }
 
+/// Which simulation core the virtual-clock backend runs (`run.engine`
+/// knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Per-round dense engine: rebuilds the full scheduler view
+    /// (candidate sets, H estimates, staleness/queue gathers) every
+    /// round. Cost O(N) per round regardless of activity. The default.
+    #[default]
+    Dense,
+    /// Discrete-event engine: caches the scheduler view across rounds
+    /// and advances worker state lazily, so a round's incremental cost
+    /// is proportional to the activated workers and pull edges (plus a
+    /// trivial O(present) scan), not to the full candidate/geometry
+    /// rebuild. Bit-identical to `dense` for every seeded config — the
+    /// cross-engine equivalence suite pins it.
+    Event,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" | "round" => Ok(Self::Dense),
+            "event" | "discrete-event" => Ok(Self::Event),
+            other => Err(format!(
+                "unknown engine {other:?} (dense|event)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Dense => "dense",
+            Self::Event => "event",
+        }
+    }
+}
+
+/// Where round/eval/event records go (`metrics.sink` knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SinkKind {
+    /// Keep every record in the in-memory [`RunResult`]. The default.
+    #[default]
+    Memory,
+    /// Stream records to three CSV files (`metrics.out` prefix +
+    /// `_rounds.csv` / `_evals.csv` / `_events.csv`) as they happen —
+    /// same formats as the post-hoc CSV writers.
+    Csv,
+    /// Stream records to one JSON-lines file (`metrics.out`), one
+    /// type-tagged object per line.
+    Jsonl,
+}
+
+impl SinkKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "memory" | "mem" => Ok(Self::Memory),
+            "csv" => Ok(Self::Csv),
+            "jsonl" | "json-lines" | "ndjson" => Ok(Self::Jsonl),
+            other => Err(format!(
+                "unknown metrics sink {other:?} (memory|csv|jsonl)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Memory => "memory",
+            Self::Csv => "csv",
+            Self::Jsonl => "jsonl",
+        }
+    }
+}
+
+/// Metrics-plumbing knobs (`metrics.*` keys): where records stream and
+/// how much of the run the in-memory [`RunResult`] retains. The
+/// defaults (`sink=memory`, `window=0` = unbounded) reproduce the
+/// pre-streaming engine exactly.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct MetricsConfig {
+    /// Streaming sink (`metrics.sink=memory|csv|jsonl`).
+    pub sink: SinkKind,
+    /// Output path (`metrics.out`): the JSONL file, or the CSV file
+    /// prefix. Required when `sink != memory`.
+    pub out: String,
+    /// In-memory retention (`metrics.window`): keep only the last
+    /// `window` round/eval/event records in the [`RunResult`]
+    /// (0 = keep everything). With a streaming sink the full run is on
+    /// disk, so a bounded window makes N=1M runs O(window) resident.
+    pub window: usize,
+}
+
+impl MetricsConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.sink != SinkKind::Memory && self.out.is_empty() {
+            return Err(format!(
+                "metrics.sink={} requires metrics.out",
+                self.sink.name()
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Which scenario preset drives the population/environment timeline
 /// (`scenario.preset` knob — see [`crate::scenario`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -892,6 +995,12 @@ pub struct ExperimentConfig {
     pub trainer: TrainerKind,
     /// Execution backend (`run.backend=sim|testbed`).
     pub backend: BackendKind,
+    /// Simulation core (`run.engine=dense|event`). `event` is the
+    /// discrete-event core: O(activations + pull edges) incremental
+    /// round cost, bit-identical results to `dense` at any seed.
+    pub engine: EngineKind,
+    /// Metrics streaming + retention (`metrics.*` knobs).
+    pub metrics: MetricsConfig,
     /// Worker-pool size for parallel round execution in the
     /// virtual-clock backend (`run.threads`). `0` (the default) means
     /// "use all available parallelism"; `1` forces sequential
@@ -975,6 +1084,8 @@ impl Default for ExperimentConfig {
             model: ModelKind::Mlp,
             trainer: TrainerKind::Native,
             backend: BackendKind::Sim,
+            engine: EngineKind::Dense,
+            metrics: MetricsConfig::default(),
             threads: 0,
             tau_bound: 5,
             v: 10.0,
@@ -1030,7 +1141,17 @@ impl ExperimentConfig {
         if let Some(s) = cfg.get("run.backend") {
             e.backend = BackendKind::parse(s)?;
         }
+        if let Some(s) = cfg.get("run.engine") {
+            e.engine = EngineKind::parse(s)?;
+        }
         opt!(e.threads, get_usize, "run.threads");
+        if let Some(s) = cfg.get("metrics.sink") {
+            e.metrics.sink = SinkKind::parse(s)?;
+        }
+        if let Some(s) = cfg.get("metrics.out") {
+            e.metrics.out = s.to_string();
+        }
+        opt!(e.metrics.window, get_usize, "metrics.window");
         opt!(e.tau_bound, get_u64, "dystop.tau_bound");
         opt!(e.v, get_f64, "dystop.v");
         opt!(e.neighbor_cap, get_usize, "dystop.neighbor_cap");
@@ -1146,6 +1267,7 @@ impl ExperimentConfig {
         if self.network.comm_range_m <= 0.0 {
             return Err("net.comm_range_m must be > 0".into());
         }
+        self.metrics.validate()?;
         self.scenario.validate()?;
         self.transport.validate()?;
         self.workload.validate()?;
@@ -1209,6 +1331,46 @@ mod tests {
         assert_eq!(e.backend, BackendKind::Testbed);
         // default stays sim
         assert_eq!(ExperimentConfig::default().backend, BackendKind::Sim);
+    }
+
+    #[test]
+    fn engine_knob_parses() {
+        assert_eq!(EngineKind::parse("dense").unwrap(), EngineKind::Dense);
+        assert_eq!(EngineKind::parse("Event").unwrap(), EngineKind::Event);
+        assert_eq!(
+            EngineKind::parse("discrete-event").unwrap(),
+            EngineKind::Event
+        );
+        assert!(EngineKind::parse("bogus").is_err());
+        let cfg = Config::parse("[run]\nengine = event").unwrap();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.engine, EngineKind::Event);
+        // default stays dense
+        assert_eq!(ExperimentConfig::default().engine, EngineKind::Dense);
+        assert_eq!(EngineKind::Event.name(), "event");
+    }
+
+    #[test]
+    fn metrics_knobs_parse_and_validate() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.metrics.sink, SinkKind::Memory);
+        assert_eq!(d.metrics.window, 0);
+        let cfg = Config::parse(
+            "[metrics]\nsink = jsonl\nout = /tmp/run.jsonl\nwindow = 64\n",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.metrics.sink, SinkKind::Jsonl);
+        assert_eq!(e.metrics.out, "/tmp/run.jsonl");
+        assert_eq!(e.metrics.window, 64);
+        // a file sink without a path is rejected
+        let cfg = Config::parse("[metrics]\nsink = csv\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        // unknown sink rejected
+        let cfg = Config::parse("[metrics]\nsink = bogus\nout = x\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        assert_eq!(SinkKind::Csv.name(), "csv");
+        assert_eq!(SinkKind::parse("ndjson").unwrap(), SinkKind::Jsonl);
     }
 
     #[test]

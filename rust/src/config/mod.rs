@@ -19,9 +19,10 @@ mod experiment;
 
 pub use experiment::{
     AdversaryConfig, AggregatorKind, AttackKind, BackendKind, CodecKind,
-    DatasetKind, ExperimentConfig, FaultConfig, FaultProfile, ModelArch,
-    ModelKind, NetworkConfig, ScenarioConfig, ScenarioPreset,
-    SchedulerKind, TrainerKind, TransportConfig, WorkloadConfig,
+    DatasetKind, EngineKind, ExperimentConfig, FaultConfig, FaultProfile,
+    MetricsConfig, ModelArch, ModelKind, NetworkConfig, ScenarioConfig,
+    ScenarioPreset, SchedulerKind, SinkKind, TrainerKind, TransportConfig,
+    WorkloadConfig,
 };
 
 use std::collections::BTreeMap;

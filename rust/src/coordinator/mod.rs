@@ -43,6 +43,73 @@ impl From<&ExperimentConfig> for SchedulerParams {
     }
 }
 
+/// Run-long pull history `pulls[i][j]` = times `i` pulled from `j`
+/// (Eq. 47), **global-indexed**.
+///
+/// `Dense` keeps n×n counters — cache-friendly and what the dense
+/// engine and the threaded testbed use at small N. `Sparse` keeps only
+/// the touched edges in a hash map: at N=1M the dense form would be
+/// 8 TB, but only O(rounds × pull edges) entries are ever nonzero. The
+/// two variants are observationally identical through
+/// [`count`](Self::count)/[`record`](Self::record), so engine results
+/// don't depend on the representation.
+#[derive(Clone, Debug)]
+pub enum PullLedger {
+    Dense(Vec<Vec<u64>>),
+    Sparse(std::collections::HashMap<(u32, u32), u64>),
+}
+
+impl PullLedger {
+    /// All-zero dense ledger for `n` workers.
+    pub fn dense(n: usize) -> Self {
+        PullLedger::Dense(vec![vec![0; n]; n])
+    }
+
+    /// Empty sparse ledger (any worker-id range).
+    pub fn sparse() -> Self {
+        PullLedger::Sparse(std::collections::HashMap::new())
+    }
+
+    /// Times `i` pulled from `j`.
+    pub fn count(&self, i: usize, j: usize) -> u64 {
+        match self {
+            PullLedger::Dense(m) => m[i][j],
+            PullLedger::Sparse(m) => {
+                m.get(&(i as u32, j as u32)).copied().unwrap_or(0)
+            }
+        }
+    }
+
+    /// Record one `i ← j` pull.
+    pub fn record(&mut self, i: usize, j: usize) {
+        match self {
+            PullLedger::Dense(m) => m[i][j] += 1,
+            PullLedger::Sparse(m) => {
+                *m.entry((i as u32, j as u32)).or_insert(0) += 1
+            }
+        }
+    }
+
+    /// Forget all history involving `w` — a `Join` recycles the slot of
+    /// a departed worker, and the newcomer starts with a clean ledger.
+    pub fn reset_worker(&mut self, w: usize) {
+        match self {
+            PullLedger::Dense(m) => {
+                for row in m.iter_mut() {
+                    row[w] = 0;
+                }
+                for c in m[w].iter_mut() {
+                    *c = 0;
+                }
+            }
+            PullLedger::Sparse(m) => {
+                let w = w as u32;
+                m.retain(|&(i, j), _| i != w && j != w);
+            }
+        }
+    }
+}
+
 /// Read-only per-round snapshot handed to schedulers.
 ///
 /// # Indexing under dynamic populations
@@ -83,9 +150,9 @@ pub struct SchedView<'a> {
     pub candidates: &'a [Vec<usize>],
     /// Per-worker bandwidth budgets \hat B_t^i, in model transfers.
     pub budgets: &'a [f64],
-    /// Pull history: pulls\[i\]\[j\] = times i pulled from j (Eq. 47).
-    /// **Global-indexed** — use [`pull_count`](Self::pull_count).
-    pub pulls: &'a [Vec<u64>],
+    /// Pull history (Eq. 47). **Global-indexed** — use
+    /// [`pull_count`](Self::pull_count).
+    pub pulls: &'a PullLedger,
     /// The physical network. **Global-indexed** — use
     /// [`dist`](Self::dist) for distances.
     pub net: &'a EdgeNetwork,
@@ -110,7 +177,7 @@ impl<'a> SchedView<'a> {
 
     /// Times dense worker `a` pulled from dense worker `b` (Eq. 47).
     pub fn pull_count(&self, a: usize, b: usize) -> u64 {
-        self.pulls[self.ids[a]][self.ids[b]]
+        self.pulls.count(self.ids[a], self.ids[b])
     }
 }
 
@@ -348,7 +415,7 @@ pub(crate) mod testutil {
         pub label_dist: Vec<Vec<f64>>,
         pub candidates: Vec<Vec<usize>>,
         pub budgets: Vec<f64>,
-        pub pulls: Vec<Vec<u64>>,
+        pub pulls: PullLedger,
         pub params: SchedulerParams,
         pub round: usize,
     }
@@ -372,7 +439,7 @@ pub(crate) mod testutil {
                 label_dist,
                 candidates,
                 budgets: vec![8.0; n],
-                pulls: vec![vec![0; n]; n],
+                pulls: PullLedger::dense(n),
                 params: SchedulerParams {
                     tau_bound: 5,
                     v: 10.0,
@@ -498,6 +565,33 @@ mod tests {
             plan.validate_present(&[true, false, true]),
             Err(PlanError::AbsentWorker { worker: 1 })
         );
+    }
+
+    #[test]
+    fn pull_ledger_variants_agree() {
+        forall(43, |rng| {
+            let n = 3 + rng.below_usize(12);
+            let mut dense = PullLedger::dense(n);
+            let mut sparse = PullLedger::sparse();
+            for _ in 0..60 {
+                let i = rng.below_usize(n);
+                let j = rng.below_usize(n);
+                dense.record(i, j);
+                sparse.record(i, j);
+            }
+            let w = rng.below_usize(n);
+            dense.reset_worker(w);
+            sparse.reset_worker(w);
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(
+                        dense.count(i, j),
+                        sparse.count(i, j),
+                        "({i},{j}) after reset_worker({w})"
+                    );
+                }
+            }
+        });
     }
 
     #[test]

@@ -248,7 +248,9 @@ mod tests {
         fix.round = 100;
         fix.params.t_thre = 50; // phase 2
         fix.tau = vec![2, 2, 2, 9]; // worker 3 has big staleness gap
-        fix.pulls = vec![vec![0, 90, 0, 0]; 4]; // worker 1 pulled a lot
+        for _ in 0..90 {
+            fix.pulls.record(0, 1); // worker 1 pulled a lot
+        }
         fix.params.neighbor_cap = 1;
         let ptca = Ptca::default();
         let pulls = ptca.construct(&fix.view(), &[0]);

@@ -1,0 +1,223 @@
+//! Discrete-event machinery for the event-driven simulation core
+//! (`run.engine=event`).
+//!
+//! A binary-heap priority queue of typed [`SimEvent`]s ordered by
+//! `(timestamp, insertion sequence)`. The timestamp comparison uses
+//! `f64::total_cmp` and ties break FIFO on the insertion sequence, so a
+//! given push order always drains in the same order — determinism does
+//! not depend on `BinaryHeap`'s internal layout.
+//!
+//! The engine uses two queues:
+//!
+//! * an **intra-round** queue of activation/transfer completions whose
+//!   drained maximum is the realised round duration H_t (Eq. 9) — for
+//!   finite non-negative times the heap maximum is bit-identical to the
+//!   dense engine's fold-max over activation outputs;
+//! * an **inter-round** schedule of evaluation boundaries, pushed
+//!   up-front and popped as virtual rounds pass them.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What completed (or came due) at an event's timestamp.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SimEvent {
+    /// An activated worker finished its round work — residual compute
+    /// plus serialized pull/push transfers (Eqs. 7–9). The last
+    /// `ActivationDone` popped defines H_t.
+    ActivationDone { worker: usize },
+    /// A pull edge resolved as delivered at the receiver.
+    TransferDone { from: usize, to: usize },
+    /// A pull edge exhausted its retry budget (dead-lettered); the
+    /// receiver waited out the backoff schedule until its round work
+    /// ended.
+    RetryTimeout { from: usize, to: usize },
+    /// An evaluation snapshot is due at this round boundary.
+    EvalDue { round: usize },
+    /// The scenario timeline has entries to apply at this round
+    /// boundary.
+    ScenarioDue { round: usize },
+}
+
+struct Entry {
+    time: f64,
+    seq: u64,
+    ev: SimEvent,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.total_cmp(&other.time) == Ordering::Equal
+            && self.seq == other.seq
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed on both keys: BinaryHeap pops its maximum, we want
+        // the earliest time and, within a time, the earliest insertion
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic min-queue of [`SimEvent`]s.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Enqueue `ev` at `time` (virtual seconds or rounds — the queue is
+    /// unit-agnostic).
+    pub fn push(&mut self, time: f64, ev: SimEvent) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time, seq, ev });
+    }
+
+    /// Timestamp of the earliest pending event.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Pop the earliest pending event.
+    pub fn pop(&mut self) -> Option<(f64, SimEvent)> {
+        self.heap.pop().map(|e| (e.time, e.ev))
+    }
+
+    /// Pop the earliest pending event iff its timestamp is ≤ `time`.
+    pub fn pop_due(&mut self, time: f64) -> Option<(f64, SimEvent)> {
+        match self.heap.peek() {
+            Some(e) if e.time.total_cmp(&time) != Ordering::Greater => {
+                self.pop()
+            }
+            _ => None,
+        }
+    }
+
+    /// Drain every pending event and return the latest timestamp — the
+    /// round barrier H_t when the queue holds one round's completions.
+    /// `None` when the queue is empty (an empty plan).
+    pub fn drain_last_time(&mut self) -> Option<f64> {
+        let mut last = None;
+        while let Some(e) = self.heap.pop() {
+            last = Some(e.time);
+        }
+        last
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_with_fifo_ties() {
+        let mut q = EventQueue::new();
+        q.push(2.0, SimEvent::ActivationDone { worker: 0 });
+        q.push(1.0, SimEvent::ActivationDone { worker: 1 });
+        q.push(2.0, SimEvent::RetryTimeout { from: 3, to: 4 });
+        q.push(1.0, SimEvent::TransferDone { from: 5, to: 6 });
+        assert_eq!(q.len(), 4);
+        // time 1.0 first, FIFO within the tie
+        assert_eq!(q.pop(), Some((1.0, SimEvent::ActivationDone { worker: 1 })));
+        assert_eq!(q.pop(), Some((1.0, SimEvent::TransferDone { from: 5, to: 6 })));
+        assert_eq!(q.pop(), Some((2.0, SimEvent::ActivationDone { worker: 0 })));
+        assert_eq!(q.pop(), Some((2.0, SimEvent::RetryTimeout { from: 3, to: 4 })));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drain_last_time_is_the_maximum_timestamp() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.drain_last_time(), None);
+        for (t, w) in [(0.5, 0), (3.25, 1), (1.75, 2)] {
+            q.push(t, SimEvent::ActivationDone { worker: w });
+        }
+        // drained max must equal the fold-max bit-for-bit
+        let fold = [0.5f64, 3.25, 1.75].iter().fold(0.0f64, |a, &b| a.max(b));
+        assert_eq!(q.drain_last_time().unwrap().to_bits(), fold.to_bits());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_due_respects_the_boundary() {
+        let mut q = EventQueue::new();
+        q.push(10.0, SimEvent::EvalDue { round: 10 });
+        q.push(20.0, SimEvent::EvalDue { round: 20 });
+        assert_eq!(q.pop_due(9.0), None);
+        assert_eq!(q.pop_due(10.0), Some((10.0, SimEvent::EvalDue { round: 10 })));
+        assert_eq!(q.pop_due(10.0), None);
+        assert_eq!(q.peek_time(), Some(20.0));
+        assert_eq!(q.pop_due(25.0), Some((20.0, SimEvent::EvalDue { round: 20 })));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn identical_push_sequences_drain_identically() {
+        let seq = [
+            (1.5, SimEvent::ActivationDone { worker: 7 }),
+            (0.25, SimEvent::ScenarioDue { round: 3 }),
+            (1.5, SimEvent::TransferDone { from: 1, to: 2 }),
+            (0.25, SimEvent::ActivationDone { worker: 9 }),
+            (2.0, SimEvent::RetryTimeout { from: 0, to: 7 }),
+        ];
+        let drain = |events: &[(f64, SimEvent)]| {
+            let mut q = EventQueue::new();
+            for &(t, e) in events {
+                q.push(t, e);
+            }
+            let mut out = Vec::new();
+            while let Some(x) = q.pop() {
+                out.push(x);
+            }
+            out
+        };
+        assert_eq!(drain(&seq), drain(&seq));
+        // and the order itself is the (time, insertion) order
+        let got = drain(&seq);
+        assert_eq!(got[0].1, SimEvent::ScenarioDue { round: 3 });
+        assert_eq!(got[1].1, SimEvent::ActivationDone { worker: 9 });
+        assert_eq!(got[2].1, SimEvent::ActivationDone { worker: 7 });
+        assert_eq!(got[3].1, SimEvent::TransferDone { from: 1, to: 2 });
+        assert_eq!(got[4].1, SimEvent::RetryTimeout { from: 0, to: 7 });
+    }
+
+    #[test]
+    fn clear_resets_pending_events() {
+        let mut q = EventQueue::new();
+        q.push(1.0, SimEvent::ActivationDone { worker: 0 });
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+    }
+}

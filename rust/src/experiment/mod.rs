@@ -42,10 +42,12 @@
 //! deprecated wrappers kept through PR 1–2) are gone; this module is the
 //! only construction path.
 
+pub mod events;
 mod observer;
 mod threaded;
 mod virtual_clock;
 
+pub use events::{EventQueue, SimEvent};
 pub use observer::{ObserverChain, RoundObserver, RunRecorder};
 pub use threaded::{TestbedOptions, ThreadedBackend};
 pub use virtual_clock::{VirtualClockBackend, VirtualClockEngine};
@@ -395,6 +397,20 @@ impl ExperimentBuilder {
         // above (clean profile ⇒ every edge CLEAN ⇒ pre-delivery bits)
         let delivery = Delivery::from_config(&cfg.faults, cfg.seed);
 
+        // streaming metrics sink (metrics.sink=csv|jsonl): attached as an
+        // ordinary observer, after any caller-attached ones
+        let mut observers = self.observers;
+        if let Some(sink) =
+            crate::metrics::sink::make_sink(&cfg.metrics).map_err(|e| {
+                ExperimentError::InvalidConfig(format!(
+                    "metrics.out {:?}: {e}",
+                    cfg.metrics.out
+                ))
+            })?
+        {
+            observers.push(sink);
+        }
+
         Ok(Experiment {
             cfg,
             net,
@@ -409,7 +425,7 @@ impl ExperimentBuilder {
             trainer,
             scheduler,
             rng,
-            observers: self.observers,
+            observers,
         })
     }
 

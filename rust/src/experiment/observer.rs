@@ -37,11 +37,34 @@ pub trait RoundObserver {
 /// backend returns.
 pub struct RunRecorder {
     result: RunResult,
+    /// Retain only the last `window` records per stream (0 = keep all).
+    /// With a streaming sink the full run lives on disk, so a bounded
+    /// window keeps the resident [`RunResult`] O(window) at N=1M
+    /// (`metrics.window` knob).
+    window: usize,
+}
+
+/// Push keeping at most `window` entries (0 = unbounded). `remove(0)`
+/// is O(window) but window is small and constant, so this stays cheap
+/// relative to a round's work.
+fn bounded_push<T>(v: &mut Vec<T>, window: usize, rec: T) {
+    if window > 0 && v.len() >= window {
+        v.remove(0);
+    }
+    v.push(rec);
 }
 
 impl RunRecorder {
     pub fn new(label: impl Into<String>, model_bits: f64) -> Self {
-        RunRecorder { result: RunResult::new(label, model_bits) }
+        Self::with_window(label, model_bits, 0)
+    }
+
+    pub fn with_window(
+        label: impl Into<String>,
+        model_bits: f64,
+        window: usize,
+    ) -> Self {
+        RunRecorder { result: RunResult::new(label, model_bits), window }
     }
 
     pub fn result(&self) -> &RunResult {
@@ -55,15 +78,15 @@ impl RunRecorder {
 
 impl RoundObserver for RunRecorder {
     fn on_scenario_event(&mut self, rec: &EventRecord) {
-        self.result.events.push(rec.clone());
+        bounded_push(&mut self.result.events, self.window, rec.clone());
     }
 
     fn on_round_end(&mut self, rec: &RoundRecord) {
-        self.result.rounds.push(rec.clone());
+        bounded_push(&mut self.result.rounds, self.window, rec.clone());
     }
 
     fn on_eval(&mut self, rec: &EvalRecord) {
-        self.result.evals.push(rec.clone());
+        bounded_push(&mut self.result.evals, self.window, rec.clone());
     }
 }
 
@@ -198,6 +221,23 @@ mod tests {
         assert_eq!(res.rounds.len(), 1);
         assert_eq!(res.evals.len(), 1);
         assert_eq!(res.model_bits, 64.0);
+    }
+
+    #[test]
+    fn bounded_window_keeps_only_the_tail() {
+        let mut rec = RunRecorder::with_window("test", 64.0, 2);
+        for t in 1..=5 {
+            rec.on_round_end(&round_rec(t));
+        }
+        let rounds: Vec<usize> =
+            rec.result().rounds.iter().map(|r| r.round).collect();
+        assert_eq!(rounds, vec![4, 5]);
+        // window 0 keeps everything
+        let mut rec = RunRecorder::with_window("test", 64.0, 0);
+        for t in 1..=5 {
+            rec.on_round_end(&round_rec(t));
+        }
+        assert_eq!(rec.result().rounds.len(), 5);
     }
 
     #[test]

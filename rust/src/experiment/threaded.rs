@@ -63,7 +63,7 @@ use super::observer::{ObserverChain, RunRecorder};
 use super::{Backend, Experiment, ExperimentError};
 use crate::adversary::Aggregator;
 use crate::config::{ExperimentConfig, TrainerKind};
-use crate::coordinator::{SchedView, SchedulerParams};
+use crate::coordinator::{PullLedger, SchedView, SchedulerParams};
 use crate::data::Dataset;
 use crate::delivery::DeliveryTally;
 use crate::metrics::{EvalRecord, EventRecord, RoundRecord, RunResult};
@@ -183,8 +183,11 @@ fn run_threaded(
         ));
     }
     let n = cfg.workers;
-    let recorder =
-        RunRecorder::new(format!("testbed-{}", scheduler.name()), model_bits);
+    let recorder = RunRecorder::with_window(
+        format!("testbed-{}", scheduler.name()),
+        model_bits,
+        cfg.metrics.window,
+    );
     let mut chain = ObserverChain::new(recorder, observers);
 
     // heterogeneous compute: explicit Table II profile (when the worker
@@ -232,7 +235,7 @@ fn run_threaded(
     let mut tau = vec![0u64; n];
     let mut queues = vec![0.0f64; n];
     let mut residual = h_train.clone();
-    let mut pulls = vec![vec![0u64; n]; n];
+    let mut pulls = PullLedger::dense(n);
     let start = Instant::now();
     let mut cum_transfers = 0usize;
     let mut cum_bytes = 0.0f64;
@@ -260,10 +263,7 @@ fn run_threaded(
                     tau[worker] = 0;
                     queues[worker] = 0.0;
                     residual[worker] = h_train[worker];
-                    for row in pulls.iter_mut() {
-                        row[worker] = 0;
-                    }
-                    pulls[worker].fill(0);
+                    pulls.reset_worker(worker);
                     // fresh device: receivers hold no codec history
                     transport.reset_worker(worker);
                 }
@@ -283,7 +283,7 @@ fn run_threaded(
             |rec| chain.scenario_event(&rec),
         );
 
-        net.step(&mut rng);
+        net.advance_round(cfg.seed, round as u64);
 
         // dense view over present workers (same compaction as the
         // virtual-clock engine — shared helpers in crate::scenario)
@@ -388,7 +388,7 @@ fn run_threaded(
                 // pull history stays plan-level: a dead-lettered edge
                 // was still attempted (and charged) — same as the
                 // virtual-clock engine
-                pulls[i][j] += 1;
+                pulls.record(i, j);
                 let d = (out.time_s(t) * opts.time_scale) as u64;
                 if out.delivered {
                     neighbors.push(j);

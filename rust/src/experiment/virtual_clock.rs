@@ -67,12 +67,47 @@
 //! stream, so thread count and dispatch order cannot perturb them, and
 //! the default `faults.profile=clean` is knob-inert (every edge
 //! resolves to the lossless identity without touching an RNG).
+//!
+//! # The discrete-event core (`run.engine=event`)
+//!
+//! The same engine runs as a **round-barrier event simulator**: per
+//! round it pays only for what changed, not for N.
+//!
+//! * **Cached scheduler view.** The dense per-present-worker arrays
+//!   (τ, queues, h_cmp, h_est, budgets, data sizes, candidate lists,
+//!   worst expected transfer) persist across rounds and are patched in
+//!   place at the round barrier for touched workers. A full rebuild
+//!   happens only when something the view derives from moved:
+//!   membership or environment scenario events, mobility, link fading,
+//!   or budget jitter. Under a static geometry a round costs
+//!   O(activations + pull edges + present) instead of O(N·degree).
+//! * **Event queue.** Activation completions (and dead-letter retry
+//!   timeouts) go through a deterministic binary-heap
+//!   [`EventQueue`](super::events::EventQueue); the last completion
+//!   popped is the realised H_t (Eq. 9) — bit-identical to the dense
+//!   fold-max. Evaluation boundaries are scheduled up-front on a second
+//!   queue and popped as rounds pass them.
+//! * **Lazy absent workers.** While a worker is absent its slot is
+//!   never touched; the staleness it would have accrued (one
+//!   `on_skipped` per absent round — pure integer arithmetic) is
+//!   reconstructed at `Rejoin` from the recorded leave round. Queue and
+//!   residual freeze exactly as the dense engine freezes them.
+//! * **Sparse pull ledger.** Eq. 47's pull history lives in a hash map
+//!   keyed by `(puller, source)` instead of an N×N matrix (8 TB at
+//!   N=1M), with identical counts.
+//!
+//! Every seeded run is **bit-identical across `run.engine`** (and
+//! thread count); the cross-engine equivalence suite pins dense ≡ event
+//! across scenarios, faults, codecs and adversaries.
 
+use super::events::{EventQueue, SimEvent};
 use super::observer::{ObserverChain, RunRecorder};
 use super::{Backend, Experiment, ExperimentError};
 use crate::adversary::{Adversary, Aggregator};
-use crate::config::{AdversaryConfig, ExperimentConfig};
-use crate::coordinator::{RoundPlan, SchedView, Scheduler, SchedulerParams};
+use crate::config::{AdversaryConfig, EngineKind, ExperimentConfig};
+use crate::coordinator::{
+    PullLedger, RoundPlan, SchedView, Scheduler, SchedulerParams,
+};
 use crate::data::Dataset;
 use crate::delivery::{Delivery, DeliveryTally};
 use crate::metrics::{EvalRecord, EventRecord, RoundRecord, RunResult};
@@ -303,7 +338,12 @@ fn run_activation(
 /// compute plus the worst expected pull transfer over its (≤ s nearest)
 /// candidates. `candidates` holds dense indices; `ids` maps them back to
 /// global ids for the physical network.
-fn estimate_h(
+///
+/// Fills two aligned outputs: `worst_tx[k]` (the geometry-dependent
+/// transfer half — a pure function of positions, tx powers and the wire
+/// size, so the event core caches it across static rounds) and
+/// `h_est[k] = residual + worst_tx[k]` (the sum the scheduler sees).
+fn estimate_h_into(
     net: &EdgeNetwork,
     workers: &[WorkerState],
     ids: &[usize],
@@ -311,34 +351,37 @@ fn estimate_h(
     wire_bits: f64,
     s: usize,
     near: &mut Vec<usize>,
-) -> Vec<f64> {
-    (0..ids.len())
-        .map(|k| {
-            let gi = ids[k];
-            // PTCA will pick ≤ s in-neighbors; estimate with the s
-            // *nearest* candidates (best case the coordinator can
-            // predict without knowing the realised priorities).
-            let cand = &candidates[k];
-            let nearest: &[usize] = if cand.len() > s {
-                // only the s nearest matter — select into a reused
-                // index buffer instead of clone + full sort
-                near.clear();
-                near.extend_from_slice(cand);
-                near.select_nth_unstable_by(s - 1, |&a, &b| {
-                    net.distance(gi, ids[a])
-                        .total_cmp(&net.distance(gi, ids[b]))
-                });
-                &near[..s]
-            } else {
-                cand
-            };
-            let worst = nearest
-                .iter()
-                .map(|&j| net.expected_transfer_time_s(ids[j], gi, wire_bits))
-                .fold(0.0f64, f64::max);
-            workers[gi].residual_s + worst
-        })
-        .collect()
+    worst_tx: &mut Vec<f64>,
+    h_est: &mut Vec<f64>,
+) {
+    worst_tx.clear();
+    h_est.clear();
+    for k in 0..ids.len() {
+        let gi = ids[k];
+        // PTCA will pick ≤ s in-neighbors; estimate with the s
+        // *nearest* candidates (best case the coordinator can
+        // predict without knowing the realised priorities).
+        let cand = &candidates[k];
+        let nearest: &[usize] = if cand.len() > s {
+            // only the s nearest matter — select into a reused
+            // index buffer instead of clone + full sort
+            near.clear();
+            near.extend_from_slice(cand);
+            near.select_nth_unstable_by(s - 1, |&a, &b| {
+                net.distance(gi, ids[a])
+                    .total_cmp(&net.distance(gi, ids[b]))
+            });
+            &near[..s]
+        } else {
+            cand
+        };
+        let worst = nearest
+            .iter()
+            .map(|&j| net.expected_transfer_time_s(ids[j], gi, wire_bits))
+            .fold(0.0f64, f64::max);
+        worst_tx.push(worst);
+        h_est.push(workers[gi].residual_s + worst);
+    }
 }
 
 /// The assembled simulation engine. Public so callers that need
@@ -354,8 +397,9 @@ pub struct VirtualClockEngine {
     scheduler: Box<dyn Scheduler>,
     /// The event timeline applied at round boundaries.
     scenario: Scenario,
-    /// pulls\[i\]\[j\]: times worker i pulled from j (Eq. 47's history).
-    pulls: Vec<Vec<u64>>,
+    /// Times worker i pulled from j (Eq. 47's history) — dense matrix
+    /// under the dense engine, sparse hash map under the event engine.
+    pulls: PullLedger,
     /// Pushed-model inboxes: models received via PUSH wait here until the
     /// receiver's next activation (SA-ADFL semantics — receivers don't
     /// interrupt training to merge).
@@ -407,14 +451,49 @@ pub struct VirtualClockEngine {
     active_mask: Vec<bool>,
     losses: Vec<f64>,
     near: Vec<usize>,
+    /// Discrete-event core enabled (`run.engine=event`).
+    event_mode: bool,
+    /// Did this round's boundary apply any scenario event (population
+    /// or environment)? Forces a view rebuild in event mode.
+    events_applied: bool,
+    /// Intra-round completion events; the last one popped is H_t.
+    equeue: EventQueue,
+    /// Inter-round schedule (evaluation boundaries), filled up-front.
+    schedule: EventQueue,
+    /// Round at which each currently-absent worker left (event mode):
+    /// `Rejoin` reconstructs the staleness the dense engine would have
+    /// accrued one `on_skipped` at a time.
+    left_at: Vec<usize>,
+    /// Workers whose `active_mask` bit is currently set — cleared
+    /// per-entry instead of an O(N) fill.
+    prev_active: Vec<usize>,
+    // Cached scheduler-view arrays, aligned with `ids`. The dense
+    // engine regathers them every round; the event engine patches them
+    // at the round barrier and rebuilds only when geometry, membership,
+    // link state or budgets moved.
+    view_tau: Vec<u64>,
+    view_queues: Vec<f64>,
+    view_h_cmp: Vec<f64>,
+    view_h_est: Vec<f64>,
+    view_data_sizes: Vec<usize>,
+    view_budgets: Vec<f64>,
+    /// Worst expected pull-transfer time per present worker (the
+    /// geometry half of Eq. 8) — valid while positions, membership and
+    /// the wire size are static, so cached rounds recompute `h_est` as
+    /// one addition per present worker.
+    worst_tx: Vec<f64>,
 }
 
 impl VirtualClockEngine {
     /// Assemble the engine around a built [`Experiment`].
     pub fn new(exp: Experiment) -> Self {
         let n = exp.cfg.workers;
-        let recorder =
-            RunRecorder::new(exp.scheduler.name(), exp.model_bits);
+        let event_mode = exp.cfg.engine == EngineKind::Event;
+        let recorder = RunRecorder::with_window(
+            exp.scheduler.name(),
+            exp.model_bits,
+            exp.cfg.metrics.window,
+        );
         let requested = match exp.cfg.threads {
             0 => thread::available_parallelism()
                 .map(|p| p.get())
@@ -459,7 +538,12 @@ impl VirtualClockEngine {
             cum_bytes: 0.0,
             pull_srcs: Vec::new(),
             push_enc: Vec::new(),
-            pulls: vec![vec![0; n]; n],
+            // the event core never materialises the N×N pull matrix
+            pulls: if event_mode {
+                PullLedger::sparse()
+            } else {
+                PullLedger::dense(n)
+            },
             inbox: vec![Vec::new(); n],
             inbox_free: Vec::new(),
             clock_s: 0.0,
@@ -477,6 +561,19 @@ impl VirtualClockEngine {
             active_mask: vec![false; n],
             losses: Vec::new(),
             near: Vec::new(),
+            event_mode,
+            events_applied: false,
+            equeue: EventQueue::new(),
+            schedule: EventQueue::new(),
+            left_at: vec![0; n],
+            prev_active: Vec::new(),
+            view_tau: Vec::new(),
+            view_queues: Vec::new(),
+            view_h_cmp: Vec::new(),
+            view_h_est: Vec::new(),
+            view_data_sizes: Vec::new(),
+            view_budgets: Vec::new(),
+            worst_tx: Vec::new(),
         }
     }
 
@@ -515,72 +612,90 @@ impl VirtualClockEngine {
         let trainer = &self.trainer;
         let transport = &mut self.transport;
         let tally = &mut self.tally;
+        let left_at = &mut self.left_at;
+        let lazy = self.event_mode;
         let seed = self.cfg.seed;
         let observers = &mut self.observers;
+        let mut any = false;
         crate::scenario::apply_round_events(
             scenario,
             round,
             net,
-            |ev| match *ev {
-                ScenarioEvent::Leave { worker } => {
-                    // the departed worker's pending aggregation inputs
-                    // are garbage-collected
-                    for (_, buf) in inbox[worker].drain(..) {
-                        inbox_free.push(buf);
-                    }
-                }
-                ScenarioEvent::Crash { worker } => {
-                    for (_, buf) in inbox[worker].drain(..) {
-                        inbox_free.push(buf);
-                    }
-                    // crash = no notice: its in-flight models (pushes
-                    // already delivered but not merged) drop everywhere
-                    // — routed through the delivery ledger so the loss
-                    // lands in this round's `dropped_msgs`
-                    for ib in inbox.iter_mut() {
-                        if let Some(pos) =
-                            ib.iter().position(|(f, _)| *f == worker)
-                        {
-                            let (_, buf) = ib.swap_remove(pos);
+            |ev| {
+                any = true;
+                match *ev {
+                    ScenarioEvent::Leave { worker } => {
+                        if lazy {
+                            left_at[worker] = round;
+                        }
+                        // the departed worker's pending aggregation
+                        // inputs are garbage-collected
+                        for (_, buf) in inbox[worker].drain(..) {
                             inbox_free.push(buf);
-                            tally.crash_dropped += 1;
                         }
                     }
-                }
-                ScenarioEvent::Join { worker } => {
-                    // fresh device on this slot: params re-initialised
-                    // with the slot's builder seed, bookkeeping reset
-                    let w = &mut workers[worker];
-                    w.params = trainer.init(seed.wrapping_add(worker as u64));
-                    w.staleness = 0;
-                    w.queue = 0.0;
-                    w.residual_s = w.h_train_s;
-                    w.last_loss = f64::NAN;
-                    for row in pulls.iter_mut() {
-                        row[worker] = 0;
+                    ScenarioEvent::Crash { worker } => {
+                        if lazy {
+                            left_at[worker] = round;
+                        }
+                        for (_, buf) in inbox[worker].drain(..) {
+                            inbox_free.push(buf);
+                        }
+                        // crash = no notice: its in-flight models (pushes
+                        // already delivered but not merged) drop everywhere
+                        // — routed through the delivery ledger so the loss
+                        // lands in this round's `dropped_msgs`
+                        for ib in inbox.iter_mut() {
+                            if let Some(pos) =
+                                ib.iter().position(|(f, _)| *f == worker)
+                            {
+                                let (_, buf) = ib.swap_remove(pos);
+                                inbox_free.push(buf);
+                                tally.crash_dropped += 1;
+                            }
+                        }
                     }
-                    pulls[worker].fill(0);
-                    // receivers hold no transmission history for the
-                    // fresh device — codec reconstruction restarts
-                    transport.reset_worker(worker);
+                    ScenarioEvent::Join { worker } => {
+                        // fresh device on this slot: params re-initialised
+                        // with the slot's builder seed, bookkeeping reset
+                        let w = &mut workers[worker];
+                        w.params =
+                            trainer.init(seed.wrapping_add(worker as u64));
+                        w.staleness = 0;
+                        w.queue = 0.0;
+                        w.residual_s = w.h_train_s;
+                        w.last_loss = f64::NAN;
+                        pulls.reset_worker(worker);
+                        // receivers hold no transmission history for the
+                        // fresh device — codec reconstruction restarts
+                        transport.reset_worker(worker);
+                    }
+                    ScenarioEvent::Rejoin { worker } => {
+                        // stale params and accumulated τ kept; the device
+                        // restarts its local training job from scratch
+                        let w = &mut workers[worker];
+                        if lazy {
+                            // catch up the staleness the dense engine
+                            // accrued one `on_skipped` per absent round
+                            // (rounds left_at .. round-1) — pure integer
+                            // arithmetic, so lazy == eager exactly
+                            w.staleness += (round - left_at[worker]) as u64;
+                        }
+                        w.residual_s = w.h_train_s;
+                    }
+                    _ => {}
                 }
-                ScenarioEvent::Rejoin { worker } => {
-                    // stale params and accumulated τ kept; the device
-                    // restarts its local training job from scratch
-                    let w = &mut workers[worker];
-                    w.residual_s = w.h_train_s;
-                }
-                _ => {}
             },
             |rec| observers.scenario_event(&rec),
         );
+        self.events_applied = any;
     }
 
-    /// Run one round of Alg. 1; returns the realised plan (global ids).
-    pub fn step(&mut self) -> RoundPlan {
-        self.round += 1;
-        self.apply_scenario_events();
-        self.net.step(&mut self.rng);
+    /// Rebuild the cached scheduler view from scratch: dense maps,
+    /// candidate lists, and every per-present-worker array. The dense
+    /// engine runs this each round; the event engine only when the
+    /// round boundary invalidated the cache.
+    fn rebuild_view(&mut self) {
         crate::scenario::rebuild_dense_maps(
             &self.net,
             &mut self.ids,
@@ -594,10 +709,10 @@ impl VirtualClockEngine {
             &mut self.range_buf,
             &mut self.cand_buf,
         );
-
-        let h_cmp: Vec<f64> =
-            self.ids.iter().map(|&i| self.workers[i].residual_s).collect();
-        let h_est = estimate_h(
+        self.view_h_cmp.clear();
+        self.view_h_cmp
+            .extend(self.ids.iter().map(|&i| self.workers[i].residual_s));
+        estimate_h_into(
             &self.net,
             &self.workers,
             &self.ids,
@@ -605,28 +720,57 @@ impl VirtualClockEngine {
             self.wire_bits,
             self.cfg.neighbor_cap,
             &mut self.near,
+            &mut self.worst_tx,
+            &mut self.view_h_est,
         );
-        let tau: Vec<u64> =
-            self.ids.iter().map(|&i| self.workers[i].staleness).collect();
-        let queues: Vec<f64> =
-            self.ids.iter().map(|&i| self.workers[i].queue).collect();
-        let data_sizes: Vec<usize> =
-            self.ids.iter().map(|&i| self.workers[i].data_size()).collect();
-        let budgets: Vec<f64> =
-            self.ids.iter().map(|&i| self.net.budgets[i]).collect();
+        self.view_tau.clear();
+        self.view_tau
+            .extend(self.ids.iter().map(|&i| self.workers[i].staleness));
+        self.view_queues.clear();
+        self.view_queues
+            .extend(self.ids.iter().map(|&i| self.workers[i].queue));
+        self.view_data_sizes.clear();
+        self.view_data_sizes
+            .extend(self.ids.iter().map(|&i| self.workers[i].data_size()));
+        self.view_budgets.clear();
+        self.view_budgets
+            .extend(self.ids.iter().map(|&i| self.net.budgets[i]));
+    }
+
+    /// Run one round of Alg. 1; returns the realised plan (global ids).
+    pub fn step(&mut self) -> RoundPlan {
+        self.round += 1;
+        self.apply_scenario_events();
+        self.net
+            .advance_round(self.cfg.seed, self.round as u64);
+        // The cached view survives the boundary only when nothing it
+        // derives from moved: membership/environment events, mobility,
+        // per-round link fading, or budget jitter. The dense engine
+        // rebuilds unconditionally — same values either way, so the
+        // two engines stay bit-identical.
+        let cached_ok = self.event_mode
+            && self.round > 1
+            && !self.events_applied
+            && self.net.effective_mobility() == 0.0
+            && !self.net.link_drops_active()
+            && self.cfg.network.budget_jitter == 0.0;
+        if !cached_ok {
+            self.rebuild_view();
+        }
+        let p = self.ids.len();
 
         let mut plan = {
             let view = SchedView {
                 round: self.round,
-                tau: &tau,
-                queues: &queues,
-                h_cmp: &h_cmp,
-                h_est: &h_est,
-                data_sizes: &data_sizes,
+                tau: &self.view_tau,
+                queues: &self.view_queues,
+                h_cmp: &self.view_h_cmp,
+                h_est: &self.view_h_est,
+                data_sizes: &self.view_data_sizes,
                 ids: &self.ids,
                 label_dist: &self.label_dist,
                 candidates: &self.cand_buf[..p],
-                budgets: &budgets,
+                budgets: &self.view_budgets,
                 pulls: &self.pulls,
                 net: &self.net,
                 params: SchedulerParams::from(&self.cfg),
@@ -749,8 +893,28 @@ impl VirtualClockEngine {
         let outs = self.run_activations(plan);
 
         // --- apply results in plan order (fixed reduction order) ---
-        let mut h_round =
-            outs.iter().fold(0.0f64, |a, o| a.max(o.duration_s));
+        // The realised H_t (Eq. 9). The event core routes completions
+        // through the deterministic event queue and takes the last one
+        // popped; for finite non-negative durations that is the same
+        // bits as the dense fold-max.
+        let mut h_round = if self.event_mode {
+            for o in &outs {
+                let i = plan.active[o.k];
+                for &j in &o.dead {
+                    // the receiver waited out the retry budget until
+                    // its round work ended
+                    self.equeue.push(
+                        o.duration_s,
+                        SimEvent::RetryTimeout { from: j, to: i },
+                    );
+                }
+                self.equeue
+                    .push(o.duration_s, SimEvent::ActivationDone { worker: i });
+            }
+            self.equeue.drain_last_time().unwrap_or(0.0)
+        } else {
+            outs.iter().fold(0.0f64, |a, o| a.max(o.duration_s))
+        };
         if plan.active.is_empty() {
             h_round = 0.01; // avoid stalling the clock
         }
@@ -779,7 +943,7 @@ impl VirtualClockEngine {
             // still attempted (and charged), so PTCA's Eq. 47 history
             // counts it like any other planned pull
             for &j in &plan.pulls_from[o.k] {
-                self.pulls[i][j] += 1;
+                self.pulls.record(i, j);
             }
             // inbox consumed by this aggregation — recycle its buffers
             for (_, buf) in self.inbox[i].drain(..) {
@@ -858,29 +1022,76 @@ impl VirtualClockEngine {
 
         // --- clock + staleness + queues (Eqs. 6, 33) ---
         self.clock_s += h_round;
-        self.active_mask.fill(false);
+        // clear last round's mask entries and set this round's — an
+        // O(|A_{t-1}| + |A_t|) swap instead of an O(N) fill
+        for &i in &self.prev_active {
+            self.active_mask[i] = false;
+        }
+        self.prev_active.clear();
+        self.prev_active.extend_from_slice(&plan.active);
         for &i in &plan.active {
             self.active_mask[i] = true;
         }
-        for i in 0..n {
-            let w = &mut self.workers[i];
-            if !self.net.is_present(i) {
-                // absent: the model keeps getting stale, but the queue
-                // and the local training job freeze until it returns
-                w.on_skipped();
-                continue;
+        let pop = self.ids.len();
+        let mut tau_sum = 0.0f64;
+        let mut max_tau = 0u64;
+        if self.event_mode {
+            // Event core: touch only present workers. Absent workers'
+            // slots stay frozen — the staleness they accrue is
+            // reconstructed at Rejoin from `left_at` (integer
+            // arithmetic, so lazy == the dense per-round increments
+            // exactly). The τ statistics fold in the same ascending-id
+            // order as the dense stats loop, and u64 sums in f64 are
+            // exact below 2^53, so the records match bit for bit. The
+            // cached view is patched in the same pass: next round's
+            // h_est is the identical `residual + worst` addition the
+            // dense rebuild would perform (Eq. 8).
+            for k in 0..pop {
+                let i = self.ids[k];
+                let w = &mut self.workers[i];
+                w.advance(h_round);
+                if self.active_mask[i] {
+                    w.on_activated();
+                } else {
+                    w.on_skipped();
+                }
+                w.update_queue(self.cfg.tau_bound);
+                let t = w.staleness;
+                let q = w.queue;
+                let r = w.residual_s;
+                tau_sum += t as f64;
+                max_tau = max_tau.max(t);
+                self.view_tau[k] = t;
+                self.view_queues[k] = q;
+                self.view_h_cmp[k] = r;
+                self.view_h_est[k] = r + self.worst_tx[k];
             }
-            w.advance(h_round);
-            if self.active_mask[i] {
-                w.on_activated();
-            } else {
-                w.on_skipped();
+        } else {
+            for i in 0..n {
+                let w = &mut self.workers[i];
+                if !self.net.is_present(i) {
+                    // absent: the model keeps getting stale, but the
+                    // queue and the local training job freeze until it
+                    // returns
+                    w.on_skipped();
+                    continue;
+                }
+                w.advance(h_round);
+                if self.active_mask[i] {
+                    w.on_activated();
+                } else {
+                    w.on_skipped();
+                }
+                w.update_queue(self.cfg.tau_bound);
             }
-            w.update_queue(self.cfg.tau_bound);
+            for &i in &self.ids {
+                let t = self.workers[i].staleness;
+                tau_sum += t as f64;
+                max_tau = max_tau.max(t);
+            }
         }
 
         // --- metrics (population = present workers) ---
-        let pop = self.ids.len();
         let transfers = plan.transfers();
         self.cum_transfers += transfers;
         // unicast byte ledger: one encoded message per transfer edge
@@ -890,13 +1101,6 @@ impl VirtualClockEngine {
         let bytes_sent = (transfers + self.tally.retransmissions) as f64
             * self.transport.message_bytes();
         self.cum_bytes += bytes_sent;
-        let mut tau_sum = 0.0f64;
-        let mut max_tau = 0u64;
-        for &i in &self.ids {
-            let t = self.workers[i].staleness;
-            tau_sum += t as f64;
-            max_tau = max_tau.max(t);
-        }
         let avg_tau = tau_sum / pop as f64;
         let train_loss = if self.losses.is_empty() {
             f64::NAN
@@ -1008,13 +1212,41 @@ impl VirtualClockEngine {
     /// Run the configured number of rounds with periodic evaluation.
     /// With `early_stop`, stops once `target_accuracy` is reached *and*
     /// at least one later snapshot confirms it.
+    ///
+    /// The event core schedules the evaluation boundaries up-front on
+    /// its inter-round [`EventQueue`] (`every, 2·every, …, rounds` —
+    /// exactly the rounds the dense modulo test fires on) and pops them
+    /// as rounds pass; an early stop simply leaves the tail unfired.
     pub fn run(mut self, early_stop: bool) -> RunResult {
         let rounds = self.cfg.rounds;
         let every = self.cfg.eval_every.max(1);
+        if self.event_mode {
+            let mut t = every;
+            while t < rounds {
+                self.schedule.push(t as f64, SimEvent::EvalDue { round: t });
+                t = match t.checked_add(every) {
+                    Some(next) => next,
+                    None => break,
+                };
+            }
+            if rounds > 0 {
+                self.schedule
+                    .push(rounds as f64, SimEvent::EvalDue { round: rounds });
+            }
+        }
         let mut hits = 0;
         for t in 1..=rounds {
             self.step();
-            if t % every == 0 || t == rounds {
+            let eval_due = if self.event_mode {
+                let mut due = false;
+                while self.schedule.pop_due(t as f64).is_some() {
+                    due = true;
+                }
+                due
+            } else {
+                t % every == 0 || t == rounds
+            };
+            if eval_due {
                 let rec = self.evaluate();
                 if early_stop && rec.avg_accuracy >= self.cfg.target_accuracy
                 {

@@ -7,10 +7,13 @@
 //! reproduction claim. All series land as CSV under `--out`.
 
 use crate::config::{
-    AggregatorKind, AttackKind, CodecKind, DatasetKind, ExperimentConfig,
-    ModelArch, ScenarioConfig, ScenarioPreset, SchedulerKind,
+    AggregatorKind, AttackKind, CodecKind, DatasetKind, EngineKind,
+    ExperimentConfig, ModelArch, NetworkConfig, ScenarioConfig,
+    ScenarioPreset, SchedulerKind,
 };
-use crate::experiment::{Backend, Experiment, VirtualClockBackend};
+use crate::experiment::{
+    Backend, Experiment, VirtualClockBackend, VirtualClockEngine,
+};
 use crate::metrics::RunResult;
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -527,6 +530,86 @@ pub fn fig_lossy(out: &Path, scale: FigScale) -> std::io::Result<()> {
     )
 }
 
+/// Scale-sweep config (Fig. 31 and the `sim_round N=…` scale bench
+/// rows): constant-density geometry — the region side grows with √N so
+/// per-worker degree (~6 neighbors in range) is size-independent —
+/// with mobility, budget jitter and link drops frozen so the event
+/// engine's cached fast path engages, and an effectively infinite
+/// τ-bound so queues stay at zero and WAA's zero-queue path activates
+/// exactly one worker per round: a fixed per-round activation count at
+/// every N, which is what makes per-round wall time comparable across
+/// sizes. The workload is shrunk (8-dim linear, 4 samples/worker) so
+/// building N=1M workers fits in CI memory.
+pub fn scale_cfg(n: usize, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        workers: n,
+        rounds: 10_000, // engines are stepped manually
+        seed,
+        train_per_worker: 4,
+        batch: 4,
+        local_steps: 1,
+        feature_dim: 8,
+        num_classes: 4,
+        test_samples: 32,
+        eval_every: usize::MAX,
+        target_accuracy: 2.0,
+        tau_bound: u64::MAX,
+        network: NetworkConfig {
+            region_m: 33.0 * (n as f64).sqrt(),
+            mobility_m: 0.0,
+            budget_jitter: 0.0,
+            link_drop_prob: 0.0,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Fig. 31 (beyond the paper) — simulator scaling: per-round wall time
+/// vs N for the dense sweep (`run.engine=dense`) against the
+/// discrete-event core (`run.engine=event`), at a fixed one activation
+/// per round (see [`scale_cfg`]). The dense engine re-derives geometry,
+/// candidates and transfer estimates every round; the event engine
+/// reuses its cached view and only patches per-worker state, so its
+/// per-round curve should stay well below dense at every N and the gap
+/// should widen with N.
+pub fn fig_scale(out: &Path, scale: FigScale) -> std::io::Result<()> {
+    let n0 = scale.workers.max(8);
+    let sizes = [n0, n0 * 5, n0 * 25];
+    let rounds = scale.rounds.clamp(10, 60);
+    let mut lines = Vec::new();
+    for &n in &sizes {
+        for engine in [EngineKind::Dense, EngineKind::Event] {
+            let mut cfg = scale_cfg(n, scale.seed);
+            cfg.engine = engine;
+            let exp = Experiment::builder(cfg).build().map_err(|e| {
+                std::io::Error::other(e.to_string())
+            })?;
+            let mut eng = VirtualClockEngine::new(exp);
+            let t0 = std::time::Instant::now();
+            for _ in 0..rounds {
+                eng.step();
+            }
+            let total_s = t0.elapsed().as_secs_f64();
+            let per_round_ms = total_s / rounds as f64 * 1e3;
+            println!(
+                "fig31 N={n:>7} engine={:<5}: {per_round_ms:.4} ms/round \
+                 ({rounds} rounds in {total_s:.3}s)",
+                engine.name()
+            );
+            lines.push(format!(
+                "{n},{},{rounds},{total_s:.6},{per_round_ms:.6}",
+                engine.name()
+            ));
+        }
+    }
+    write_lines(
+        &out.join("fig31_scale.csv"),
+        "n,engine,rounds,total_s,per_round_ms",
+        &lines,
+    )
+}
+
 /// Dispatch by figure id.
 pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> {
     let go = |r: std::io::Result<()>| r.map_err(|e| e.to_string());
@@ -545,6 +628,7 @@ pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> 
         "28" | "workload" => go(fig_workload(out, scale)),
         "29" | "adversary" => go(fig_adversary(out, scale)),
         "30" | "lossy" => go(fig_lossy(out, scale)),
+        "31" | "scale" => go(fig_scale(out, scale)),
         "all" => {
             go(fig3(out, scale))?;
             go(fig_main(out, scale, &[1.0, 0.7, 0.4]))?;
@@ -557,12 +641,13 @@ pub fn run_figure(fig: &str, out: &Path, scale: FigScale) -> Result<(), String> 
             go(fig_codec(out, scale))?;
             go(fig_workload(out, scale))?;
             go(fig_adversary(out, scale))?;
-            go(fig_lossy(out, scale))
+            go(fig_lossy(out, scale))?;
+            go(fig_scale(out, scale))
         }
         other => Err(format!(
             "unknown figure {other:?} \
              (3,4..18,20..25,26|churn,27|codec,28|workload,29|adversary,\
-             30|lossy,all)"
+             30|lossy,31|scale,all)"
         )),
     }
 }
@@ -711,6 +796,25 @@ mod tests {
         }
         assert!(saw_retrans, "lossy retrying runs must retransmit");
         assert!(saw_dropped, "retry-less lossy runs must drop");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fig31_scale_tiny_runs() {
+        let dir = std::env::temp_dir().join("dystop_figtest_scale");
+        let _ = std::fs::remove_dir_all(&dir);
+        let scale = FigScale { workers: 8, rounds: 10, seed: 5 };
+        fig_scale(&dir, scale).unwrap();
+        let text =
+            std::fs::read_to_string(dir.join("fig31_scale.csv")).unwrap();
+        // header + 3 sizes × 2 engines
+        assert_eq!(text.lines().count(), 7);
+        for l in text.lines().skip(1) {
+            let f: Vec<&str> = l.split(',').collect();
+            assert!(f[1] == "dense" || f[1] == "event", "{l}");
+            let per_round_ms: f64 = f[4].parse().unwrap();
+            assert!(per_round_ms >= 0.0, "{l}");
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

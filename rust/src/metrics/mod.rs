@@ -5,6 +5,8 @@
 use std::io::Write;
 use std::path::Path;
 
+pub mod sink;
+
 /// One scheduler round.
 #[derive(Clone, Debug)]
 pub struct RoundRecord {

@@ -1,0 +1,338 @@
+//! Streaming metrics sinks (`metrics.sink=csv|jsonl`): [`RoundObserver`]
+//! variants that write each record to disk the moment the engine commits
+//! it, so a run's full history never has to fit in memory. Combined with
+//! a bounded `metrics.window` on the in-memory recorder this makes the
+//! resident footprint of an N=1M run independent of round count.
+//!
+//! The CSV sink produces byte-identical rows to the post-hoc
+//! [`RunResult`](super::RunResult) CSV writers (same format strings), so
+//! downstream tooling cannot tell whether a file was streamed or dumped.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+use crate::config::{MetricsConfig, SinkKind};
+use crate::coordinator::RoundPlan;
+use crate::experiment::RoundObserver;
+use crate::metrics::{EvalRecord, EventRecord, RoundRecord};
+
+fn create_buffered(path: &Path) -> io::Result<BufWriter<File>> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    Ok(BufWriter::new(File::create(path)?))
+}
+
+/// Build the configured streaming sink (`None` for `sink=memory`).
+pub fn make_sink(
+    cfg: &MetricsConfig,
+) -> io::Result<Option<Box<dyn RoundObserver>>> {
+    match cfg.sink {
+        SinkKind::Memory => Ok(None),
+        SinkKind::Csv => {
+            Ok(Some(Box::new(CsvSink::create(Path::new(&cfg.out))?)))
+        }
+        SinkKind::Jsonl => {
+            Ok(Some(Box::new(JsonlSink::create(Path::new(&cfg.out))?)))
+        }
+    }
+}
+
+/// Streams rounds/evals/events to three CSV files named by appending
+/// `_rounds.csv` / `_evals.csv` / `_events.csv` to the `metrics.out`
+/// prefix. Row formats match [`RunResult::write_rounds_csv`] /
+/// `write_eval_csv` / `write_events_csv` exactly.
+pub struct CsvSink {
+    rounds: BufWriter<File>,
+    evals: BufWriter<File>,
+    events: BufWriter<File>,
+}
+
+fn with_suffix(prefix: &Path, suffix: &str) -> std::path::PathBuf {
+    let mut s = prefix.as_os_str().to_os_string();
+    s.push(suffix);
+    std::path::PathBuf::from(s)
+}
+
+impl CsvSink {
+    pub fn create(prefix: &Path) -> io::Result<Self> {
+        let mut rounds = create_buffered(&with_suffix(prefix, "_rounds.csv"))?;
+        let mut evals = create_buffered(&with_suffix(prefix, "_evals.csv"))?;
+        let mut events = create_buffered(&with_suffix(prefix, "_events.csv"))?;
+        writeln!(
+            rounds,
+            "round,time_s,duration_s,active,population,adversaries,transfers,bytes_sent,avg_staleness,max_staleness,train_loss,retransmissions,dropped_msgs,corrupt_detected"
+        )?;
+        writeln!(evals, "round,time_s,accuracy,loss,comm_gb")?;
+        writeln!(events, "round,kind,worker,population")?;
+        Ok(CsvSink { rounds, evals, events })
+    }
+}
+
+impl RoundObserver for CsvSink {
+    fn on_scenario_event(&mut self, rec: &EventRecord) {
+        let _ = writeln!(
+            self.events,
+            "{},{},{},{}",
+            rec.round,
+            rec.kind,
+            rec.worker.map(|w| w.to_string()).unwrap_or_default(),
+            rec.population,
+        );
+    }
+
+    fn on_round_end(&mut self, rec: &RoundRecord) {
+        let _ = writeln!(
+            self.rounds,
+            "{},{:.4},{:.4},{},{},{},{},{:.0},{:.4},{},{:.6},{},{},{}",
+            rec.round,
+            rec.time_s,
+            rec.duration_s,
+            rec.active,
+            rec.population,
+            rec.adversaries,
+            rec.transfers,
+            rec.bytes_sent,
+            rec.avg_staleness,
+            rec.max_staleness,
+            rec.train_loss,
+            rec.retransmissions,
+            rec.dropped_msgs,
+            rec.corrupt_detected,
+        );
+    }
+
+    fn on_eval(&mut self, rec: &EvalRecord) {
+        let _ = writeln!(
+            self.evals,
+            "{},{:.4},{:.6},{:.6},{:.6}",
+            rec.round,
+            rec.time_s,
+            rec.avg_accuracy,
+            rec.avg_loss,
+            rec.cum_bytes / 1e9,
+        );
+        // evals are rare — flush so long runs keep fresh artifacts even
+        // if the process is killed (CI smoke uploads mid-run state)
+        let _ = self.evals.flush();
+        let _ = self.rounds.flush();
+        let _ = self.events.flush();
+    }
+}
+
+/// JSON number: `f64`'s `Display` is valid JSON for finite values;
+/// NaN/inf (train_loss on empty rounds) become `null`.
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Streams every record to one JSON-lines file (`metrics.out`), one
+/// type-tagged object per line — `{"type":"round",...}`,
+/// `{"type":"eval",...}`, `{"type":"event",...}`, plus a
+/// `{"type":"plan",...}` line per scheduled round (round + active-set
+/// size only, so lines stay O(1)).
+pub struct JsonlSink {
+    out: BufWriter<File>,
+}
+
+impl JsonlSink {
+    pub fn create(path: &Path) -> io::Result<Self> {
+        Ok(JsonlSink { out: create_buffered(path)? })
+    }
+}
+
+impl RoundObserver for JsonlSink {
+    fn on_scenario_event(&mut self, rec: &EventRecord) {
+        let worker = rec
+            .worker
+            .map(|w| w.to_string())
+            .unwrap_or_else(|| "null".into());
+        let _ = writeln!(
+            self.out,
+            "{{\"type\":\"event\",\"round\":{},\"kind\":\"{}\",\"worker\":{},\"population\":{}}}",
+            rec.round, rec.kind, worker, rec.population,
+        );
+    }
+
+    fn on_plan(&mut self, round: usize, plan: &RoundPlan) {
+        let _ = writeln!(
+            self.out,
+            "{{\"type\":\"plan\",\"round\":{},\"active\":{}}}",
+            round,
+            plan.active.len(),
+        );
+    }
+
+    fn on_round_end(&mut self, rec: &RoundRecord) {
+        let _ = writeln!(
+            self.out,
+            "{{\"type\":\"round\",\"round\":{},\"time_s\":{},\"duration_s\":{},\"active\":{},\"population\":{},\"adversaries\":{},\"transfers\":{},\"bytes_sent\":{},\"avg_staleness\":{},\"max_staleness\":{},\"train_loss\":{},\"retransmissions\":{},\"dropped_msgs\":{},\"corrupt_detected\":{}}}",
+            rec.round,
+            jnum(rec.time_s),
+            jnum(rec.duration_s),
+            rec.active,
+            rec.population,
+            rec.adversaries,
+            rec.transfers,
+            jnum(rec.bytes_sent),
+            jnum(rec.avg_staleness),
+            rec.max_staleness,
+            jnum(rec.train_loss),
+            rec.retransmissions,
+            rec.dropped_msgs,
+            rec.corrupt_detected,
+        );
+    }
+
+    fn on_eval(&mut self, rec: &EvalRecord) {
+        let _ = writeln!(
+            self.out,
+            "{{\"type\":\"eval\",\"round\":{},\"time_s\":{},\"accuracy\":{},\"loss\":{},\"cum_transfers\":{},\"cum_bytes\":{}}}",
+            rec.round,
+            jnum(rec.time_s),
+            jnum(rec.avg_accuracy),
+            jnum(rec.avg_loss),
+            rec.cum_transfers,
+            jnum(rec.cum_bytes),
+        );
+        let _ = self.out.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RunResult;
+
+    fn round_rec(round: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            time_s: round as f64 + 0.125,
+            duration_s: 1.0,
+            active: 2,
+            population: 4,
+            adversaries: 0,
+            transfers: 3,
+            bytes_sent: 24.0,
+            avg_staleness: 0.5,
+            max_staleness: 1,
+            train_loss: if round == 2 { f64::NAN } else { 0.9 },
+            retransmissions: 0,
+            dropped_msgs: 0,
+            corrupt_detected: 0,
+        }
+    }
+
+    fn eval_rec() -> EvalRecord {
+        EvalRecord {
+            round: 2,
+            time_s: 2.125,
+            avg_accuracy: 0.75,
+            avg_loss: 0.5,
+            cum_transfers: 6,
+            cum_bytes: 48.0,
+        }
+    }
+
+    fn event_rec() -> EventRecord {
+        EventRecord { round: 1, kind: "leave", worker: Some(3), population: 3 }
+    }
+
+    #[test]
+    fn csv_sink_matches_post_hoc_writers_byte_for_byte() {
+        let dir = std::env::temp_dir().join("dystop_sink_csv_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let prefix = dir.join("run");
+        {
+            let mut sink = CsvSink::create(&prefix).unwrap();
+            sink.on_scenario_event(&event_rec());
+            for t in 1..=2 {
+                sink.on_round_end(&round_rec(t));
+            }
+            sink.on_eval(&eval_rec());
+        } // drop flushes
+        // the same records through the in-memory result + batch writers
+        let result = RunResult {
+            label: "x".into(),
+            model_bits: 64.0,
+            rounds: vec![round_rec(1), round_rec(2)],
+            evals: vec![eval_rec()],
+            events: vec![event_rec()],
+        };
+        result.write_rounds_csv(&dir.join("batch_rounds.csv")).unwrap();
+        result.write_eval_csv(&dir.join("batch_evals.csv")).unwrap();
+        result.write_events_csv(&dir.join("batch_events.csv")).unwrap();
+        for (streamed, batch) in [
+            ("run_rounds.csv", "batch_rounds.csv"),
+            ("run_evals.csv", "batch_evals.csv"),
+            ("run_events.csv", "batch_events.csv"),
+        ] {
+            let s = std::fs::read_to_string(dir.join(streamed)).unwrap();
+            let b = std::fs::read_to_string(dir.join(batch)).unwrap();
+            assert_eq!(s, b, "{streamed} diverged from {batch}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn jsonl_sink_emits_tagged_lines_with_null_for_nan() {
+        let dir = std::env::temp_dir().join("dystop_sink_jsonl_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("run.jsonl");
+        {
+            let mut sink = JsonlSink::create(&path).unwrap();
+            sink.on_scenario_event(&EventRecord {
+                round: 1,
+                kind: "bandwidth-shift",
+                worker: None,
+                population: 4,
+            });
+            sink.on_plan(1, &RoundPlan::default());
+            sink.on_round_end(&round_rec(2)); // NaN train_loss
+            sink.on_eval(&eval_rec());
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("{\"type\":\"event\""));
+        assert!(lines[0].contains("\"worker\":null"), "{}", lines[0]);
+        assert!(lines[1].starts_with("{\"type\":\"plan\""));
+        assert!(lines[2].contains("\"train_loss\":null"), "{}", lines[2]);
+        assert!(lines[3].starts_with("{\"type\":\"eval\""));
+        assert!(lines[3].contains("\"accuracy\":0.75"), "{}", lines[3]);
+        // every line is a braces-balanced object (cheap well-formedness)
+        for l in &lines {
+            assert!(l.starts_with('{') && l.ends_with('}'), "{l}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn make_sink_respects_the_knob() {
+        let dir = std::env::temp_dir().join("dystop_sink_make_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mem = MetricsConfig::default();
+        assert!(make_sink(&mem).unwrap().is_none());
+        let jsonl = MetricsConfig {
+            sink: SinkKind::Jsonl,
+            out: dir.join("a.jsonl").to_string_lossy().into_owned(),
+            window: 0,
+        };
+        assert!(make_sink(&jsonl).unwrap().is_some());
+        let csv = MetricsConfig {
+            sink: SinkKind::Csv,
+            out: dir.join("b").to_string_lossy().into_owned(),
+            window: 0,
+        };
+        assert!(make_sink(&csv).unwrap().is_some());
+        assert!(dir.join("b_rounds.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -24,20 +24,21 @@ impl Pos {
 }
 
 /// The time-varying physical network: positions, tx powers, budgets,
-/// link state, and membership. `step(rng)` advances one round of edge
-/// dynamics.
+/// link state, and membership. [`advance_round`](Self::advance_round)
+/// advances one round of edge dynamics on keyed per-worker RNG streams.
 ///
 /// # Membership
 ///
 /// The scenario layer (worker churn — [`crate::scenario`]) flips a
 /// per-worker present/absent mask. Membership is a *query-time* filter:
-/// [`link_up`](Self::link_up) and [`in_range`](Self::in_range) treat an
-/// absent worker as unreachable (radio off), but the physical substrate
-/// — positions, tx powers, budgets, the dropped-link bitmap — keeps
-/// evolving for everyone. That keeps `step`'s RNG draw sequence
-/// independent of membership, so a run under `scenario.preset=stable`
-/// is bit-identical to the pre-scenario engine, and churn timelines
-/// never perturb the dynamics of the workers that stayed.
+/// [`link_up`](Self::link_up) and [`in_range_into`](Self::in_range_into)
+/// treat an absent worker as unreachable (radio off), but the physical
+/// substrate — positions, tx powers, budgets, link-drop streams — keeps
+/// evolving for everyone. Dynamics are drawn from
+/// [`Pcg::dynamics_stream`] keyed by `(seed, round, worker)` and link
+/// drops from [`Pcg::link_stream`] keyed by `(seed, round, from, to)`,
+/// so the draw sequence is independent of membership, backend, query
+/// order, and thread count by construction.
 #[derive(Clone, Debug)]
 pub struct EdgeNetwork {
     pub cfg: NetworkConfig,
@@ -48,10 +49,15 @@ pub struct EdgeNetwork {
     /// (`\hat B_t^i` of Eq. 12d), refreshed each round.
     pub budgets: Vec<f64>,
     channel: ChannelModel,
-    /// Links dropped for the current round (edge dynamics), as a dense
-    /// n×n bitmap — `link_up` is on the per-round O(N²) hot path and a
-    /// linear scan here was the simulator's top cost (EXPERIMENTS §Perf).
-    dropped: Vec<bool>,
+    /// Key of the link-drop/dynamics streams for the current round, set
+    /// by `advance_round`. Round 0 (before the first advance) has no
+    /// drops, matching the pre-event-engine initial state.
+    seed: u64,
+    round: u64,
+    /// Grid-bucketed spatial index over `positions`; engaged only in the
+    /// sparse regime (region ≫ comm range), where it makes
+    /// `in_range_into` O(degree) instead of O(N).
+    grid: GridIndex,
     /// Membership mask: `false` = departed/crashed (radio off).
     present: Vec<bool>,
     /// Scenario modifier: multiplies the per-round budget refresh
@@ -63,6 +69,64 @@ pub struct EdgeNetwork {
     /// Scenario modifier: when set, links crossing the region's vertical
     /// midline are down (`RegionPartition` events).
     partitioned: bool,
+}
+
+/// Grid-bucketed neighbor index: positions hashed into square cells of
+/// side ≥ `comm_range_m`, so every in-range neighbor of a worker lives
+/// in its own cell or one of the 8 adjacent cells.
+///
+/// Only engaged (`built == true`) when the region spans more than a 3×3
+/// grid of comm-range cells; at the default density (region 100 m,
+/// range 45 m) a 3×3 gather would visit every worker anyway, so the
+/// linear scan is kept and behavior is byte-identical to the
+/// pre-index engine.
+#[derive(Clone, Debug, Default)]
+struct GridIndex {
+    built: bool,
+    cell_m: f64,
+    nx: usize,
+    ny: usize,
+    /// Per-cell worker ids, each bucket ascending (filled 0..n in order).
+    buckets: Vec<Vec<u32>>,
+}
+
+impl GridIndex {
+    fn cell_of(&self, p: Pos) -> (usize, usize) {
+        let cx = ((p.x / self.cell_m) as usize).min(self.nx - 1);
+        let cy = ((p.y / self.cell_m) as usize).min(self.ny - 1);
+        (cx, cy)
+    }
+
+    /// Rebuild the buckets from scratch: O(N).
+    fn rebuild(&mut self, cfg: &NetworkConfig, positions: &[Pos]) {
+        // cell side ≥ comm range (3×3 gather stays sufficient), and at
+        // most ~√N cells per axis so bucket memory stays O(N) even when
+        // the region dwarfs the population
+        let target = (positions.len() as f64).sqrt().ceil().max(1.0);
+        let cell = (cfg.region_m / target)
+            .max(cfg.comm_range_m)
+            .max(1e-9);
+        let nx = (cfg.region_m / cell) as usize + 1;
+        let ny = nx;
+        if nx * ny <= 9 {
+            // dense regime: a 3×3 gather covers the whole region, the
+            // linear scan in `in_range_into` is cheaper than bucketing
+            self.built = false;
+            return;
+        }
+        self.cell_m = cell;
+        self.nx = nx;
+        self.ny = ny;
+        self.buckets.resize(nx * ny, Vec::new());
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        for (i, &p) in positions.iter().enumerate() {
+            let (cx, cy) = self.cell_of(p);
+            self.buckets[cy * self.nx + cx].push(i as u32);
+        }
+        self.built = true;
+    }
 }
 
 impl EdgeNetwork {
@@ -87,13 +151,16 @@ impl EdgeNetwork {
             tx_watts,
             budgets: vec![0.0; n],
             channel,
-            dropped: vec![false; n * n],
+            seed: 0,
+            round: 0,
+            grid: GridIndex::default(),
             present: vec![true; n],
             budget_scale: 1.0,
             mobility_scale: 1.0,
             partitioned: false,
         };
         net.refresh_budgets(rng);
+        net.grid.rebuild(&net.cfg, &net.positions);
         net
     }
 
@@ -158,29 +225,45 @@ impl EdgeNetwork {
     /// Advance one round of edge dynamics: mobility, budget jitter,
     /// random link drops.
     ///
-    /// Deliberately membership-independent: every worker draws its
-    /// mobility/budget randomness whether present or not, so the RNG
-    /// stream (and therefore every present worker's trajectory) does not
-    /// depend on who is absent this round.
-    pub fn step(&mut self, rng: &mut Pcg) {
+    /// Each worker draws its mobility step and budget refresh from
+    /// [`Pcg::dynamics_stream`]`(seed, round, worker)`; link drops are
+    /// *not* materialised — [`link_up`](Self::link_up) evaluates
+    /// [`Pcg::link_stream`]`(seed, round, from, to)` on demand, so link
+    /// state costs O(queries) instead of the former O(N²) bitmap fill.
+    /// Keyed streams make the dynamics membership-independent by
+    /// construction: a worker's trajectory never depends on who else is
+    /// absent, which backend is stepping, or how many links were queried.
+    pub fn advance_round(&mut self, seed: u64, round: u64) {
+        self.seed = seed;
+        self.round = round;
         let m = self.cfg.mobility_m * self.mobility_scale;
-        if m > 0.0 {
-            for p in &mut self.positions {
-                p.x = (p.x + rng.normal_ms(0.0, m)).clamp(0.0, self.cfg.region_m);
-                p.y = (p.y + rng.normal_ms(0.0, m)).clamp(0.0, self.cfg.region_m);
-            }
-        }
-        self.refresh_budgets(rng);
-        self.dropped.fill(false);
-        if self.cfg.link_drop_prob > 0.0 {
-            let n = self.len();
-            for i in 0..n {
-                for j in 0..n {
-                    if i != j && rng.f64() < self.cfg.link_drop_prob {
-                        self.dropped[i * n + j] = true;
-                    }
+        let jitter = self.cfg.budget_jitter;
+        // budget_scale is 1.0 outside BandwidthShift windows; multiplying
+        // by exactly 1.0 is bit-exact, preserving stable-preset parity
+        let base = self.cfg.budget_models * self.budget_scale;
+        if m > 0.0 || jitter != 0.0 {
+            for i in 0..self.len() {
+                let mut r = Pcg::dynamics_stream(seed, round, i as u64);
+                if m > 0.0 {
+                    let p = &mut self.positions[i];
+                    p.x = (p.x + r.normal_ms(0.0, m)).clamp(0.0, self.cfg.region_m);
+                    p.y = (p.y + r.normal_ms(0.0, m)).clamp(0.0, self.cfg.region_m);
                 }
+                // jitter == 0 ⇒ normal_ms(1, 0) is exactly 1.0, so the
+                // draw is skipped without changing the value (the stream
+                // is per-worker and per-round — consumption can't leak)
+                self.budgets[i] = if jitter != 0.0 {
+                    (base * r.normal_ms(1.0, jitter)).max(1.0)
+                } else {
+                    base.max(1.0)
+                };
             }
+            if m > 0.0 {
+                self.grid.rebuild(&self.cfg, &self.positions);
+            }
+        } else {
+            let b = base.max(1.0);
+            self.budgets.fill(b);
         }
     }
 
@@ -194,6 +277,38 @@ impl EdgeNetwork {
         }
     }
 
+    /// Effective per-round mobility σ (config × scenario scale). Zero
+    /// means positions are static this round — the engines use this to
+    /// decide whether cached geometry (candidates, transfer estimates)
+    /// is still valid.
+    pub fn effective_mobility(&self) -> f64 {
+        self.cfg.mobility_m * self.mobility_scale
+    }
+
+    /// Are random per-round link drops active? When true, candidate sets
+    /// change every round even with static positions.
+    pub fn link_drops_active(&self) -> bool {
+        self.cfg.link_drop_prob > 0.0
+    }
+
+    /// Effective budget refresh base (config × scenario scale); with
+    /// `budget_jitter == 0` every present worker's budget equals
+    /// `base.max(1.0)` until the next `BandwidthShift`.
+    pub fn budget_base(&self) -> f64 {
+        self.cfg.budget_models * self.budget_scale
+    }
+
+    /// Is the directed edge `i → j` dropped this round? Evaluates the
+    /// keyed per-link stream on demand; before the first
+    /// [`advance_round`](Self::advance_round) (round 0) no links are
+    /// dropped.
+    fn link_dropped(&self, i: usize, j: usize) -> bool {
+        self.cfg.link_drop_prob > 0.0
+            && self.round > 0
+            && Pcg::link_stream(self.seed, self.round, i as u64, j as u64).f64()
+                < self.cfg.link_drop_prob
+    }
+
     /// Is `i → j` usable this round? (both present, within range, same
     /// partition side, not dropped)
     pub fn link_up(&self, i: usize, j: usize) -> bool {
@@ -205,26 +320,51 @@ impl EdgeNetwork {
         }
         self.positions[i].dist(self.positions[j]) <= self.cfg.comm_range_m
             && self.same_side(i, j)
-            && !self.dropped[i * self.len() + j]
+            && !self.link_dropped(i, j)
     }
 
     /// Workers within communication range of `i` (the candidate set
     /// `C_t^i` of Alg. 3), excluding `i` itself and absent workers.
     ///
-    /// Allocates a fresh `Vec` per call; the per-round candidate build is
-    /// O(N) such calls, so the engines use
-    /// [`in_range_into`](Self::in_range_into) with a reused buffer.
+    /// Allocates a fresh `Vec` per call — test-only convenience; all
+    /// engine paths go through [`in_range_into`](Self::in_range_into),
+    /// which reuses a buffer and the grid index.
+    #[cfg(test)]
     pub fn in_range(&self, i: usize) -> Vec<usize> {
         let mut out = Vec::new();
         self.in_range_into(i, &mut out);
         out
     }
 
-    /// Allocation-free [`in_range`](Self::in_range): clears `out` and
-    /// fills it with the candidate set.
+    /// Clears `out` and fills it with the candidate set of `i`, in
+    /// ascending id order.
+    ///
+    /// In the sparse regime (grid index engaged) this gathers only the
+    /// 3×3 comm-range cells around `i` — O(degree) — and sorts; the
+    /// output is identical to the dense linear scan, which remains the
+    /// fallback when the region spans ≤ 3×3 cells.
     pub fn in_range_into(&self, i: usize, out: &mut Vec<usize>) {
         out.clear();
-        out.extend((0..self.len()).filter(|&j| j != i && self.link_up(j, i)));
+        if !self.grid.built {
+            out.extend((0..self.len()).filter(|&j| j != i && self.link_up(j, i)));
+            return;
+        }
+        let (cx, cy) = self.grid.cell_of(self.positions[i]);
+        let x0 = cx.saturating_sub(1);
+        let x1 = (cx + 1).min(self.grid.nx - 1);
+        let y0 = cy.saturating_sub(1);
+        let y1 = (cy + 1).min(self.grid.ny - 1);
+        for gy in y0..=y1 {
+            for gx in x0..=x1 {
+                for &j32 in &self.grid.buckets[gy * self.grid.nx + gx] {
+                    let j = j32 as usize;
+                    if j != i && self.link_up(j, i) {
+                        out.push(j);
+                    }
+                }
+            }
+        }
+        out.sort_unstable();
     }
 
     pub fn distance(&self, i: usize, j: usize) -> f64 {
@@ -280,9 +420,9 @@ mod tests {
 
     #[test]
     fn budgets_positive_and_jittered() {
-        let (mut net, mut rng) = net(50, 2);
+        let (mut net, _) = net(50, 2);
         let before = net.budgets.clone();
-        net.step(&mut rng);
+        net.advance_round(2, 1);
         assert!(net.budgets.iter().all(|&b| b >= 1.0));
         assert_ne!(before, net.budgets);
     }
@@ -321,10 +461,10 @@ mod tests {
 
     #[test]
     fn mobility_moves_but_stays_in_region() {
-        let (mut net, mut rng) = net(20, 5);
+        let (mut net, _) = net(20, 5);
         let before = net.positions.clone();
-        for _ in 0..10 {
-            net.step(&mut rng);
+        for r in 1..=10 {
+            net.advance_round(5, r);
         }
         assert_ne!(before, net.positions);
         for p in &net.positions {
@@ -335,7 +475,7 @@ mod tests {
     #[test]
     fn self_link_always_up_and_free() {
         let (mut net, mut rng) = net(10, 6);
-        net.step(&mut rng);
+        net.advance_round(6, 1);
         for i in 0..10 {
             assert!(net.link_up(i, i));
             assert_eq!(net.transfer_time_s(i, i, 1e6, &mut rng), 0.0);
@@ -344,13 +484,56 @@ mod tests {
 
     #[test]
     fn in_range_into_matches_allocating_variant() {
-        let (mut net, mut rng) = net(30, 7);
+        let (mut net, _) = net(30, 7);
         let mut buf = Vec::new();
-        for _ in 0..5 {
-            net.step(&mut rng);
+        for r in 1..=5 {
+            net.advance_round(7, r);
             for i in 0..30 {
                 net.in_range_into(i, &mut buf);
                 assert_eq!(buf, net.in_range(i));
+            }
+        }
+    }
+
+    #[test]
+    fn link_drops_are_stable_within_a_round_and_vary_across_rounds() {
+        let mut c = cfg();
+        c.mobility_m = 0.0;
+        c.link_drop_prob = 0.5;
+        c.comm_range_m = 200.0; // geometry never severs links
+        let mut rng = Pcg::seeded(13);
+        let mut net = EdgeNetwork::new(40, c, &mut rng);
+        net.advance_round(13, 1);
+        let snap: Vec<bool> =
+            (0..40).map(|j| net.link_up(j, 0)).collect();
+        // re-querying is pure: same round → same outcome
+        for (j, &up) in snap.iter().enumerate() {
+            assert_eq!(net.link_up(j, 0), up);
+        }
+        net.advance_round(13, 2);
+        let snap2: Vec<bool> =
+            (0..40).map(|j| net.link_up(j, 0)).collect();
+        assert_ne!(snap, snap2, "drops should re-roll across rounds");
+        assert!(net.link_up(0, 0), "self link never dropped");
+    }
+
+    #[test]
+    fn grid_index_matches_linear_scan_in_sparse_regime() {
+        let mut c = cfg();
+        c.region_m = 1000.0; // region ≫ comm range → grid engaged
+        c.link_drop_prob = 0.05;
+        let mut rng = Pcg::seeded(14);
+        let mut net = EdgeNetwork::new(300, c, &mut rng);
+        let mut buf = Vec::new();
+        for r in 1..=3 {
+            net.advance_round(14, r);
+            net.set_present(17, r != 2); // membership filter rides along
+            for i in 0..300 {
+                net.in_range_into(i, &mut buf);
+                let linear: Vec<usize> = (0..300)
+                    .filter(|&j| j != i && net.link_up(j, i))
+                    .collect();
+                assert_eq!(buf, linear, "worker {i} round {r}");
             }
         }
     }
@@ -382,14 +565,16 @@ mod tests {
 
     #[test]
     fn membership_does_not_perturb_dynamics_rng() {
-        // step() must draw identically whether workers are absent or not
-        let (mut a, mut rng_a) = net(12, 9);
-        let (mut b, mut rng_b) = net(12, 9);
+        // dynamics must advance identically whether workers are absent
+        // or not — keyed streams guarantee it by construction, this
+        // pins the contract
+        let (mut a, _) = net(12, 9);
+        let (mut b, _) = net(12, 9);
         b.set_present(2, false);
         b.set_present(7, false);
-        for _ in 0..4 {
-            a.step(&mut rng_a);
-            b.step(&mut rng_b);
+        for r in 1..=4 {
+            a.advance_round(9, r);
+            b.advance_round(9, r);
         }
         assert_eq!(a.positions, b.positions);
         assert_eq!(a.budgets, b.budgets);
@@ -397,13 +582,13 @@ mod tests {
 
     #[test]
     fn bandwidth_shift_scales_budget_refresh() {
-        let (mut net, mut rng) = net(20, 10);
+        let (mut net, _) = net(20, 10);
         net.set_budget_scale(0.0);
-        net.step(&mut rng);
+        net.advance_round(10, 1);
         // base×0 floors at the 1.0 minimum transfer
         assert!(net.budgets.iter().all(|&b| b == 1.0));
         net.set_budget_scale(10.0);
-        net.step(&mut rng);
+        net.advance_round(10, 2);
         let mean = net.budgets.iter().sum::<f64>() / 20.0;
         assert!(mean > 50.0, "mean budget {mean} under 10× shift");
     }
@@ -434,7 +619,7 @@ mod tests {
         let mut net = EdgeNetwork::new(30, c, &mut rng);
         let start = net.positions.clone();
         net.set_mobility_scale(50.0);
-        net.step(&mut rng);
+        net.advance_round(12, 1);
         let mean_move = net
             .positions
             .iter()

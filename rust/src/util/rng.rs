@@ -69,6 +69,37 @@ impl Pcg {
         Pcg::new(h, mix64(h ^ 0x5899_65CC_7537_4CC3))
     }
 
+    /// Deterministic per-worker edge-dynamics stream: a generator keyed
+    /// purely by `(seed, round, worker)` that drives one worker's
+    /// mobility step and bandwidth-budget refresh for one round. Keyed
+    /// like [`activation_stream`]: it depends on nothing else — not the
+    /// backend, not membership, not how much any other stream consumed —
+    /// so the dense and event engines (and the threaded testbed) realise
+    /// bit-identical network dynamics without sharing a sequential
+    /// generator.
+    ///
+    /// [`activation_stream`]: Self::activation_stream
+    pub fn dynamics_stream(seed: u64, round: u64, worker: u64) -> Pcg {
+        let h = mix64(seed ^ 0xB5D4_C1E9_7A3F_66D1);
+        let h = mix64(h ^ round.wrapping_mul(0xE703_7ED1_A0B4_28DB));
+        let h = mix64(h ^ worker.wrapping_mul(0x8EBC_6AF0_9C88_C6E3));
+        Pcg::new(h, mix64(h ^ 0x5899_65CC_7537_4CC3))
+    }
+
+    /// Deterministic per-link drop stream: a generator keyed purely by
+    /// `(seed, round, from, to)` that decides whether the directed edge
+    /// is dropped this round. Evaluated on demand by
+    /// [`EdgeNetwork::link_up`](crate::network::EdgeNetwork::link_up)
+    /// instead of materialising an n×n bitmap up front, so link state
+    /// costs O(queries), not O(N²) per round.
+    pub fn link_stream(seed: u64, round: u64, from: u64, to: u64) -> Pcg {
+        let h = mix64(seed ^ 0x1F83_D9AB_FB41_BD6B);
+        let h = mix64(h ^ round.wrapping_mul(0xE703_7ED1_A0B4_28DB));
+        let h = mix64(h ^ from.wrapping_mul(0x8EBC_6AF0_9C88_C6E3));
+        let h = mix64(h ^ to.wrapping_mul(0xD6E8_FEB8_6659_FD93));
+        Pcg::new(h, mix64(h ^ 0x5899_65CC_7537_4CC3))
+    }
+
     /// Derive an independent child generator (split by label).
     pub fn split(&mut self, label: u64) -> Pcg {
         let seed = (self.next_u64()).wrapping_add(label.wrapping_mul(0x9E3779B97F4A7C15));
@@ -441,6 +472,63 @@ mod tests {
             other.next_u64(); // consume freely
         }
         let mut b = Pcg::edge_stream(7, 3, 5, 9);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn dynamics_streams_deterministic_and_decorrelated() {
+        let mut a = Pcg::dynamics_stream(9, 4, 2);
+        let mut b = Pcg::dynamics_stream(9, 4, 2);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        for (round, worker) in [(4u64, 3u64), (5, 2), (3, 2), (4, 1)] {
+            let mut x = Pcg::dynamics_stream(9, 4, 2);
+            let mut y = Pcg::dynamics_stream(9, round, worker);
+            let same =
+                (0..64).filter(|_| x.next_u32() == y.next_u32()).count();
+            assert!(same < 4, "round={round} worker={worker} same={same}");
+        }
+        // distinct from the activation stream under the same key
+        let mut x = Pcg::dynamics_stream(9, 4, 2);
+        let mut y = Pcg::activation_stream(9, 4, 2);
+        let same = (0..64).filter(|_| x.next_u32() == y.next_u32()).count();
+        assert!(same < 4, "dynamics vs activation same={same}");
+    }
+
+    #[test]
+    fn link_streams_deterministic_decorrelated_and_directed() {
+        let mut a = Pcg::link_stream(9, 4, 2, 7);
+        let mut b = Pcg::link_stream(9, 4, 2, 7);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        for (round, from, to) in
+            [(4u64, 7u64, 2u64), (4, 2, 6), (4, 3, 7), (5, 2, 7), (3, 2, 7)]
+        {
+            let mut x = Pcg::link_stream(9, 4, 2, 7);
+            let mut y = Pcg::link_stream(9, round, from, to);
+            let same =
+                (0..64).filter(|_| x.next_u32() == y.next_u32()).count();
+            assert!(same < 4, "key=({round},{from},{to}) same={same}");
+        }
+        // distinct from the delivery edge stream under the same key
+        let mut x = Pcg::link_stream(9, 4, 2, 7);
+        let mut y = Pcg::edge_stream(9, 4, 2, 7);
+        let same = (0..64).filter(|_| x.next_u32() == y.next_u32()).count();
+        assert!(same < 4, "link vs edge same={same}");
+    }
+
+    #[test]
+    fn dynamics_stream_is_pure_function_of_its_key() {
+        let mut a = Pcg::dynamics_stream(7, 3, 5);
+        for w in 0..1000u64 {
+            let mut other = Pcg::dynamics_stream(7, 3, w);
+            other.next_u64(); // consume freely
+        }
+        let mut b = Pcg::dynamics_stream(7, 3, 5);
         for _ in 0..64 {
             assert_eq!(a.next_u64(), b.next_u64());
         }

@@ -1,0 +1,208 @@
+//! Cross-engine equivalence: the discrete-event core (`run.engine=event`)
+//! must reproduce the dense sweep (`run.engine=dense`) **bitwise** — same
+//! seed, same knobs, same `RunResult` down to every f64 bit and every
+//! event record. The event engine is a performance rewrite, not a model
+//! change; any drift here is a bug in the lazy/cached paths, not a
+//! tolerable approximation.
+//!
+//! Coverage axes (ISSUE 8 acceptance):
+//! * N ∈ {60, 200} at default knobs;
+//! * every backend-compatible subsystem riding through unchanged —
+//!   scenario=diurnal (churn: membership compaction + lazy staleness
+//!   catch-up), faults=cellular (per-edge delivery streams + retry
+//!   timeouts through the event queue), transport.codec=topk (stateful
+//!   codec history), adversary attack=signflip (exchange-boundary
+//!   rewrites);
+//! * the cached fast path: mobility=0 / budget_jitter=0 / link_drop=0
+//!   keeps geometry and budgets frozen, while a churn scenario forces a
+//!   *mix* of cached and rebuilt rounds in one run;
+//! * threads=1 vs threads=4 determinism on the event engine itself.
+
+use dystop::config::{
+    AdversaryConfig, AttackKind, CodecKind, EngineKind, ExperimentConfig,
+    FaultConfig, FaultProfile, ScenarioConfig, ScenarioPreset,
+    TransportConfig,
+};
+use dystop::experiment::Experiment;
+use dystop::metrics::RunResult;
+
+fn base(workers: usize, rounds: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        workers,
+        rounds,
+        seed: 11,
+        train_per_worker: 48,
+        test_samples: 64,
+        eval_every: 7, // deliberately not a divisor of rounds
+        target_accuracy: 2.0,
+        ..Default::default()
+    }
+}
+
+fn run_engine(mut cfg: ExperimentConfig, engine: EngineKind) -> RunResult {
+    cfg.engine = engine;
+    Experiment::builder(cfg).run().expect("engine run failed")
+}
+
+/// Assert dense and event runs of the same config are bit-identical.
+fn assert_engines_agree(cfg: ExperimentConfig, label: &str) {
+    let dense = run_engine(cfg.clone(), EngineKind::Dense);
+    let event = run_engine(cfg, EngineKind::Event);
+    assert!(
+        dense.bits_eq(&event),
+        "dense vs event diverged ({label}): \
+         dense rounds={} evals={} events={} | event rounds={} evals={} events={}",
+        dense.rounds.len(),
+        dense.evals.len(),
+        dense.events.len(),
+        event.rounds.len(),
+        event.evals.len(),
+        event.events.len(),
+    );
+}
+
+#[test]
+fn default_knobs_agree_at_n60() {
+    assert_engines_agree(base(60, 40), "N=60 defaults");
+}
+
+#[test]
+fn default_knobs_agree_at_n200() {
+    assert_engines_agree(base(200, 20), "N=200 defaults");
+}
+
+#[test]
+fn diurnal_churn_agrees_at_n60() {
+    let mut cfg = base(60, 40);
+    cfg.scenario = ScenarioConfig::preset(ScenarioPreset::Diurnal);
+    assert_engines_agree(cfg, "N=60 scenario=diurnal");
+}
+
+#[test]
+fn diurnal_churn_agrees_at_n200() {
+    let mut cfg = base(200, 20);
+    cfg.scenario = ScenarioConfig::preset(ScenarioPreset::Diurnal);
+    assert_engines_agree(cfg, "N=200 scenario=diurnal");
+}
+
+#[test]
+fn cellular_faults_agree_at_n60() {
+    let mut cfg = base(60, 40);
+    cfg.faults = FaultConfig::preset(FaultProfile::Cellular);
+    assert_engines_agree(cfg, "N=60 faults=cellular");
+}
+
+#[test]
+fn cellular_faults_agree_at_n200() {
+    let mut cfg = base(200, 20);
+    cfg.faults = FaultConfig::preset(FaultProfile::Cellular);
+    assert_engines_agree(cfg, "N=200 faults=cellular");
+}
+
+#[test]
+fn topk_codec_agrees_at_n60() {
+    let mut cfg = base(60, 40);
+    cfg.transport =
+        TransportConfig { codec: CodecKind::TopK, ..Default::default() };
+    assert_engines_agree(cfg, "N=60 codec=topk");
+}
+
+#[test]
+fn topk_codec_agrees_at_n200() {
+    let mut cfg = base(200, 20);
+    cfg.transport =
+        TransportConfig { codec: CodecKind::TopK, ..Default::default() };
+    assert_engines_agree(cfg, "N=200 codec=topk");
+}
+
+#[test]
+fn signflip_adversaries_agree_at_n60() {
+    let mut cfg = base(60, 40);
+    cfg.adversary = AdversaryConfig {
+        frac: 0.2,
+        attack: AttackKind::SignFlip,
+        ..Default::default()
+    };
+    assert_engines_agree(cfg, "N=60 attack=signflip");
+}
+
+#[test]
+fn signflip_adversaries_agree_at_n200() {
+    let mut cfg = base(200, 20);
+    cfg.adversary = AdversaryConfig {
+        frac: 0.2,
+        attack: AttackKind::SignFlip,
+        ..Default::default()
+    };
+    assert_engines_agree(cfg, "N=200 attack=signflip");
+}
+
+/// Frozen geometry + churn: the event engine's cached-view fast path is
+/// only legal when mobility, budget jitter and link drops are all off —
+/// this config turns them off so cached rounds actually happen, and
+/// layers a churn scenario on top so membership flips force rebuilds in
+/// *some* rounds. The run therefore interleaves cached and rebuilt
+/// rounds, which is exactly where a stale-view bug would surface.
+#[test]
+fn cached_fast_path_with_churn_agrees() {
+    let mut cfg = base(60, 50);
+    cfg.network.mobility_m = 0.0;
+    cfg.network.budget_jitter = 0.0;
+    cfg.network.link_drop_prob = 0.0;
+    cfg.scenario = ScenarioConfig::preset(ScenarioPreset::Diurnal);
+    assert_engines_agree(cfg, "N=60 frozen-geometry + diurnal churn");
+}
+
+/// Pure cached path: with no churn either, every round after the first
+/// reuses the cached view (only the per-round state patch runs).
+#[test]
+fn pure_cached_fast_path_agrees() {
+    let mut cfg = base(60, 40);
+    cfg.network.mobility_m = 0.0;
+    cfg.network.budget_jitter = 0.0;
+    cfg.network.link_drop_prob = 0.0;
+    assert_engines_agree(cfg, "N=60 frozen geometry, no churn");
+}
+
+/// The event engine inherits the parallel round executor; its results
+/// must not depend on `run.threads`.
+#[test]
+fn event_engine_is_thread_count_invariant() {
+    let mut c1 = base(60, 30);
+    c1.engine = EngineKind::Event;
+    c1.threads = 1;
+    let mut c4 = c1.clone();
+    c4.threads = 4;
+    let a = Experiment::builder(c1).run().expect("threads=1 run");
+    let b = Experiment::builder(c4).run().expect("threads=4 run");
+    assert!(
+        a.bits_eq(&b),
+        "event engine diverged between threads=1 and threads=4"
+    );
+}
+
+/// The streaming sinks are observers: attaching one must not perturb the
+/// run itself (same bits with and without a JSONL sink), and the sink
+/// must leave a non-empty artifact behind.
+#[test]
+fn jsonl_sink_does_not_perturb_the_run() {
+    let dir = std::env::temp_dir().join("dystop_engine_equiv_sink");
+    let _ = std::fs::remove_dir_all(&dir);
+    let plain = run_engine(base(60, 20), EngineKind::Event);
+    let mut cfg = base(60, 20);
+    cfg.metrics.sink = dystop::config::SinkKind::Jsonl;
+    cfg.metrics.out = dir.join("run.jsonl").to_string_lossy().into_owned();
+    let streamed = run_engine(cfg, EngineKind::Event);
+    assert!(
+        plain.bits_eq(&streamed),
+        "attaching a JSONL sink changed the run"
+    );
+    let body = std::fs::read_to_string(dir.join("run.jsonl"))
+        .expect("sink artifact missing");
+    assert!(
+        body.lines().count() >= 20,
+        "JSONL sink wrote too few lines: {}",
+        body.lines().count()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
