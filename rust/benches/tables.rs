@@ -25,10 +25,10 @@
 
 use dystop::bench::{bench_with, write_json_report, BenchResult};
 use dystop::config::{
-    AdversaryConfig, AggregatorKind, AttackKind, CodecKind, EngineKind,
-    ExperimentConfig, FaultConfig, FaultProfile, ModelArch,
-    ScenarioConfig, ScenarioPreset, SchedulerKind, SinkKind,
-    TransportConfig, WorkloadConfig,
+    AdversaryConfig, AggregatorKind, AttackKind, BackendKind, CodecKind,
+    EngineKind, ExperimentConfig, FaultConfig, FaultProfile, ModelArch,
+    ScenarioConfig, ScenarioPreset, SchedulerKind, SinkKind, SocketConfig,
+    SocketTransportKind, TransportConfig, WorkloadConfig,
 };
 use dystop::data::{make_corpus, SyntheticSpec};
 use dystop::experiment::{Experiment, VirtualClockEngine};
@@ -376,6 +376,53 @@ fn sim_round_benches(
     }
 }
 
+/// One full deployment round over real sockets: spawn N worker threads,
+/// bring the listener up, run a single round (connect + HELLO + framed
+/// EXECUTE/DONE exchange for every activation) and tear it down. The
+/// row tracks deployment overhead per round end-to-end — wire
+/// serialization, kernel socket hops, thread churn — against the
+/// in-process `sim_round N=200` rows above.
+fn socket_backend_benches(
+    results: &mut Vec<BenchResult>,
+    warm: usize,
+    budget: f64,
+) {
+    println!("\n== socket deployment backend (N=200, one round per iter) ==");
+    let transport = if cfg!(unix) {
+        SocketTransportKind::Uds
+    } else {
+        SocketTransportKind::Tcp
+    };
+    let cfg = || ExperimentConfig {
+        workers: 200,
+        rounds: 1,
+        train_per_worker: 16,
+        test_samples: 16,
+        eval_every: usize::MAX,
+        target_accuracy: 2.0,
+        socket: SocketConfig {
+            transport,
+            // virtual seconds truncate to 0 wall ms: the row measures
+            // deployment overhead, not the emulated waits
+            time_scale: 0.001,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    results.push(bench_with(
+        "sim_round N=200 backend=socket",
+        warm,
+        budget,
+        &mut || {
+            let res = Experiment::builder(cfg())
+                .backend(BackendKind::Socket)
+                .run()
+                .expect("socket bench run");
+            std::hint::black_box(res.rounds.len());
+        },
+    ));
+}
+
 fn native_trainer_benches(
     results: &mut Vec<BenchResult>,
     warm: usize,
@@ -534,6 +581,7 @@ fn main() {
     let mut results: Vec<BenchResult> = Vec::new();
 
     sim_round_benches(&mut results, warm, budget);
+    socket_backend_benches(&mut results, warm, budget.min(0.3));
     scale_benches(&mut results, warm, budget);
     native_trainer_benches(&mut results, warm, budget.min(0.3));
     pjrt_benches(&mut results);

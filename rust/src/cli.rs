@@ -5,8 +5,14 @@
 //! dystop figures --fig ID [--out DIR] [--workers N] [--rounds R] [--seed S]
 //! dystop testbed [--config FILE] [--set key=value ...] [--out DIR]
 //! dystop sweep   --key K --values a,b,c [--config FILE] [--out DIR]
+//! dystop config  [--list | KEY]
 //! dystop inspect [--artifacts DIR]
 //! ```
+//!
+//! Every `--set` key is validated against the typed knob registry
+//! ([`crate::config::registry`]); unknown keys error with a
+//! nearest-key suggestion, and `dystop config --list` prints the full
+//! table (type, default, doc) instead of a drift-prone usage dump.
 
 use crate::config::{BackendKind, Config, ExperimentConfig};
 use crate::experiment::Experiment;
@@ -115,6 +121,11 @@ pub fn main_with_args(args: &[String]) -> Result<(), String> {
     let Some(cmd) = args.first() else {
         return Err(usage());
     };
+    // `config` takes a bare `--list` / KEY operand, which the strict
+    // `--flag value` parser would reject — dispatch it first
+    if cmd == "config" {
+        return run_config(&args[1..]);
+    }
     let flags = Flags::parse(&args[1..])?;
     let out = PathBuf::from(flags.get("out").unwrap_or("results"));
     match cmd.as_str() {
@@ -255,36 +266,64 @@ pub fn main_with_args(args: &[String]) -> Result<(), String> {
     }
 }
 
+/// `dystop config [--list | KEY]`: the knob registry as a reference.
+fn run_config(rest: &[String]) -> Result<(), String> {
+    use crate::config::registry;
+    // a bare key operand prints one knob; `--list` / nothing, the table
+    if let Some(key) = rest.iter().find(|a| !a.starts_with("--")) {
+        let k = registry::find(key).ok_or_else(|| {
+            match registry::suggest(key) {
+                Some(s) => {
+                    format!("unknown config key {key:?} (did you mean {s:?}?)")
+                }
+                None => format!("unknown config key {key:?}"),
+            }
+        })?;
+        println!("{}", knob_line(k));
+        return Ok(());
+    }
+    let mut section = "";
+    for k in registry::knobs() {
+        let sec = k.key.split('.').next().unwrap_or("");
+        if sec != section {
+            if !section.is_empty() {
+                println!();
+            }
+            println!("[{sec}]");
+            section = sec;
+        }
+        println!("{}", knob_line(k));
+    }
+    Ok(())
+}
+
+fn knob_line(k: &crate::config::registry::KnobDef) -> String {
+    let default = if k.default.is_empty() { "\"\"" } else { k.default };
+    format!(
+        "  {:<28} {:<20} default {:<10} {}",
+        k.key, k.ty, default, k.doc
+    )
+}
+
 fn usage() -> String {
-    "usage: dystop <train|figures|testbed|sweep|bench-diff|inspect|help> [flags]\n\
+    "usage: dystop <train|figures|testbed|sweep|config|bench-diff|inspect|help> [flags]\n\
      \n\
-     train   --config FILE --set sim.workers=40 --set run.backend=sim|testbed --out results/\n\
-     \x20       --set run.threads=N  round-execution threads (0 = all cores; bit-identical)\n\
-     \x20       --set run.engine=dense|event  sim round core: dense O(N) sweep or\n\
-     \x20       discrete-event queue with O(activations) rounds (bit-identical results)\n\
-     \x20       --set metrics.sink=memory|csv|jsonl --set metrics.out=results/run  stream\n\
-     \x20       per-round records to disk as they happen (bounded-memory at N=1M)\n\
-     \x20       --set metrics.window=K  keep only the last K in-memory round records (0 = all)\n\
-     \x20       --set scenario.preset=stable|diurnal|flash-crowd|degraded  population dynamics\n\
-     \x20       --set scenario.churn_rate=0.05 --set scenario.mean_downtime_rounds=6\n\
-     \x20       --set scenario.crash_frac=0.5  individual churn knobs (override preset)\n\
-     \x20       --set transport.codec=dense|topk|int8  model-exchange compression\n\
-     \x20       --set transport.topk_frac=0.1 --set transport.int8_clip=1.0  codec knobs\n\
-     \x20       --set workload.model=linear|mlp|cnn-s  native model architecture\n\
-     \x20       --set workload.dataset=synthetic|clusters|drift|file  corpus generator\n\
-     \x20       --set workload.hidden=32 --set workload.path=feat.idx,lab.idx  workload knobs\n\
-     \x20       --set adversary.frac=0.2 --set adversary.attack=none|signflip|scale|labelflip|stalebomb|freeride\n\
-     \x20       --set adversary.aggregator=mean|trimmed-mean|median|krum  coordinator aggregation rule\n\
-     \x20       --set adversary.scale=10 --set adversary.stale_tau=5 --set adversary.trim_frac=0.2\n\
-     \x20       --set adversary.krum_f=1  Byzantine worker + robust-aggregation knobs\n\
-     \x20       --set faults.profile=clean|wifi|cellular|hostile  lossy-link fault preset\n\
-     \x20       --set faults.loss=0.1 --set faults.dup=0.02 --set faults.corrupt=0.01\n\
-     \x20       --set faults.delay_spike=0.05 --set faults.delay_spike_factor=4  per-frame fault knobs\n\
-     \x20       --set faults.retries=3 --set faults.backoff_base_s=0.05 --set faults.backoff_cap_s=2\n\
-     \x20       --set faults.jitter=0.5  ack/retry/backoff knobs (retries=0 disables the protocol)\n\
+     train   --config FILE --set KEY=VALUE ... --out results/\n\
+     \x20       runs the configured experiment; every KEY is validated against\n\
+     \x20       the knob registry (typo ⇒ error with a nearest-key suggestion)\n\
+     \x20       --set run.backend=sim|testbed|socket  execution backend:\n\
+     \x20       deterministic virtual-clock sim, thread-per-worker testbed, or\n\
+     \x20       socket deployment (workers behind real TCP/UDS connections with\n\
+     \x20       the sim's event/byte ledger preserved bit-for-bit)\n\
+     \x20       --set socket.transport=uds|tcp --set socket.addr=HOST:PORT\n\
+     \x20       --set socket.time_scale=1000  socket-backend wall-clock scale\n\
+     \x20       --set trace.out=trace.json  write a Perfetto-loadable Trace\n\
+     \x20       Event JSON timeline (per-worker tracks; works on any backend)\n\
      figures --fig <3|4..18|20..25|26|churn|27|codec|28|workload|29|adversary|30|lossy|31|scale|all> --out results/ [--workers N --rounds R]\n\
      testbed --set sim.workers=15 --out results/\n\
      sweep   --key dystop.tau_bound --values 2,5,8 --out results/\n\
+     config  [--list | KEY]  print the full knob table (type, default, doc)\n\
+     \x20       or one knob's entry — the authoritative list of --set keys\n\
      bench-diff --baseline BENCH_baseline.json --fresh BENCH_sim.json --tolerance 0.15\n\
      inspect --artifacts artifacts/"
         .to_string()
@@ -440,6 +479,57 @@ mod tests {
         ]))
         .unwrap();
         assert!(dir.join("dystop_eval.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn config_subcommand_lists_and_looks_up() {
+        main_with_args(&s(&["config"])).unwrap();
+        main_with_args(&s(&["config", "--list"])).unwrap();
+        main_with_args(&s(&["config", "sim.workers"])).unwrap();
+        let err = main_with_args(&s(&["config", "sim.wrokers"])).unwrap_err();
+        assert!(err.contains("did you mean"), "{err}");
+        assert!(err.contains("sim.workers"), "{err}");
+    }
+
+    #[test]
+    fn typoed_set_key_suggests_nearest() {
+        let err = main_with_args(&s(&[
+            "train",
+            "--set", "dystop.tau_bond=5",
+        ]))
+        .unwrap_err();
+        assert!(err.contains("unknown config key"), "{err}");
+        assert!(err.contains("dystop.tau_bound"), "{err}");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn train_socket_backend_with_trace_end_to_end() {
+        let dir = std::env::temp_dir().join(format!(
+            "dystop_cli_socket_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("trace.json");
+        main_with_args(&s(&[
+            "train",
+            "--set", "run.backend=socket",
+            "--set", "socket.time_scale=0.001",
+            "--set", "sim.workers=6",
+            "--set", "sim.rounds=4",
+            "--set", "data.train_per_worker=48",
+            "--set", "data.test_samples=64",
+            "--set", "eval.every=2",
+            "--set", &format!("trace.out={}", trace.display()),
+            "--out", dir.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let text = std::fs::read_to_string(&trace).unwrap();
+        let json = Json::parse(&text).unwrap();
+        let events = json.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(!events.is_empty(), "trace must contain events");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

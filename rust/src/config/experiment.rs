@@ -619,7 +619,9 @@ impl TrainerKind {
 }
 
 /// Which execution backend drives rounds (`run.backend` knob): the
-/// virtual-clock simulator (§VI) or the thread-per-worker testbed (§VII).
+/// virtual-clock simulator (§VI), the thread-per-worker testbed
+/// (§VII), or the socket deployment backend (workers behind a real
+/// TCP/UDS wire).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum BackendKind {
     /// Deterministic virtual-clock simulation (`experiment::VirtualClockBackend`).
@@ -628,6 +630,10 @@ pub enum BackendKind {
     /// Thread-per-worker runtime with real message passing
     /// (`experiment::ThreadedBackend`).
     Testbed,
+    /// Deployment runtime: worker threads speak the length-prefixed
+    /// wire format over real TCP/UDS sockets
+    /// (`experiment::SocketBackend`).
+    Socket,
 }
 
 impl BackendKind {
@@ -635,8 +641,9 @@ impl BackendKind {
         match s.to_ascii_lowercase().as_str() {
             "sim" | "virtual" | "virtual-clock" => Ok(Self::Sim),
             "testbed" | "threaded" => Ok(Self::Testbed),
+            "socket" | "deploy" => Ok(Self::Socket),
             other => Err(format!(
-                "unknown backend {other:?} (sim|testbed)"
+                "unknown backend {other:?} (sim|testbed|socket)"
             )),
         }
     }
@@ -645,6 +652,7 @@ impl BackendKind {
         match self {
             Self::Sim => "sim",
             Self::Testbed => "testbed",
+            Self::Socket => "socket",
         }
     }
 }
@@ -982,6 +990,108 @@ impl Default for NetworkConfig {
     }
 }
 
+/// Thread-per-worker testbed knobs (`testbed.*` keys). These used to
+/// be the programmatic-only `TestbedOptions`; folding them into the
+/// config surface gives every backend the same per-backend section.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TestbedConfig {
+    /// Virtual-second → wall-millisecond scale for worker sleeps
+    /// (`testbed.time_scale`). 1000.0 = real time; smaller is faster.
+    pub time_scale: f64,
+    /// Profile real thread speeds for the 15-worker heterogeneity
+    /// demo instead of the configured lognormal draw
+    /// (`testbed.profile`).
+    pub profile: bool,
+}
+
+impl Default for TestbedConfig {
+    fn default() -> Self {
+        TestbedConfig { time_scale: 1000.0, profile: true }
+    }
+}
+
+impl TestbedConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.time_scale.is_finite() || self.time_scale <= 0.0 {
+            return Err("testbed.time_scale must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+/// Which stream transport the socket backend deploys over
+/// (`socket.transport` knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SocketTransportKind {
+    /// Unix-domain stream socket (unix targets only). The default:
+    /// no ports to collide on, and the path is auto-generated.
+    #[default]
+    Uds,
+    /// TCP over loopback (`127.0.0.1`, ephemeral port by default).
+    Tcp,
+}
+
+impl SocketTransportKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "uds" | "unix" => Ok(Self::Uds),
+            "tcp" => Ok(Self::Tcp),
+            other => Err(format!(
+                "unknown socket transport {other:?} (uds|tcp)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Uds => "uds",
+            Self::Tcp => "tcp",
+        }
+    }
+}
+
+/// Socket deployment backend knobs (`socket.*` keys).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SocketConfig {
+    /// Stream transport (`socket.transport=uds|tcp`).
+    pub transport: SocketTransportKind,
+    /// Bind address (`socket.addr`): a filesystem path for `uds`, a
+    /// `host:port` for `tcp`. Empty (the default) auto-generates a
+    /// temp-dir socket path / binds an ephemeral loopback port.
+    pub addr: String,
+    /// Virtual-second → wall-millisecond scale for worker sleeps
+    /// (`socket.time_scale`). The round ledger and records use the
+    /// virtual clock, so this only trades realism for wall time.
+    pub time_scale: f64,
+}
+
+impl Default for SocketConfig {
+    fn default() -> Self {
+        SocketConfig {
+            transport: SocketTransportKind::Uds,
+            addr: String::new(),
+            time_scale: 1000.0,
+        }
+    }
+}
+
+impl SocketConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.time_scale.is_finite() || self.time_scale <= 0.0 {
+            return Err("socket.time_scale must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+/// Trace observability knobs (`trace.*` keys).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct TraceConfig {
+    /// Perfetto Trace Event JSON output path (`trace.out`). Empty (the
+    /// default) disables tracing.
+    pub out: String,
+}
+
 /// Full experiment description.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -1071,6 +1181,16 @@ pub struct ExperimentConfig {
     /// knobs). The default (`profile=clean`) is the lossless identity
     /// path: bit-identical to the pre-delivery engine.
     pub faults: FaultConfig,
+
+    /// Thread-per-worker testbed backend section (`testbed.*` knobs).
+    pub testbed: TestbedConfig,
+
+    /// Socket deployment backend section (`socket.*` knobs).
+    pub socket: SocketConfig,
+
+    /// Perfetto trace observability (`trace.*` knobs). The default
+    /// (empty `trace.out`) attaches no trace sink.
+    pub trace: TraceConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -1110,13 +1230,22 @@ impl Default for ExperimentConfig {
             workload: WorkloadConfig::default(),
             adversary: AdversaryConfig::default(),
             faults: FaultConfig::default(),
+            testbed: TestbedConfig::default(),
+            socket: SocketConfig::default(),
+            trace: TraceConfig::default(),
         }
     }
 }
 
 impl ExperimentConfig {
     /// Build from a parsed [`Config`], falling back to defaults.
+    ///
+    /// Every key is checked against the central
+    /// [`registry`](crate::config::registry) first, so a typo'd knob
+    /// errors with a nearest-key suggestion instead of being silently
+    /// ignored.
     pub fn from_config(cfg: &Config) -> Result<Self, String> {
+        super::registry::validate_keys(cfg.keys())?;
         let mut e = ExperimentConfig::default();
         macro_rules! opt {
             ($field:expr, $get:ident, $key:expr) => {
@@ -1241,6 +1370,18 @@ impl ExperimentConfig {
         opt!(e.faults.backoff_base_s, get_f64, "faults.backoff_base_s");
         opt!(e.faults.backoff_cap_s, get_f64, "faults.backoff_cap_s");
         opt!(e.faults.jitter, get_f64, "faults.jitter");
+        opt!(e.testbed.time_scale, get_f64, "testbed.time_scale");
+        opt!(e.testbed.profile, get_bool, "testbed.profile");
+        if let Some(s) = cfg.get("socket.transport") {
+            e.socket.transport = SocketTransportKind::parse(s)?;
+        }
+        if let Some(s) = cfg.get("socket.addr") {
+            e.socket.addr = s.to_string();
+        }
+        opt!(e.socket.time_scale, get_f64, "socket.time_scale");
+        if let Some(s) = cfg.get("trace.out") {
+            e.trace.out = s.to_string();
+        }
         e.validate()?;
         Ok(e)
     }
@@ -1273,6 +1414,8 @@ impl ExperimentConfig {
         self.workload.validate()?;
         self.adversary.validate()?;
         self.faults.validate()?;
+        self.testbed.validate()?;
+        self.socket.validate()?;
         // file corpora define their own feature dim at build time — the
         // builder re-runs model_fits against the adopted shape; checking
         // the placeholder dim here would spuriously reject valid configs
@@ -1688,5 +1831,52 @@ mod tests {
         ] {
             assert_eq!(SchedulerKind::parse(k.name()).unwrap(), k);
         }
+    }
+
+    #[test]
+    fn socket_backend_knob_parses() {
+        assert_eq!(BackendKind::parse("socket").unwrap(), BackendKind::Socket);
+        assert_eq!(BackendKind::parse("deploy").unwrap(), BackendKind::Socket);
+        assert_eq!(BackendKind::Socket.name(), "socket");
+        let err = BackendKind::parse("bogus").unwrap_err();
+        assert!(err.contains("sim|testbed|socket"), "{err}");
+    }
+
+    #[test]
+    fn socket_and_testbed_sections_parse() {
+        let cfg = Config::parse(
+            "[socket]\ntransport = tcp\naddr = 127.0.0.1:7070\n\
+             time_scale = 10\n[testbed]\ntime_scale = 5\nprofile = false\n\
+             [trace]\nout = /tmp/run.trace.json\n",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.socket.transport, SocketTransportKind::Tcp);
+        assert_eq!(e.socket.addr, "127.0.0.1:7070");
+        assert_eq!(e.socket.time_scale, 10.0);
+        assert_eq!(e.testbed.time_scale, 5.0);
+        assert!(!e.testbed.profile);
+        assert_eq!(e.trace.out, "/tmp/run.trace.json");
+        // defaults: uds transport, auto addr, no trace
+        let d = ExperimentConfig::default();
+        assert_eq!(d.socket.transport, SocketTransportKind::Uds);
+        assert!(d.socket.addr.is_empty());
+        assert!(d.trace.out.is_empty());
+        // invalid values rejected
+        let cfg = Config::parse("[socket]\ntransport = carrier-pigeon\n")
+            .unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[socket]\ntime_scale = 0\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+        let cfg = Config::parse("[testbed]\ntime_scale = -1\n").unwrap();
+        assert!(ExperimentConfig::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn socket_transport_names_roundtrip() {
+        for t in [SocketTransportKind::Uds, SocketTransportKind::Tcp] {
+            assert_eq!(SocketTransportKind::parse(t.name()).unwrap(), t);
+        }
+        assert!(SocketTransportKind::parse("bogus").is_err());
     }
 }

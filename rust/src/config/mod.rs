@@ -16,13 +16,15 @@
 //! ```
 
 mod experiment;
+pub mod registry;
 
 pub use experiment::{
     AdversaryConfig, AggregatorKind, AttackKind, BackendKind, CodecKind,
     DatasetKind, EngineKind, ExperimentConfig, FaultConfig, FaultProfile,
     MetricsConfig, ModelArch, ModelKind, NetworkConfig, ScenarioConfig,
-    ScenarioPreset, SchedulerKind, SinkKind, TrainerKind, TransportConfig,
-    WorkloadConfig,
+    ScenarioPreset, SchedulerKind, SinkKind, SocketConfig,
+    SocketTransportKind, TestbedConfig, TraceConfig, TrainerKind,
+    TransportConfig, WorkloadConfig,
 };
 
 use std::collections::BTreeMap;

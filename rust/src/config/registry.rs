@@ -1,0 +1,253 @@
+//! Central knob registry: every `--set`/config-file key the experiment
+//! surface understands, with its type, default, and a one-line doc.
+//!
+//! [`ExperimentConfig::from_config`](super::ExperimentConfig::from_config)
+//! validates incoming keys against this table, so a typo'd knob errors
+//! with a nearest-key suggestion instead of being silently ignored —
+//! and `dystop config --list` prints the table, replacing the
+//! drift-prone knob dumps that used to live in the CLI usage text.
+
+/// One registered knob.
+#[derive(Clone, Copy, Debug)]
+pub struct KnobDef {
+    /// Flattened `section.key` name (`--set key=value`).
+    pub key: &'static str,
+    /// Human-readable value type (`int`, `float`, `bool`, `string`, or
+    /// a `a|b|c` enum list).
+    pub ty: &'static str,
+    /// Default value, rendered as the string a user would pass.
+    pub default: &'static str,
+    /// One-line description.
+    pub doc: &'static str,
+}
+
+/// The full knob table, grouped by section. Keep this in sync with
+/// `ExperimentConfig::from_config` — the registry tests pin that every
+/// default listed here round-trips through it.
+#[rustfmt::skip]
+static KNOBS: &[KnobDef] = &[
+    // --- sim ---
+    KnobDef { key: "sim.seed", ty: "int", default: "1", doc: "master RNG seed; every backend derives its streams from it" },
+    KnobDef { key: "sim.workers", ty: "int", default: "100", doc: "population size N" },
+    KnobDef { key: "sim.rounds", ty: "int", default: "300", doc: "training rounds to run" },
+    KnobDef { key: "sim.phi", ty: "float", default: "1.0", doc: "Dirichlet non-IID level phi (1.0 ~ IID, 0.4 highly skewed)" },
+    KnobDef { key: "sim.scheduler", ty: "dystop|dystop-phase1|dystop-phase2|sa-adfl|asydfl|matcha", default: "dystop", doc: "topology scheduler under test" },
+    KnobDef { key: "sim.model", ty: "mlp|cnn", default: "mlp", doc: "legacy model selector (prefer workload.model)" },
+    KnobDef { key: "sim.trainer", ty: "native|pjrt", default: "native", doc: "local-step trainer: pure-Rust native or PJRT artifacts" },
+    // --- run ---
+    KnobDef { key: "run.backend", ty: "sim|testbed|socket", default: "sim", doc: "execution backend: virtual-clock sim, thread testbed, or socket deployment" },
+    KnobDef { key: "run.engine", ty: "dense|event", default: "dense", doc: "sim round core: dense O(N) sweep or discrete-event queue (bit-identical)" },
+    KnobDef { key: "run.threads", ty: "int", default: "0", doc: "round-execution worker pool (0 = all cores; bit-identical for any value)" },
+    // --- metrics ---
+    KnobDef { key: "metrics.sink", ty: "memory|csv|jsonl", default: "memory", doc: "where round/eval/event records stream" },
+    KnobDef { key: "metrics.out", ty: "string", default: "", doc: "sink output path (JSONL file or CSV prefix); required when sink != memory" },
+    KnobDef { key: "metrics.window", ty: "int", default: "0", doc: "in-memory retention: keep only the last K round records (0 = all)" },
+    // --- dystop ---
+    KnobDef { key: "dystop.tau_bound", ty: "int", default: "5", doc: "staleness bound tau_bound (Eq. 12c)" },
+    KnobDef { key: "dystop.v", ty: "float", default: "10.0", doc: "Lyapunov trade-off V (Eq. 34)" },
+    KnobDef { key: "dystop.neighbor_cap", ty: "int", default: "7", doc: "in-neighbor sample cap s" },
+    KnobDef { key: "dystop.t_thre", ty: "int", default: "60", doc: "PTCA phase-switch round t_thre (Alg. 3)" },
+    // --- data ---
+    KnobDef { key: "data.classes", ty: "int", default: "10", doc: "synthetic corpus class count" },
+    KnobDef { key: "data.dim", ty: "int", default: "32", doc: "synthetic corpus feature dimension" },
+    KnobDef { key: "data.train_per_worker", ty: "int", default: "128", doc: "training samples per worker" },
+    KnobDef { key: "data.test_samples", ty: "int", default: "512", doc: "shared test-set size" },
+    KnobDef { key: "data.class_sep", ty: "float", default: "2.0", doc: "class separation of the synthetic mixture (higher = easier)" },
+    // --- train ---
+    KnobDef { key: "train.lr", ty: "float", default: "0.1", doc: "SGD learning rate" },
+    KnobDef { key: "train.batch", ty: "int", default: "32", doc: "minibatch size" },
+    KnobDef { key: "train.local_steps", ty: "int", default: "2", doc: "local SGD steps per activation" },
+    // --- compute ---
+    KnobDef { key: "compute.mean_s", ty: "float", default: "1.0", doc: "median local-training time h_i in seconds" },
+    KnobDef { key: "compute.jitter", ty: "float", default: "0.8", doc: "sigma of the lognormal per-worker speed coefficient" },
+    // --- eval ---
+    KnobDef { key: "eval.every", ty: "int", default: "10", doc: "evaluate every K rounds" },
+    KnobDef { key: "eval.worker_frac", ty: "float", default: "1.0", doc: "fraction of workers whose local model is evaluated" },
+    KnobDef { key: "eval.target_accuracy", ty: "float", default: "0.8", doc: "time-to-accuracy target for the eval summary" },
+    // --- net ---
+    KnobDef { key: "net.region_m", ty: "float", default: "100.0", doc: "deployment region side length in meters" },
+    KnobDef { key: "net.bandwidth_hz", ty: "float", default: "1e6", doc: "per-link bandwidth in Hz" },
+    KnobDef { key: "net.g0_db", ty: "float", default: "-43.0", doc: "path-loss constant at 1 m" },
+    KnobDef { key: "net.noise_w", ty: "float", default: "1e-13", doc: "noise power in W" },
+    KnobDef { key: "net.tx_dbm_min", ty: "float", default: "10.0", doc: "minimum transmit power in dBm" },
+    KnobDef { key: "net.tx_dbm_max", ty: "float", default: "20.0", doc: "maximum transmit power in dBm" },
+    KnobDef { key: "net.comm_range_m", ty: "float", default: "45.0", doc: "communication range in meters" },
+    KnobDef { key: "net.budget_jitter", ty: "float", default: "0.15", doc: "std-dev of per-round multiplicative bandwidth-budget jitter" },
+    KnobDef { key: "net.budget_models", ty: "float", default: "16.0", doc: "per-round per-worker bandwidth budget in model-transfer units" },
+    KnobDef { key: "net.link_drop_prob", ty: "float", default: "0.02", doc: "probability a link drops for a round" },
+    KnobDef { key: "net.mobility_m", ty: "float", default: "1.0", doc: "per-round worker movement std-dev in meters" },
+    KnobDef { key: "net.payload_bits", ty: "float", default: "2e6", doc: "simulated model payload on the wire in bits (0 = actual model size)" },
+    KnobDef { key: "net.channels", ty: "int", default: "4", doc: "orthogonal sub-channels per worker radio" },
+    // --- scenario ---
+    KnobDef { key: "scenario.preset", ty: "stable|diurnal|flash-crowd|degraded", default: "stable", doc: "population-dynamics preset" },
+    KnobDef { key: "scenario.churn_rate", ty: "float", default: "0.0", doc: "per-round per-worker leave probability" },
+    KnobDef { key: "scenario.mean_downtime_rounds", ty: "float", default: "10.0", doc: "mean rounds a departed worker stays away" },
+    KnobDef { key: "scenario.crash_frac", ty: "float", default: "0.0", doc: "fraction of departures that are crashes (state loss)" },
+    // --- transport ---
+    KnobDef { key: "transport.codec", ty: "dense|topk|int8", default: "dense", doc: "model-exchange compression codec" },
+    KnobDef { key: "transport.topk_frac", ty: "float", default: "0.1", doc: "top-k codec: fraction of coordinates kept" },
+    KnobDef { key: "transport.int8_clip", ty: "float", default: "1.0", doc: "int8 codec: symmetric clip range" },
+    // --- workload ---
+    KnobDef { key: "workload.model", ty: "linear|mlp|cnn-s", default: "linear", doc: "native model architecture" },
+    KnobDef { key: "workload.dataset", ty: "synthetic|clusters|drift|file", default: "synthetic", doc: "corpus generator" },
+    KnobDef { key: "workload.hidden", ty: "int", default: "32", doc: "MLP hidden width" },
+    KnobDef { key: "workload.conv_filters", ty: "int", default: "16", doc: "cnn-s filter count" },
+    KnobDef { key: "workload.conv_kernel", ty: "int", default: "11", doc: "cnn-s kernel size" },
+    KnobDef { key: "workload.conv_stride", ty: "int", default: "2", doc: "cnn-s stride" },
+    KnobDef { key: "workload.cluster_skew", ty: "float", default: "0.6", doc: "clusters dataset: per-worker cluster concentration" },
+    KnobDef { key: "workload.drift_deg", ty: "float", default: "40.0", doc: "drift dataset: per-round rotation in degrees" },
+    KnobDef { key: "workload.path", ty: "string", default: "", doc: "file dataset: features.idx,labels.idx pair" },
+    // --- adversary ---
+    KnobDef { key: "adversary.frac", ty: "float", default: "0.0", doc: "fraction of workers that are Byzantine" },
+    KnobDef { key: "adversary.attack", ty: "none|signflip|scale|labelflip|stalebomb|freeride", default: "none", doc: "Byzantine attack policy" },
+    KnobDef { key: "adversary.scale", ty: "float", default: "10.0", doc: "scale attack: blow-up factor" },
+    KnobDef { key: "adversary.stale_tau", ty: "int", default: "5", doc: "stale-bomb attack: rounds a bomber withholds updates" },
+    KnobDef { key: "adversary.aggregator", ty: "mean|trimmed-mean|median|krum", default: "mean", doc: "robust aggregation rule" },
+    KnobDef { key: "adversary.trim_frac", ty: "float", default: "0.2", doc: "trimmed-mean: fraction trimmed per tail" },
+    KnobDef { key: "adversary.krum_f", ty: "int", default: "1", doc: "krum: assumed Byzantine count f" },
+    // --- faults ---
+    KnobDef { key: "faults.profile", ty: "clean|wifi|cellular|hostile", default: "clean", doc: "lossy-link fault preset" },
+    KnobDef { key: "faults.loss", ty: "float", default: "0.0", doc: "per-frame loss probability" },
+    KnobDef { key: "faults.dup", ty: "float", default: "0.0", doc: "per-frame duplication probability" },
+    KnobDef { key: "faults.corrupt", ty: "float", default: "0.0", doc: "per-frame corruption probability" },
+    KnobDef { key: "faults.delay_spike", ty: "float", default: "0.0", doc: "per-frame delay-spike probability" },
+    KnobDef { key: "faults.delay_spike_factor", ty: "float", default: "4.0", doc: "delay-spike transfer-time multiplier" },
+    KnobDef { key: "faults.retries", ty: "int", default: "3", doc: "ack/retry attempts (0 disables the protocol)" },
+    KnobDef { key: "faults.backoff_base_s", ty: "float", default: "0.05", doc: "retry backoff base in seconds" },
+    KnobDef { key: "faults.backoff_cap_s", ty: "float", default: "2.0", doc: "retry backoff cap in seconds" },
+    KnobDef { key: "faults.jitter", ty: "float", default: "0.5", doc: "retry backoff jitter fraction" },
+    // --- testbed ---
+    KnobDef { key: "testbed.time_scale", ty: "float", default: "1000.0", doc: "testbed backend: virtual-second to wall-millisecond scale" },
+    KnobDef { key: "testbed.profile", ty: "bool", default: "true", doc: "testbed backend: profile real thread speeds for the 15-worker demo" },
+    // --- socket ---
+    KnobDef { key: "socket.transport", ty: "uds|tcp", default: "uds", doc: "socket backend: stream transport (uds is unix-only)" },
+    KnobDef { key: "socket.addr", ty: "string", default: "", doc: "socket backend: bind path (uds) or host:port (tcp); empty = auto" },
+    KnobDef { key: "socket.time_scale", ty: "float", default: "1000.0", doc: "socket backend: virtual-second to wall-millisecond scale" },
+    // --- trace ---
+    KnobDef { key: "trace.out", ty: "string", default: "", doc: "Perfetto Trace Event JSON output path (empty = no trace)" },
+];
+
+/// Every registered knob, in display order (grouped by section).
+pub fn knobs() -> &'static [KnobDef] {
+    KNOBS
+}
+
+/// Look up a knob by exact key.
+pub fn find(key: &str) -> Option<&'static KnobDef> {
+    KNOBS.iter().find(|k| k.key == key)
+}
+
+/// Nearest registered key by edit distance, if any is close enough to
+/// plausibly be a typo.
+pub fn suggest(key: &str) -> Option<&'static str> {
+    KNOBS
+        .iter()
+        .map(|k| (edit_distance(key, k.key), k.key))
+        .min_by_key(|&(d, _)| d)
+        .filter(|&(d, _)| d <= 3)
+        .map(|(_, k)| k)
+}
+
+/// Reject any key that is not in the registry, with a nearest-key
+/// suggestion when one is close.
+pub fn validate_keys<'a>(
+    keys: impl Iterator<Item = &'a str>,
+) -> Result<(), String> {
+    for k in keys {
+        if find(k).is_none() {
+            return Err(match suggest(k) {
+                Some(s) => format!(
+                    "unknown config key {k:?} (did you mean {s:?}?)"
+                ),
+                None => format!(
+                    "unknown config key {k:?} (see `dystop config --list`)"
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Levenshtein distance, small-string flavor (knob keys are short).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, ExperimentConfig};
+
+    #[test]
+    fn keys_are_unique_and_sectioned() {
+        let mut seen = std::collections::BTreeSet::new();
+        for k in knobs() {
+            assert!(seen.insert(k.key), "duplicate registry key {}", k.key);
+            assert!(
+                k.key.contains('.'),
+                "key {} must be section.name",
+                k.key
+            );
+            assert!(!k.doc.is_empty(), "key {} needs a doc line", k.key);
+        }
+    }
+
+    #[test]
+    fn every_default_round_trips_through_from_config() {
+        // set every knob to its registry default; from_config must
+        // accept the full set (pins registry <-> from_config sync in
+        // the direction "registry key is actually consumed")
+        let mut cfg = Config::new();
+        for k in knobs() {
+            cfg.set(k.key, k.default);
+        }
+        let e = ExperimentConfig::from_config(&cfg).unwrap();
+        assert_eq!(e.workers, 100);
+        assert_eq!(e.socket.time_scale, 1000.0);
+    }
+
+    #[test]
+    fn unknown_key_suggests_nearest() {
+        let mut cfg = Config::new();
+        cfg.set("dystop.tau_bond", "5");
+        let err = ExperimentConfig::from_config(&cfg).unwrap_err();
+        assert!(err.contains("unknown config key"), "{err}");
+        assert!(err.contains("did you mean"), "{err}");
+        assert!(err.contains("dystop.tau_bound"), "{err}");
+    }
+
+    #[test]
+    fn distant_garbage_gets_no_suggestion() {
+        let err =
+            validate_keys(["zzzz.qqqqqqqqqqqq"].into_iter()).unwrap_err();
+        assert!(err.contains("dystop config --list"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("", ""), 0);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("abc", "abd"), 1);
+        assert_eq!(edit_distance("abc", ""), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+    }
+
+    #[test]
+    fn find_and_suggest() {
+        assert!(find("sim.workers").is_some());
+        assert!(find("sim.wrokers").is_none());
+        assert_eq!(suggest("sim.wrokers"), Some("sim.workers"));
+    }
+}

@@ -12,8 +12,11 @@
 //!   panic) of the shared substrate;
 //! * [`Backend`] — how rounds are *executed*:
 //!   [`VirtualClockBackend`] (deterministic virtual-clock simulation,
-//!   §VI) or [`ThreadedBackend`] (thread-per-worker with real message
-//!   passing and compressed wall-clock delays, §VII);
+//!   §VI), [`ThreadedBackend`] (thread-per-worker with real message
+//!   passing and compressed wall-clock delays, §VII), or
+//!   [`SocketBackend`] (the deployment shape: workers behind real
+//!   TCP/Unix sockets speaking the framed wire format, with the
+//!   simulator's event/byte ledger preserved bit-for-bit);
 //! * [`RoundObserver`] — how rounds are *watched*
 //!   (`on_scenario_event`/`on_plan`/`on_round_end`/`on_eval`): metrics
 //!   recording is itself the first observer ([`RunRecorder`]), and
@@ -44,11 +47,13 @@
 
 pub mod events;
 mod observer;
+mod socket;
 mod threaded;
 mod virtual_clock;
 
 pub use events::{EventQueue, SimEvent};
 pub use observer::{ObserverChain, RoundObserver, RunRecorder};
+pub use socket::SocketBackend;
 pub use threaded::{TestbedOptions, ThreadedBackend};
 pub use virtual_clock::{VirtualClockBackend, VirtualClockEngine};
 
@@ -113,6 +118,27 @@ pub trait Backend {
     fn name(&self) -> &'static str;
 
     fn run(&mut self, exp: Experiment) -> Result<RunResult, ExperimentError>;
+}
+
+/// The single [`BackendKind`] → [`Backend`] dispatch point: every
+/// built-in backend is constructed here, configured from its own config
+/// section (`testbed.*`, `socket.*`). The builder's
+/// [`backend`](ExperimentBuilder::backend) call and the config's
+/// `run.backend` knob both route through this, so adding a backend is
+/// one enum variant + one arm.
+pub fn make_backend(
+    kind: BackendKind,
+    cfg: &ExperimentConfig,
+) -> Box<dyn Backend> {
+    match kind {
+        BackendKind::Sim => Box::new(VirtualClockBackend::new()),
+        BackendKind::Testbed => {
+            Box::new(ThreadedBackend::from_config(&cfg.testbed))
+        }
+        BackendKind::Socket => {
+            Box::new(SocketBackend::from_config(&cfg.socket))
+        }
+    }
 }
 
 /// The shared, backend-agnostic substrate of one experiment: config,
@@ -194,16 +220,11 @@ impl ExperimentBuilder {
     }
 
     /// Select a built-in execution backend (overrides `cfg.backend`,
-    /// the `run.backend=sim|testbed` knob).
+    /// the `run.backend=sim|testbed|socket` knob). Per-backend options
+    /// are read from the config's `testbed.*`/`socket.*` sections.
     pub fn backend(self, kind: BackendKind) -> Self {
-        match kind {
-            BackendKind::Sim => {
-                self.backend_impl(Box::new(VirtualClockBackend::new()))
-            }
-            BackendKind::Testbed => {
-                self.backend_impl(Box::new(ThreadedBackend::default()))
-            }
-        }
+        let backend = make_backend(kind, &self.cfg);
+        self.backend_impl(backend)
     }
 
     /// Select a custom execution backend implementation.
@@ -411,6 +432,21 @@ impl ExperimentBuilder {
             observers.push(sink);
         }
 
+        // Perfetto trace sink (trace.out=<path>): Trace Event JSON with
+        // one track per worker, emitted by any backend
+        if !cfg.trace.out.is_empty() {
+            let sink = crate::metrics::trace::TraceSink::to_path(
+                &cfg.trace.out,
+            )
+            .map_err(|e| {
+                ExperimentError::InvalidConfig(format!(
+                    "trace.out {:?}: {e}",
+                    cfg.trace.out
+                ))
+            })?;
+            observers.push(Box::new(sink));
+        }
+
         Ok(Experiment {
             cfg,
             net,
@@ -435,10 +471,7 @@ impl ExperimentBuilder {
     pub fn run(mut self) -> Result<RunResult, ExperimentError> {
         let mut backend: Box<dyn Backend> = match self.backend.take() {
             Some(b) => b,
-            None => match self.cfg.backend {
-                BackendKind::Sim => Box::new(VirtualClockBackend::new()),
-                BackendKind::Testbed => Box::new(ThreadedBackend::default()),
-            },
+            None => make_backend(self.cfg.backend, &self.cfg),
         };
         let exp = self.build()?;
         backend.run(exp)

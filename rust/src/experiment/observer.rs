@@ -4,7 +4,9 @@
 //! dashboards are additional plug-ins rather than engine fields.
 
 use crate::coordinator::RoundPlan;
-use crate::metrics::{EvalRecord, EventRecord, RoundRecord, RunResult};
+use crate::metrics::{
+    ActivationRecord, EvalRecord, EventRecord, RoundRecord, RunResult,
+};
 
 /// Hooks fired by every [`Backend`](super::Backend) on the coordinator
 /// thread (never concurrently). All methods default to no-ops so an
@@ -20,6 +22,13 @@ pub trait RoundObserver {
     /// before execution.
     fn on_plan(&mut self, round: usize, plan: &RoundPlan) {
         let _ = (round, plan);
+    }
+
+    /// One worker activation finished, with its phase breakdown.
+    /// Fired after the round executed, before [`Self::on_round_end`],
+    /// once per activated worker in plan order.
+    fn on_activation(&mut self, rec: &ActivationRecord) {
+        let _ = rec;
     }
 
     /// A round finished executing and its record is final.
@@ -116,6 +125,13 @@ impl ObserverChain {
         self.recorder.on_plan(round, plan);
         for o in &mut self.others {
             o.on_plan(round, plan);
+        }
+    }
+
+    pub fn activation(&mut self, rec: &ActivationRecord) {
+        self.recorder.on_activation(rec);
+        for o in &mut self.others {
+            o.on_activation(rec);
         }
     }
 

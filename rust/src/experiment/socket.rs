@@ -1,0 +1,1041 @@
+//! Socket deployment backend: worker threads speaking the
+//! length-prefixed wire format ([`crate::transport::wire`]) over real
+//! TCP or Unix-domain sockets.
+//!
+//! Where [`ThreadedBackend`](super::ThreadedBackend) shares memory
+//! (`Arc<Mutex<Published>>` snapshots), this backend actually ships
+//! every model across a socket: the coordinator serves pulls and
+//! pushes as framed messages ([`Frame`] + CRC32 + per-sender
+//! [`DedupWindow`]), workers hold nothing but their trainer, shard and
+//! RNG. It is the deployment shape of the paper's system — one process
+//! per box away from a real cluster — while staying a zero-dependency
+//! `std::net`/`std::thread` implementation.
+//!
+//! # Determinism: the virtual-time mirror
+//!
+//! The coordinator keeps the *plan-relevant* state machine of the
+//! virtual-clock engine, verbatim: per-activation transfer times drawn
+//! from [`Pcg::activation_stream`] in the engine's exact order, `h_est`
+//! through the shared [`estimate_h_into`], the realised `H_t` as the
+//! same fold-max, staleness/queues via [`WorkerState`]'s own methods,
+//! and the delivery/byte ledger from the same pure
+//! `(seed, round, from, to)` streams. Wall-clock sleeps emulate the
+//! drawn times (scaled by `socket.time_scale`) but never feed back
+//! into the records, so for any scheduler and seed the socket backend
+//! and the simulator produce **identical plans and identical
+//! event/byte ledgers** (transfers, retransmissions, dead-letters,
+//! `cum_bytes`) — pinned by `tests/socket.rs`. Training itself runs on
+//! worker-local RNG streams, so losses/accuracies are real but the
+//! ledger does not depend on them.
+//!
+//! # Protocol
+//!
+//! Every message is one [`Frame`] (`[magic][len][seq][payload][crc]`),
+//! sequence numbers per direction, receiver-side CRC check + dedup:
+//!
+//! 1. workers connect and send `HELLO{id}`;
+//! 2. per activation the coordinator sends `EXECUTE{round, waits, own
+//!    model, pulled + pushed wire copies, data sizes}`;
+//! 3. the worker sleeps its transfer wait, aggregates (Eq. 4), sleeps
+//!    its compute time, trains (Eq. 5), replies `DONE{round, loss,
+//!    params}`;
+//! 4. at run end the coordinator sends `SHUTDOWN` and joins.
+//!
+//! Backpressure is structural: the coordinator writes at most one
+//! outstanding `EXECUTE` per worker and drains `DONE`s in plan order,
+//! so per-connection buffering is bounded by one model snapshot
+//! (DESIGN.md §Deployment).
+
+use super::observer::{ObserverChain, RunRecorder};
+use super::virtual_clock::estimate_h_into;
+use super::{Backend, Experiment, ExperimentError};
+use crate::adversary::Aggregator;
+use crate::config::{
+    ExperimentConfig, SocketConfig, SocketTransportKind, TrainerKind,
+};
+use crate::coordinator::{PullLedger, SchedView, SchedulerParams};
+use crate::data::Dataset;
+use crate::delivery::{DedupWindow, DeliveryTally, Frame};
+use crate::metrics::{
+    ActivationRecord, EvalRecord, EventRecord, RoundRecord, RunResult,
+};
+use crate::scenario::ScenarioEvent;
+use crate::transport::wire::{read_frame, write_frame};
+use crate::util::rng::Pcg;
+use crate::worker::{data_size_weights, NativeTrainer, Trainer};
+use std::io::{self, Read, Write};
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::thread;
+use std::time::{Duration, Instant};
+
+const MSG_HELLO: u8 = 0;
+const MSG_EXECUTE: u8 = 1;
+const MSG_DONE: u8 = 2;
+const MSG_SHUTDOWN: u8 = 3;
+
+/// How long the coordinator waits for all workers to connect.
+const ACCEPT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Socket deployment [`Backend`] (`run.backend=socket`, `socket.*`
+/// knobs).
+#[derive(Clone, Debug, Default)]
+pub struct SocketBackend {
+    cfg: SocketConfig,
+}
+
+impl SocketBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from the `[socket]` config section.
+    pub fn from_config(cfg: &SocketConfig) -> Self {
+        SocketBackend { cfg: cfg.clone() }
+    }
+}
+
+impl Backend for SocketBackend {
+    fn name(&self) -> &'static str {
+        "socket"
+    }
+
+    fn run(&mut self, exp: Experiment) -> Result<RunResult, ExperimentError> {
+        run_socket(exp, self.cfg.clone())
+    }
+}
+
+// --- transport-agnostic socket plumbing ------------------------------
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Uds(std::os::unix::net::UnixListener),
+}
+
+enum Stream {
+    Tcp(std::net::TcpStream),
+    #[cfg(unix)]
+    Uds(std::os::unix::net::UnixStream),
+}
+
+/// Where workers connect to (the listener's resolved address).
+#[derive(Clone)]
+enum Endpoint {
+    Tcp(std::net::SocketAddr),
+    #[cfg(unix)]
+    Uds(PathBuf),
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Uds(s) => s.flush(),
+        }
+    }
+}
+
+fn backend_err(msg: impl std::fmt::Display) -> ExperimentError {
+    ExperimentError::Backend(msg.to_string())
+}
+
+/// Bind the coordinator listener; returns the listener, the endpoint
+/// workers connect to, and (for auto-named UDS) the path to unlink.
+fn bind(
+    cfg: &SocketConfig,
+) -> Result<(Listener, Endpoint, Option<PathBuf>), ExperimentError> {
+    match cfg.transport {
+        SocketTransportKind::Tcp => {
+            let addr: &str =
+                if cfg.addr.is_empty() { "127.0.0.1:0" } else { &cfg.addr };
+            let l = TcpListener::bind(addr)
+                .map_err(|e| backend_err(format!("bind {addr}: {e}")))?;
+            let local = l
+                .local_addr()
+                .map_err(|e| backend_err(format!("local_addr: {e}")))?;
+            Ok((Listener::Tcp(l), Endpoint::Tcp(local), None))
+        }
+        SocketTransportKind::Uds => {
+            #[cfg(unix)]
+            {
+                // pid + per-process counter keeps concurrent runs (and
+                // concurrent tests) from colliding in temp_dir
+                static COUNTER: std::sync::atomic::AtomicU64 =
+                    std::sync::atomic::AtomicU64::new(0);
+                let path = if cfg.addr.is_empty() {
+                    std::env::temp_dir().join(format!(
+                        "dystop-{}-{}.sock",
+                        std::process::id(),
+                        COUNTER.fetch_add(
+                            1,
+                            std::sync::atomic::Ordering::Relaxed
+                        )
+                    ))
+                } else {
+                    PathBuf::from(&cfg.addr)
+                };
+                let _ = std::fs::remove_file(&path);
+                let l = std::os::unix::net::UnixListener::bind(&path)
+                    .map_err(|e| {
+                        backend_err(format!("bind {}: {e}", path.display()))
+                    })?;
+                Ok((Listener::Uds(l), Endpoint::Uds(path.clone()), Some(path)))
+            }
+            #[cfg(not(unix))]
+            {
+                Err(ExperimentError::Unsupported(
+                    "socket.transport=uds needs a unix platform; use \
+                     socket.transport=tcp"
+                        .into(),
+                ))
+            }
+        }
+    }
+}
+
+fn connect(ep: &Endpoint) -> io::Result<Stream> {
+    match ep {
+        Endpoint::Tcp(addr) => std::net::TcpStream::connect(addr).map(Stream::Tcp),
+        #[cfg(unix)]
+        Endpoint::Uds(path) => {
+            std::os::unix::net::UnixStream::connect(path).map(Stream::Uds)
+        }
+    }
+}
+
+/// Connect with retries: hundreds of workers dialing at once can
+/// overflow the listener backlog, which surfaces as transient
+/// connection errors rather than queued connects.
+fn connect_with_retry(ep: &Endpoint) -> Option<Stream> {
+    let deadline = Instant::now() + ACCEPT_TIMEOUT;
+    loop {
+        match connect(ep) {
+            Ok(s) => return Some(s),
+            Err(_) if Instant::now() < deadline => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => return None,
+        }
+    }
+}
+
+/// Accept all `n` workers (non-blocking poll with a deadline so a
+/// wedged worker fails the run instead of hanging it) and index their
+/// connections by the id each announces in `HELLO`.
+fn accept_workers(
+    listener: &Listener,
+    n: usize,
+    dedup: &mut DedupWindow,
+) -> Result<Vec<Stream>, ExperimentError> {
+    match listener {
+        Listener::Tcp(l) => l.set_nonblocking(true),
+        #[cfg(unix)]
+        Listener::Uds(l) => l.set_nonblocking(true),
+    }
+    .map_err(|e| backend_err(format!("listener nonblocking: {e}")))?;
+    let deadline = Instant::now() + ACCEPT_TIMEOUT;
+    let mut conns: Vec<Option<Stream>> = (0..n).map(|_| None).collect();
+    let mut got = 0usize;
+    while got < n {
+        let accepted = match listener {
+            Listener::Tcp(l) => {
+                l.accept().map(|(s, _)| (s.set_nonblocking(false), Stream::Tcp(s)))
+            }
+            #[cfg(unix)]
+            Listener::Uds(l) => {
+                l.accept().map(|(s, _)| (s.set_nonblocking(false), Stream::Uds(s)))
+            }
+        };
+        match accepted {
+            Ok((blocking, mut s)) => {
+                blocking.map_err(|e| {
+                    backend_err(format!("stream nonblocking: {e}"))
+                })?;
+                let frame = read_frame(&mut s)
+                    .map_err(|e| backend_err(format!("hello: {e}")))?;
+                if !frame.check() {
+                    return Err(backend_err("corrupt HELLO frame"));
+                }
+                let mut rd = Rd::new(&frame.payload);
+                if rd.u8()? != MSG_HELLO {
+                    return Err(backend_err("expected HELLO"));
+                }
+                let id = rd.u32()? as usize;
+                if id >= n || conns[id].is_some() {
+                    return Err(backend_err(format!("bad HELLO id {id}")));
+                }
+                if !dedup.accept(id, frame.seq) {
+                    return Err(backend_err(format!(
+                        "duplicate HELLO from worker {id}"
+                    )));
+                }
+                conns[id] = Some(s);
+                got += 1;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                if Instant::now() > deadline {
+                    return Err(backend_err(format!(
+                        "only {got}/{n} workers connected within {}s",
+                        ACCEPT_TIMEOUT.as_secs()
+                    )));
+                }
+                thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(backend_err(format!("accept: {e}"))),
+        }
+    }
+    Ok(conns.into_iter().map(|c| c.expect("all slots filled")).collect())
+}
+
+// --- message (de)serialization ---------------------------------------
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(b: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(b, xs.len() as u32);
+    for x in xs {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader over a frame payload.
+struct Rd<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Rd { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ExperimentError> {
+        let end = self.i.checked_add(n).filter(|&e| e <= self.b.len());
+        match end {
+            Some(end) => {
+                let s = &self.b[self.i..end];
+                self.i = end;
+                Ok(s)
+            }
+            None => Err(backend_err("truncated message payload")),
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8, ExperimentError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ExperimentError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ExperimentError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, ExperimentError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, ExperimentError> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| {
+            backend_err("model length overflow")
+        })?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Frame + send one message, advancing the per-direction sequence.
+fn send_msg(
+    s: &mut Stream,
+    seq: &mut u64,
+    payload: Vec<u8>,
+) -> io::Result<()> {
+    *seq += 1;
+    write_frame(s, &Frame::new(*seq, payload))?;
+    s.flush()
+}
+
+/// Receive one CRC-checked, dedup-accepted message from worker `i`.
+fn recv_msg(
+    s: &mut Stream,
+    dedup: &mut DedupWindow,
+    i: usize,
+) -> Result<Vec<u8>, ExperimentError> {
+    loop {
+        let frame = read_frame(s)
+            .map_err(|e| backend_err(format!("worker {i} read: {e}")))?;
+        if !frame.check() {
+            return Err(backend_err(format!(
+                "CRC mismatch on frame from worker {i}"
+            )));
+        }
+        if !dedup.accept(i, frame.seq) {
+            continue; // stale duplicate — drop and keep reading
+        }
+        return Ok(frame.payload);
+    }
+}
+
+// --- the worker process (one thread per worker, socket-only state) ---
+
+/// One deployment worker: everything it knows arrives over the socket.
+/// Exits on shutdown, connection loss, or any protocol violation (the
+/// coordinator then reports the broken connection).
+fn worker_main(id: usize, shard: Dataset, cfg: ExperimentConfig, ep: Endpoint) {
+    let Some(mut stream) = connect_with_retry(&ep) else { return };
+    let mut trainer = NativeTrainer::from_config(&cfg);
+    let mut rng = Pcg::new(cfg.seed ^ 0x50C4E7, id as u64);
+    let mut aggregator = Aggregator::from_config(&cfg.adversary);
+    let mut agg: Vec<f32> = Vec::new();
+    let mut tx_seq = 0u64;
+    let mut dedup = DedupWindow::new(1);
+    let mut hello = vec![MSG_HELLO];
+    put_u32(&mut hello, id as u32);
+    if send_msg(&mut stream, &mut tx_seq, hello).is_err() {
+        return;
+    }
+    loop {
+        let Ok(frame) = read_frame(&mut stream) else { return };
+        if !frame.check() || !dedup.accept(0, frame.seq) {
+            return;
+        }
+        let mut rd = Rd::new(&frame.payload);
+        match rd.u8() {
+            Ok(MSG_SHUTDOWN) => return,
+            Ok(MSG_EXECUTE) => {
+                let Ok(round) = rd.u32() else { return };
+                let (Ok(wait_ms), Ok(train_ms)) = (rd.u64(), rd.u64()) else {
+                    return;
+                };
+                // own model first, then pulled + pushed wire copies —
+                // the simulator's aggregation order
+                let mut sizes: Vec<usize> = Vec::new();
+                let mut models: Vec<Vec<f32>> = Vec::new();
+                let Ok(own_size) = rd.u64() else { return };
+                let Ok(own) = rd.f32s() else { return };
+                sizes.push(own_size as usize);
+                models.push(own);
+                let Ok(n_models) = rd.u32() else { return };
+                for _ in 0..n_models {
+                    let (Ok(sz), Ok(m)) = (rd.u64(), rd.f32s()) else {
+                        return;
+                    };
+                    sizes.push(sz as usize);
+                    models.push(m);
+                }
+                // emulated channel wait (slowest link already folded in
+                // by the coordinator), then aggregate + compute + train
+                thread::sleep(Duration::from_millis(wait_ms));
+                let refs: Vec<&[f32]> =
+                    models.iter().map(|m| m.as_slice()).collect();
+                let weights = data_size_weights(&sizes);
+                aggregator.aggregate_into(
+                    &mut trainer,
+                    &refs,
+                    &weights,
+                    &mut agg,
+                );
+                thread::sleep(Duration::from_millis(train_ms));
+                let (params, loss) = trainer.train(
+                    &agg,
+                    &shard,
+                    cfg.local_steps,
+                    cfg.batch,
+                    cfg.lr,
+                    &mut rng,
+                );
+                let mut done = vec![MSG_DONE];
+                put_u32(&mut done, round);
+                put_f64(&mut done, loss);
+                put_f32s(&mut done, &params);
+                if send_msg(&mut stream, &mut tx_seq, done).is_err() {
+                    return;
+                }
+            }
+            _ => return,
+        }
+    }
+}
+
+// --- the coordinator -------------------------------------------------
+
+/// Per-activation virtual-time data, computed on the coordinator in
+/// plan order (the engine-mirroring RNG draws live here).
+struct ActMeta {
+    duration_s: f64,
+    compute_s: f64,
+    transfer_s: f64,
+    retry_s: f64,
+    tally: DeliveryTally,
+    dead: Vec<usize>,
+}
+
+fn run_socket(
+    exp: Experiment,
+    sopts: SocketConfig,
+) -> Result<RunResult, ExperimentError> {
+    let Experiment {
+        cfg,
+        mut net,
+        mut workers,
+        test,
+        label_dist,
+        model_bits,
+        scenario,
+        mut transport,
+        mut adversary,
+        delivery,
+        mut trainer,
+        mut scheduler,
+        mut rng,
+        observers,
+    } = exp;
+    if cfg.trainer != TrainerKind::Native {
+        return Err(ExperimentError::Unsupported(
+            "the socket backend trains with one NativeTrainer per worker; \
+             run.backend=sim for PJRT trainers"
+                .into(),
+        ));
+    }
+    let n = cfg.workers;
+    let time_scale = sopts.time_scale;
+    let wire_bits = transport.message_bits();
+    let recorder = RunRecorder::with_window(
+        format!("socket-{}", scheduler.name()),
+        model_bits,
+        cfg.metrics.window,
+    );
+    let mut chain = ObserverChain::new(recorder, observers);
+
+    // --- bring the deployment up ---
+    let (listener, endpoint, sock_path) = bind(&sopts)?;
+    let mut handles = Vec::with_capacity(n);
+    for w in &workers {
+        let shard = w.shard.clone();
+        let wcfg = cfg.clone();
+        let ep = endpoint.clone();
+        let id = w.id;
+        handles.push(thread::spawn(move || worker_main(id, shard, wcfg, ep)));
+    }
+    let mut rx_dedup = DedupWindow::new(n);
+    let mut conns = match accept_workers(&listener, n, &mut rx_dedup) {
+        Ok(c) => c,
+        Err(e) => {
+            // failed bring-up: close what connected so threads exit
+            if let Some(p) = &sock_path {
+                let _ = std::fs::remove_file(p);
+            }
+            return Err(e);
+        }
+    };
+    let mut tx_seq = vec![0u64; n];
+
+    // --- virtual-time mirror state (the simulator's, verbatim) ---
+    let mut pulls = PullLedger::dense(n);
+    let mut inbox: Vec<Vec<(usize, Vec<f32>)>> = vec![Vec::new(); n];
+    let mut tally = DeliveryTally::default();
+    let mut clock_s = 0.0f64;
+    let mut cum_transfers = 0usize;
+    let mut cum_bytes = 0.0f64;
+    let mut pull_srcs: Vec<usize> = Vec::new();
+    let mut ids: Vec<usize> = (0..n).collect();
+    let mut gdx: Vec<usize> = (0..n).collect();
+    let mut range_buf: Vec<usize> = Vec::new();
+    let mut cand_buf: Vec<Vec<usize>> = Vec::new();
+    let mut near: Vec<usize> = Vec::new();
+    let mut worst_tx: Vec<f64> = Vec::new();
+    let mut h_est: Vec<f64> = Vec::new();
+    let mut hits = 0usize;
+
+    let result = 'run: {
+        for round in 1..=cfg.rounds {
+            // --- scenario events (identical hook to the simulator) ---
+            crate::scenario::apply_round_events(
+                &scenario,
+                round,
+                &mut net,
+                |ev| match *ev {
+                    ScenarioEvent::Leave { worker } => {
+                        inbox[worker].clear();
+                    }
+                    ScenarioEvent::Crash { worker } => {
+                        inbox[worker].clear();
+                        for q in inbox.iter_mut() {
+                            if let Some(pos) =
+                                q.iter().position(|(f, _)| *f == worker)
+                            {
+                                q.swap_remove(pos);
+                                tally.crash_dropped += 1;
+                            }
+                        }
+                    }
+                    ScenarioEvent::Join { worker } => {
+                        let w = &mut workers[worker];
+                        w.params =
+                            trainer.init(cfg.seed.wrapping_add(worker as u64));
+                        w.staleness = 0;
+                        w.queue = 0.0;
+                        w.residual_s = w.h_train_s;
+                        w.last_loss = f64::NAN;
+                        pulls.reset_worker(worker);
+                        transport.reset_worker(worker);
+                    }
+                    ScenarioEvent::Rejoin { worker } => {
+                        let w = &mut workers[worker];
+                        w.residual_s = w.h_train_s;
+                    }
+                    _ => {}
+                },
+                |rec| chain.scenario_event(&rec),
+            );
+
+            net.advance_round(cfg.seed, round as u64);
+
+            // --- scheduler view (dense rebuild, simulator order) ---
+            crate::scenario::rebuild_dense_maps(&net, &mut ids, &mut gdx);
+            let p = ids.len();
+            crate::scenario::build_dense_candidates(
+                &net,
+                &ids,
+                &gdx,
+                &mut range_buf,
+                &mut cand_buf,
+            );
+            let d_tau: Vec<u64> =
+                ids.iter().map(|&i| workers[i].staleness).collect();
+            let d_queues: Vec<f64> =
+                ids.iter().map(|&i| workers[i].queue).collect();
+            let d_residual: Vec<f64> =
+                ids.iter().map(|&i| workers[i].residual_s).collect();
+            {
+                let ws = &workers;
+                estimate_h_into(
+                    &net,
+                    |gi| ws[gi].residual_s,
+                    &ids,
+                    &cand_buf[..p],
+                    wire_bits,
+                    cfg.neighbor_cap,
+                    &mut near,
+                    &mut worst_tx,
+                    &mut h_est,
+                );
+            }
+            let data_sizes: Vec<usize> =
+                ids.iter().map(|&i| workers[i].data_size()).collect();
+            let budgets: Vec<f64> =
+                ids.iter().map(|&i| net.budgets[i]).collect();
+            let mut plan = {
+                let view = SchedView {
+                    round,
+                    tau: &d_tau,
+                    queues: &d_queues,
+                    h_cmp: &d_residual,
+                    h_est: &h_est,
+                    data_sizes: &data_sizes,
+                    ids: &ids,
+                    label_dist: &label_dist,
+                    candidates: &cand_buf[..p],
+                    budgets: &budgets,
+                    pulls: &pulls,
+                    net: &net,
+                    params: SchedulerParams::from(&cfg),
+                };
+                scheduler.plan(&view, &mut rng)
+            };
+            crate::scenario::remap_plan_to_global(&mut plan, &ids);
+            debug_assert!(plan.validate_present(net.present_mask()).is_ok());
+            chain.plan(round, &plan);
+
+            // --- transport encode pass (simulator order) ---
+            let adv_active = adversary.is_active();
+            let dense = transport.is_dense();
+            if !dense || adv_active {
+                crate::transport::unique_pull_sources(
+                    &plan.pulls_from,
+                    &mut pull_srcs,
+                );
+                for &j in &pull_srcs {
+                    let payload: &[f32] = if adv_active {
+                        adversary.transmit(j, &workers[j].params)
+                    } else {
+                        &workers[j].params
+                    };
+                    if !dense {
+                        transport.encode(j, payload);
+                    }
+                }
+            }
+
+            // --- dispatch EXECUTE (plan order) ---
+            // virtual times first: the per-activation RNG stream draws
+            // in the simulator's exact order (pulls in plan order, then
+            // this worker's pushes), so durations — and therefore H_t,
+            // staleness, queues, and every later plan — are
+            // bit-identical to the virtual-clock engine's
+            let channels = cfg.network.channels.max(1);
+            let mut metas: Vec<ActMeta> =
+                Vec::with_capacity(plan.active.len());
+            for (k, &i) in plan.active.iter().enumerate() {
+                let mut act_rng = Pcg::activation_stream(
+                    cfg.seed,
+                    round as u64,
+                    i as u64,
+                );
+                let mut act_tally = DeliveryTally::default();
+                let mut dead: Vec<usize> = Vec::new();
+                let mut worst_pull = 0.0f64;
+                let mut worst_pull_base = 0.0f64;
+                for &j in &plan.pulls_from[k] {
+                    let base =
+                        net.transfer_time_s(j, i, wire_bits, &mut act_rng);
+                    let out = delivery.resolve(round as u64, j, i);
+                    act_tally.add(&out);
+                    if !out.delivered {
+                        dead.push(j);
+                    }
+                    worst_pull_base = worst_pull_base.max(base);
+                    worst_pull = worst_pull.max(out.time_s(base));
+                }
+                let pull_slots =
+                    plan.pulls_from[k].len().div_ceil(channels);
+                let mut worst_push = 0.0f64;
+                let mut n_push = 0usize;
+                for &(from, to) in &plan.pushes {
+                    if from == i {
+                        worst_push = worst_push.max(net.transfer_time_s(
+                            i,
+                            to,
+                            wire_bits,
+                            &mut act_rng,
+                        ));
+                        n_push += 1;
+                    }
+                }
+                let push_slots = n_push.div_ceil(channels);
+                let duration_s = workers[i].residual_s
+                    + worst_pull * pull_slots as f64
+                    + worst_push * push_slots as f64;
+                let compute_s = workers[i].residual_s;
+                let transfer_s = worst_pull_base * pull_slots as f64
+                    + worst_push * push_slots as f64;
+                let retry_s =
+                    (worst_pull - worst_pull_base) * pull_slots as f64;
+
+                // the EXECUTE message: own model + delivered pulls
+                // (wire copies through transport/adversary) + pending
+                // pushed models (senders freshly pulled are filtered —
+                // their fresher model just arrived via the pull)
+                let srcs: Vec<usize> = plan.pulls_from[k]
+                    .iter()
+                    .copied()
+                    .filter(|j| !dead.contains(j))
+                    .collect();
+                let pushed: Vec<(usize, Vec<f32>)> =
+                    std::mem::take(&mut inbox[i])
+                        .into_iter()
+                        .filter(|(from, _)| {
+                            *from != i && !srcs.contains(from)
+                        })
+                        .collect();
+                let wait_ms =
+                    ((worst_pull * pull_slots as f64
+                        + worst_push * push_slots as f64)
+                        * time_scale) as u64;
+                let train_ms = (workers[i].residual_s * time_scale) as u64;
+                let mut msg = vec![MSG_EXECUTE];
+                put_u32(&mut msg, round as u32);
+                put_u64(&mut msg, wait_ms);
+                put_u64(&mut msg, train_ms);
+                put_u64(&mut msg, workers[i].data_size() as u64);
+                put_f32s(&mut msg, &workers[i].params);
+                put_u32(&mut msg, (srcs.len() + pushed.len()) as u32);
+                for &j in &srcs {
+                    put_u64(&mut msg, workers[j].data_size() as u64);
+                    put_f32s(
+                        &mut msg,
+                        adversary.exchange_view(
+                            j,
+                            transport.view(j, &workers[j].params),
+                            dense,
+                        ),
+                    );
+                }
+                for (from, m) in &pushed {
+                    put_u64(&mut msg, workers[*from].data_size() as u64);
+                    put_f32s(&mut msg, m);
+                }
+                if let Err(e) = send_msg(&mut conns[i], &mut tx_seq[i], msg)
+                {
+                    break 'run Err(backend_err(format!(
+                        "worker {i} hung up: {e}"
+                    )));
+                }
+                metas.push(ActMeta {
+                    duration_s,
+                    compute_s,
+                    transfer_s,
+                    retry_s,
+                    tally: act_tally,
+                    dead,
+                });
+            }
+
+            // realised H_t: the simulator's fold-max in plan order
+            let mut h_round = metas
+                .iter()
+                .fold(0.0f64, |a, m| a.max(m.duration_s));
+            if plan.active.is_empty() {
+                h_round = 0.01; // avoid stalling the clock
+            }
+
+            // --- collect DONEs and apply results (plan order) ---
+            let mut losses: Vec<f64> =
+                Vec::with_capacity(plan.active.len());
+            for (k, &i) in plan.active.iter().enumerate() {
+                let payload = match recv_msg(&mut conns[i], &mut rx_dedup, i)
+                {
+                    Ok(pl) => pl,
+                    Err(e) => break 'run Err(e),
+                };
+                let mut rd = Rd::new(&payload);
+                let parsed = (|| {
+                    if rd.u8()? != MSG_DONE {
+                        return Err(backend_err(format!(
+                            "worker {i}: expected DONE"
+                        )));
+                    }
+                    let r = rd.u32()? as usize;
+                    if r != round {
+                        return Err(backend_err(format!(
+                            "worker {i}: DONE for round {r}, expected \
+                             {round}"
+                        )));
+                    }
+                    Ok((rd.f64()?, rd.f32s()?))
+                })();
+                let (loss, params) = match parsed {
+                    Ok(x) => x,
+                    Err(e) => break 'run Err(e),
+                };
+                let m = &metas[k];
+                chain.activation(&ActivationRecord {
+                    round,
+                    worker: i,
+                    start_s: clock_s,
+                    compute_s: m.compute_s,
+                    transfer_s: m.transfer_s,
+                    retry_s: m.retry_s,
+                    wait_s: (h_round - m.duration_s).max(0.0),
+                });
+                tally.merge(&m.tally);
+                for _ in &m.dead {
+                    chain.scenario_event(&EventRecord {
+                        round,
+                        kind: "dead-letter",
+                        worker: Some(i),
+                        population: p,
+                    });
+                }
+                workers[i].params = params;
+                workers[i].last_loss = loss;
+                losses.push(loss);
+                for &j in &plan.pulls_from[k] {
+                    pulls.record(i, j);
+                }
+            }
+
+            // --- pushes (post-training params, simulator semantics) ---
+            if !plan.pushes.is_empty() {
+                let mut push_enc: Vec<usize> = Vec::new();
+                for &(from, to) in &plan.pushes {
+                    if (!dense || adv_active) && !push_enc.contains(&from) {
+                        let payload: &[f32] = if adv_active {
+                            adversary.transmit(from, &workers[from].params)
+                        } else {
+                            &workers[from].params
+                        };
+                        if !dense {
+                            transport.encode(from, payload);
+                        }
+                        push_enc.push(from);
+                    }
+                    let wire = adversary
+                        .exchange_view(
+                            from,
+                            transport.view(from, &workers[from].params),
+                            dense,
+                        )
+                        .to_vec();
+                    match inbox[to].iter_mut().find(|(f, _)| *f == from) {
+                        Some(slot) => slot.1 = wire,
+                        None => inbox[to].push((from, wire)),
+                    }
+                }
+            }
+
+            // --- adversary bookkeeping (simulator order) ---
+            if adversary.has_stale_bombers() {
+                for i in 0..n {
+                    adversary.record_round_end(i, &workers[i].params);
+                }
+            }
+            if adv_active {
+                for (w, kind) in adversary.drain_activations() {
+                    chain.scenario_event(&EventRecord {
+                        round,
+                        kind,
+                        worker: Some(w),
+                        population: p,
+                    });
+                }
+            }
+
+            // --- clock + staleness + queues (simulator formulas) ---
+            clock_s += h_round;
+            let mut active_mask = vec![false; n];
+            for &i in &plan.active {
+                active_mask[i] = true;
+            }
+            for i in 0..n {
+                let w = &mut workers[i];
+                if !net.is_present(i) {
+                    w.on_skipped();
+                    continue;
+                }
+                w.advance(h_round);
+                if active_mask[i] {
+                    w.on_activated();
+                } else {
+                    w.on_skipped();
+                }
+                w.update_queue(cfg.tau_bound);
+            }
+            let mut tau_sum = 0.0f64;
+            let mut max_tau = 0u64;
+            for &i in &ids {
+                let t = workers[i].staleness;
+                tau_sum += t as f64;
+                max_tau = max_tau.max(t);
+            }
+
+            // --- round record (simulator formulas) ---
+            let transfers = plan.transfers();
+            cum_transfers += transfers;
+            let bytes_sent = (transfers + tally.retransmissions) as f64
+                * transport.message_bytes();
+            cum_bytes += bytes_sent;
+            let train_loss = if losses.is_empty() {
+                f64::NAN
+            } else {
+                losses.iter().sum::<f64>() / losses.len() as f64
+            };
+            chain.round_end(&RoundRecord {
+                round,
+                time_s: clock_s,
+                duration_s: h_round,
+                active: plan.active.len(),
+                population: p,
+                adversaries: adversary.count_present(&ids),
+                transfers,
+                bytes_sent,
+                avg_staleness: tau_sum / p as f64,
+                max_staleness: max_tau,
+                train_loss,
+                retransmissions: tally.retransmissions,
+                dropped_msgs: tally.dropped_msgs(),
+                corrupt_detected: tally.corrupt,
+            });
+            tally.clear();
+
+            // --- evaluation (coordinator-side, simulator cadence) ---
+            if round % cfg.eval_every.max(1) == 0 || round == cfg.rounds {
+                let count = ((p as f64 * cfg.eval_worker_frac).round()
+                    as usize)
+                    .clamp(1, p.max(1));
+                let eval_ids: Vec<usize> = if count >= p {
+                    ids.clone()
+                } else {
+                    rng.sample_indices(p, count)
+                        .into_iter()
+                        .map(|k| ids[k])
+                        .collect()
+                };
+                let mut acc_sum = 0.0;
+                let mut loss_sum = 0.0;
+                for &i in &eval_ids {
+                    let (l, a) =
+                        trainer.evaluate(&workers[i].params, &test);
+                    acc_sum += a;
+                    loss_sum += l;
+                }
+                let rec = EvalRecord {
+                    round,
+                    time_s: clock_s,
+                    avg_accuracy: acc_sum / eval_ids.len() as f64,
+                    avg_loss: loss_sum / eval_ids.len() as f64,
+                    cum_transfers,
+                    cum_bytes,
+                };
+                chain.eval(&rec);
+                // the CLI early-stop contract (two confirming snapshots)
+                if rec.avg_accuracy >= cfg.target_accuracy {
+                    hits += 1;
+                    if hits >= 2 {
+                        break 'run Ok(());
+                    }
+                }
+            }
+        }
+        Ok(())
+    };
+
+    // --- tear the deployment down (also on mid-run errors) ---
+    for (i, s) in conns.iter_mut().enumerate() {
+        let _ = send_msg(s, &mut tx_seq[i], vec![MSG_SHUTDOWN]);
+    }
+    drop(conns);
+    for h in handles {
+        let _ = h.join();
+    }
+    if let Some(p) = &sock_path {
+        let _ = std::fs::remove_file(p);
+    }
+    result?;
+    Ok(chain.into_result())
+}

@@ -29,11 +29,23 @@
 //! published snapshot stays around, which is precisely the stale model a
 //! `Rejoin` resumes from. A `Join` (fresh device on the slot) resets the
 //! published snapshot to re-initialised parameters before the thread is
-//! unparked by the next EXECUTE. One deliberate asymmetry with the
-//! virtual-clock engine: this backend is pull-only and every pull of a
-//! round completes before the round boundary, so there are never
-//! in-flight models for a `Crash` to drop — `Crash` and `Leave` are
-//! mechanically identical here and differ only in the event log.
+//! unparked by the next EXECUTE. Push edges give `Crash` real teeth
+//! here: a sender's post-training model sits in the coordinator-side
+//! inbox until the receiver's next activation, and a `Crash` at a round
+//! boundary drops every in-flight copy from the crashed worker — each
+//! drop ledger'd as `crash_dropped` (surfacing in `dropped_msgs`),
+//! exactly as in the virtual-clock engine. A graceful `Leave` only
+//! discards models *addressed to* the leaver.
+//!
+//! # Push edges
+//!
+//! Plans may carry push edges (SA-ADFL's push-to-all). The sender's
+//! *post-training* published model is captured into the receiver's
+//! coordinator inbox after the round completes (once-per-sender encode
+//! under a non-dense codec or an active adversary, replace-or-push per
+//! sender) and rides the receiver's next EXECUTE, skipping senders the
+//! receiver freshly pulled that round — the virtual-clock engine's
+//! inbox semantics, port for port.
 //!
 //! # Transport
 //!
@@ -55,18 +67,20 @@
 //! delivered edge's emulated delay stretches by its retries/backoff; a
 //! dead-lettered sender is removed from the message (the receiver
 //! aggregates without it, gracefully) but its burned retry window is
-//! still slept out. Because this backend is pull-only with no in-flight
-//! models, the crash-drop ledger entry (`crash_dropped`) is always zero
-//! here — part of the documented Crash≡Leave asymmetry above.
+//! still slept out. Pushed models are charged to the byte ledger via
+//! `RoundPlan::transfers` and dropped through `crash_dropped` on a
+//! crash, so ledger conservation holds on every backend.
 
 use super::observer::{ObserverChain, RunRecorder};
 use super::{Backend, Experiment, ExperimentError};
 use crate::adversary::Aggregator;
-use crate::config::{ExperimentConfig, TrainerKind};
+use crate::config::{ExperimentConfig, TestbedConfig, TrainerKind};
 use crate::coordinator::{PullLedger, SchedView, SchedulerParams};
 use crate::data::Dataset;
 use crate::delivery::DeliveryTally;
-use crate::metrics::{EvalRecord, EventRecord, RoundRecord, RunResult};
+use crate::metrics::{
+    ActivationRecord, EvalRecord, EventRecord, RoundRecord, RunResult,
+};
 use crate::scenario::ScenarioEvent;
 use crate::worker::{data_size_weights, NativeTrainer, Trainer};
 use std::sync::mpsc;
@@ -97,6 +111,10 @@ enum Execute {
         /// edges, if any: the receiver waited out the budget before
         /// degrading, so the wait is slept even though nothing arrived.
         dead_wait_ms: u64,
+        /// Models pushed to this worker in earlier rounds (sender id +
+        /// wire copy), drained from the coordinator inbox, senders
+        /// freshly pulled this round already filtered out.
+        pushed: Vec<(usize, Vec<f32>)>,
     },
     Shutdown,
 }
@@ -138,6 +156,16 @@ impl ThreadedBackend {
 
     pub fn with_options(opts: TestbedOptions) -> Self {
         ThreadedBackend { opts }
+    }
+
+    /// Build from the `[testbed]` config section.
+    pub fn from_config(cfg: &TestbedConfig) -> Self {
+        ThreadedBackend {
+            opts: TestbedOptions {
+                time_scale: cfg.time_scale,
+                profile: cfg.profile,
+            },
+        }
     }
 }
 
@@ -240,6 +268,16 @@ fn run_threaded(
     let mut cum_transfers = 0usize;
     let mut cum_bytes = 0.0f64;
     let mut pull_srcs: Vec<usize> = Vec::new();
+    // in-flight pushed models: sender id + wire copy, per receiver;
+    // replace-or-push keeps at most one entry per sender
+    let mut inbox: Vec<Vec<(usize, Vec<f32>)>> = vec![Vec::new(); n];
+    // declared outside the loop (cleared after each round record) so a
+    // Crash at the *next* round's boundary lands its dropped in-flight
+    // pushes in that round's `dropped_msgs` — same as the simulator
+    let mut tally = DeliveryTally::default();
+    // virtual clock mirroring the wall clock at `time_scale` — feeds
+    // the activation trace so testbed traces line up with sim traces
+    let mut vclock_s = 0.0f64;
     // dense↔global maps over present workers, rebuilt each round
     let mut ids: Vec<usize> = (0..n).collect();
     let mut gdx: Vec<usize> = (0..n).collect();
@@ -273,11 +311,26 @@ fn run_threaded(
                 }
                 // Leave/Crash: the membership flip parks the worker's
                 // thread (no more EXECUTE messages until it rejoins).
-                // There is no crash-specific cleanup: this backend is
-                // pull-only and each round's pulls complete before the
-                // boundary, so no in-flight models exist for a Crash to
-                // drop — Crash and Leave differ only in the event log
-                // (see the module docs and DESIGN.md §Scenarios).
+                ScenarioEvent::Leave { worker } => {
+                    // graceful: pending models addressed to the leaver
+                    // depart with it; nothing *from* it is dropped
+                    inbox[worker].clear();
+                }
+                ScenarioEvent::Crash { worker } => {
+                    // own inbox vanishes silently (as on Leave), then
+                    // every in-flight pushed model *from* the crashed
+                    // worker drops on the floor, ledger'd so
+                    // conservation holds (DESIGN.md §Scenarios)
+                    inbox[worker].clear();
+                    for q in inbox.iter_mut() {
+                        if let Some(pos) =
+                            q.iter().position(|(f, _)| *f == worker)
+                        {
+                            q.swap_remove(pos);
+                            tally.crash_dropped += 1;
+                        }
+                    }
+                }
                 _ => {}
             },
             |rec| chain.scenario_event(&rec),
@@ -373,14 +426,19 @@ fn run_threaded(
         // delivery ledger for the same seed. Dead-lettered senders are
         // removed from the message; their burned retry window rides
         // along as dead_wait_ms.
-        let mut tally = DeliveryTally::default();
         let round_t0 = Instant::now();
+        // (worker, compute_s, transfer_s, retry_s) per activation, in
+        // plan order — emitted as trace records once h_round is known
+        let mut acts: Vec<(usize, f64, f64, f64)> =
+            Vec::with_capacity(plan.active.len());
         for (k, &i) in plan.active.iter().enumerate() {
             let mut neighbors: Vec<usize> =
                 Vec::with_capacity(plan.pulls_from[k].len());
             let mut delays: Vec<u64> =
                 Vec::with_capacity(plan.pulls_from[k].len());
             let mut dead_wait_ms = 0u64;
+            let mut base_max = 0.0f64;
+            let mut realized_max = 0.0f64;
             for &j in &plan.pulls_from[k] {
                 let t = net.transfer_time_s(j, i, wire_bits, &mut rng);
                 let out = delivery.resolve(round as u64, j, i);
@@ -389,6 +447,8 @@ fn run_threaded(
                 // was still attempted (and charged) — same as the
                 // virtual-clock engine
                 pulls.record(i, j);
+                base_max = base_max.max(t);
+                realized_max = realized_max.max(out.time_s(t));
                 let d = (out.time_s(t) * opts.time_scale) as u64;
                 if out.delivered {
                     neighbors.push(j);
@@ -403,6 +463,22 @@ fn run_threaded(
                     });
                 }
             }
+            acts.push((
+                i,
+                h_train[i],
+                base_max,
+                (realized_max - base_max).max(0.0),
+            ));
+            // drain this worker's pushed-model inbox; senders it
+            // freshly pulls this round would double-count, so they are
+            // filtered (their fresher model arrives via the pull)
+            let pushed: Vec<(usize, Vec<f32>)> =
+                std::mem::take(&mut inbox[i])
+                    .into_iter()
+                    .filter(|(from, _)| {
+                        *from != i && !neighbors.contains(from)
+                    })
+                    .collect();
             let models = if transport.is_dense() {
                 if adv_active {
                     // dense codec normally skips the wire entirely, but
@@ -442,6 +518,7 @@ fn run_threaded(
                     pull_delays_ms: delays,
                     models,
                     dead_wait_ms,
+                    pushed,
                 })
                 .map_err(|_| {
                     ExperimentError::Backend(format!(
@@ -463,6 +540,62 @@ fn run_threaded(
             losses.push(d.loss);
         }
         let h_round = round_t0.elapsed().as_secs_f64();
+
+        // push edges (plan order): the sender's *post-training*
+        // published model lands in the receiver's inbox for its next
+        // activation — once-per-sender wire prep (attack + encode)
+        // under a non-dense codec or an active adversary, then
+        // replace-or-push so each receiver holds the latest copy per
+        // sender. Same port as the virtual-clock engine's push pass.
+        if !plan.pushes.is_empty() {
+            let mut push_enc: Vec<usize> = Vec::new();
+            for &(from, to) in &plan.pushes {
+                if (!transport.is_dense() || adv_active)
+                    && !push_enc.contains(&from)
+                {
+                    let src = published[from].lock().unwrap();
+                    let payload: &[f32] = if adv_active {
+                        adversary.transmit(from, &src.params)
+                    } else {
+                        &src.params
+                    };
+                    if !transport.is_dense() {
+                        transport.encode(from, payload);
+                    }
+                    push_enc.push(from);
+                }
+                let src = published[from].lock().unwrap();
+                let wire = adversary
+                    .exchange_view(
+                        from,
+                        transport.view(from, &src.params),
+                        transport.is_dense(),
+                    )
+                    .to_vec();
+                match inbox[to].iter_mut().find(|(f, _)| *f == from) {
+                    Some(slot) => slot.1 = wire,
+                    None => inbox[to].push((from, wire)),
+                }
+            }
+        }
+
+        // activation trace (plan order): the wall-clock round mapped
+        // back onto the virtual timeline, so testbed Perfetto tracks
+        // align with the simulator's
+        let h_virtual = h_round / opts.time_scale * 1000.0; // ms→virtual s
+        for &(i, compute_s, transfer_s, retry_s) in &acts {
+            chain.activation(&ActivationRecord {
+                round,
+                worker: i,
+                start_s: vclock_s,
+                compute_s,
+                transfer_s,
+                retry_s,
+                wait_s: (h_virtual - compute_s - transfer_s - retry_s)
+                    .max(0.0),
+            });
+        }
+        vclock_s += h_virtual;
 
         // adversary bookkeeping: stale-bomb history feeds on the
         // *post-round* published models (every slot, fixed order), and
@@ -490,7 +623,6 @@ fn run_threaded(
         for &i in &plan.active {
             active_mask[i] = true;
         }
-        let h_virtual = h_round / opts.time_scale * 1000.0; // ms→virtual s
         for i in 0..n {
             if !net.is_present(i) {
                 tau[i] += 1;
@@ -537,6 +669,7 @@ fn run_threaded(
             dropped_msgs: tally.dropped_msgs(),
             corrupt_detected: tally.corrupt,
         });
+        tally.clear();
 
         if round % cfg.eval_every.max(1) == 0 || round == cfg.rounds {
             // evaluate the present population's published models
@@ -596,6 +729,7 @@ fn worker_loop(
                 pull_delays_ms,
                 models: decoded,
                 dead_wait_ms,
+                pushed,
             } => {
                 // PULL: read each neighbor's published snapshot (the
                 // "pushing thread" contract), paying the channel delay.
@@ -636,6 +770,13 @@ fn worker_loop(
                             sizes.push(p.data_size);
                         }
                     }
+                }
+                // pushed models merge after own + pulled (the
+                // simulator's aggregation order); wire copies arrived
+                // with the message, sizes are cheap metadata
+                for (j, m) in pushed {
+                    sizes.push(published[j].lock().unwrap().data_size);
+                    models.push(m);
                 }
                 // pulls happen in parallel → pay only the slowest link
                 thread::sleep(Duration::from_millis(worst_delay));

@@ -110,7 +110,9 @@ use crate::coordinator::{
 };
 use crate::data::Dataset;
 use crate::delivery::{Delivery, DeliveryTally};
-use crate::metrics::{EvalRecord, EventRecord, RoundRecord, RunResult};
+use crate::metrics::{
+    ActivationRecord, EvalRecord, EventRecord, RoundRecord, RunResult,
+};
 use crate::network::EdgeNetwork;
 use crate::scenario::{Scenario, ScenarioEvent};
 use crate::transport::Transport;
@@ -224,6 +226,12 @@ struct ActOut {
     /// Pull senders whose retry budget exhausted: the receiver
     /// aggregated without them (empty under the clean profile).
     dead: Vec<usize>,
+    /// Phase decomposition of `duration_s` for the activation trace:
+    /// local training, fault-free transfer, and delivery-layer retry
+    /// overhead (`duration_s = compute_s + transfer_s + retry_s`).
+    compute_s: f64,
+    transfer_s: f64,
+    retry_s: f64,
 }
 
 /// Execute one activation: realised pull/push transfer times (Eqs. 7–9),
@@ -252,6 +260,7 @@ fn run_activation(
     let mut tally = DeliveryTally::default();
     let mut dead: Vec<usize> = Vec::new();
     let mut worst_pull = 0.0f64;
+    let mut worst_pull_base = 0.0f64;
     for &j in &ctx.plan.pulls_from[k] {
         let base = ctx.net.transfer_time_s(j, i, ctx.wire_bits, &mut rng);
         let out = ctx.delivery.resolve(ctx.round as u64, j, i);
@@ -259,6 +268,7 @@ fn run_activation(
         if !out.delivered {
             dead.push(j);
         }
+        worst_pull_base = worst_pull_base.max(base);
         worst_pull = worst_pull.max(out.time_s(base));
     }
     let pull_slots = ctx.plan.pulls_from[k].len().div_ceil(channels);
@@ -277,6 +287,14 @@ fn run_activation(
     let duration_s = ctx.workers[i].residual_s
         + worst_pull * pull_slots as f64
         + worst_push * push_slots as f64;
+    // phase decomposition for the activation trace: fault-free
+    // transfer vs the extra time the delivery layer's retries/backoff
+    // added (zero under the clean profile, where the sum reproduces
+    // `duration_s` exactly; lossy profiles match up to FP rounding)
+    let compute_s = ctx.workers[i].residual_s;
+    let transfer_s = worst_pull_base * pull_slots as f64
+        + worst_push * push_slots as f64;
+    let retry_s = (worst_pull - worst_pull_base) * pull_slots as f64;
 
     // --- aggregate (Eq. 4) over the pre-round snapshot ---
     // graceful degradation: dead-lettered senders never arrived, so
@@ -331,7 +349,7 @@ fn run_activation(
         ctx.cfg.lr,
         &mut rng,
     );
-    ActOut { k, duration_s, params, loss, tally, dead }
+    ActOut { k, duration_s, params, loss, tally, dead, compute_s, transfer_s, retry_s }
 }
 
 /// Estimated per-present-worker round cost H_t^i (Eq. 8): residual
@@ -343,9 +361,15 @@ fn run_activation(
 /// transfer half — a pure function of positions, tx powers and the wire
 /// size, so the event core caches it across static rounds) and
 /// `h_est[k] = residual + worst_tx[k]` (the sum the scheduler sees).
-fn estimate_h_into(
+///
+/// `residual_of` maps a *global* worker id to its residual compute
+/// time; taking a closure (instead of `&[WorkerState]`) lets the
+/// socket backend share this estimator verbatim — its plan state lives
+/// in mirror arrays, not `WorkerState`s — which is what keeps its
+/// `h_est` (and therefore its plans) bit-identical to this engine's.
+pub(crate) fn estimate_h_into(
     net: &EdgeNetwork,
-    workers: &[WorkerState],
+    residual_of: impl Fn(usize) -> f64,
     ids: &[usize],
     candidates: &[Vec<usize>],
     wire_bits: f64,
@@ -380,7 +404,7 @@ fn estimate_h_into(
             .map(|&j| net.expected_transfer_time_s(ids[j], gi, wire_bits))
             .fold(0.0f64, f64::max);
         worst_tx.push(worst);
-        h_est.push(workers[gi].residual_s + worst);
+        h_est.push(residual_of(gi) + worst);
     }
 }
 
@@ -712,9 +736,10 @@ impl VirtualClockEngine {
         self.view_h_cmp.clear();
         self.view_h_cmp
             .extend(self.ids.iter().map(|&i| self.workers[i].residual_s));
+        let workers = &self.workers;
         estimate_h_into(
             &self.net,
-            &self.workers,
+            |gi| workers[gi].residual_s,
             &self.ids,
             &self.cand_buf[..p],
             self.wire_bits,
@@ -921,6 +946,17 @@ impl VirtualClockEngine {
         self.losses.clear();
         for o in outs {
             let i = plan.active[o.k];
+            // activation trace (plan order, before the clock advances:
+            // `start_s` is the round-start clock)
+            self.observers.activation(&ActivationRecord {
+                round: self.round,
+                worker: i,
+                start_s: self.clock_s,
+                compute_s: o.compute_s,
+                transfer_s: o.transfer_s,
+                retry_s: o.retry_s,
+                wait_s: (h_round - o.duration_s).max(0.0),
+            });
             // fold the activation's delivery ledger (fixed plan order)
             // and log each dead-lettered edge as a graceful-degradation
             // event on its receiver

@@ -6,6 +6,33 @@ use std::io::Write;
 use std::path::Path;
 
 pub mod sink;
+pub mod trace;
+
+/// One worker activation, decomposed into the phases the trace sink
+/// renders as spans: local training, model transfer (base transfer
+/// time × channel slots), retry overhead added by the delivery layer,
+/// and the stale-wait until the round barrier. All times are virtual
+/// seconds; `start_s + compute_s + transfer_s + retry_s + wait_s` is
+/// the round-end clock for every activation of the round (exactly
+/// under the clean fault profile, up to FP rounding under lossy ones).
+#[derive(Clone, Debug)]
+pub struct ActivationRecord {
+    /// Round this activation ran in (1-based, like [`RoundRecord`]).
+    pub round: usize,
+    /// Activated worker (global id).
+    pub worker: usize,
+    /// Virtual clock at round start (s).
+    pub start_s: f64,
+    /// Local-training time (the worker's residual at activation).
+    pub compute_s: f64,
+    /// Fault-free transfer time: worst pull × pull slots + worst push
+    /// × push slots.
+    pub transfer_s: f64,
+    /// Extra transfer time from delivery-layer retries/backoff.
+    pub retry_s: f64,
+    /// Idle wait until the slowest activation finishes the round.
+    pub wait_s: f64,
+}
 
 /// One scheduler round.
 #[derive(Clone, Debug)]

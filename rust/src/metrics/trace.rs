@@ -1,0 +1,391 @@
+//! Perfetto trace export: a [`RoundObserver`] that renders a run as
+//! Chrome Trace Event JSON (`{"traceEvents": [...]}`), loadable in
+//! `ui.perfetto.dev` or `chrome://tracing`.
+//!
+//! # Track/span contract (DESIGN.md §Tracing)
+//!
+//! - `pid` is always 1; `tid 0` is the coordinator track, worker `w`
+//!   renders on `tid w + 1` (named `worker w` via `thread_name`
+//!   metadata).
+//! - Each activated worker emits complete (`ph:"X"`) spans in order:
+//!   `train` (residual compute), `transfer` (base network time),
+//!   `retry` (delivery retransmission overhead, omitted when zero) and
+//!   `stale-wait` (idle until the round barrier, omitted when zero).
+//! - The coordinator track carries one `round N` span per round and
+//!   `ph:"i"` instants for scenario/dead-letter events (on the
+//!   affected worker's track when the event names one).
+//!
+//! Timestamps are the backend's *virtual* clock converted to µs, so
+//! traces from the simulator and the socket backend line up span for
+//! span. Events buffer in memory and flush on [`TraceSink::finish`]
+//! (or best-effort on drop), so observers stay cheap inside the round
+//! loop.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{self, Write};
+use std::path::PathBuf;
+
+use crate::experiment::RoundObserver;
+use crate::metrics::{ActivationRecord, EventRecord, RoundRecord};
+use crate::util::json::Json;
+
+/// Buffers Trace Event JSON for one run and writes it as a single
+/// `{"traceEvents": [...]}` document.
+pub struct TraceSink {
+    path: PathBuf,
+    file: Option<File>,
+    events: Vec<Json>,
+    named_tids: Vec<u64>,
+    /// Virtual clock (µs) at the last round boundary — instants fired
+    /// before a round's execution land here.
+    clock_us: f64,
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in fields {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+impl TraceSink {
+    /// Open `path` for writing now (so a bad path fails at build time,
+    /// not after the run) and buffer events until [`Self::finish`].
+    pub fn to_path(path: impl Into<PathBuf>) -> io::Result<Self> {
+        let path = path.into();
+        let file = File::create(&path)?;
+        let mut sink = TraceSink {
+            path,
+            file: Some(file),
+            events: Vec::new(),
+            named_tids: Vec::new(),
+            clock_us: 0.0,
+        };
+        sink.events.push(obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("process_name".into())),
+            ("pid", Json::Num(1.0)),
+            ("args", obj(vec![("name", Json::Str("dystop".into()))])),
+        ]));
+        sink.name_tid(0);
+        Ok(sink)
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    /// Emit `thread_name` metadata the first time a track appears.
+    fn name_tid(&mut self, tid: u64) {
+        if self.named_tids.contains(&tid) {
+            return;
+        }
+        self.named_tids.push(tid);
+        let name = if tid == 0 {
+            "coordinator".to_string()
+        } else {
+            format!("worker {}", tid - 1)
+        };
+        self.events.push(obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("thread_name".into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid as f64)),
+            ("args", obj(vec![("name", Json::Str(name))])),
+        ]));
+    }
+
+    fn span(
+        &mut self,
+        name: String,
+        cat: &str,
+        tid: u64,
+        ts_us: f64,
+        dur_us: f64,
+        round: usize,
+    ) {
+        self.name_tid(tid);
+        self.events.push(obj(vec![
+            ("ph", Json::Str("X".into())),
+            ("name", Json::Str(name)),
+            ("cat", Json::Str(cat.into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid as f64)),
+            ("ts", Json::Num(ts_us)),
+            ("dur", Json::Num(dur_us)),
+            ("args", obj(vec![("round", Json::Num(round as f64))])),
+        ]));
+    }
+
+    /// Write the buffered document. Idempotent: the file handle is
+    /// consumed, so a second call (or the drop hook after an explicit
+    /// finish) is a no-op.
+    pub fn finish(&mut self) -> io::Result<()> {
+        let Some(mut file) = self.file.take() else {
+            return Ok(());
+        };
+        let doc = obj(vec![(
+            "traceEvents",
+            Json::Arr(std::mem::take(&mut self.events)),
+        )]);
+        write!(file, "{doc}")?;
+        file.flush()
+    }
+}
+
+impl Drop for TraceSink {
+    fn drop(&mut self) {
+        // Runs own their observers, so the natural flush point is the
+        // end of the run; I/O errors here have nowhere to surface.
+        let _ = self.finish();
+    }
+}
+
+impl RoundObserver for TraceSink {
+    fn on_scenario_event(&mut self, rec: &EventRecord) {
+        let tid = rec.worker.map(|w| w as u64 + 1).unwrap_or(0);
+        self.name_tid(tid);
+        self.events.push(obj(vec![
+            ("ph", Json::Str("i".into())),
+            ("name", Json::Str(rec.kind.to_string())),
+            ("cat", Json::Str("scenario".into())),
+            ("s", Json::Str("g".into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid as f64)),
+            ("ts", Json::Num(self.clock_us)),
+            ("args", obj(vec![
+                ("round", Json::Num(rec.round as f64)),
+                ("population", Json::Num(rec.population as f64)),
+            ])),
+        ]));
+    }
+
+    fn on_activation(&mut self, rec: &ActivationRecord) {
+        let tid = rec.worker as u64 + 1;
+        let mut ts = rec.start_s * 1e6;
+        self.span(
+            "train".into(),
+            "phase",
+            tid,
+            ts,
+            rec.compute_s * 1e6,
+            rec.round,
+        );
+        ts += rec.compute_s * 1e6;
+        self.span(
+            "transfer".into(),
+            "phase",
+            tid,
+            ts,
+            rec.transfer_s * 1e6,
+            rec.round,
+        );
+        ts += rec.transfer_s * 1e6;
+        if rec.retry_s > 0.0 {
+            self.span(
+                "retry".into(),
+                "phase",
+                tid,
+                ts,
+                rec.retry_s * 1e6,
+                rec.round,
+            );
+            ts += rec.retry_s * 1e6;
+        }
+        if rec.wait_s > 0.0 {
+            self.span(
+                "stale-wait".into(),
+                "phase",
+                tid,
+                ts,
+                rec.wait_s * 1e6,
+                rec.round,
+            );
+        }
+    }
+
+    fn on_round_end(&mut self, rec: &RoundRecord) {
+        let start_us = self.clock_us;
+        self.span(
+            format!("round {}", rec.round),
+            "round",
+            0,
+            start_us,
+            rec.duration_s * 1e6,
+            rec.round,
+        );
+        self.clock_us = rec.time_s * 1e6;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("dystop-trace-{}-{name}.json", std::process::id()))
+    }
+
+    fn activation(worker: usize) -> ActivationRecord {
+        ActivationRecord {
+            round: 1,
+            worker,
+            start_s: 0.0,
+            compute_s: 2.0,
+            transfer_s: 0.5,
+            retry_s: 0.25,
+            wait_s: 1.0,
+        }
+    }
+
+    fn round_rec(round: usize, time_s: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            time_s,
+            duration_s: 3.75,
+            active: 1,
+            population: 4,
+            adversaries: 0,
+            transfers: 2,
+            bytes_sent: 16.0,
+            avg_staleness: 0.0,
+            max_staleness: 0,
+            train_loss: 1.0,
+            retransmissions: 1,
+            dropped_msgs: 0,
+            corrupt_detected: 0,
+        }
+    }
+
+    fn spans_named<'a>(doc: &'a Json, name: &str) -> Vec<&'a Json> {
+        doc.get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| {
+                e.get("ph").unwrap().as_str() == Some("X")
+                    && e.get("name").unwrap().as_str() == Some(name)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn emits_valid_trace_event_json() {
+        let path = tmp("basic");
+        {
+            let mut sink = TraceSink::to_path(&path).unwrap();
+            sink.on_activation(&activation(2));
+            sink.on_round_end(&round_rec(1, 3.75));
+            sink.finish().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        let train = spans_named(&doc, "train");
+        assert_eq!(train.len(), 1);
+        assert_eq!(train[0].get("tid").unwrap().as_usize(), Some(3));
+        assert_eq!(train[0].get("dur").unwrap().as_f64(), Some(2.0e6));
+        // transfer starts where train ends
+        let transfer = spans_named(&doc, "transfer");
+        assert_eq!(transfer[0].get("ts").unwrap().as_f64(), Some(2.0e6));
+        assert_eq!(spans_named(&doc, "retry").len(), 1);
+        assert_eq!(spans_named(&doc, "stale-wait").len(), 1);
+        // coordinator round span on tid 0
+        let round = spans_named(&doc, "round 1");
+        assert_eq!(round[0].get("tid").unwrap().as_usize(), Some(0));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn zero_width_phases_are_omitted() {
+        let path = tmp("zero");
+        {
+            let mut sink = TraceSink::to_path(&path).unwrap();
+            sink.on_activation(&ActivationRecord {
+                retry_s: 0.0,
+                wait_s: 0.0,
+                ..activation(0)
+            });
+            sink.finish().unwrap();
+        }
+        let doc =
+            Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(spans_named(&doc, "retry").is_empty());
+        assert!(spans_named(&doc, "stale-wait").is_empty());
+        assert_eq!(spans_named(&doc, "train").len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn instants_land_at_the_round_boundary_clock() {
+        let path = tmp("instants");
+        {
+            let mut sink = TraceSink::to_path(&path).unwrap();
+            sink.on_round_end(&round_rec(1, 3.75));
+            sink.on_scenario_event(&EventRecord {
+                round: 2,
+                kind: "crash",
+                worker: Some(1),
+                population: 3,
+            });
+            sink.finish().unwrap();
+        }
+        let doc =
+            Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let inst: Vec<_> = doc
+            .get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("i"))
+            .collect();
+        assert_eq!(inst.len(), 1);
+        assert_eq!(inst[0].get("name").unwrap().as_str(), Some("crash"));
+        assert_eq!(inst[0].get("ts").unwrap().as_f64(), Some(3.75e6));
+        assert_eq!(inst[0].get("tid").unwrap().as_usize(), Some(2));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn thread_names_emitted_once_per_track() {
+        let path = tmp("names");
+        {
+            let mut sink = TraceSink::to_path(&path).unwrap();
+            sink.on_activation(&activation(5));
+            sink.on_activation(&activation(5));
+            sink.finish().unwrap();
+        }
+        let doc =
+            Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let names: Vec<_> = doc
+            .get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| {
+                e.get("name").unwrap().as_str() == Some("thread_name")
+            })
+            .collect();
+        // coordinator + worker 5, despite two activations
+        assert_eq!(names.len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn drop_flushes_unfinished_sink() {
+        let path = tmp("drop");
+        {
+            let mut sink = TraceSink::to_path(&path).unwrap();
+            sink.on_round_end(&round_rec(1, 1.0));
+        }
+        let doc =
+            Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(spans_named(&doc, "round 1").len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+}

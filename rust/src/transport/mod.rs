@@ -50,6 +50,8 @@
 //! — witnessed by `determinism_topk_threads_1_vs_4` in `BENCH_sim.json`
 //! and pinned by `tests/transport.rs`.
 
+pub mod wire;
+
 use crate::config::{CodecKind, TransportConfig};
 use crate::worker::Params;
 

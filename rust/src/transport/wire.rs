@@ -1,0 +1,155 @@
+//! Length-prefixed wire format for the socket deployment backend.
+//!
+//! Every message on a deployment socket is one frame:
+//!
+//! ```text
+//! [magic  u32 LE = "DYF1"]
+//! [len    u32 LE]          payload length in bytes
+//! [seq    u64 LE]          per-sender sequence number (dedup window)
+//! [payload len bytes]
+//! [crc    u32 LE]          CRC32 over the payload (delivery::crc32)
+//! ```
+//!
+//! The CRC is carried verbatim from [`Frame`], so a frame read off the
+//! wire still fails [`Frame::check`] if the payload was corrupted in
+//! flight — the same end-to-end integrity check the simulated delivery
+//! layer models. Garbage prefixes (bad magic) and absurd lengths are
+//! rejected with [`io::ErrorKind::InvalidData`] before any allocation;
+//! truncated streams surface as [`io::ErrorKind::UnexpectedEof`] from
+//! `read_exact`.
+
+use std::io::{self, Read, Write};
+
+use crate::delivery::Frame;
+
+/// Frame preamble: `b"DYF1"` read as a little-endian u32. A peer that
+/// is not speaking this protocol fails on the first four bytes.
+pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"DYF1");
+
+/// Upper bound on a single frame payload (64 MiB). Far above any model
+/// snapshot this repo ships; its job is to turn a corrupted length
+/// field into a clean error instead of an OOM-sized allocation.
+pub const MAX_PAYLOAD_BYTES: usize = 64 << 20;
+
+/// Serialize one frame to `w`. Errors only on I/O failure or a payload
+/// exceeding [`MAX_PAYLOAD_BYTES`].
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<()> {
+    if frame.payload.len() > MAX_PAYLOAD_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!(
+                "frame payload {} bytes exceeds cap {}",
+                frame.payload.len(),
+                MAX_PAYLOAD_BYTES
+            ),
+        ));
+    }
+    let mut header = [0u8; 16];
+    header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+    header[4..8].copy_from_slice(&(frame.payload.len() as u32).to_le_bytes());
+    header[8..16].copy_from_slice(&frame.seq.to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(&frame.payload)?;
+    w.write_all(&frame.crc.to_le_bytes())
+}
+
+/// Read one frame from `r`, validating magic and length before
+/// allocating. The wire CRC is preserved (not recomputed), so callers
+/// detect in-flight corruption via [`Frame::check`].
+pub fn read_frame(r: &mut impl Read) -> io::Result<Frame> {
+    let mut header = [0u8; 16];
+    r.read_exact(&mut header)?;
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != FRAME_MAGIC {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("bad frame magic {magic:#010x} (expected {FRAME_MAGIC:#010x})"),
+        ));
+    }
+    let len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds cap {MAX_PAYLOAD_BYTES}"),
+        ));
+    }
+    let seq = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let mut crc = [0u8; 4];
+    r.read_exact(&mut crc)?;
+    Ok(Frame { seq, payload, crc: u32::from_le_bytes(crc) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_round_trips() {
+        let frame = Frame::new(7, vec![1, 2, 3, 250, 0, 9]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        assert_eq!(buf.len(), 16 + frame.payload.len() + 4);
+        let back = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.seq, frame.seq);
+        assert_eq!(back.payload, frame.payload);
+        assert_eq!(back.crc, frame.crc);
+        assert!(back.check());
+    }
+
+    #[test]
+    fn empty_payload_round_trips() {
+        let frame = Frame::new(0, vec![]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let back = read_frame(&mut buf.as_slice()).unwrap();
+        assert!(back.check());
+        assert!(back.payload.is_empty());
+    }
+
+    #[test]
+    fn bad_magic_is_invalid_data() {
+        let frame = Frame::new(1, vec![5; 8]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        buf[0] ^= 0xFF;
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn oversize_length_is_invalid_data() {
+        let frame = Frame::new(1, vec![5; 8]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        buf[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn truncation_is_unexpected_eof() {
+        let frame = Frame::new(3, vec![9; 16]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        for cut in 0..buf.len() {
+            let err = read_frame(&mut &buf[..cut]).unwrap_err();
+            assert_eq!(
+                err.kind(),
+                io::ErrorKind::UnexpectedEof,
+                "prefix of {cut} bytes"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupted_payload_fails_crc_check() {
+        let frame = Frame::new(2, vec![0xAB; 32]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        buf[16] ^= 0x01; // first payload byte
+        let back = read_frame(&mut buf.as_slice()).unwrap();
+        assert!(!back.check());
+    }
+}

@@ -1,0 +1,322 @@
+//! Socket deployment backend contracts:
+//!
+//! * **wire integrity** — the framed wire format round-trips arbitrary
+//!   payloads, rejects garbage prefixes and truncated streams with
+//!   typed errors, and surfaces every injected payload bit-flip
+//!   through the CRC check;
+//! * **ledger agreement** — the cross-backend anchor: given the same
+//!   seed, the socket backend and the virtual-clock simulator emit the
+//!   same round plans and the same event/byte ledger (transfers,
+//!   retransmissions, dead-letters, dropped messages, `cum_bytes`),
+//!   bit-for-bit, including under a scripted mid-run crash whose
+//!   in-flight pushed models must be charged as `crash_dropped` on
+//!   every backend;
+//! * **observability** — `trace.out` produces valid Trace Event JSON
+//!   with at least one complete span on every activated worker's
+//!   track.
+//!
+//! UDS runs are unix-gated; the TCP smoke runs everywhere.
+
+use dystop::config::{
+    BackendKind, ExperimentConfig, SchedulerKind, SocketTransportKind,
+};
+use dystop::coordinator::RoundPlan;
+use dystop::delivery::Frame;
+use dystop::experiment::{Experiment, RoundObserver};
+use dystop::metrics::RunResult;
+use dystop::scenario::{Scenario, ScenarioEvent};
+use dystop::transport::wire::{read_frame, write_frame};
+use dystop::util::json::Json;
+use dystop::util::prop::forall_seeded;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        workers: 10,
+        rounds: 8,
+        train_per_worker: 48,
+        test_samples: 64,
+        eval_every: 4,
+        seed: 42,
+        target_accuracy: 2.0,
+        ..Default::default()
+    };
+    // virtual seconds map to ~0 wall milliseconds: the emulated sleeps
+    // truncate away, the virtual-time ledger is unaffected
+    cfg.socket.time_scale = 0.001;
+    cfg
+}
+
+/// Observer capturing every validated (global-id) round plan.
+struct PlanTap(Rc<RefCell<Vec<RoundPlan>>>);
+
+impl RoundObserver for PlanTap {
+    fn on_plan(&mut self, _round: usize, plan: &RoundPlan) {
+        self.0.borrow_mut().push(plan.clone());
+    }
+}
+
+fn run_with_plans(
+    cfg: ExperimentConfig,
+    backend: BackendKind,
+    scenario: Option<Scenario>,
+) -> (RunResult, Vec<RoundPlan>) {
+    let plans = Rc::new(RefCell::new(Vec::new()));
+    let mut builder = Experiment::builder(cfg)
+        .observer(Box::new(PlanTap(plans.clone())))
+        .backend(backend);
+    if let Some(s) = scenario {
+        builder = builder.scenario(s);
+    }
+    let res = builder.run().unwrap();
+    let captured = plans.borrow().clone();
+    (res, captured)
+}
+
+fn assert_plans_equal(sim: &[RoundPlan], sock: &[RoundPlan]) {
+    assert_eq!(sim.len(), sock.len(), "round counts differ");
+    for (r, (a, b)) in sim.iter().zip(sock).enumerate() {
+        assert_eq!(a.active, b.active, "active set, round {}", r + 1);
+        assert_eq!(
+            a.pulls_from,
+            b.pulls_from,
+            "pull topology, round {}",
+            r + 1
+        );
+        assert_eq!(a.pushes, b.pushes, "push edges, round {}", r + 1);
+    }
+}
+
+/// The cross-backend anchor: every plan-derived and delivery-derived
+/// quantity of the round/eval ledger agrees bit-for-bit.
+fn assert_ledgers_agree(sim: &RunResult, sock: &RunResult) {
+    assert_eq!(sim.rounds.len(), sock.rounds.len());
+    for (a, b) in sim.rounds.iter().zip(&sock.rounds) {
+        let r = a.round;
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.active, b.active, "round {r}");
+        assert_eq!(a.population, b.population, "round {r}");
+        assert_eq!(a.transfers, b.transfers, "round {r}");
+        assert_eq!(a.retransmissions, b.retransmissions, "round {r}");
+        assert_eq!(a.dropped_msgs, b.dropped_msgs, "round {r}");
+        assert_eq!(a.corrupt_detected, b.corrupt_detected, "round {r}");
+        assert_eq!(
+            a.bytes_sent.to_bits(),
+            b.bytes_sent.to_bits(),
+            "round {r} bytes"
+        );
+        assert_eq!(
+            a.duration_s.to_bits(),
+            b.duration_s.to_bits(),
+            "round {r} duration"
+        );
+        assert_eq!(
+            a.time_s.to_bits(),
+            b.time_s.to_bits(),
+            "round {r} clock"
+        );
+        assert_eq!(
+            a.avg_staleness.to_bits(),
+            b.avg_staleness.to_bits(),
+            "round {r} avg tau"
+        );
+        assert_eq!(a.max_staleness, b.max_staleness, "round {r} max tau");
+    }
+    assert_eq!(sim.evals.len(), sock.evals.len());
+    for (a, b) in sim.evals.iter().zip(&sock.evals) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.cum_transfers, b.cum_transfers, "eval @{}", a.round);
+        assert_eq!(
+            a.cum_bytes.to_bits(),
+            b.cum_bytes.to_bits(),
+            "eval @{}",
+            a.round
+        );
+    }
+}
+
+// --- wire format properties ------------------------------------------
+
+#[test]
+fn wire_round_trips_arbitrary_payloads() {
+    forall_seeded(0xD15F, 64, |rng| {
+        let len = (rng.next_u32() % 2048) as usize;
+        let payload: Vec<u8> =
+            (0..len).map(|_| rng.next_u32() as u8).collect();
+        let frame = Frame::new(rng.next_u64(), payload);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let back = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.seq, frame.seq);
+        assert_eq!(back.payload, frame.payload);
+        assert!(back.check(), "round-tripped frame must pass CRC");
+    });
+}
+
+#[test]
+fn wire_surfaces_every_payload_bit_flip() {
+    forall_seeded(0xF11B, 64, |rng| {
+        let len = 1 + (rng.next_u32() % 512) as usize;
+        let payload: Vec<u8> =
+            (0..len).map(|_| rng.next_u32() as u8).collect();
+        let frame = Frame::new(rng.next_u64(), payload);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        // flip one random bit inside the payload region (after the
+        // 16-byte header, before the trailing CRC)
+        let byte = 16 + (rng.next_u32() as usize % len);
+        buf[byte] ^= 1 << (rng.next_u32() % 8);
+        let back = read_frame(&mut buf.as_slice()).unwrap();
+        assert!(!back.check(), "bit flip at byte {byte} must fail CRC");
+    });
+}
+
+#[test]
+fn wire_rejects_garbage_prefix_and_truncation() {
+    forall_seeded(0x6A3B, 64, |rng| {
+        let payload: Vec<u8> =
+            (0..(rng.next_u32() % 256)).map(|_| rng.next_u32() as u8).collect();
+        let frame = Frame::new(rng.next_u64(), payload);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        // garbage prefix: corrupt one magic byte — typed InvalidData
+        let mut garbled = buf.clone();
+        garbled[rng.next_u32() as usize % 4] ^= 0xA5;
+        let err = read_frame(&mut garbled.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        // truncation at a random strict prefix — typed UnexpectedEof
+        let cut = rng.next_u32() as usize % buf.len();
+        let err = read_frame(&mut &buf[..cut]).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    });
+}
+
+// --- cross-backend ledger agreement ----------------------------------
+
+#[cfg(unix)]
+#[test]
+fn socket_backend_matches_sim_event_and_byte_ledger() {
+    let cfg = base_cfg();
+    let (sim, sim_plans) = run_with_plans(cfg.clone(), BackendKind::Sim, None);
+    let (sock, sock_plans) = run_with_plans(cfg, BackendKind::Socket, None);
+    assert_plans_equal(&sim_plans, &sock_plans);
+    assert_ledgers_agree(&sim, &sock);
+    assert!(
+        sim.rounds.iter().any(|r| r.transfers > 0),
+        "a run with zero transfers pins nothing"
+    );
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_ledger_agreement_survives_faulty_links() {
+    use dystop::config::{FaultConfig, FaultProfile};
+    let mut cfg = base_cfg();
+    cfg.faults = FaultConfig::preset(FaultProfile::Wifi);
+    let (sim, sim_plans) = run_with_plans(cfg.clone(), BackendKind::Sim, None);
+    let (sock, sock_plans) = run_with_plans(cfg, BackendKind::Socket, None);
+    assert_plans_equal(&sim_plans, &sock_plans);
+    assert_ledgers_agree(&sim, &sock);
+    assert!(
+        sim.rounds.iter().any(|r| r.retransmissions > 0),
+        "wifi profile should exercise the retry path"
+    );
+}
+
+#[cfg(unix)]
+#[test]
+fn crash_inflight_drops_agree_across_all_backends() {
+    // SA-ADFL pushes post-training models; a scripted crash at round 2
+    // must drop round 1's in-flight pushes through crash_dropped — the
+    // same count, on every backend.
+    let mut cfg = base_cfg();
+    cfg.scheduler = SchedulerKind::SaAdfl;
+    // bench-top geometry: everyone in range, so round 1 has pushes
+    cfg.network.region_m = 20.0;
+    cfg.network.comm_range_m = 30.0;
+    cfg.network.mobility_m = 0.0;
+    cfg.testbed.time_scale = 2.0;
+    cfg.testbed.profile = false;
+    let (probe, plans) = run_with_plans(cfg.clone(), BackendKind::Sim, None);
+    let w = plans[0].active[0];
+    let pushed = plans[0].pushes.len();
+    assert!(pushed > 0, "round 1 pushed nothing; widen the network");
+    assert!(probe.rounds.iter().all(|r| r.dropped_msgs == 0));
+    let script = || {
+        Scenario::from_events(vec![(2, ScenarioEvent::Crash { worker: w })])
+    };
+    let (sim, _) =
+        run_with_plans(cfg.clone(), BackendKind::Sim, Some(script()));
+    let (sock, _) =
+        run_with_plans(cfg.clone(), BackendKind::Socket, Some(script()));
+    let (testbed, _) =
+        run_with_plans(cfg, BackendKind::Testbed, Some(script()));
+    assert_eq!(sim.rounds[1].round, 2);
+    assert_eq!(
+        sim.rounds[1].dropped_msgs, pushed,
+        "every in-flight model dropped by the crash must be accounted"
+    );
+    assert_ledgers_agree(&sim, &sock);
+    // the testbed's wall-clock realization differs, but the crash
+    // accounting is the same pure function of (seed, plans, scenario)
+    let drops = |r: &RunResult| -> Vec<usize> {
+        r.rounds.iter().map(|x| x.dropped_msgs).collect()
+    };
+    assert_eq!(drops(&sim), drops(&testbed));
+}
+
+#[test]
+fn tcp_socket_backend_matches_sim_ledger() {
+    let mut cfg = base_cfg();
+    cfg.workers = 6;
+    cfg.rounds = 4;
+    cfg.eval_every = 2;
+    cfg.socket.transport = SocketTransportKind::Tcp;
+    let (sim, sim_plans) = run_with_plans(cfg.clone(), BackendKind::Sim, None);
+    let (sock, sock_plans) = run_with_plans(cfg, BackendKind::Socket, None);
+    assert_plans_equal(&sim_plans, &sock_plans);
+    assert_ledgers_agree(&sim, &sock);
+}
+
+// --- trace observability ---------------------------------------------
+
+#[cfg(unix)]
+#[test]
+fn trace_output_is_valid_and_covers_activated_workers() {
+    let trace_path = std::env::temp_dir().join(format!(
+        "dystop-socket-trace-{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&trace_path);
+    let mut cfg = base_cfg();
+    cfg.rounds = 4;
+    cfg.trace.out = trace_path.display().to_string();
+    let (_res, plans) = run_with_plans(cfg, BackendKind::Socket, None);
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let json = Json::parse(&text).unwrap();
+    let events = json
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("top-level traceEvents array");
+    assert!(!events.is_empty());
+    // every event is an object with a phase; every activated worker got
+    // at least one complete ("X") span on its own track (tid = id + 1)
+    for ev in events {
+        assert!(ev.get("ph").and_then(Json::as_str).is_some(), "{ev}");
+    }
+    let activated: std::collections::BTreeSet<usize> =
+        plans.iter().flat_map(|p| p.active.iter().copied()).collect();
+    assert!(!activated.is_empty());
+    for w in activated {
+        let tid = (w + 1) as f64;
+        assert!(
+            events.iter().any(|ev| {
+                ev.get("ph").and_then(Json::as_str) == Some("X")
+                    && ev.get("tid").and_then(Json::as_f64) == Some(tid)
+            }),
+            "activated worker {w} has no span on tid {tid}"
+        );
+    }
+    let _ = std::fs::remove_file(&trace_path);
+}
