@@ -376,6 +376,61 @@ fn sim_round_benches(
     }
 }
 
+/// Telemetry self-profiling overhead: the same N=200 round loop with a
+/// live registry (every phase tick/tock, counter and gauge on the hot
+/// path) against a freshly measured inert-handle control. The control
+/// is re-measured here — back to back with the instrumented row, same
+/// warmup and budget — rather than reusing the earlier `sim_round
+/// N=200 dystop` row, so thermal drift between bench sections can't
+/// masquerade as telemetry cost. Returns the relative p50 overhead;
+/// `main` records it in the report meta and gates it at 2% (plus a
+/// small absolute floor for scheduler/timer noise on quick CI budgets).
+fn telemetry_overhead_bench(
+    results: &mut Vec<BenchResult>,
+    warm: usize,
+    budget: f64,
+) -> (f64, f64) {
+    println!("\n== telemetry self-profiling overhead (N=200, dystop) ==");
+    let engine = |enabled: bool| {
+        let mut cfg = ExperimentConfig {
+            workers: 200,
+            rounds: 10_000,
+            train_per_worker: 64,
+            eval_every: usize::MAX,
+            target_accuracy: 2.0,
+            ..Default::default()
+        };
+        cfg.telemetry.enabled = enabled;
+        let exp =
+            Experiment::builder(cfg).build().expect("valid bench config");
+        VirtualClockEngine::new(exp)
+    };
+    let mut off = engine(false);
+    let control = bench_with(
+        "sim_round N=200 telemetry control (unrecorded)",
+        warm,
+        budget,
+        &mut || {
+            std::hint::black_box(off.step());
+        },
+    );
+    let mut on = engine(true);
+    let row = bench_with(
+        "sim_round N=200 dystop telemetry=on",
+        warm,
+        budget,
+        &mut || {
+            std::hint::black_box(on.step());
+        },
+    );
+    results.push(row.clone());
+    println!(
+        "  (telemetry=on p50 overhead vs inert control: {:+.2}%)",
+        (row.p50_ns / control.p50_ns - 1.0) * 100.0
+    );
+    (control.p50_ns, row.p50_ns)
+}
+
 /// One full deployment round over real sockets: spawn N worker threads,
 /// bring the listener up, run a single round (connect + HELLO + framed
 /// EXECUTE/DONE exchange for every activation) and tear it down. The
@@ -581,6 +636,8 @@ fn main() {
     let mut results: Vec<BenchResult> = Vec::new();
 
     sim_round_benches(&mut results, warm, budget);
+    let (tel_off_p50, tel_on_p50) =
+        telemetry_overhead_bench(&mut results, warm, budget);
     socket_backend_benches(&mut results, warm, budget.min(0.3));
     scale_benches(&mut results, warm, budget);
     native_trainer_benches(&mut results, warm, budget.min(0.3));
@@ -719,6 +776,10 @@ fn main() {
             "engine_equivalence_dense_vs_event".to_string(),
             Json::Bool(engine_eq_ok),
         ),
+        (
+            "telemetry_on_p50_overhead".to_string(),
+            Json::Num(tel_on_p50 / tel_off_p50 - 1.0),
+        ),
         ("scale_rows".to_string(), Json::Bool(scale_enabled())),
         (
             "peak_rss_gb".to_string(),
@@ -767,6 +828,16 @@ fn main() {
     assert!(
         engine_eq_ok,
         "run.engine=event diverged from run.engine=dense"
+    );
+    // the telemetry registry's overhead budget: a live registry may not
+    // cost more than 2% of round p50 (plus a 50 µs absolute floor so
+    // scheduler/timer noise on the quick CI budget can't flake the gate)
+    assert!(
+        tel_on_p50 <= tel_off_p50 * 1.02 + 50_000.0,
+        "telemetry=on round p50 {} vs inert control {} exceeds the 2% \
+         overhead budget",
+        dystop::bench::fmt_ns(tel_on_p50),
+        dystop::bench::fmt_ns(tel_off_p50),
     );
     // the scale smoke's memory ceiling: streaming sinks + the sparse
     // pull ledger must keep even the N=1M row under a bounded RSS

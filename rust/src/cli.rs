@@ -239,6 +239,10 @@ pub fn main_with_args(args: &[String]) -> Result<(), String> {
             }
             diff.gate()
         }
+        "report" => {
+            let path = flags.get("telemetry").unwrap_or("telemetry.jsonl");
+            run_report(path)
+        }
         "inspect" => {
             let dir = PathBuf::from(flags.get("artifacts").unwrap_or("artifacts"));
             let m = crate::runtime::Manifest::load(&dir)?;
@@ -264,6 +268,70 @@ pub fn main_with_args(args: &[String]) -> Result<(), String> {
         }
         other => Err(format!("unknown command {other:?}\n{}", usage())),
     }
+}
+
+/// `dystop report --telemetry FILE`: render the end-of-run summary
+/// from a telemetry JSONL snapshot stream (`telemetry.out`). The last
+/// line is the final snapshot written at run end; earlier lines are
+/// the periodic `telemetry.snapshot_every` samples.
+fn run_report(path: &str) -> Result<(), String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {path}: {e}"))?;
+    let last = text
+        .lines()
+        .rev()
+        .find(|l| !l.trim().is_empty())
+        .ok_or_else(|| format!("{path}: empty telemetry stream"))?;
+    let snap = Json::parse(last).map_err(|e| format!("{path}: {e}"))?;
+    if snap.get("kind").and_then(|k| k.as_str()) != Some("telemetry") {
+        return Err(format!(
+            "{path}: last line is not a telemetry snapshot \
+             (expected \"kind\":\"telemetry\")"
+        ));
+    }
+    let round = snap.get("round").and_then(|v| v.as_usize()).unwrap_or(0);
+    let wall_s = snap.get("wall_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    println!("telemetry report: {path}");
+    println!("  round {round}, wall clock {wall_s:.3}s");
+    let num = |v: &Json| v.as_f64().unwrap_or(0.0);
+    if let Some(counters) = snap.get("counters").and_then(|c| c.as_obj()) {
+        println!("counters:");
+        for (k, v) in counters {
+            let n = num(v);
+            if n != 0.0 {
+                println!("  {k:<28} {n:>14.0}");
+            }
+        }
+    }
+    if let Some(gauges) = snap.get("gauges").and_then(|g| g.as_obj()) {
+        println!("gauges:");
+        for (k, v) in gauges {
+            println!("  {k:<28} {:>14.3}", num(v));
+        }
+    }
+    if let Some(phases) = snap.get("phases").and_then(|p| p.as_obj()) {
+        println!(
+            "phases (wall ns):  {:>10} {:>12} {:>12} {:>12} {:>12}",
+            "count", "p50", "p90", "p99", "max"
+        );
+        for (name, ph) in phases {
+            let f = |key: &str| {
+                ph.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+            };
+            if f("count") == 0.0 {
+                continue;
+            }
+            println!(
+                "  {name:<16} {:>10.0} {:>12.0} {:>12.0} {:>12.0} {:>12.0}",
+                f("count"),
+                f("p50"),
+                f("p90"),
+                f("p99"),
+                f("max")
+            );
+        }
+    }
+    Ok(())
 }
 
 /// `dystop config [--list | KEY]`: the knob registry as a reference.
@@ -306,7 +374,7 @@ fn knob_line(k: &crate::config::registry::KnobDef) -> String {
 }
 
 fn usage() -> String {
-    "usage: dystop <train|figures|testbed|sweep|config|bench-diff|inspect|help> [flags]\n\
+    "usage: dystop <train|figures|testbed|sweep|config|report|bench-diff|inspect|help> [flags]\n\
      \n\
      train   --config FILE --set KEY=VALUE ... --out results/\n\
      \x20       runs the configured experiment; every KEY is validated against\n\
@@ -319,11 +387,17 @@ fn usage() -> String {
      \x20       --set socket.time_scale=1000  socket-backend wall-clock scale\n\
      \x20       --set trace.out=trace.json  write a Perfetto-loadable Trace\n\
      \x20       Event JSON timeline (per-worker tracks; works on any backend)\n\
+     \x20       --set telemetry.enabled=true  wall-clock self-profiling registry\n\
+     \x20       --set telemetry.addr=127.0.0.1:9184  live Prometheus /metrics\n\
+     \x20       --set telemetry.out=telemetry.jsonl --set telemetry.snapshot_every=N\n\
+     \x20       periodic JSONL snapshots + a final one at run end (any backend)\n\
      figures --fig <3|4..18|20..25|26|churn|27|codec|28|workload|29|adversary|30|lossy|31|scale|all> --out results/ [--workers N --rounds R]\n\
      testbed --set sim.workers=15 --out results/\n\
      sweep   --key dystop.tau_bound --values 2,5,8 --out results/\n\
      config  [--list | KEY]  print the full knob table (type, default, doc)\n\
      \x20       or one knob's entry — the authoritative list of --set keys\n\
+     report  --telemetry telemetry.jsonl  end-of-run summary (counters,\n\
+     \x20       gauges, per-phase wall-clock p50/p90/p99) from the snapshots\n\
      bench-diff --baseline BENCH_baseline.json --fresh BENCH_sim.json --tolerance 0.15\n\
      inspect --artifacts artifacts/"
         .to_string()
@@ -359,6 +433,35 @@ mod tests {
     fn unknown_command_errors() {
         assert!(main_with_args(&s(&["bogus"])).is_err());
         assert!(main_with_args(&[]).is_err());
+    }
+
+    #[test]
+    fn report_renders_the_last_snapshot_and_errors_cleanly() {
+        let path = std::env::temp_dir().join(format!(
+            "dystop-cli-report-{}.jsonl",
+            std::process::id()
+        ));
+        std::fs::write(
+            &path,
+            concat!(
+                "{\"kind\":\"telemetry\",\"round\":1,\"wall_s\":0.1,\
+                 \"counters\":{\"rounds\":1},\"gauges\":{},\"phases\":{}}\n",
+                "{\"kind\":\"telemetry\",\"round\":5,\"wall_s\":0.5,\
+                 \"counters\":{\"rounds\":5,\"activations\":20},\
+                 \"gauges\":{\"population\":6},\
+                 \"phases\":{\"round\":{\"count\":5,\"sum\":100,\
+                 \"p50\":20,\"p90\":30,\"p99\":30,\"max\":31}}}\n"
+            ),
+        )
+        .unwrap();
+        let p = path.to_str().unwrap();
+        main_with_args(&s(&["report", "--telemetry", p])).unwrap();
+        let _ = std::fs::remove_file(&path);
+        // missing file and non-telemetry content are clean errors
+        assert!(main_with_args(&s(&["report", "--telemetry", p])).is_err());
+        std::fs::write(&path, "{\"kind\":\"round\"}\n").unwrap();
+        assert!(main_with_args(&s(&["report", "--telemetry", p])).is_err());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

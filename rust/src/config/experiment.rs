@@ -1092,6 +1092,42 @@ pub struct TraceConfig {
     pub out: String,
 }
 
+/// Live telemetry knobs (`telemetry.*` keys). All three exposures ride
+/// one registry: any of `enabled`, `addr`, or `out` being set turns the
+/// registry on; the all-default config keeps the handle fully inert.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct TelemetryConfig {
+    /// Force the registry on without any exposure configured
+    /// (`telemetry.enabled`) — counters readable in-process only.
+    pub enabled: bool,
+    /// `/metrics` HTTP bind address (`telemetry.addr`), `host:port`
+    /// (port 0 for ephemeral). Empty (the default) starts no server.
+    pub addr: String,
+    /// JSONL snapshot path (`telemetry.out`). Empty disables snapshots
+    /// except via the end-of-run line when `addr`/`enabled` are set and
+    /// `out` is not — no `out`, no file.
+    pub out: String,
+    /// Snapshot cadence in rounds (`telemetry.snapshot_every`); 0 means
+    /// only the unconditional end-of-run snapshot.
+    pub snapshot_every: usize,
+}
+
+impl TelemetryConfig {
+    /// Whether any knob asks for a live registry.
+    pub fn active(&self) -> bool {
+        self.enabled || !self.addr.is_empty() || !self.out.is_empty()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.snapshot_every > 0 && self.out.is_empty() {
+            return Err(
+                "telemetry.snapshot_every requires telemetry.out".into()
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Full experiment description.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -1191,6 +1227,11 @@ pub struct ExperimentConfig {
     /// Perfetto trace observability (`trace.*` knobs). The default
     /// (empty `trace.out`) attaches no trace sink.
     pub trace: TraceConfig,
+
+    /// Live telemetry (`telemetry.*` knobs). The default (everything
+    /// off) threads an inert handle — provably bit-identical to runs
+    /// without telemetry compiled in at all.
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -1233,6 +1274,7 @@ impl Default for ExperimentConfig {
             testbed: TestbedConfig::default(),
             socket: SocketConfig::default(),
             trace: TraceConfig::default(),
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -1382,6 +1424,18 @@ impl ExperimentConfig {
         if let Some(s) = cfg.get("trace.out") {
             e.trace.out = s.to_string();
         }
+        opt!(e.telemetry.enabled, get_bool, "telemetry.enabled");
+        if let Some(s) = cfg.get("telemetry.addr") {
+            e.telemetry.addr = s.to_string();
+        }
+        if let Some(s) = cfg.get("telemetry.out") {
+            e.telemetry.out = s.to_string();
+        }
+        opt!(
+            e.telemetry.snapshot_every,
+            get_usize,
+            "telemetry.snapshot_every"
+        );
         e.validate()?;
         Ok(e)
     }
@@ -1416,6 +1470,7 @@ impl ExperimentConfig {
         self.faults.validate()?;
         self.testbed.validate()?;
         self.socket.validate()?;
+        self.telemetry.validate()?;
         // file corpora define their own feature dim at build time — the
         // builder re-runs model_fits against the adopted shape; checking
         // the placeholder dim here would spuriously reject valid configs

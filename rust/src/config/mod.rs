@@ -23,8 +23,8 @@ pub use experiment::{
     DatasetKind, EngineKind, ExperimentConfig, FaultConfig, FaultProfile,
     MetricsConfig, ModelArch, ModelKind, NetworkConfig, ScenarioConfig,
     ScenarioPreset, SchedulerKind, SinkKind, SocketConfig,
-    SocketTransportKind, TestbedConfig, TraceConfig, TrainerKind,
-    TransportConfig, WorkloadConfig,
+    SocketTransportKind, TelemetryConfig, TestbedConfig, TraceConfig,
+    TrainerKind, TransportConfig, WorkloadConfig,
 };
 
 use std::collections::BTreeMap;

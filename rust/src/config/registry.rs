@@ -125,6 +125,11 @@ static KNOBS: &[KnobDef] = &[
     KnobDef { key: "socket.time_scale", ty: "float", default: "1000.0", doc: "socket backend: virtual-second to wall-millisecond scale" },
     // --- trace ---
     KnobDef { key: "trace.out", ty: "string", default: "", doc: "Perfetto Trace Event JSON output path (empty = no trace)" },
+    // --- telemetry ---
+    KnobDef { key: "telemetry.enabled", ty: "bool", default: "false", doc: "force the wall-clock metric registry on (addr/out also enable it)" },
+    KnobDef { key: "telemetry.addr", ty: "string", default: "", doc: "live /metrics HTTP bind address, host:port (empty = no server; port 0 = ephemeral)" },
+    KnobDef { key: "telemetry.out", ty: "string", default: "", doc: "telemetry JSONL snapshot path (empty = no snapshot file)" },
+    KnobDef { key: "telemetry.snapshot_every", ty: "int", default: "0", doc: "snapshot cadence in rounds (0 = end-of-run snapshot only; requires telemetry.out)" },
 ];
 
 /// Every registered knob, in display order (grouped by section).

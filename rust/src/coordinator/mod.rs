@@ -342,25 +342,42 @@ pub trait Scheduler {
 
     /// Plan round `view.round`.
     fn plan(&mut self, view: &SchedView<'_>, rng: &mut Pcg) -> RoundPlan;
+
+    /// Accept a wall-clock telemetry handle for phase self-profiling.
+    /// Default: ignore it — baselines stay untouched; only schedulers
+    /// with internal phases worth attributing implement this.
+    fn attach_telemetry(&mut self, tel: crate::telemetry::Telemetry) {
+        let _ = tel;
+    }
 }
 
 /// DySTop: WAA for activation + PTCA for topology.
 pub struct DySTopScheduler {
     ptca: Ptca,
+    tel: crate::telemetry::Telemetry,
 }
 
 impl DySTopScheduler {
     pub fn new() -> Self {
-        DySTopScheduler { ptca: Ptca::default() }
+        DySTopScheduler {
+            ptca: Ptca::default(),
+            tel: crate::telemetry::Telemetry::disabled(),
+        }
     }
 
     /// Ablations for Fig. 3.
     pub fn phase1_only() -> Self {
-        DySTopScheduler { ptca: Ptca::phase1_only() }
+        DySTopScheduler {
+            ptca: Ptca::phase1_only(),
+            tel: crate::telemetry::Telemetry::disabled(),
+        }
     }
 
     pub fn phase2_only() -> Self {
-        DySTopScheduler { ptca: Ptca::phase2_only() }
+        DySTopScheduler {
+            ptca: Ptca::phase2_only(),
+            tel: crate::telemetry::Telemetry::disabled(),
+        }
     }
 }
 
@@ -376,9 +393,17 @@ impl Scheduler for DySTopScheduler {
     }
 
     fn plan(&mut self, view: &SchedView<'_>, _rng: &mut Pcg) -> RoundPlan {
+        let t = self.tel.tick();
         let active = waa_select(view);
+        self.tel.tock(crate::telemetry::Phase::Waa, t);
+        let t = self.tel.tick();
         let pulls_from = self.ptca.construct(view, &active);
+        self.tel.tock(crate::telemetry::Phase::Ptca, t);
         RoundPlan { active, pulls_from, pushes: Vec::new() }
+    }
+
+    fn attach_telemetry(&mut self, tel: crate::telemetry::Telemetry) {
+        self.tel = tel;
     }
 }
 

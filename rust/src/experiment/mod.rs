@@ -171,6 +171,12 @@ pub struct Experiment {
     /// fault model and ack/retry protocol (inactive — and branch-free
     /// on the hot path — under the default `clean` profile).
     pub delivery: Delivery,
+    /// The wall-clock telemetry registry (`telemetry.*` knobs): every
+    /// backend reports phase timings and event counts through it.
+    /// Strictly an output — no backend ever reads it back — so the
+    /// default inert handle and a live registry produce bit-identical
+    /// ledgers (pinned by `tests/telemetry.rs`).
+    pub telemetry: crate::telemetry::Telemetry,
     pub(crate) trainer: Box<dyn Trainer>,
     pub(crate) scheduler: Box<dyn Scheduler>,
     pub(crate) rng: Pcg,
@@ -336,7 +342,18 @@ impl ExperimentBuilder {
             })
             .collect();
 
-        let scheduler = make_scheduler(cfg.scheduler);
+        // wall-clock telemetry: a live registry when any telemetry.*
+        // knob asks for one, the inert no-op handle otherwise. Strictly
+        // write-only from the engines' perspective, so this choice can
+        // never move a bit in the run ledger.
+        let telemetry = if cfg.telemetry.active() {
+            crate::telemetry::Telemetry::enabled()
+        } else {
+            crate::telemetry::Telemetry::disabled()
+        };
+
+        let mut scheduler = make_scheduler(cfg.scheduler);
+        scheduler.attach_telemetry(telemetry.clone());
         let model_bits = if cfg.network.payload_bits > 0.0 {
             cfg.network.payload_bits
         } else {
@@ -447,6 +464,42 @@ impl ExperimentBuilder {
             observers.push(Box::new(sink));
         }
 
+        // telemetry exposures: run-info labels for the exposition, the
+        // /metrics server (telemetry.addr), and the JSONL snapshot sink
+        // (telemetry.out) — all three ride the one registry above
+        if telemetry.is_enabled() {
+            telemetry.set_info("scheduler", scheduler.name());
+            telemetry.set_info(
+                "aggregator",
+                &format!("{:?}", cfg.adversary.aggregator).to_lowercase(),
+            );
+            telemetry
+                .set_info("backend", &format!("{:?}", cfg.backend).to_lowercase());
+            telemetry.set_gauge(
+                crate::telemetry::Gauge::Population,
+                cfg.workers as f64,
+            );
+            if !cfg.telemetry.addr.is_empty() {
+                telemetry.serve(&cfg.telemetry.addr).map_err(|e| {
+                    ExperimentError::InvalidConfig(format!("telemetry.addr: {e}"))
+                })?;
+            }
+            if !cfg.telemetry.out.is_empty() {
+                let sink = crate::telemetry::TelemetrySink::create(
+                    telemetry.clone(),
+                    std::path::Path::new(&cfg.telemetry.out),
+                    cfg.telemetry.snapshot_every,
+                )
+                .map_err(|e| {
+                    ExperimentError::InvalidConfig(format!(
+                        "telemetry.out {:?}: {e}",
+                        cfg.telemetry.out
+                    ))
+                })?;
+                observers.push(Box::new(sink));
+            }
+        }
+
         Ok(Experiment {
             cfg,
             net,
@@ -458,6 +511,7 @@ impl ExperimentBuilder {
             transport,
             adversary,
             delivery,
+            telemetry,
             trainer,
             scheduler,
             rng,

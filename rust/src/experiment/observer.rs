@@ -40,6 +40,15 @@ pub trait RoundObserver {
     fn on_eval(&mut self, rec: &EvalRecord) {
         let _ = rec;
     }
+
+    /// The run is over: last chance to flush buffers and surface any
+    /// I/O error accumulated while streaming. Backends call this once,
+    /// after the final round/eval and before assembling the
+    /// [`RunResult`]; an `Err` fails the run rather than silently
+    /// truncating its artifacts.
+    fn on_run_end(&mut self) -> Result<(), String> {
+        Ok(())
+    }
 }
 
 /// The built-in first observer: accumulates the [`RunResult`] every
@@ -146,6 +155,22 @@ impl ObserverChain {
         self.recorder.on_eval(rec);
         for o in &mut self.others {
             o.on_eval(rec);
+        }
+    }
+
+    /// Fire [`RoundObserver::on_run_end`] on every observer. Every
+    /// observer runs even if an earlier one fails (flushes must not be
+    /// skipped); the first error is returned.
+    pub fn run_end(&mut self) -> Result<(), String> {
+        let mut first_err = self.recorder.on_run_end().err();
+        for o in &mut self.others {
+            if let Err(e) = o.on_run_end() {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
         }
     }
 

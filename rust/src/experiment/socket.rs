@@ -503,6 +503,9 @@ struct ActMeta {
     retry_s: f64,
     tally: DeliveryTally,
     dead: Vec<usize>,
+    /// Wall-clock mark taken when the EXECUTE frame went out; the DONE
+    /// receipt closes it as one `wire_rtt_ns` sample.
+    sent: crate::telemetry::Tick,
 }
 
 fn run_socket(
@@ -524,6 +527,7 @@ fn run_socket(
         mut scheduler,
         mut rng,
         observers,
+        telemetry: tel,
     } = exp;
     if cfg.trainer != TrainerKind::Native {
         return Err(ExperimentError::Unsupported(
@@ -584,6 +588,7 @@ fn run_socket(
 
     let result = 'run: {
         for round in 1..=cfg.rounds {
+            let t_round = tel.tick();
             // --- scenario events (identical hook to the simulator) ---
             crate::scenario::apply_round_events(
                 &scenario,
@@ -627,6 +632,7 @@ fn run_socket(
             net.advance_round(cfg.seed, round as u64);
 
             // --- scheduler view (dense rebuild, simulator order) ---
+            let t_view = tel.tick();
             crate::scenario::rebuild_dense_maps(&net, &mut ids, &mut gdx);
             let p = ids.len();
             crate::scenario::build_dense_candidates(
@@ -660,6 +666,8 @@ fn run_socket(
                 ids.iter().map(|&i| workers[i].data_size()).collect();
             let budgets: Vec<f64> =
                 ids.iter().map(|&i| net.budgets[i]).collect();
+            tel.tock(crate::telemetry::Phase::ViewRebuild, t_view);
+            tel.inc(crate::telemetry::Counter::SchedViewRebuilds);
             let mut plan = {
                 let view = SchedView {
                     round,
@@ -690,6 +698,8 @@ fn run_socket(
                     &plan.pulls_from,
                     &mut pull_srcs,
                 );
+                let t = tel.tick();
+                let mut encoded = 0u64;
                 for &j in &pull_srcs {
                     let payload: &[f32] = if adv_active {
                         adversary.transmit(j, &workers[j].params)
@@ -698,8 +708,15 @@ fn run_socket(
                     };
                     if !dense {
                         transport.encode(j, payload);
+                        encoded += 1;
                     }
                 }
+                tel.tock(crate::telemetry::Phase::CodecEncode, t);
+                tel.add(crate::telemetry::Counter::CodecEncodes, encoded);
+                tel.add(
+                    crate::telemetry::Counter::CodecBytes,
+                    (encoded as f64 * transport.message_bytes()) as u64,
+                );
             }
 
             // --- dispatch EXECUTE (plan order) ---
@@ -800,12 +817,18 @@ fn run_socket(
                     put_u64(&mut msg, workers[*from].data_size() as u64);
                     put_f32s(&mut msg, m);
                 }
+                let msg_bytes = msg.len() as u64;
                 if let Err(e) = send_msg(&mut conns[i], &mut tx_seq[i], msg)
                 {
                     break 'run Err(backend_err(format!(
                         "worker {i} hung up: {e}"
                     )));
                 }
+                tel.inc(crate::telemetry::Counter::WireFramesSent);
+                tel.add(
+                    crate::telemetry::Counter::WireBytesSent,
+                    msg_bytes,
+                );
                 metas.push(ActMeta {
                     duration_s,
                     compute_s,
@@ -813,6 +836,7 @@ fn run_socket(
                     retry_s,
                     tally: act_tally,
                     dead,
+                    sent: tel.tick(),
                 });
             }
 
@@ -833,6 +857,12 @@ fn run_socket(
                     Ok(pl) => pl,
                     Err(e) => break 'run Err(e),
                 };
+                tel.tock(crate::telemetry::Phase::WireRtt, metas[k].sent);
+                tel.inc(crate::telemetry::Counter::WireFramesRecv);
+                tel.add(
+                    crate::telemetry::Counter::WireBytesRecv,
+                    payload.len() as u64,
+                );
                 let mut rd = Rd::new(&payload);
                 let parsed = (|| {
                     if rd.u8()? != MSG_DONE {
@@ -875,6 +905,11 @@ fn run_socket(
                 workers[i].params = params;
                 workers[i].last_loss = loss;
                 losses.push(loss);
+                tel.inc(crate::telemetry::Counter::Activations);
+                tel.add(
+                    crate::telemetry::Counter::TrainSamples,
+                    (cfg.local_steps * cfg.batch) as u64,
+                );
                 for &j in &plan.pulls_from[k] {
                     pulls.record(i, j);
                 }
@@ -981,6 +1016,32 @@ fn run_socket(
                 dropped_msgs: tally.dropped_msgs(),
                 corrupt_detected: tally.corrupt,
             });
+            if tel.is_enabled() {
+                use crate::telemetry::{Counter, Gauge, Phase};
+                tel.add(Counter::DeliveryMsgs, transfers as u64);
+                tel.add(
+                    Counter::DeliveryRetries,
+                    tally.retransmissions as u64,
+                );
+                tel.add(
+                    Counter::DeliveryDeadLetters,
+                    tally.dropped_msgs() as u64,
+                );
+                tel.add(Counter::DeliveryCorrupt, tally.corrupt as u64);
+                tel.inc(Counter::Rounds);
+                let secs = tel.elapsed_s(t_round);
+                if secs > 0.0 {
+                    let samples =
+                        plan.active.len() * cfg.local_steps * cfg.batch;
+                    tel.set_gauge(
+                        Gauge::TrainThroughput,
+                        samples as f64 / secs,
+                    );
+                }
+                tel.set_gauge(Gauge::ClockVirtualS, clock_s);
+                tel.set_gauge(Gauge::Population, p as f64);
+                tel.tock(Phase::Round, t_round);
+            }
             tally.clear();
 
             // --- evaluation (coordinator-side, simulator cadence) ---
@@ -1027,7 +1088,9 @@ fn run_socket(
 
     // --- tear the deployment down (also on mid-run errors) ---
     for (i, s) in conns.iter_mut().enumerate() {
-        let _ = send_msg(s, &mut tx_seq[i], vec![MSG_SHUTDOWN]);
+        if send_msg(s, &mut tx_seq[i], vec![MSG_SHUTDOWN]).is_ok() {
+            tel.inc(crate::telemetry::Counter::WireFramesSent);
+        }
     }
     drop(conns);
     for h in handles {
@@ -1037,5 +1100,6 @@ fn run_socket(
         let _ = std::fs::remove_file(p);
     }
     result?;
+    chain.run_end().map_err(ExperimentError::Backend)?;
     Ok(chain.into_result())
 }

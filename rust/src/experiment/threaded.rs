@@ -198,6 +198,7 @@ fn run_threaded(
         mut scheduler,
         mut rng,
         observers,
+        telemetry: tel,
     } = exp;
     // every pull crosses the wire encoded: channel costs (the emulated
     // delays) consume the codec's message size, and the byte ledger
@@ -253,8 +254,9 @@ fn run_threaded(
         let scale = opts.time_scale;
         let wcfg = cfg.clone();
         let shard = w.shard;
+        let wtel = tel.clone();
         handles.push(thread::spawn(move || {
-            worker_loop(i, shard, my_h, scale, &wcfg, pubs, rx, done)
+            worker_loop(i, shard, my_h, scale, &wcfg, pubs, rx, done, wtel)
         }));
     }
     drop(done_tx);
@@ -285,6 +287,7 @@ fn run_threaded(
     let mut cand_buf: Vec<Vec<usize>> = Vec::new();
 
     for round in 1..=cfg.rounds {
+        let t_round = tel.tick();
         // --- scenario events (round boundary, coordinator-side) ---
         // the shared skeleton owns the guards and membership flips; the
         // hook below is this backend's bookkeeping
@@ -340,6 +343,7 @@ fn run_threaded(
 
         // dense view over present workers (same compaction as the
         // virtual-clock engine — shared helpers in crate::scenario)
+        let t_view = tel.tick();
         crate::scenario::rebuild_dense_maps(&net, &mut ids, &mut gdx);
         let p = ids.len();
         crate::scenario::build_dense_candidates(
@@ -370,6 +374,8 @@ fn run_threaded(
             .map(|&i| published[i].lock().unwrap().data_size)
             .collect();
         let budgets: Vec<f64> = ids.iter().map(|&i| net.budgets[i]).collect();
+        tel.tock(crate::telemetry::Phase::ViewRebuild, t_view);
+        tel.inc(crate::telemetry::Counter::SchedViewRebuilds);
         let mut plan = {
             let view = SchedView {
                 round,
@@ -406,6 +412,8 @@ fn run_threaded(
                 &plan.pulls_from,
                 &mut pull_srcs,
             );
+            let t = tel.tick();
+            let mut encoded = 0u64;
             for &j in &pull_srcs {
                 let published_j = published[j].lock().unwrap();
                 let payload: &[f32] = if adv_active {
@@ -415,8 +423,15 @@ fn run_threaded(
                 };
                 if !transport.is_dense() {
                     transport.encode(j, payload);
+                    encoded += 1;
                 }
             }
+            tel.tock(crate::telemetry::Phase::CodecEncode, t);
+            tel.add(crate::telemetry::Counter::CodecEncodes, encoded);
+            tel.add(
+                crate::telemetry::Counter::CodecBytes,
+                (encoded as f64 * transport.message_bytes()) as u64,
+            );
         }
 
         // dispatch EXECUTE to the active workers with realised delays,
@@ -500,7 +515,8 @@ fn run_threaded(
                     None
                 }
             } else {
-                Some(
+                let t = tel.tick();
+                let dec = Some(
                     neighbors
                         .iter()
                         .map(|&j| {
@@ -510,7 +526,13 @@ fn run_threaded(
                                 .to_vec()
                         })
                         .collect(),
-                )
+                );
+                tel.tock(crate::telemetry::Phase::CodecDecode, t);
+                tel.add(
+                    crate::telemetry::Counter::CodecDecodes,
+                    neighbors.len() as u64,
+                );
+                dec
             };
             exec_txs[i]
                 .send(Execute::Round {
@@ -669,6 +691,29 @@ fn run_threaded(
             dropped_msgs: tally.dropped_msgs(),
             corrupt_detected: tally.corrupt,
         });
+        if tel.is_enabled() {
+            use crate::telemetry::{Counter, Gauge, Phase};
+            tel.add(Counter::DeliveryMsgs, transfers as u64);
+            tel.add(Counter::DeliveryRetries, tally.retransmissions as u64);
+            tel.add(
+                Counter::DeliveryDeadLetters,
+                tally.dropped_msgs() as u64,
+            );
+            tel.add(Counter::DeliveryCorrupt, tally.corrupt as u64);
+            tel.inc(Counter::Rounds);
+            let secs = tel.elapsed_s(t_round);
+            if secs > 0.0 {
+                let samples =
+                    plan.active.len() * cfg.local_steps * cfg.batch;
+                tel.set_gauge(
+                    Gauge::TrainThroughput,
+                    samples as f64 / secs,
+                );
+            }
+            tel.set_gauge(Gauge::ClockVirtualS, vclock_s);
+            tel.set_gauge(Gauge::Population, p as f64);
+            tel.tock(Phase::Round, t_round);
+        }
         tally.clear();
 
         if round % cfg.eval_every.max(1) == 0 || round == cfg.rounds {
@@ -698,6 +743,7 @@ fn run_threaded(
     for h in handles {
         let _ = h.join();
     }
+    chain.run_end().map_err(ExperimentError::Backend)?;
     Ok(chain.into_result())
 }
 
@@ -712,6 +758,7 @@ fn worker_loop(
     published: Vec<Arc<Mutex<Published>>>,
     rx: mpsc::Receiver<Execute>,
     done: mpsc::Sender<Done>,
+    tel: crate::telemetry::Telemetry,
 ) {
     // one trainer per worker thread, driving the configured
     // `workload.model` (the builder already adopted file-corpus dims)
@@ -785,16 +832,19 @@ fn worker_loop(
                 let refs: Vec<&[f32]> =
                     models.iter().map(|m| m.as_slice()).collect();
                 let weights = data_size_weights(&sizes);
+                let t = tel.tick();
                 aggregator.aggregate_into(
                     &mut trainer,
                     &refs,
                     &weights,
                     &mut agg,
                 );
+                tel.tock(crate::telemetry::Phase::Aggregate, t);
                 thread::sleep(Duration::from_millis(
                     (h_train_s * time_scale) as u64,
                 ));
                 // real local training (Eq. 5)
+                let t = tel.tick();
                 let (new_params, loss) = trainer.train(
                     &agg,
                     &shard,
@@ -802,6 +852,12 @@ fn worker_loop(
                     cfg.batch,
                     cfg.lr,
                     &mut rng,
+                );
+                tel.tock(crate::telemetry::Phase::Train, t);
+                tel.inc(crate::telemetry::Counter::Activations);
+                tel.add(
+                    crate::telemetry::Counter::TrainSamples,
+                    (cfg.local_steps * cfg.batch) as u64,
                 );
                 published[id].lock().unwrap().params = new_params;
                 let _ = done.send(Done { id, loss });

@@ -151,7 +151,7 @@ impl Backend for VirtualClockBackend {
     }
 
     fn run(&mut self, exp: Experiment) -> Result<RunResult, ExperimentError> {
-        Ok(VirtualClockEngine::new(exp).run(self.early_stop))
+        VirtualClockEngine::new(exp).run(self.early_stop)
     }
 }
 
@@ -212,6 +212,9 @@ struct RoundCtx<'a> {
     /// transfer time consumes. Equals `model_bits` under `dense`.
     wire_bits: f64,
     round: usize,
+    /// Wall-clock telemetry (write-only; never read back into the
+    /// simulation, so virtual-time results stay bit-identical).
+    tel: &'a crate::telemetry::Telemetry,
 }
 
 /// Output of one activation task (`k` indexes `plan.active`).
@@ -316,6 +319,7 @@ fn run_activation(
     // codec the attacked payload was already encoded, so the view
     // passes the reconstruction through)
     let dense = ctx.transport.is_dense();
+    let t = ctx.tel.tick();
     let mut models: Vec<&[f32]> = Vec::with_capacity(scr.srcs.len());
     models.push(ctx.workers[i].params.as_slice());
     models.extend(scr.srcs[1..].iter().map(|&j| {
@@ -325,6 +329,12 @@ fn run_activation(
             dense,
         )
     }));
+    ctx.tel
+        .tock(crate::telemetry::Phase::CodecDecode, t);
+    ctx.tel.add(
+        crate::telemetry::Counter::CodecDecodes,
+        (scr.srcs.len() - 1) as u64,
+    );
     scr.sizes.clear();
     scr.sizes
         .extend(scr.srcs.iter().map(|&j| ctx.workers[j].data_size()));
@@ -337,10 +347,13 @@ fn run_activation(
         }
     }
     data_size_weights_into(&scr.sizes, &mut scr.weights);
+    let t = ctx.tel.tick();
     scr.aggregator
         .aggregate_into(trainer, &models, &scr.weights, &mut scr.agg);
+    ctx.tel.tock(crate::telemetry::Phase::Aggregate, t);
 
     // --- local training (Eq. 5) ---
+    let t = ctx.tel.tick();
     let (params, loss) = trainer.train(
         &scr.agg,
         &ctx.workers[i].shard,
@@ -348,6 +361,12 @@ fn run_activation(
         ctx.cfg.batch,
         ctx.cfg.lr,
         &mut rng,
+    );
+    ctx.tel.tock(crate::telemetry::Phase::Train, t);
+    ctx.tel.inc(crate::telemetry::Counter::Activations);
+    ctx.tel.add(
+        crate::telemetry::Counter::TrainSamples,
+        (ctx.cfg.local_steps * ctx.cfg.batch) as u64,
     );
     ActOut { k, duration_s, params, loss, tally, dead, compute_s, transfer_s, retry_s }
 }
@@ -506,6 +525,11 @@ pub struct VirtualClockEngine {
     /// the wire size are static, so cached rounds recompute `h_est` as
     /// one addition per present worker.
     worst_tx: Vec<f64>,
+    /// Wall-clock self-profiling registry. Strictly write-only from the
+    /// engine: nothing the simulation computes ever reads it, so a
+    /// telemetry-on run is bit-identical to telemetry-off (pinned by
+    /// the inertness witnesses in `tests/telemetry.rs`).
+    tel: crate::telemetry::Telemetry,
 }
 
 impl VirtualClockEngine {
@@ -598,6 +622,7 @@ impl VirtualClockEngine {
             view_data_sizes: Vec::new(),
             view_budgets: Vec::new(),
             worst_tx: Vec::new(),
+            tel: exp.telemetry,
         }
     }
 
@@ -764,6 +789,7 @@ impl VirtualClockEngine {
 
     /// Run one round of Alg. 1; returns the realised plan (global ids).
     pub fn step(&mut self) -> RoundPlan {
+        let t_round = self.tel.tick();
         self.round += 1;
         self.apply_scenario_events();
         self.net
@@ -780,7 +806,15 @@ impl VirtualClockEngine {
             && !self.net.link_drops_active()
             && self.cfg.network.budget_jitter == 0.0;
         if !cached_ok {
+            let t = self.tel.tick();
             self.rebuild_view();
+            self.tel
+                .tock(crate::telemetry::Phase::ViewRebuild, t);
+            self.tel
+                .inc(crate::telemetry::Counter::SchedViewRebuilds);
+        } else {
+            self.tel
+                .inc(crate::telemetry::Counter::SchedViewPatches);
         }
         let p = self.ids.len();
 
@@ -811,6 +845,24 @@ impl VirtualClockEngine {
         self.observers.plan(self.round, &plan);
 
         self.execute(&plan);
+        if self.tel.is_enabled() {
+            use crate::telemetry::{Counter, Gauge, Phase};
+            self.tel.inc(Counter::Rounds);
+            let secs = self.tel.elapsed_s(t_round);
+            if secs > 0.0 {
+                let samples = plan.active.len()
+                    * self.cfg.local_steps
+                    * self.cfg.batch;
+                self.tel.set_gauge(
+                    Gauge::TrainThroughput,
+                    samples as f64 / secs,
+                );
+            }
+            self.tel.set_gauge(Gauge::ClockVirtualS, self.clock_s);
+            self.tel
+                .set_gauge(Gauge::Population, self.ids.len() as f64);
+            self.tel.tock(Phase::Round, t_round);
+        }
         plan
     }
 
@@ -831,6 +883,7 @@ impl VirtualClockEngine {
             delivery: &self.delivery,
             wire_bits: self.wire_bits,
             round: self.round,
+            tel: &self.tel,
         };
         let mut outs: Vec<ActOut> = Vec::with_capacity(n_act);
         if self.slots.len() > 1 && n_act > 1 {
@@ -900,6 +953,8 @@ impl VirtualClockEngine {
                 &plan.pulls_from,
                 &mut self.pull_srcs,
             );
+            let t = self.tel.tick();
+            let mut encoded = 0u64;
             let transport = &mut self.transport;
             let adversary = &mut self.adversary;
             let workers = &self.workers;
@@ -911,8 +966,17 @@ impl VirtualClockEngine {
                 };
                 if !transport.is_dense() {
                     transport.encode(j, payload);
+                    encoded += 1;
                 }
             }
+            self.tel
+                .tock(crate::telemetry::Phase::CodecEncode, t);
+            self.tel
+                .add(crate::telemetry::Counter::CodecEncodes, encoded);
+            self.tel.add(
+                crate::telemetry::Counter::CodecBytes,
+                (encoded as f64 * self.transport.message_bytes()) as u64,
+            );
         }
 
         let outs = self.run_activations(plan);
@@ -923,6 +987,7 @@ impl VirtualClockEngine {
         // popped; for finite non-negative durations that is the same
         // bits as the dense fold-max.
         let mut h_round = if self.event_mode {
+            let mut depth = 0u64;
             for o in &outs {
                 let i = plan.active[o.k];
                 for &j in &o.dead {
@@ -932,11 +997,26 @@ impl VirtualClockEngine {
                         o.duration_s,
                         SimEvent::RetryTimeout { from: j, to: i },
                     );
+                    depth += 1;
                 }
                 self.equeue
                     .push(o.duration_s, SimEvent::ActivationDone { worker: i });
+                depth += 1;
             }
-            self.equeue.drain_last_time().unwrap_or(0.0)
+            let t = self.tel.tick();
+            let h = self.equeue.drain_last_time().unwrap_or(0.0);
+            if self.tel.is_enabled() {
+                use crate::telemetry::{Counter, Gauge, Phase};
+                self.tel.tock(Phase::EventDrain, t);
+                self.tel.set_gauge(Gauge::EventQueueDepth, depth as f64);
+                self.tel.add(Counter::EventsDrained, depth);
+                let secs = self.tel.elapsed_s(t);
+                if secs > 0.0 {
+                    self.tel
+                        .set_gauge(Gauge::EventDrainRate, depth as f64 / secs);
+                }
+            }
+            h
         } else {
             outs.iter().fold(0.0f64, |a, o| a.max(o.duration_s))
         };
@@ -1082,6 +1162,7 @@ impl VirtualClockEngine {
             // cached view is patched in the same pass: next round's
             // h_est is the identical `residual + worst` addition the
             // dense rebuild would perform (Eq. 8).
+            let t = self.tel.tick();
             for k in 0..pop {
                 let i = self.ids[k];
                 let w = &mut self.workers[i];
@@ -1102,6 +1183,8 @@ impl VirtualClockEngine {
                 self.view_h_cmp[k] = r;
                 self.view_h_est[k] = r + self.worst_tx[k];
             }
+            self.tel
+                .tock(crate::telemetry::Phase::ViewPatch, t);
         } else {
             for i in 0..n {
                 let w = &mut self.workers[i];
@@ -1160,6 +1243,20 @@ impl VirtualClockEngine {
             corrupt_detected: self.tally.corrupt,
         };
         self.observers.round_end(&rec);
+        if self.tel.is_enabled() {
+            use crate::telemetry::Counter;
+            self.tel.add(Counter::DeliveryMsgs, transfers as u64);
+            self.tel.add(
+                Counter::DeliveryRetries,
+                self.tally.retransmissions as u64,
+            );
+            self.tel.add(
+                Counter::DeliveryDeadLetters,
+                self.tally.dropped_msgs() as u64,
+            );
+            self.tel
+                .add(Counter::DeliveryCorrupt, self.tally.corrupt as u64);
+        }
         self.tally.clear();
     }
 
@@ -1253,7 +1350,13 @@ impl VirtualClockEngine {
     /// its inter-round [`EventQueue`] (`every, 2·every, …, rounds` —
     /// exactly the rounds the dense modulo test fires on) and pops them
     /// as rounds pass; an early stop simply leaves the tail unfired.
-    pub fn run(mut self, early_stop: bool) -> RunResult {
+    ///
+    /// Errors deferred by observers (sink I/O failures) surface here,
+    /// at the end of the run, as [`ExperimentError::Backend`].
+    pub fn run(
+        mut self,
+        early_stop: bool,
+    ) -> Result<RunResult, ExperimentError> {
         let rounds = self.cfg.rounds;
         let every = self.cfg.eval_every.max(1);
         if self.event_mode {
@@ -1293,7 +1396,10 @@ impl VirtualClockEngine {
                 }
             }
         }
-        self.into_result()
+        self.observers
+            .run_end()
+            .map_err(ExperimentError::Backend)?;
+        Ok(self.into_result())
     }
 
     /// Immutable access to collected metrics (tests, mid-run probes).

@@ -21,6 +21,7 @@ pub mod metrics;
 pub mod network;
 pub mod runtime;
 pub mod scenario;
+pub mod telemetry;
 pub mod topology;
 pub mod transport;
 pub mod util;

@@ -17,6 +17,17 @@ use crate::coordinator::RoundPlan;
 use crate::experiment::RoundObserver;
 use crate::metrics::{EvalRecord, EventRecord, RoundRecord};
 
+/// Remember the first I/O error a sink hits; later writes are skipped
+/// cheaply and [`RoundObserver::on_run_end`] surfaces the stored error
+/// instead of letting the run end "successfully" with a truncated file.
+fn note(err: &mut Option<io::Error>, r: io::Result<()>) {
+    if err.is_none() {
+        if let Err(e) = r {
+            *err = Some(e);
+        }
+    }
+}
+
 fn create_buffered(path: &Path) -> io::Result<BufWriter<File>> {
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
@@ -49,6 +60,7 @@ pub struct CsvSink {
     rounds: BufWriter<File>,
     evals: BufWriter<File>,
     events: BufWriter<File>,
+    err: Option<io::Error>,
 }
 
 fn with_suffix(prefix: &Path, suffix: &str) -> std::path::PathBuf {
@@ -68,13 +80,24 @@ impl CsvSink {
         )?;
         writeln!(evals, "round,time_s,accuracy,loss,comm_gb")?;
         writeln!(events, "round,kind,worker,population")?;
-        Ok(CsvSink { rounds, evals, events })
+        Ok(CsvSink { rounds, evals, events, err: None })
+    }
+}
+
+impl Drop for CsvSink {
+    fn drop(&mut self) {
+        // best-effort: an aborting run (panic, early return) must not
+        // lose buffered tail rows. Errors here have nowhere to go —
+        // on_run_end is the reporting path on the normal exit.
+        let _ = self.rounds.flush();
+        let _ = self.evals.flush();
+        let _ = self.events.flush();
     }
 }
 
 impl RoundObserver for CsvSink {
     fn on_scenario_event(&mut self, rec: &EventRecord) {
-        let _ = writeln!(
+        let r = writeln!(
             self.events,
             "{},{},{},{}",
             rec.round,
@@ -82,10 +105,11 @@ impl RoundObserver for CsvSink {
             rec.worker.map(|w| w.to_string()).unwrap_or_default(),
             rec.population,
         );
+        note(&mut self.err, r);
     }
 
     fn on_round_end(&mut self, rec: &RoundRecord) {
-        let _ = writeln!(
+        let r = writeln!(
             self.rounds,
             "{},{:.4},{:.4},{},{},{},{},{:.0},{:.4},{},{:.6},{},{},{}",
             rec.round,
@@ -103,10 +127,11 @@ impl RoundObserver for CsvSink {
             rec.dropped_msgs,
             rec.corrupt_detected,
         );
+        note(&mut self.err, r);
     }
 
     fn on_eval(&mut self, rec: &EvalRecord) {
-        let _ = writeln!(
+        let r = writeln!(
             self.evals,
             "{},{:.4},{:.6},{:.6},{:.6}",
             rec.round,
@@ -115,11 +140,28 @@ impl RoundObserver for CsvSink {
             rec.avg_loss,
             rec.cum_bytes / 1e9,
         );
+        note(&mut self.err, r);
         // evals are rare — flush so long runs keep fresh artifacts even
         // if the process is killed (CI smoke uploads mid-run state)
-        let _ = self.evals.flush();
-        let _ = self.rounds.flush();
-        let _ = self.events.flush();
+        let r = self.evals.flush();
+        note(&mut self.err, r);
+        let r = self.rounds.flush();
+        note(&mut self.err, r);
+        let r = self.events.flush();
+        note(&mut self.err, r);
+    }
+
+    fn on_run_end(&mut self) -> Result<(), String> {
+        let r = self.rounds.flush();
+        note(&mut self.err, r);
+        let r = self.evals.flush();
+        note(&mut self.err, r);
+        let r = self.events.flush();
+        note(&mut self.err, r);
+        match self.err.take() {
+            Some(e) => Err(format!("csv sink: {e}")),
+            None => Ok(()),
+        }
     }
 }
 
@@ -140,11 +182,19 @@ fn jnum(x: f64) -> String {
 /// size only, so lines stay O(1)).
 pub struct JsonlSink {
     out: BufWriter<File>,
+    err: Option<io::Error>,
 }
 
 impl JsonlSink {
     pub fn create(path: &Path) -> io::Result<Self> {
-        Ok(JsonlSink { out: create_buffered(path)? })
+        Ok(JsonlSink { out: create_buffered(path)?, err: None })
+    }
+}
+
+impl Drop for JsonlSink {
+    fn drop(&mut self) {
+        // best-effort tail flush for aborting runs; see CsvSink::drop
+        let _ = self.out.flush();
     }
 }
 
@@ -154,24 +204,26 @@ impl RoundObserver for JsonlSink {
             .worker
             .map(|w| w.to_string())
             .unwrap_or_else(|| "null".into());
-        let _ = writeln!(
+        let r = writeln!(
             self.out,
             "{{\"type\":\"event\",\"round\":{},\"kind\":\"{}\",\"worker\":{},\"population\":{}}}",
             rec.round, rec.kind, worker, rec.population,
         );
+        note(&mut self.err, r);
     }
 
     fn on_plan(&mut self, round: usize, plan: &RoundPlan) {
-        let _ = writeln!(
+        let r = writeln!(
             self.out,
             "{{\"type\":\"plan\",\"round\":{},\"active\":{}}}",
             round,
             plan.active.len(),
         );
+        note(&mut self.err, r);
     }
 
     fn on_round_end(&mut self, rec: &RoundRecord) {
-        let _ = writeln!(
+        let r = writeln!(
             self.out,
             "{{\"type\":\"round\",\"round\":{},\"time_s\":{},\"duration_s\":{},\"active\":{},\"population\":{},\"adversaries\":{},\"transfers\":{},\"bytes_sent\":{},\"avg_staleness\":{},\"max_staleness\":{},\"train_loss\":{},\"retransmissions\":{},\"dropped_msgs\":{},\"corrupt_detected\":{}}}",
             rec.round,
@@ -189,10 +241,11 @@ impl RoundObserver for JsonlSink {
             rec.dropped_msgs,
             rec.corrupt_detected,
         );
+        note(&mut self.err, r);
     }
 
     fn on_eval(&mut self, rec: &EvalRecord) {
-        let _ = writeln!(
+        let r = writeln!(
             self.out,
             "{{\"type\":\"eval\",\"round\":{},\"time_s\":{},\"accuracy\":{},\"loss\":{},\"cum_transfers\":{},\"cum_bytes\":{}}}",
             rec.round,
@@ -202,7 +255,18 @@ impl RoundObserver for JsonlSink {
             rec.cum_transfers,
             jnum(rec.cum_bytes),
         );
-        let _ = self.out.flush();
+        note(&mut self.err, r);
+        let r = self.out.flush();
+        note(&mut self.err, r);
+    }
+
+    fn on_run_end(&mut self) -> Result<(), String> {
+        let r = self.out.flush();
+        note(&mut self.err, r);
+        match self.err.take() {
+            Some(e) => Err(format!("jsonl sink: {e}")),
+            None => Ok(()),
+        }
     }
 }
 
@@ -312,6 +376,49 @@ mod tests {
             assert!(l.starts_with('{') && l.ends_with('}'), "{l}");
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn aborted_run_loses_no_tail_rows() {
+        // a run that dies mid-round never reaches on_eval (the only
+        // pre-existing flush point) — dropping the sink must still land
+        // every buffered row on disk. Enough rows to overflow nothing:
+        // the point is that rows past the last flush survive.
+        let dir = std::env::temp_dir().join("dystop_sink_truncation_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let rounds = 200;
+        {
+            let mut sink = JsonlSink::create(&dir.join("run.jsonl")).unwrap();
+            for t in 1..=rounds {
+                sink.on_round_end(&round_rec(t));
+            }
+        } // dropped without on_eval/on_run_end — simulated abort
+        let text = std::fs::read_to_string(dir.join("run.jsonl")).unwrap();
+        assert_eq!(text.lines().count(), rounds, "jsonl rows truncated");
+        {
+            let mut sink = CsvSink::create(&dir.join("run")).unwrap();
+            for t in 1..=rounds {
+                sink.on_round_end(&round_rec(t));
+            }
+        }
+        let text =
+            std::fs::read_to_string(dir.join("run_rounds.csv")).unwrap();
+        assert_eq!(text.lines().count(), rounds + 1, "csv rows truncated");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn io_errors_surface_at_run_end() {
+        // /dev/full: opens fine, every flush fails with ENOSPC. The old
+        // sinks swallowed this (`let _ =`) and the run "succeeded" with
+        // a truncated artifact.
+        let mut sink = JsonlSink::create(Path::new("/dev/full")).unwrap();
+        for t in 1..=2000 {
+            sink.on_round_end(&round_rec(t));
+        }
+        let err = sink.on_run_end().expect_err("ENOSPC must surface");
+        assert!(err.contains("jsonl sink"), "{err}");
     }
 
     #[test]

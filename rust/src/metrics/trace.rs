@@ -218,6 +218,12 @@ impl RoundObserver for TraceSink {
         );
         self.clock_us = rec.time_s * 1e6;
     }
+
+    fn on_run_end(&mut self) -> Result<(), String> {
+        // explicit flush point: unlike the drop hook, write failures
+        // here surface as a backend error instead of vanishing
+        self.finish().map_err(|e| format!("trace sink: {e}"))
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,235 @@
+//! Log-linear histograms: fixed mergeable buckets, quantiles without
+//! samples.
+//!
+//! The bucket layout is HdrHistogram-shaped: 8 linear sub-buckets per
+//! power-of-two octave. Values below 16 land in exact unit buckets;
+//! above that, bucket width is `2^(msb-3)` — at most 1/8 of the value —
+//! so any quantile read off the bucket edges is within one bucket width
+//! (≤ 12.5% relative error) of the exact order statistic. The layout is
+//! a pure function of the value, so two histograms (from two threads,
+//! two runs, two snapshots) merge by element-wise bucket addition, and
+//! merging is associative and commutative by construction.
+//!
+//! Two forms share the layout:
+//!
+//! * [`AtomicHist`] — the live registry storage: relaxed atomic
+//!   fetch-adds, safe to hammer from worker threads;
+//! * [`Hist`] — a plain snapshot for math (merge, quantiles, JSON).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// log2 of the sub-buckets per octave.
+const SUB_BITS: u32 = 3;
+/// Linear sub-buckets per octave (8).
+pub const SUBS: usize = 1 << SUB_BITS;
+/// Total buckets: 2·SUBS exact unit buckets for values < 2^(SUB_BITS+1),
+/// then SUBS per octave for msb in SUB_BITS+1 ..= 63.
+pub const BUCKETS: usize = 2 * SUBS + (63 - SUB_BITS as usize) * SUBS;
+
+/// Bucket index of a value — monotone non-decreasing in `v`, total over
+/// all of `u64`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < (2 * SUBS) as u64 {
+        // exact unit buckets: bucket i holds exactly {i}
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros(); // >= SUB_BITS + 1
+        let shift = msb - SUB_BITS;
+        let sub = ((v >> shift) as usize) & (SUBS - 1);
+        // octave msb contributes SUBS buckets starting at msb * SUBS
+        (msb as usize - SUB_BITS as usize + 1) * SUBS + sub
+    }
+}
+
+/// Inclusive lower edge of bucket `i` (the smallest value that maps to
+/// it).
+#[inline]
+pub fn bucket_lower(i: usize) -> u64 {
+    if i < 2 * SUBS {
+        i as u64
+    } else {
+        let g = i / SUBS; // >= 2
+        let sub = (i % SUBS) as u64;
+        let msb = (g - 1) as u32 + SUB_BITS;
+        (1u64 << msb) + (sub << (msb - SUB_BITS))
+    }
+}
+
+/// Exclusive upper edge of bucket `i` (`bucket_lower(i+1)` for every
+/// non-terminal bucket; the last bucket saturates at `u64::MAX`).
+#[inline]
+pub fn bucket_upper(i: usize) -> u64 {
+    if i + 1 >= BUCKETS {
+        u64::MAX
+    } else {
+        bucket_lower(i + 1)
+    }
+}
+
+/// A plain (non-atomic) histogram snapshot: mergeable buckets plus the
+/// exact count and sum.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hist {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { buckets: vec![0; BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    /// Element-wise bucket addition — associative and commutative, so
+    /// per-thread or per-shard histograms fold in any order.
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Mean of the recorded values (exact — from the running sum).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// The q-quantile (q in [0,1]) read off the bucket edges: the upper
+    /// edge of the bucket holding the order statistic of rank
+    /// `ceil(q·count)`. Within one bucket width of the exact sample
+    /// quantile by construction. `None` on an empty histogram.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64)
+            .clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // report the last value the bucket can hold (upper edge
+                // is exclusive), saturating on the terminal bucket
+                return Some(bucket_upper(i).saturating_sub(1).max(bucket_lower(i)));
+            }
+        }
+        None // unreachable when count > 0
+    }
+}
+
+/// The live, thread-safe form: relaxed atomics throughout. Telemetry is
+/// monotone counting — no read-modify-write invariants — so `Relaxed`
+/// is sufficient and keeps the hot path to one `lock xadd` per field.
+pub struct AtomicHist {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for AtomicHist {
+    fn default() -> Self {
+        AtomicHist {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl AtomicHist {
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Hist {
+        Hist {
+            buckets: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_buckets_are_exact() {
+        for v in 0..(2 * SUBS as u64) {
+            let i = bucket_index(v);
+            assert_eq!(bucket_lower(i), v);
+            assert_eq!(bucket_upper(i), v + 1);
+        }
+    }
+
+    #[test]
+    fn edges_tile_the_line() {
+        // lower edges strictly increase and each bucket's upper edge is
+        // the next bucket's lower edge — no gaps, no overlaps
+        for i in 0..BUCKETS - 1 {
+            assert!(bucket_lower(i) < bucket_lower(i + 1), "bucket {i}");
+            assert_eq!(bucket_upper(i), bucket_lower(i + 1), "bucket {i}");
+        }
+    }
+
+    #[test]
+    fn index_inverts_edges() {
+        for i in 0..BUCKETS {
+            assert_eq!(bucket_index(bucket_lower(i)), i);
+            let last = bucket_upper(i).saturating_sub(1);
+            assert_eq!(bucket_index(last), i, "upper-1 of bucket {i}");
+        }
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn relative_width_is_bounded() {
+        // beyond the unit buckets, width ≤ lower/8
+        for i in 2 * SUBS..BUCKETS - 1 {
+            let lo = bucket_lower(i);
+            let w = bucket_upper(i) - lo;
+            assert!(w * 8 <= lo, "bucket {i}: width {w} lower {lo}");
+        }
+    }
+
+    #[test]
+    fn atomic_and_plain_agree() {
+        let a = AtomicHist::default();
+        let mut h = Hist::new();
+        for v in [0, 1, 7, 8, 100, 1_000_000, u64::MAX] {
+            a.observe(v);
+            h.record(v);
+        }
+        assert_eq!(a.snapshot(), h);
+    }
+}

@@ -1,0 +1,646 @@
+//! Live telemetry: a zero-dependency metric registry on the wall-clock
+//! plane.
+//!
+//! Everything here measures *host* time and host byte counts — never
+//! virtual time. The simulation's event/byte ledger (RoundRecord,
+//! DeliveryTally, clock_s) is the experiment's result; telemetry is how
+//! much wall-clock the machinery spent producing it. The two planes
+//! must not mix: no telemetry read ever feeds back into scheduling,
+//! RNG, or payload bytes, which is what makes the `bits_eq`
+//! telemetry-on == telemetry-off witnesses in `tests/telemetry.rs`
+//! possible.
+//!
+//! The handle is `Option<Arc<Inner>>` under the hood: the disabled
+//! default is a `None` check per call site — no clock reads, no atomic
+//! traffic — so instrumentation can stay unconditionally inline in the
+//! hot paths. All mutation is relaxed atomics, so one registry can be
+//! shared across the threaded backend's workers and the HTTP scrape
+//! thread without locks on the hot path.
+
+pub mod hist;
+pub mod server;
+pub mod snapshot;
+
+pub use hist::Hist;
+pub use snapshot::TelemetrySink;
+
+use hist::AtomicHist;
+use server::ServerGuard;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Monotonic counters — one per event kind worth counting, across every
+/// subsystem. Names render as `dystop_<name>_total`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(usize)]
+pub enum Counter {
+    /// SchedView rebuilt from scratch (dense rebuild path).
+    SchedViewRebuilds,
+    /// SchedView carried over / patched instead of rebuilt.
+    SchedViewPatches,
+    /// Codec encode calls (one per source worker per round).
+    CodecEncodes,
+    /// Codec decode calls.
+    CodecDecodes,
+    /// Encoded payload bytes produced by the codec.
+    CodecBytes,
+    /// Messages resolved by the delivery layer (any outcome).
+    DeliveryMsgs,
+    /// Retransmissions performed by the ack/retry layer.
+    DeliveryRetries,
+    /// Messages abandoned after exhausting the retry budget.
+    DeliveryDeadLetters,
+    /// Messages delivered with detected corruption.
+    DeliveryCorrupt,
+    /// Events drained from the discrete-event queue.
+    EventsDrained,
+    /// Rounds completed.
+    Rounds,
+    /// Worker activations executed.
+    Activations,
+    /// Training samples consumed (activations × per-worker batch).
+    TrainSamples,
+    /// Socket wire frames sent by the coordinator.
+    WireFramesSent,
+    /// Socket wire frames received by the coordinator.
+    WireFramesRecv,
+    /// Socket payload bytes sent by the coordinator.
+    WireBytesSent,
+    /// Socket payload bytes received by the coordinator.
+    WireBytesRecv,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 17] = [
+        Counter::SchedViewRebuilds,
+        Counter::SchedViewPatches,
+        Counter::CodecEncodes,
+        Counter::CodecDecodes,
+        Counter::CodecBytes,
+        Counter::DeliveryMsgs,
+        Counter::DeliveryRetries,
+        Counter::DeliveryDeadLetters,
+        Counter::DeliveryCorrupt,
+        Counter::EventsDrained,
+        Counter::Rounds,
+        Counter::Activations,
+        Counter::TrainSamples,
+        Counter::WireFramesSent,
+        Counter::WireFramesRecv,
+        Counter::WireBytesSent,
+        Counter::WireBytesRecv,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::SchedViewRebuilds => "sched_view_rebuilds",
+            Counter::SchedViewPatches => "sched_view_patches",
+            Counter::CodecEncodes => "codec_encodes",
+            Counter::CodecDecodes => "codec_decodes",
+            Counter::CodecBytes => "codec_bytes",
+            Counter::DeliveryMsgs => "delivery_msgs",
+            Counter::DeliveryRetries => "delivery_retries",
+            Counter::DeliveryDeadLetters => "delivery_dead_letters",
+            Counter::DeliveryCorrupt => "delivery_corrupt",
+            Counter::EventsDrained => "events_drained",
+            Counter::Rounds => "rounds",
+            Counter::Activations => "activations",
+            Counter::TrainSamples => "train_samples",
+            Counter::WireFramesSent => "wire_frames_sent",
+            Counter::WireFramesRecv => "wire_frames_recv",
+            Counter::WireBytesSent => "wire_bytes_sent",
+            Counter::WireBytesRecv => "wire_bytes_recv",
+        }
+    }
+
+    pub fn help(self) -> &'static str {
+        match self {
+            Counter::SchedViewRebuilds => "SchedView full rebuilds",
+            Counter::SchedViewPatches => "SchedView incremental patches (rebuild skipped)",
+            Counter::CodecEncodes => "codec encode calls",
+            Counter::CodecDecodes => "codec decode calls",
+            Counter::CodecBytes => "encoded payload bytes produced",
+            Counter::DeliveryMsgs => "messages resolved by the delivery layer",
+            Counter::DeliveryRetries => "retransmissions by the ack/retry layer",
+            Counter::DeliveryDeadLetters => "messages dead-lettered after retry budget",
+            Counter::DeliveryCorrupt => "messages delivered corrupt",
+            Counter::EventsDrained => "events drained from the discrete-event queue",
+            Counter::Rounds => "rounds completed",
+            Counter::Activations => "worker activations executed",
+            Counter::TrainSamples => "training samples consumed",
+            Counter::WireFramesSent => "socket frames sent by the coordinator",
+            Counter::WireFramesRecv => "socket frames received by the coordinator",
+            Counter::WireBytesSent => "socket payload bytes sent",
+            Counter::WireBytesRecv => "socket payload bytes received",
+        }
+    }
+}
+
+/// Instantaneous gauges. Names render as `dystop_<name>`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(usize)]
+pub enum Gauge {
+    /// Discrete-event queue depth at the last drain.
+    EventQueueDepth,
+    /// Event-queue drain rate at the last drain (events/s wall).
+    EventDrainRate,
+    /// Training throughput over the last round (samples/s wall).
+    TrainThroughput,
+    /// Current worker population.
+    Population,
+    /// Virtual clock of the run (seconds) — exported for correlation
+    /// only; never read back.
+    ClockVirtualS,
+}
+
+impl Gauge {
+    pub const ALL: [Gauge; 5] = [
+        Gauge::EventQueueDepth,
+        Gauge::EventDrainRate,
+        Gauge::TrainThroughput,
+        Gauge::Population,
+        Gauge::ClockVirtualS,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::EventQueueDepth => "event_queue_depth",
+            Gauge::EventDrainRate => "event_drain_rate",
+            Gauge::TrainThroughput => "train_throughput",
+            Gauge::Population => "population",
+            Gauge::ClockVirtualS => "clock_virtual_s",
+        }
+    }
+
+    pub fn help(self) -> &'static str {
+        match self {
+            Gauge::EventQueueDepth => "discrete-event queue depth at last drain",
+            Gauge::EventDrainRate => "event drain rate at last drain (events/s)",
+            Gauge::TrainThroughput => "train throughput last round (samples/s)",
+            Gauge::Population => "current worker population",
+            Gauge::ClockVirtualS => "virtual clock of the run (s)",
+        }
+    }
+}
+
+/// Wall-clock phase timings, one log-linear histogram each (values in
+/// nanoseconds). Rendered as one Prometheus histogram family
+/// `dystop_phase_ns{phase="<name>"}`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(usize)]
+pub enum Phase {
+    /// WAA worker-activation selection inside the scheduler.
+    Waa,
+    /// PTCA topology construction inside the scheduler.
+    Ptca,
+    /// SchedView full rebuild.
+    ViewRebuild,
+    /// SchedView patch/carry-over path.
+    ViewPatch,
+    /// Codec encode of one worker payload.
+    CodecEncode,
+    /// Codec decode of one worker payload.
+    CodecDecode,
+    /// One aggregation call (rule set via run-info label).
+    Aggregate,
+    /// One local training call.
+    Train,
+    /// One full round, coordinator-side.
+    Round,
+    /// One event-queue drain.
+    EventDrain,
+    /// Socket EXECUTE→DONE round trip per activation.
+    WireRtt,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 11] = [
+        Phase::Waa,
+        Phase::Ptca,
+        Phase::ViewRebuild,
+        Phase::ViewPatch,
+        Phase::CodecEncode,
+        Phase::CodecDecode,
+        Phase::Aggregate,
+        Phase::Train,
+        Phase::Round,
+        Phase::EventDrain,
+        Phase::WireRtt,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Waa => "waa",
+            Phase::Ptca => "ptca",
+            Phase::ViewRebuild => "view_rebuild",
+            Phase::ViewPatch => "view_patch",
+            Phase::CodecEncode => "codec_encode",
+            Phase::CodecDecode => "codec_decode",
+            Phase::Aggregate => "aggregate",
+            Phase::Train => "train",
+            Phase::Round => "round",
+            Phase::EventDrain => "event_drain",
+            Phase::WireRtt => "wire_rtt",
+        }
+    }
+}
+
+struct Inner {
+    counters: Vec<AtomicU64>,
+    gauges: Vec<AtomicU64>, // f64 bit patterns
+    hists: Vec<AtomicHist>,
+    /// Static run labels (scheduler, aggregator, backend, …) exported
+    /// as `dystop_run_info{...} 1`.
+    info: Mutex<Vec<(String, String)>>,
+    /// Keeps the /metrics server alive for the registry's lifetime.
+    server: Mutex<Option<ServerGuard>>,
+    started: Instant,
+}
+
+impl Inner {
+    fn new() -> Self {
+        Inner {
+            counters: (0..Counter::ALL.len()).map(|_| AtomicU64::new(0)).collect(),
+            gauges: (0..Gauge::ALL.len()).map(|_| AtomicU64::new(0)).collect(),
+            hists: (0..Phase::ALL.len()).map(|_| AtomicHist::default()).collect(),
+            info: Mutex::new(Vec::new()),
+            server: Mutex::new(None),
+            started: Instant::now(),
+        }
+    }
+}
+
+/// An opaque wall-clock timestamp from [`Telemetry::tick`]. Carries
+/// `None` when telemetry is disabled so the hot path never reads the
+/// clock it won't use.
+#[derive(Clone, Copy)]
+pub struct Tick(Option<Instant>);
+
+/// The telemetry handle threaded through the builder into every
+/// backend. Cheap to clone (one `Option<Arc>`); `disabled()` makes
+/// every method a branch-and-return.
+#[derive(Clone, Default)]
+pub struct Telemetry {
+    inner: Option<Arc<Inner>>,
+}
+
+impl Telemetry {
+    /// The inert default: every call is a `None` check.
+    pub fn disabled() -> Self {
+        Telemetry { inner: None }
+    }
+
+    /// A live registry.
+    pub fn enabled() -> Self {
+        Telemetry { inner: Some(Arc::new(Inner::new())) }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    #[inline]
+    pub fn add(&self, c: Counter, n: u64) {
+        if let Some(i) = &self.inner {
+            i.counters[c as usize].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self, c: Counter) {
+        self.add(c, 1);
+    }
+
+    #[inline]
+    pub fn set_gauge(&self, g: Gauge, v: f64) {
+        if let Some(i) = &self.inner {
+            i.gauges[g as usize].store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn observe_ns(&self, p: Phase, ns: u64) {
+        if let Some(i) = &self.inner {
+            i.hists[p as usize].observe(ns);
+        }
+    }
+
+    /// Start a wall-clock measurement. No-op (no clock read) when
+    /// disabled.
+    #[inline]
+    pub fn tick(&self) -> Tick {
+        Tick(if self.inner.is_some() { Some(Instant::now()) } else { None })
+    }
+
+    /// Record the elapsed time since `t` into phase `p`.
+    #[inline]
+    pub fn tock(&self, p: Phase, t: Tick) {
+        if let (Some(i), Some(t0)) = (&self.inner, t.0) {
+            let ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+            i.hists[p as usize].observe(ns);
+        }
+    }
+
+    /// Seconds since `t`, for derived rates (0.0 when disabled — always
+    /// guard the division).
+    #[inline]
+    pub fn elapsed_s(&self, t: Tick) -> f64 {
+        t.0.map(|t0| t0.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// Attach a static run label for `dystop_run_info`.
+    pub fn set_info(&self, key: &str, value: &str) {
+        if let Some(i) = &self.inner {
+            let mut info = i.info.lock().unwrap();
+            if let Some(slot) = info.iter_mut().find(|(k, _)| k == key) {
+                slot.1 = value.to_string();
+            } else {
+                info.push((key.to_string(), value.to_string()));
+            }
+        }
+    }
+
+    // ---- reads ----
+
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.inner
+            .as_ref()
+            .map(|i| i.counters[c as usize].load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    pub fn gauge(&self, g: Gauge) -> f64 {
+        self.inner
+            .as_ref()
+            .map(|i| f64::from_bits(i.gauges[g as usize].load(Ordering::Relaxed)))
+            .unwrap_or(0.0)
+    }
+
+    pub fn hist(&self, p: Phase) -> Hist {
+        self.inner
+            .as_ref()
+            .map(|i| i.hists[p as usize].snapshot())
+            .unwrap_or_default()
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.inner
+            .as_ref()
+            .map(|i| i.started.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+    }
+
+    /// Start the /metrics HTTP server on `addr` (host:port, port 0 for
+    /// ephemeral). Returns the bound address. The server lives until
+    /// the last handle to this registry drops.
+    pub fn serve(&self, addr: &str) -> Result<SocketAddr, String> {
+        let inner = self
+            .inner
+            .as_ref()
+            .ok_or_else(|| "telemetry.addr set but telemetry is disabled".to_string())?;
+        let guard = ServerGuard::spawn(addr, Arc::downgrade(inner))?;
+        let bound = guard.addr();
+        *inner.server.lock().unwrap() = Some(guard);
+        Ok(bound)
+    }
+
+    /// The bound /metrics address, if a server is running.
+    pub fn server_addr(&self) -> Option<SocketAddr> {
+        self.inner
+            .as_ref()
+            .and_then(|i| i.server.lock().unwrap().as_ref().map(|g| g.addr()))
+    }
+
+    // ---- exposition ----
+
+    /// Prometheus text exposition (version 0.0.4) of the whole
+    /// registry. Histogram families are down-sampled to octave (`le` =
+    /// power-of-two) boundaries — cumulative counts at those edges are
+    /// exact because the full bucket edges subdivide them.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(8192);
+        let info = self
+            .inner
+            .as_ref()
+            .map(|i| i.info.lock().unwrap().clone())
+            .unwrap_or_default();
+        out.push_str("# HELP dystop_run_info static run labels\n");
+        out.push_str("# TYPE dystop_run_info gauge\n");
+        out.push_str("dystop_run_info{");
+        for (k, (key, val)) in info.iter().enumerate() {
+            if k > 0 {
+                out.push(',');
+            }
+            out.push_str(key);
+            out.push_str("=\"");
+            out.push_str(&val.replace('\\', "\\\\").replace('"', "\\\""));
+            out.push('"');
+        }
+        out.push_str("} 1\n");
+
+        for c in Counter::ALL {
+            let name = c.name();
+            out.push_str(&format!(
+                "# HELP dystop_{name}_total {}\n# TYPE dystop_{name}_total counter\ndystop_{name}_total {}\n",
+                c.help(),
+                self.counter(c)
+            ));
+        }
+        for g in Gauge::ALL {
+            let name = g.name();
+            out.push_str(&format!(
+                "# HELP dystop_{name} {}\n# TYPE dystop_{name} gauge\ndystop_{name} {}\n",
+                g.help(),
+                fmt_f64(self.gauge(g))
+            ));
+        }
+
+        out.push_str("# HELP dystop_phase_ns wall-clock phase timings (ns)\n");
+        out.push_str("# TYPE dystop_phase_ns histogram\n");
+        for p in Phase::ALL {
+            let h = self.hist(p);
+            let phase = p.name();
+            // Down-sample to `le = 2^k - 1` edges up to the highest
+            // occupied bucket. Values are integers and every octave
+            // starts at a power of two, so the cumulative count of
+            // values <= 2^k - 1 is exactly the sum of all buckets below
+            // the 2^k boundary — no approximation in the exposition.
+            let highest = h
+                .buckets
+                .iter()
+                .rposition(|&c| c > 0)
+                .map(hist::bucket_upper)
+                .unwrap_or(0);
+            let mut cum = 0u64;
+            let mut next_pow = 1u64;
+            for (i, &c) in h.buckets.iter().enumerate() {
+                let lower = hist::bucket_lower(i);
+                if lower >= highest {
+                    break;
+                }
+                while next_pow <= lower {
+                    out.push_str(&format!(
+                        "dystop_phase_ns_bucket{{phase=\"{phase}\",le=\"{}\"}} {cum}\n",
+                        next_pow - 1
+                    ));
+                    next_pow = next_pow.saturating_mul(2);
+                }
+                cum += c;
+            }
+            out.push_str(&format!(
+                "dystop_phase_ns_bucket{{phase=\"{phase}\",le=\"+Inf\"}} {}\n",
+                h.count
+            ));
+            out.push_str(&format!(
+                "dystop_phase_ns_sum{{phase=\"{phase}\"}} {}\n",
+                h.sum
+            ));
+            out.push_str(&format!(
+                "dystop_phase_ns_count{{phase=\"{phase}\"}} {}\n",
+                h.count
+            ));
+        }
+        out.push_str(&format!(
+            "# HELP dystop_uptime_seconds wall-clock since registry creation\n# TYPE dystop_uptime_seconds gauge\ndystop_uptime_seconds {}\n",
+            fmt_f64(self.uptime_s())
+        ));
+        out
+    }
+
+    /// One JSONL snapshot line: counters and gauges verbatim, each
+    /// phase histogram summarised to count/sum/p50/p90/p99/max.
+    pub fn snapshot_json(&self, round: usize) -> String {
+        let mut s = String::with_capacity(2048);
+        s.push_str(&format!(
+            "{{\"kind\":\"telemetry\",\"round\":{round},\"wall_s\":{}",
+            fmt_f64(self.uptime_s())
+        ));
+        s.push_str(",\"counters\":{");
+        for (k, c) in Counter::ALL.iter().enumerate() {
+            if k > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\"{}\":{}", c.name(), self.counter(*c)));
+        }
+        s.push_str("},\"gauges\":{");
+        for (k, g) in Gauge::ALL.iter().enumerate() {
+            if k > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\"{}\":{}", g.name(), fmt_f64(self.gauge(*g))));
+        }
+        s.push_str("},\"phases\":{");
+        for (k, p) in Phase::ALL.iter().enumerate() {
+            if k > 0 {
+                s.push(',');
+            }
+            let h = self.hist(*p);
+            s.push_str(&format!(
+                "\"{}\":{{\"count\":{},\"sum\":{},\"p50\":{},\"p90\":{},\"p99\":{},\"max\":{}}}",
+                p.name(),
+                h.count,
+                h.sum,
+                h.quantile(0.50).unwrap_or(0),
+                h.quantile(0.90).unwrap_or(0),
+                h.quantile(0.99).unwrap_or(0),
+                h.quantile(1.0).unwrap_or(0),
+            ));
+        }
+        s.push_str("}}");
+        s
+    }
+}
+
+/// JSON/Prometheus-safe float formatting: finite values print plainly,
+/// non-finite degrade to 0 (snapshots must stay parseable).
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_handle_is_inert() {
+        let t = Telemetry::disabled();
+        t.inc(Counter::Rounds);
+        t.set_gauge(Gauge::Population, 42.0);
+        t.observe_ns(Phase::Round, 100);
+        let tick = t.tick();
+        t.tock(Phase::Round, tick);
+        assert_eq!(t.counter(Counter::Rounds), 0);
+        assert_eq!(t.gauge(Gauge::Population), 0.0);
+        assert!(t.hist(Phase::Round).is_empty());
+    }
+
+    #[test]
+    fn counters_gauges_hists_round_trip() {
+        let t = Telemetry::enabled();
+        t.add(Counter::CodecBytes, 128);
+        t.inc(Counter::CodecEncodes);
+        t.set_gauge(Gauge::TrainThroughput, 123.5);
+        t.observe_ns(Phase::Train, 1_000);
+        t.observe_ns(Phase::Train, 2_000);
+        assert_eq!(t.counter(Counter::CodecBytes), 128);
+        assert_eq!(t.counter(Counter::CodecEncodes), 1);
+        assert_eq!(t.gauge(Gauge::TrainThroughput), 123.5);
+        assert_eq!(t.hist(Phase::Train).count, 2);
+    }
+
+    #[test]
+    fn prometheus_exposition_has_every_family() {
+        let t = Telemetry::enabled();
+        t.set_info("scheduler", "dystop");
+        t.inc(Counter::Rounds);
+        t.observe_ns(Phase::Waa, 5_000);
+        let text = t.render_prometheus();
+        assert!(text.contains("dystop_run_info{scheduler=\"dystop\"} 1"));
+        for c in Counter::ALL {
+            assert!(
+                text.contains(&format!("dystop_{}_total", c.name())),
+                "missing counter {}",
+                c.name()
+            );
+        }
+        for g in Gauge::ALL {
+            assert!(text.contains(&format!("dystop_{}", g.name())));
+        }
+        for p in Phase::ALL {
+            assert!(
+                text.contains(&format!("dystop_phase_ns_count{{phase=\"{}\"}}", p.name())),
+                "missing phase {}",
+                p.name()
+            );
+        }
+        // histogram invariants on the populated family
+        assert!(text.contains("dystop_phase_ns_bucket{phase=\"waa\",le=\"+Inf\"} 1"));
+        assert!(text.contains("dystop_phase_ns_sum{phase=\"waa\"} 5000"));
+    }
+
+    #[test]
+    fn snapshot_json_parses() {
+        let t = Telemetry::enabled();
+        t.inc(Counter::Activations);
+        t.observe_ns(Phase::Round, 7_777);
+        let line = t.snapshot_json(3);
+        let j = crate::util::json::Json::parse(&line).expect("snapshot line must parse");
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("telemetry"));
+        assert_eq!(j.get("round").and_then(|v| v.as_f64()), Some(3.0));
+        let counters = j.get("counters").expect("counters");
+        assert_eq!(
+            counters.get("activations").and_then(|v| v.as_f64()),
+            Some(1.0)
+        );
+        let phases = j.get("phases").expect("phases");
+        let round = phases.get("round").expect("round phase");
+        assert_eq!(round.get("count").and_then(|v| v.as_f64()), Some(1.0));
+    }
+}

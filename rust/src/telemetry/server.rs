@@ -1,0 +1,181 @@
+//! The /metrics HTTP endpoint: std-`TcpListener` only, same zero-dep
+//! discipline as `experiment/socket.rs`.
+//!
+//! One background thread, nonblocking accept with a 5 ms poll. The
+//! thread holds only a `Weak` to the registry — the registry owns the
+//! guard, so a strong reference here would be a cycle and the server
+//! (and registry) would never shut down. Each scrape upgrades the Weak
+//! for the duration of one render; once the last real handle drops the
+//! upgrade fails and the thread exits on the stop flag set by
+//! [`ServerGuard::drop`].
+
+use super::{Inner, Telemetry};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Weak};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+pub struct ServerGuard {
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+    addr: SocketAddr,
+}
+
+impl ServerGuard {
+    pub(super) fn spawn(addr: &str, registry: Weak<Inner>) -> Result<ServerGuard, String> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| format!("telemetry.addr {addr}: bind failed: {e}"))?;
+        let bound = listener
+            .local_addr()
+            .map_err(|e| format!("telemetry.addr {addr}: no local addr: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("telemetry.addr {addr}: nonblocking failed: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("dystop-metrics".to_string())
+            .spawn(move || serve_loop(listener, registry, stop2))
+            .map_err(|e| format!("telemetry server thread: {e}"))?;
+        Ok(ServerGuard { stop, join: Some(join), addr: bound })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for ServerGuard {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn serve_loop(listener: TcpListener, registry: Weak<Inner>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // scrape errors must never take the run down
+                let _ = handle(stream, &registry);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+        // a dead registry means the run is gone — no reason to linger
+        if registry.strong_count() == 0 {
+            break;
+        }
+    }
+}
+
+fn handle(mut stream: TcpStream, registry: &Weak<Inner>) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_millis(500)))?;
+    // read the request head (just enough for the request line)
+    let mut buf = [0u8; 2048];
+    let mut used = 0;
+    loop {
+        let n = stream.read(&mut buf[used..])?;
+        if n == 0 {
+            break;
+        }
+        used += n;
+        if buf[..used].windows(4).any(|w| w == b"\r\n\r\n") || used == buf.len() {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf[..used]);
+    let path = head
+        .lines()
+        .next()
+        .and_then(|line| line.split_whitespace().nth(1))
+        .unwrap_or("/");
+
+    match path {
+        "/metrics" => {
+            let body = match registry.upgrade() {
+                Some(arc) => Telemetry { inner: Some(arc) }.render_prometheus(),
+                None => String::new(),
+            };
+            write_response(
+                &mut stream,
+                "200 OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                body.as_bytes(),
+            )
+        }
+        "/" => write_response(
+            &mut stream,
+            "200 OK",
+            "text/plain; charset=utf-8",
+            b"dystop telemetry: scrape /metrics\n",
+        ),
+        _ => write_response(&mut stream, "404 Not Found", "text/plain", b"not found\n"),
+    }
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{Counter, Telemetry};
+
+    fn get(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("read");
+        let split = out.find("\r\n\r\n").expect("header/body split");
+        (out[..split].to_string(), out[split + 4..].to_string())
+    }
+
+    #[test]
+    fn serves_metrics_and_404s() {
+        let tel = Telemetry::enabled();
+        tel.inc(Counter::Rounds);
+        let addr = tel.serve("127.0.0.1:0").expect("serve");
+        let (head, body) = get(addr, "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert!(head.contains("text/plain; version=0.0.4"));
+        assert!(body.contains("dystop_rounds_total 1"), "{body}");
+        let (head, _) = get(addr, "/nope");
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+    }
+
+    #[test]
+    fn server_shuts_down_with_registry() {
+        let tel = Telemetry::enabled();
+        let addr = tel.serve("127.0.0.1:0").expect("serve");
+        drop(tel);
+        // the guard's Drop joined the thread; a fresh connect may still
+        // succeed (OS backlog) but a scrape can't produce a registry
+        std::thread::sleep(Duration::from_millis(20));
+        if let Ok(mut s) = TcpStream::connect(addr) {
+            let _ = write!(s, "GET /metrics HTTP/1.1\r\n\r\n");
+            let mut out = String::new();
+            let _ = s.read_to_string(&mut out);
+            assert!(!out.contains("dystop_rounds_total 1"));
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Periodic JSONL telemetry snapshots (`telemetry.out`,
+//! `telemetry.snapshot_every`): a [`RoundObserver`] riding the same
+//! sink machinery as the metrics streams. One line per snapshot (see
+//! [`Telemetry::snapshot_json`]); the final line at run end is
+//! unconditional so `dystop report` always has a complete summary to
+//! render.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+use super::Telemetry;
+use crate::experiment::RoundObserver;
+use crate::metrics::RoundRecord;
+
+pub struct TelemetrySink {
+    tel: Telemetry,
+    out: BufWriter<File>,
+    every: usize,
+    err: Option<io::Error>,
+}
+
+impl TelemetrySink {
+    pub fn create(tel: Telemetry, path: &Path, every: usize) -> io::Result<Self> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let out = BufWriter::new(File::create(path)?);
+        Ok(TelemetrySink { tel, out, every, err: None })
+    }
+
+    fn write_line(&mut self, round: usize) {
+        if self.err.is_some() {
+            return;
+        }
+        let line = self.tel.snapshot_json(round);
+        // snapshots are rare (every N rounds) — flush each one so the
+        // live artifact stays current for mid-run scrapes/uploads
+        let r = writeln!(self.out, "{line}").and_then(|_| self.out.flush());
+        if let Err(e) = r {
+            self.err = Some(e);
+        }
+    }
+}
+
+impl RoundObserver for TelemetrySink {
+    fn on_round_end(&mut self, rec: &RoundRecord) {
+        if self.every > 0 && rec.round % self.every == 0 {
+            self.write_line(rec.round);
+        }
+    }
+
+    fn on_run_end(&mut self) -> Result<(), String> {
+        let final_round = self.tel.counter(super::Counter::Rounds) as usize;
+        self.write_line(final_round);
+        match self.err.take() {
+            Some(e) => Err(format!("telemetry sink: {e}")),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Counter;
+
+    fn round_rec(round: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            time_s: round as f64,
+            duration_s: 1.0,
+            active: 2,
+            population: 4,
+            adversaries: 0,
+            transfers: 3,
+            bytes_sent: 24.0,
+            avg_staleness: 0.5,
+            max_staleness: 1,
+            train_loss: 0.9,
+            retransmissions: 0,
+            dropped_msgs: 0,
+            corrupt_detected: 0,
+        }
+    }
+
+    #[test]
+    fn snapshots_every_n_rounds_plus_final() {
+        let dir = std::env::temp_dir().join("dystop_tel_snapshot_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("tel.jsonl");
+        let tel = Telemetry::enabled();
+        let mut sink = TelemetrySink::create(tel.clone(), &path, 2).unwrap();
+        for t in 1..=5 {
+            tel.inc(Counter::Rounds);
+            sink.on_round_end(&round_rec(t));
+        }
+        sink.on_run_end().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // rounds 2 and 4 snapshot, plus the unconditional final line
+        assert_eq!(lines.len(), 3, "{text}");
+        for l in &lines {
+            let j = crate::util::json::Json::parse(l).expect("parseable");
+            assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("telemetry"));
+        }
+        assert!(lines[2].contains("\"round\":5"), "{}", lines[2]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn write_errors_surface_at_run_end() {
+        // /dev/full accepts the open but fails every flush with ENOSPC
+        let tel = Telemetry::enabled();
+        let mut sink =
+            TelemetrySink::create(tel, Path::new("/dev/full"), 1).unwrap();
+        sink.on_round_end(&round_rec(1));
+        let err = sink.on_run_end().expect_err("ENOSPC must surface");
+        assert!(err.contains("telemetry sink"), "{err}");
+    }
+}

@@ -1,0 +1,450 @@
+//! Telemetry subsystem contracts:
+//!
+//! * **histogram algebra** — the log-linear buckets are a lattice:
+//!   merging is associative and commutative, the bucket edges tile the
+//!   u64 line with no gaps or overlaps, and any quantile read off the
+//!   edges lands in the same bucket as the exact order statistic (so
+//!   it is within one bucket width — ≤ 12.5% relative — of it);
+//! * **inertness** — the hard invariant of the whole subsystem: the
+//!   registry is write-only from every backend's perspective, so
+//!   enabling telemetry moves **zero bits** in the run ledger. Pinned
+//!   per backend: sim (dense and event engines) and socket via full
+//!   `RunResult::bits_eq`, the testbed via plan + ledger fields that
+//!   are pure functions of the seed (its wall-clock realization is
+//!   legitimately nondeterministic, telemetry or not);
+//! * **exposures** — the JSONL snapshot sink writes on cadence plus an
+//!   unconditional end-of-run summary with every subsystem populated,
+//!   and the /metrics endpoint serves valid Prometheus text exposition
+//!   live, before and after the run it instruments;
+//! * **event-engine traces** — `engine=event` feeds the activation
+//!   observer stream exactly like the dense sweep: every activated
+//!   worker gets a complete span in the Perfetto trace.
+
+use dystop::config::{
+    BackendKind, EngineKind, ExperimentConfig, SchedulerKind,
+    SocketTransportKind,
+};
+use dystop::coordinator::RoundPlan;
+use dystop::experiment::{
+    Backend, Experiment, RoundObserver, VirtualClockBackend,
+};
+use dystop::metrics::RunResult;
+use dystop::telemetry::hist::{
+    bucket_index, bucket_lower, bucket_upper, Hist, BUCKETS,
+};
+use dystop::util::json::Json;
+use dystop::util::prop::forall_seeded;
+use dystop::util::rng::Pcg;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+// --- histogram algebra ------------------------------------------------
+
+/// Random value spanning the full bucket range (shifted so sums cannot
+/// saturate: saturating adds would blur the merge-equality checks).
+fn rand_val(rng: &mut Pcg) -> u64 {
+    rng.next_u64() >> (8 + rng.next_u32() % 56)
+}
+
+fn rand_hist(rng: &mut Pcg, n: usize) -> Hist {
+    let mut h = Hist::new();
+    for _ in 0..n {
+        h.record(rand_val(rng));
+    }
+    h
+}
+
+#[test]
+fn hist_merge_is_associative_and_commutative() {
+    forall_seeded(0x7E1E, 32, |rng| {
+        let a = rand_hist(rng, (rng.next_u32() % 64) as usize);
+        let b = rand_hist(rng, (rng.next_u32() % 64) as usize);
+        let c = rand_hist(rng, (rng.next_u32() % 64) as usize);
+        // commutative: a ⊕ b == b ⊕ a
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "merge is not commutative");
+        // associative: (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c)
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "merge is not associative");
+        // identity: merging an empty histogram changes nothing
+        let mut a_e = a.clone();
+        a_e.merge(&Hist::new());
+        assert_eq!(a_e, a, "empty histogram is not a merge identity");
+    });
+}
+
+#[test]
+fn hist_bucket_edges_tile_and_index_is_monotone() {
+    for i in 0..BUCKETS - 1 {
+        assert!(bucket_lower(i) < bucket_upper(i), "bucket {i} is empty");
+        assert_eq!(
+            bucket_upper(i),
+            bucket_lower(i + 1),
+            "gap or overlap after bucket {i}"
+        );
+        assert_eq!(
+            bucket_index(bucket_lower(i)),
+            i,
+            "lower edge of bucket {i} maps elsewhere"
+        );
+    }
+    assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    forall_seeded(0x0B0B, 64, |rng| {
+        let (a, b) = (rand_val(rng), rand_val(rng));
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        assert!(
+            bucket_index(lo) <= bucket_index(hi),
+            "bucket_index not monotone: {lo} -> {}, {hi} -> {}",
+            bucket_index(lo),
+            bucket_index(hi)
+        );
+    });
+}
+
+#[test]
+fn hist_quantile_is_within_one_bucket_of_exact() {
+    assert_eq!(Hist::new().quantile(0.5), None, "empty hist has no quantile");
+    forall_seeded(0x9A11, 32, |rng| {
+        let n = 1 + (rng.next_u32() % 300) as usize;
+        let mut h = Hist::new();
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = rand_val(rng);
+            h.record(v);
+            vals.push(v);
+        }
+        vals.sort_unstable();
+        for &q in &[0.0, 0.5, 0.9, 0.99, 1.0] {
+            let rank = ((q * n as f64).ceil() as u64).clamp(1, n as u64);
+            let exact = vals[rank as usize - 1];
+            let got = h.quantile(q).expect("non-empty hist");
+            // same bucket as the exact order statistic — hence within
+            // one bucket width (≤ 12.5% relative beyond the unit range)
+            let bi = bucket_index(exact);
+            assert_eq!(
+                bucket_index(got),
+                bi,
+                "q={q} n={n}: got {got}, exact {exact}"
+            );
+            assert!(got >= bucket_lower(bi) && got < bucket_upper(bi));
+        }
+    });
+}
+
+// --- inertness witnesses ----------------------------------------------
+
+fn sim_cfg(workers: usize, rounds: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        workers,
+        rounds,
+        seed: 11,
+        train_per_worker: 48,
+        test_samples: 64,
+        eval_every: 7, // deliberately not a divisor of rounds
+        target_accuracy: 2.0,
+        ..Default::default()
+    }
+}
+
+fn with_telemetry(mut cfg: ExperimentConfig) -> ExperimentConfig {
+    cfg.telemetry.enabled = true;
+    cfg
+}
+
+#[test]
+fn telemetry_is_inert_on_the_sim_dense_ledger() {
+    let cfg = sim_cfg(60, 20);
+    let off = Experiment::builder(cfg.clone()).run().unwrap();
+    let on = Experiment::builder(with_telemetry(cfg)).run().unwrap();
+    assert!(
+        off.bits_eq(&on),
+        "enabling telemetry moved bits in the dense sim ledger"
+    );
+    assert!(
+        off.rounds.iter().any(|r| r.transfers > 0),
+        "a run with zero transfers pins nothing"
+    );
+}
+
+#[test]
+fn telemetry_is_inert_on_the_sim_event_ledger() {
+    let mut cfg = sim_cfg(60, 20);
+    cfg.engine = EngineKind::Event;
+    let off = Experiment::builder(cfg.clone()).run().unwrap();
+    let on = Experiment::builder(with_telemetry(cfg)).run().unwrap();
+    assert!(
+        off.bits_eq(&on),
+        "enabling telemetry moved bits in the event-engine ledger"
+    );
+}
+
+#[test]
+fn telemetry_is_inert_on_the_socket_ledger() {
+    // TCP so the witness runs on every platform; virtual seconds map to
+    // ~0 wall ms — the ledger rides the virtual clock either way
+    let mut cfg = sim_cfg(6, 4);
+    cfg.seed = 42;
+    cfg.eval_every = 2;
+    cfg.socket.time_scale = 0.001;
+    cfg.socket.transport = SocketTransportKind::Tcp;
+    let off = Experiment::builder(cfg.clone())
+        .backend(BackendKind::Socket)
+        .run()
+        .unwrap();
+    let on = Experiment::builder(with_telemetry(cfg))
+        .backend(BackendKind::Socket)
+        .run()
+        .unwrap();
+    assert!(
+        off.bits_eq(&on),
+        "enabling telemetry moved bits in the socket ledger"
+    );
+}
+
+/// Observer capturing every validated (global-id) round plan.
+struct PlanTap(Rc<RefCell<Vec<RoundPlan>>>);
+
+impl RoundObserver for PlanTap {
+    fn on_plan(&mut self, _round: usize, plan: &RoundPlan) {
+        self.0.borrow_mut().push(plan.clone());
+    }
+}
+
+fn run_with_plans(
+    cfg: ExperimentConfig,
+    backend: BackendKind,
+) -> (RunResult, Vec<RoundPlan>) {
+    let plans = Rc::new(RefCell::new(Vec::new()));
+    let res = Experiment::builder(cfg)
+        .observer(Box::new(PlanTap(plans.clone())))
+        .backend(backend)
+        .run()
+        .unwrap();
+    let captured = plans.borrow().clone();
+    (res, captured)
+}
+
+/// The testbed's wall-clock realization (durations, staleness, losses)
+/// is legitimately nondeterministic run-to-run, telemetry or not — the
+/// witness is everything that *is* a pure function of the seed:
+/// SA-ADFL's timing-independent plans and the plan/delivery-derived
+/// ledger fields.
+#[test]
+fn telemetry_is_inert_on_the_testbed_plans_and_ledger() {
+    let mut cfg = sim_cfg(10, 6);
+    cfg.seed = 42;
+    cfg.eval_every = 3;
+    cfg.scheduler = SchedulerKind::SaAdfl;
+    // bench-top geometry: everyone in range, so transfers happen
+    cfg.network.region_m = 20.0;
+    cfg.network.comm_range_m = 30.0;
+    cfg.network.mobility_m = 0.0;
+    cfg.testbed.time_scale = 2.0;
+    cfg.testbed.profile = false;
+    let (off, off_plans) = run_with_plans(cfg.clone(), BackendKind::Testbed);
+    let (on, on_plans) =
+        run_with_plans(with_telemetry(cfg), BackendKind::Testbed);
+    assert_eq!(off_plans.len(), on_plans.len(), "round counts differ");
+    for (r, (a, b)) in off_plans.iter().zip(&on_plans).enumerate() {
+        assert_eq!(a.active, b.active, "active set, round {}", r + 1);
+        assert_eq!(a.pulls_from, b.pulls_from, "pulls, round {}", r + 1);
+        assert_eq!(a.pushes, b.pushes, "pushes, round {}", r + 1);
+    }
+    assert_eq!(off.rounds.len(), on.rounds.len());
+    for (a, b) in off.rounds.iter().zip(&on.rounds) {
+        let r = a.round;
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.active, b.active, "round {r}");
+        assert_eq!(a.population, b.population, "round {r}");
+        assert_eq!(a.adversaries, b.adversaries, "round {r}");
+        assert_eq!(a.transfers, b.transfers, "round {r}");
+        assert_eq!(a.dropped_msgs, b.dropped_msgs, "round {r}");
+        assert_eq!(a.corrupt_detected, b.corrupt_detected, "round {r}");
+    }
+    assert_eq!(off.evals.len(), on.evals.len());
+    for (a, b) in off.evals.iter().zip(&on.evals) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.cum_transfers, b.cum_transfers, "eval @{}", a.round);
+    }
+    assert!(
+        off.rounds.iter().any(|r| r.transfers > 0),
+        "a run with zero transfers pins nothing"
+    );
+}
+
+// --- event-engine trace coverage --------------------------------------
+
+/// `engine=event` must feed the activation observer stream on par with
+/// the dense sweep: every activated worker gets at least one complete
+/// ("X") span on its own Perfetto track.
+#[test]
+fn event_engine_trace_covers_every_activated_worker() {
+    let trace_path = std::env::temp_dir().join(format!(
+        "dystop-event-trace-{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&trace_path);
+    let mut cfg = sim_cfg(10, 5);
+    cfg.engine = EngineKind::Event;
+    cfg.trace.out = trace_path.display().to_string();
+    let (_res, plans) = run_with_plans(cfg, BackendKind::Sim);
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let json = Json::parse(&text).unwrap();
+    let events = json
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("top-level traceEvents array");
+    assert!(!events.is_empty());
+    for ev in events {
+        assert!(ev.get("ph").and_then(Json::as_str).is_some(), "{ev}");
+    }
+    let activated: std::collections::BTreeSet<usize> =
+        plans.iter().flat_map(|p| p.active.iter().copied()).collect();
+    assert!(!activated.is_empty());
+    for w in activated {
+        let tid = (w + 1) as f64;
+        assert!(
+            events.iter().any(|ev| {
+                ev.get("ph").and_then(Json::as_str) == Some("X")
+                    && ev.get("tid").and_then(Json::as_f64) == Some(tid)
+            }),
+            "activated worker {w} has no span on tid {tid}"
+        );
+    }
+    let _ = std::fs::remove_file(&trace_path);
+}
+
+// --- exposures --------------------------------------------------------
+
+#[test]
+fn snapshot_sink_writes_cadence_and_final_summary() {
+    let dir = std::env::temp_dir()
+        .join(format!("dystop-telemetry-snap-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("telemetry.jsonl");
+    let mut cfg = sim_cfg(20, 6);
+    cfg.eval_every = 3;
+    // bench-top geometry so every subsystem sees traffic
+    cfg.network.region_m = 20.0;
+    cfg.network.comm_range_m = 30.0;
+    cfg.network.mobility_m = 0.0;
+    cfg.telemetry.out = path.display().to_string();
+    cfg.telemetry.snapshot_every = 2;
+    let res = Experiment::builder(cfg).run().unwrap();
+    assert_eq!(res.rounds.len(), 6);
+    assert!(res.total_transfers() > 0, "no traffic, nothing pinned");
+
+    let body = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> =
+        body.lines().filter(|l| !l.trim().is_empty()).collect();
+    // cadence lines at rounds 2, 4, 6 plus the unconditional final one
+    assert!(lines.len() >= 4, "expected >= 4 snapshots, got {}", lines.len());
+    let last = Json::parse(lines.last().unwrap()).expect("final snapshot");
+    assert_eq!(last.get("kind").and_then(Json::as_str), Some("telemetry"));
+    assert_eq!(last.get("round").and_then(Json::as_f64), Some(6.0));
+
+    let counters = last.get("counters").expect("counters object");
+    let counter =
+        |k: &str| counters.get(k).and_then(Json::as_f64).unwrap_or(-1.0);
+    assert_eq!(counter("rounds"), 6.0);
+    assert!(counter("activations") > 0.0, "no activations counted");
+    assert!(counter("codec_encodes") > 0.0, "no codec encodes counted");
+    assert!(counter("delivery_msgs") > 0.0, "no delivery msgs counted");
+    assert_eq!(
+        counter("sched_view_rebuilds") + counter("sched_view_patches"),
+        6.0,
+        "every round is either a view rebuild or a patch"
+    );
+
+    let phases = last.get("phases").expect("phases object");
+    let phase_count = |k: &str| {
+        phases
+            .get(k)
+            .and_then(|p| p.get("count"))
+            .and_then(Json::as_f64)
+            .unwrap_or(-1.0)
+    };
+    assert_eq!(phase_count("round"), 6.0, "one round phase sample per round");
+    assert!(phase_count("train") > 0.0, "no train phase samples");
+    assert!(phase_count("aggregate") > 0.0, "no aggregate phase samples");
+
+    let gauges = last.get("gauges").expect("gauges object");
+    assert_eq!(
+        gauges.get("population").and_then(Json::as_f64),
+        Some(20.0)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn scrape(addr: std::net::SocketAddr) -> String {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).expect("connect /metrics");
+    s.set_read_timeout(Some(std::time::Duration::from_secs(10))).unwrap();
+    write!(s, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    s.flush().unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).expect("read exposition");
+    out
+}
+
+/// The /metrics endpoint serves the live registry: a scrape before the
+/// run sees the static run labels at zero counts, a scrape after sees
+/// every phase histogram populated — same process, same registry, no
+/// restart in between.
+#[test]
+fn metrics_endpoint_serves_live_exposition() {
+    let mut cfg = sim_cfg(20, 6);
+    cfg.eval_every = 3;
+    cfg.network.region_m = 20.0;
+    cfg.network.comm_range_m = 30.0;
+    cfg.network.mobility_m = 0.0;
+    cfg.telemetry.addr = "127.0.0.1:0".to_string();
+    let exp = Experiment::builder(cfg).build().unwrap();
+    // a clone keeps the registry (and its server) alive past the run
+    let tel = exp.telemetry.clone();
+    let addr = tel.server_addr().expect("server bound on telemetry.addr");
+
+    let before = scrape(addr);
+    assert!(before.contains("dystop_run_info{"), "{before}");
+    assert!(before.contains("backend=\"sim\""), "{before}");
+    assert!(before.contains("dystop_rounds_total 0"), "{before}");
+    assert!(before.contains("# TYPE dystop_phase_ns histogram"));
+
+    let mut backend = VirtualClockBackend::new();
+    let res = backend.run(exp).unwrap();
+    assert_eq!(res.rounds.len(), 6);
+
+    let after = scrape(addr);
+    assert!(after.contains("dystop_rounds_total 6"), "{after}");
+    assert!(
+        after.contains("dystop_phase_ns_count{phase=\"round\"} 6"),
+        "{after}"
+    );
+    assert!(
+        after.contains("dystop_phase_ns_bucket{phase=\"round\",le=\"+Inf\"} 6"),
+        "{after}"
+    );
+    // counters from distinct subsystems all landed in one exposition
+    for family in [
+        "dystop_activations_total",
+        "dystop_codec_encodes_total",
+        "dystop_delivery_msgs_total",
+        "dystop_train_samples_total",
+    ] {
+        let populated = after.lines().any(|l| {
+            l.strip_prefix(family)
+                .and_then(|rest| rest.trim().parse::<u64>().ok())
+                .is_some_and(|v| v > 0)
+        });
+        assert!(populated, "{family} has no samples:\n{after}");
+    }
+}
